@@ -1,0 +1,63 @@
+//! Quickstart: online auto-tuning of the euclidean-distance kernel on a
+//! simulated in-order core, in ~30 lines of API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! A reference kernel starts as the active function; the auto-tuner
+//! explores the two-phase tuning space while the "application" keeps
+//! calling the kernel, and hot-swaps better machine code as it finds it.
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::coordinator::{AutoTuner, StepEvent, TunerConfig};
+use degoal_rt::simulator::{core_by_name, KernelKind};
+
+fn main() -> anyhow::Result<()> {
+    degoal_rt::util::logging::init();
+
+    // A dual-issue in-order core (Table 1) running the Streamcluster
+    // distance kernel specialised for dimension 64.
+    let core = core_by_name("DI-I1").unwrap();
+    let kind = KernelKind::Distance { dim: 64, batch: 256 };
+    let mut backend = SimBackend::new(core, kind, 42);
+
+    // Auto-tuner with the paper's defaults: 1 % overhead cap, 10 %
+    // investment of gains, training-data evaluation in phase 1.
+    let cfg = TunerConfig { wake_period: 1e-3, ..Default::default() };
+    let mut tuner = AutoTuner::new(cfg, 64, Some(true));
+
+    // The "application": frequent kernel calls.
+    for call in 0..200_000u64 {
+        let before = *tuner.active();
+        tuner.app_call(&mut backend)?;
+        if *tuner.active() != before {
+            println!(
+                "call {call:>7}: active kernel replaced -> {}",
+                tuner.active().label()
+            );
+        }
+        // Show exploration progress occasionally.
+        if call % 50_000 == 0 && call > 0 {
+            println!(
+                "call {call:>7}: explored {} versions, overhead {:.2} %",
+                tuner.stats.explored_count(),
+                tuner.stats.overhead_frac() * 100.0
+            );
+        }
+    }
+
+    let stats = &tuner.stats;
+    println!("\n== result ==");
+    println!("kernel calls      : {}", stats.kernel_calls);
+    println!("explored versions : {}", stats.explored_count());
+    println!("swaps             : {}", stats.swaps);
+    println!("overhead          : {:.3} % of run time", stats.overhead_frac() * 100.0);
+    println!("estimated gain    : {:.3} s", stats.gained);
+    if let Some((best, score)) = tuner.best() {
+        println!("best variant      : {best} ({score:.2e} s/call)");
+    }
+
+    // Drive one more step to show the tuner is idle once done.
+    let ev = tuner.tune_step(&mut backend)?;
+    assert!(matches!(ev, StepEvent::Idle | StepEvent::ExplorationDone));
+    Ok(())
+}

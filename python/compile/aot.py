@@ -1,0 +1,168 @@
+"""AOT lowering: every valid structural variant -> artifacts/*.hlo.txt.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+This is the build-time half of the paper's deGoal code generator: the
+compilette is traced per structural variant here, and the *run-time* half —
+actual machine-code generation — is the Rust coordinator compiling the
+selected HLO text on the live PJRT client (rust/src/codegen/).
+
+Outputs (under --out-dir, default ../artifacts relative to this package):
+  streamcluster/d{dim}/v{vid}.hlo.txt      one per valid structural variant
+  streamcluster/d{dim}/ref.hlo.txt         hand-vectorised reference
+  vips/w{width}/v{vid}.hlo.txt, ref.hlo.txt
+  manifest.json                            full index consumed by Rust
+
+Idempotent: a spec directory whose manifest entry is already complete is
+skipped, so `make artifacts` is a no-op on an unchanged tree.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .variants import Structural, valid_variants, explorable_versions
+
+# Benchmark specialisations (paper §4.3):
+#   Streamcluster simsmall with dim 32 (small) / 64 (medium) / 128 (large).
+#   VIPS simsmall 1600x1200 / simmedium 2336x2336 / simlarge 2662x5500, 3 bands.
+SC_DIMS = (32, 64, 128)
+SC_BATCH = 256
+VIPS_WIDTHS = (1600, 2336, 2662)
+VIPS_BANDS = 3
+VIPS_ROWS = 8
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_streamcluster(out_dir: str, dim: int, quick: bool) -> dict:
+    d = os.path.join(out_dir, "streamcluster", f"d{dim}")
+    os.makedirs(d, exist_ok=True)
+    specs = (f32(SC_BATCH, dim), f32(dim))
+    entries = []
+    variants = list(valid_variants(dim))
+    if quick:
+        variants = variants[:: max(1, len(variants) // 8)]
+    for s in variants:
+        path = os.path.join(d, f"v{s.vid}.hlo.txt")
+        if not os.path.exists(path):
+            text = to_hlo_text(model.distance_variant(dim, SC_BATCH, s), *specs)
+            _atomic_write(path, text)
+        e = s.to_dict()
+        e["path"] = os.path.relpath(path, out_dir)
+        e["no_leftover"] = s.no_leftover(dim)
+        entries.append(e)
+    ref_path = os.path.join(d, "ref.hlo.txt")
+    if not os.path.exists(ref_path):
+        _atomic_write(ref_path, to_hlo_text(model.distance_reference(dim, SC_BATCH), *specs))
+    return {
+        "benchmark": "streamcluster",
+        "dim": dim,
+        "batch": SC_BATCH,
+        "length": dim,  # tuned-loop trip length in f32 elements
+        "ref": os.path.relpath(ref_path, out_dir),
+        "explorable_versions": explorable_versions(dim),
+        "variants": entries,
+    }
+
+
+def lower_vips(out_dir: str, width: int, quick: bool) -> dict:
+    row_len = width * VIPS_BANDS
+    d = os.path.join(out_dir, "vips", f"w{width}")
+    os.makedirs(d, exist_ok=True)
+    specs = (f32(VIPS_ROWS, row_len), f32(row_len), f32(row_len))
+    entries = []
+    variants = list(valid_variants(row_len))
+    if quick:
+        variants = variants[:: max(1, len(variants) // 8)]
+    for s in variants:
+        path = os.path.join(d, f"v{s.vid}.hlo.txt")
+        if not os.path.exists(path):
+            text = to_hlo_text(model.lintra_variant(row_len, VIPS_ROWS, s), *specs)
+            _atomic_write(path, text)
+        e = s.to_dict()
+        e["path"] = os.path.relpath(path, out_dir)
+        e["no_leftover"] = s.no_leftover(row_len)
+        entries.append(e)
+    ref_path = os.path.join(d, "ref.hlo.txt")
+    if not os.path.exists(ref_path):
+        _atomic_write(ref_path, to_hlo_text(model.lintra_reference(row_len, VIPS_ROWS), *specs))
+    return {
+        "benchmark": "vips",
+        "width": width,
+        "bands": VIPS_BANDS,
+        "rows": VIPS_ROWS,
+        "length": row_len,
+        "ref": os.path.relpath(ref_path, out_dir),
+        "explorable_versions": explorable_versions(row_len),
+        "variants": entries,
+    }
+
+
+def _atomic_write(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    default_out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    ap.add_argument("--out-dir", default=os.path.normpath(default_out))
+    ap.add_argument("--quick", action="store_true", help="subsample variants (CI smoke)")
+    ap.add_argument("--sc-dims", type=int, nargs="*", default=list(SC_DIMS))
+    ap.add_argument("--vips-widths", type=int, nargs="*", default=list(VIPS_WIDTHS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    specs = []
+    for dim in args.sc_dims:
+        t = time.time()
+        specs.append(lower_streamcluster(args.out_dir, dim, args.quick))
+        print(f"[aot] streamcluster d{dim}: {len(specs[-1]['variants'])} variants "
+              f"({time.time() - t:.1f}s)", flush=True)
+    for w in args.vips_widths:
+        t = time.time()
+        specs.append(lower_vips(args.out_dir, w, args.quick))
+        print(f"[aot] vips w{w}: {len(specs[-1]['variants'])} variants "
+              f"({time.time() - t:.1f}s)", flush=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "sc_batch": SC_BATCH,
+        "vips_rows": VIPS_ROWS,
+        "specs": specs,
+    }
+    _atomic_write(os.path.join(args.out_dir, "manifest.json"),
+                  json.dumps(manifest, indent=1))
+    print(f"[aot] wrote manifest with {len(specs)} specs in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""L1 Pallas compilette: squared euclidean distance (Streamcluster kernel).
+
+This is the Pallas analogue of the deGoal compilette of paper Figure 3
+(`dist_gen`). The *dimension* of the points is a specialised run-time
+constant; (VE, vectLen, hotUF, coldUF) are the structural auto-tuned
+parameters. Each parameter assignment traces to a *different* HLO module —
+the "binary code instance" of paper §3.2.
+
+Mapping (DESIGN.md §2):
+  hotUF   -> independent accumulator vectors (ILP via distinct registers)
+  coldUF  -> body replication reusing the same accumulators
+  vectLen -> width (in `unit` lanes) of each vector load/sub/mac
+  VE      -> unit = 4 f32 lanes (SIMD) or 1 (SISD)
+
+The loop over the dimension mirrors the paper's `loop #(numIter)`:
+  * numIter == 0: no main loop; all work done by the leftover code.
+  * numIter == 1: main loop fully unrolled (no back-branch).
+  * numIter  > 1: `fori_loop` with a partially-unrolled body.
+Leftover elements (dimension not divisible by elems_per_iter) are handled by
+a trailing strip, like the paper's leftover code.
+
+Kernels MUST be lowered with interpret=True: real-TPU Pallas emits a Mosaic
+custom-call that the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..variants import Structural
+
+
+def _distance_kernel_body(p_ref, c_ref, o_ref, *, dim: int, s: Structural):
+    """Pallas kernel: o[b] = sum_d (p[b, d] - c[d])^2 for a batch tile."""
+    tile = p_ref.shape[0]
+    w = s.width
+    epi = s.elems_per_iter
+    num_iter = s.num_iter(dim)
+    leftover = s.leftover(dim)
+
+    def body(i, accs):
+        """One main-loop iteration: coldUF x hotUF vector mac pattern."""
+        base = i * epi
+        new = list(accs)
+        for c in range(s.cold_uf):
+            for h in range(s.hot_uf):
+                off = base + (c * s.hot_uf + h) * w
+                pv = p_ref[:, pl.dslice(off, w)]
+                cv = c_ref[pl.dslice(off, w)]
+                d = pv - cv[None, :]
+                # mac Vresult, Vc1, Vc1 (paper Fig 3 line 15)
+                new[h] = new[h] + d * d
+        return tuple(new)
+
+    accs0 = tuple(jnp.zeros((tile, w), jnp.float32) for _ in range(s.hot_uf))
+    if num_iter > 1:
+        accs = jax.lax.fori_loop(0, num_iter, body, accs0)
+    elif num_iter == 1:
+        accs = body(0, accs0)  # fully unrolled: no branch generated
+    else:
+        accs = accs0  # dimension too small: leftover-only
+
+    # add result, Vresult (paper Fig 3 line 23): horizontal reduction across
+    # the hotUF accumulators and their lanes.
+    total = jnp.zeros((tile,), jnp.float32)
+    for a in accs:
+        total = total + jnp.sum(a, axis=1)
+
+    if leftover:
+        lo = dim - leftover
+        d = p_ref[:, lo:dim] - c_ref[lo:dim][None, :]
+        total = total + jnp.sum(d * d, axis=1)
+
+    o_ref[:] = total
+
+
+def make_distance_fn(dim: int, batch: int, s: Structural, tile: int | None = None):
+    """Build the jittable batched-distance function for one variant.
+
+    Returns f(points[batch, dim], center[dim]) -> (out[batch],), where
+    out[b] is the squared euclidean distance. The batch is tiled over a
+    1-D Pallas grid; `center` is broadcast to every tile (the BlockSpec is
+    the HBM->VMEM schedule that deGoal expressed with lw/pld).
+    """
+    if not s.valid_for(dim):
+        raise ValueError(f"variant {s} cannot generate code for dim={dim}")
+    if tile is None:
+        tile = min(batch, 128)
+    if batch % tile != 0:
+        raise ValueError(f"batch {batch} not divisible by tile {tile}")
+
+    kernel = functools.partial(_distance_kernel_body, dim=dim, s=s)
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+    def fn(points, center):
+        return (call(points, center),)
+
+    return fn

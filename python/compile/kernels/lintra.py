@@ -1,0 +1,88 @@
+"""L1 Pallas compilette: VIPS `im_lintra_vec` linear transform kernel.
+
+out = img * mul + add, applied per band to every pixel. The paper
+specialises two run-time constants — the number of bands and the image
+width — and notes the kernel is highly memory-bound (each pixel is loaded
+and processed exactly once).
+
+We flatten each row to `row_len = width * bands` f32 elements and pass
+`mulvec`/`addvec` as band-tiled vectors of length `row_len`, so the kernel
+body is a pure streaming multiply-add — the same memory behaviour as the
+paper's kernel. The structural knobs shape the unroll exactly as in
+distance.py; there are no accumulators, so hotUF manifests as independent
+load/store streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..variants import Structural
+
+
+def _lintra_kernel_body(p_ref, m_ref, a_ref, o_ref, *, row_len: int, s: Structural):
+    tile = p_ref.shape[0]
+    w = s.width
+    epi = s.elems_per_iter
+    num_iter = s.num_iter(row_len)
+    leftover = s.leftover(row_len)
+
+    def chunk(off):
+        pv = p_ref[:, pl.dslice(off, w)]
+        mv = m_ref[pl.dslice(off, w)]
+        av = a_ref[pl.dslice(off, w)]
+        o_ref[:, pl.dslice(off, w)] = pv * mv[None, :] + av[None, :]
+
+    def body(i, carry):
+        base = i * epi
+        for c in range(s.cold_uf):
+            for h in range(s.hot_uf):
+                chunk(base + (c * s.hot_uf + h) * w)
+        return carry
+
+    if num_iter > 1:
+        jax.lax.fori_loop(0, num_iter, body, 0)
+    elif num_iter == 1:
+        body(0, 0)
+
+    if leftover:
+        lo = row_len - leftover
+        pv = p_ref[:, lo:row_len]
+        mv = m_ref[lo:row_len]
+        av = a_ref[lo:row_len]
+        o_ref[:, lo:row_len] = pv * mv[None, :] + av[None, :]
+
+
+def make_lintra_fn(row_len: int, rows: int, s: Structural, tile: int | None = None):
+    """Build the jittable row-block lintra function for one variant.
+
+    Returns f(img[rows, row_len], mulvec[row_len], addvec[row_len]) ->
+    (out[rows, row_len],). Rows are tiled over a 1-D Pallas grid.
+    """
+    if not s.valid_for(row_len):
+        raise ValueError(f"variant {s} cannot generate code for row_len={row_len}")
+    if tile is None:
+        tile = rows if rows <= 8 else 8
+    if rows % tile != 0:
+        raise ValueError(f"rows {rows} not divisible by tile {tile}")
+
+    kernel = functools.partial(_lintra_kernel_body, row_len=row_len, s=s)
+    call = pl.pallas_call(
+        kernel,
+        grid=(rows // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, row_len), lambda i: (i, 0)),
+            pl.BlockSpec((row_len,), lambda i: (0,)),
+            pl.BlockSpec((row_len,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, row_len), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, row_len), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+    def fn(img, mulvec, addvec):
+        return (call(img, mulvec, addvec),)
+
+    return fn

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the Pallas compilettes.
+
+These are the ground truth every variant must match bit-for-tolerance, and
+they double as the "hand-vectorised reference" (PARVEC / gcc -O3 analogue)
+artifact: XLA's own lowering of the naive expression, with no specialised
+unrolling — exactly the role the compiled C reference plays in the paper.
+"""
+
+import jax.numpy as jnp
+
+
+def distance_ref(points, center):
+    """Squared euclidean distance of each point to `center`.
+
+    points: [batch, dim] f32, center: [dim] f32 -> [batch] f32.
+    """
+    d = points - center[None, :]
+    return jnp.sum(d * d, axis=1)
+
+
+def lintra_ref(img, mulvec, addvec):
+    """VIPS im_lintra_vec over a flattened row block.
+
+    img: [rows, row_len] f32; mulvec/addvec: [row_len] f32 (band-tiled).
+    """
+    return img * mulvec[None, :] + addvec[None, :]
+
+
+def streamcluster_assign_ref(points, centers):
+    """Assign each point to its nearest center; return (idx, total_cost).
+
+    The clustering-quality metric of the Streamcluster benchmark: sum of
+    squared distances to the assigned centers.
+    """
+    d2 = jnp.stack([distance_ref(points, c) for c in centers])
+    idx = jnp.argmin(d2, axis=0)
+    cost = jnp.sum(jnp.min(d2, axis=0))
+    return idx, cost

@@ -1,0 +1,46 @@
+"""L2: the jax compute graphs lowered to HLO artifacts.
+
+Each function here is the unit the Rust runtime executes ("the kernel" in the
+paper's sense): a batched distance evaluation for Streamcluster and a
+row-block linear transform for VIPS. The Rust workload drivers call these
+executables many times per application run — the kernels are the >80 %
+execution-time hot spots the paper auto-tunes.
+
+Variant functions call the L1 Pallas compilettes; reference functions are the
+pure-jnp oracle expressions (gcc -O3 / PARVEC analogue). All are lowered once
+by aot.py (build time) and never traced at run time.
+"""
+
+from .kernels import ref
+from .kernels.distance import make_distance_fn
+from .kernels.lintra import make_lintra_fn
+from .variants import Structural
+
+
+def distance_variant(dim: int, batch: int, s: Structural):
+    """(points[batch,dim], center[dim]) -> (sqdist[batch],) via variant `s`."""
+    return make_distance_fn(dim, batch, s)
+
+
+def distance_reference(dim: int, batch: int):
+    """The reference kernel: XLA's own lowering of the naive expression."""
+    del dim, batch  # shape comes from the example args at lowering time
+
+    def fn(points, center):
+        return (ref.distance_ref(points, center),)
+
+    return fn
+
+
+def lintra_variant(row_len: int, rows: int, s: Structural):
+    """(img[rows,row_len], mulvec, addvec) -> (out,) via variant `s`."""
+    return make_lintra_fn(row_len, rows, s)
+
+
+def lintra_reference(row_len: int, rows: int):
+    del row_len, rows
+
+    def fn(img, mulvec, addvec):
+        return (ref.lintra_ref(img, mulvec, addvec),)
+
+    return fn

@@ -1,0 +1,152 @@
+"""Tuning space for degoal-rt (paper §3.2).
+
+Single source of truth for the *structural* tuning parameters that change the
+generated machine code (= the HLO artifact). The phase-2 parameters
+(pldStride, IS, SM) do not change the HLO: on the host backend they are
+codegen/simulation flags only (see DESIGN.md §2) and therefore live purely in
+the Rust `tunespace` module, which mirrors the ranges defined here.
+
+Paper parameters (Figure 3, §3.1):
+  hotUF     — unroll with distinct registers  -> number of independent
+              accumulators in the Pallas kernel
+  coldUF    — unroll by pattern replication   -> body replication count
+  vectLen   — vector length normalised to the SIMD width (4 f32 lanes)
+  VE        — vectorisation on/off            -> lane unit 4 vs 1
+  pldStride — prefetch hint stride            (phase 2, non-structural)
+  IS        — instruction scheduling          (phase 2, non-structural)
+  SM        — stack minimisation              (phase 2, non-structural)
+"""
+
+from dataclasses import dataclass, asdict
+
+# Ranges (paper Table 5 header: hotUF 1-4, coldUF 1-64, vectLen 1-4,
+# pldStride {0,32,64}, SM {0,1}, IS {0,1}).
+HOT_UF = (1, 2, 4)
+COLD_UF = (1, 2, 4, 8, 16, 32, 64)
+VECT_LEN = (1, 2, 4)
+VE = (0, 1)
+PLD_STRIDE = (0, 32, 64)
+ISCHED = (0, 1)
+SMIN = (0, 1)
+
+SIMD_WIDTH = 4  # f32 lanes per SIMD vector (ARM NEON quad register)
+
+# Register-pressure constraint (paper §3.3: ranges of hotUF and vectLen were
+# "defined by the programmer in a way to avoid running out of registers").
+# Two vector registers are live per (load, load) pair plus one accumulator per
+# hotUF lane: vectLen * hotUF <= MAX_REG_PRODUCT keeps us within a 16-quad
+# register NEON file.
+MAX_REG_PRODUCT = 8
+
+
+def n_code_variants() -> int:
+    """Eq. (1): N_codeVariants = prod RangeSize(Nc_i) over the 7 parameters."""
+    return (
+        len(HOT_UF)
+        * len(COLD_UF)
+        * len(VECT_LEN)
+        * len(VE)
+        * len(PLD_STRIDE)
+        * len(ISCHED)
+        * len(SMIN)
+    )
+
+
+@dataclass(frozen=True)
+class Structural:
+    """A structural variant = one binary code instance (one HLO artifact)."""
+
+    ve: int
+    vect_len: int
+    hot_uf: int
+    cold_uf: int
+
+    @property
+    def unit(self) -> int:
+        """Lanes per vector element: SIMD width if vectorised else scalar."""
+        return SIMD_WIDTH if self.ve else 1
+
+    @property
+    def width(self) -> int:
+        """f32 elements touched per (hotUF-lane, coldUF-step) vector op."""
+        return self.unit * self.vect_len
+
+    @property
+    def elems_per_iter(self) -> int:
+        """f32 elements consumed by one fully-unrolled loop body."""
+        return self.width * self.hot_uf * self.cold_uf
+
+    def reg_ok(self) -> bool:
+        return self.vect_len * self.hot_uf <= MAX_REG_PRODUCT
+
+    def valid_for(self, length: int) -> bool:
+        """Can code be generated for a kernel of `length` f32 elements?
+
+        Invalid points are the "holes" of Figure 1: the unrolled body would
+        overrun the data or the register file.
+        """
+        return self.reg_ok() and 1 <= self.elems_per_iter <= length
+
+    def no_leftover(self, length: int) -> bool:
+        """Optimal solution in the paper's sense: no leftover code needed."""
+        return self.valid_for(length) and length % self.elems_per_iter == 0
+
+    def num_iter(self, length: int) -> int:
+        return length // self.elems_per_iter
+
+    def leftover(self, length: int) -> int:
+        return length - self.num_iter(length) * self.elems_per_iter
+
+    @property
+    def vid(self) -> int:
+        """Stable structural id shared with the Rust tunespace module:
+        index in the canonical (ve, vect_len, hot_uf, cold_uf) grid."""
+        i_ve = VE.index(self.ve)
+        i_v = VECT_LEN.index(self.vect_len)
+        i_h = HOT_UF.index(self.hot_uf)
+        i_c = COLD_UF.index(self.cold_uf)
+        return ((i_ve * len(VECT_LEN) + i_v) * len(HOT_UF) + i_h) * len(COLD_UF) + i_c
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["vid"] = self.vid
+        d["elems_per_iter"] = self.elems_per_iter
+        return d
+
+
+def from_vid(vid: int) -> Structural:
+    """Inverse of Structural.vid."""
+    i_c = vid % len(COLD_UF)
+    vid //= len(COLD_UF)
+    i_h = vid % len(HOT_UF)
+    vid //= len(HOT_UF)
+    i_v = vid % len(VECT_LEN)
+    vid //= len(VECT_LEN)
+    i_ve = vid
+    return Structural(VE[i_ve], VECT_LEN[i_v], HOT_UF[i_h], COLD_UF[i_c])
+
+
+def structural_grid():
+    """Canonical enumeration order of the structural sub-grid (vid order)."""
+    for ve in VE:
+        for v in VECT_LEN:
+            for h in HOT_UF:
+                for c in COLD_UF:
+                    yield Structural(ve, v, h, c)
+
+
+def valid_variants(length: int, require_no_leftover: bool = False):
+    """All structural variants that can generate code for `length` elements."""
+    for s in structural_grid():
+        if not s.valid_for(length):
+            continue
+        if require_no_leftover and not s.no_leftover(length):
+            continue
+        yield s
+
+
+def explorable_versions(length: int) -> int:
+    """Total explorable versions for a given specialisation (Table 4 col 1):
+    valid structural variants x phase-2 combinations."""
+    n_struct = sum(1 for _ in valid_variants(length))
+    return n_struct * len(PLD_STRIDE) * len(ISCHED) * len(SMIN)

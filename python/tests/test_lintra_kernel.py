@@ -1,0 +1,96 @@
+"""L1 correctness: Pallas lintra compilette vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.variants import Structural, from_vid, structural_grid, valid_variants
+from compile.kernels.lintra import make_lintra_fn
+from compile.kernels.ref import lintra_ref
+
+
+def _data(rows, row_len, seed=0):
+    rng = np.random.RandomState(seed)
+    img = rng.randn(rows, row_len).astype(np.float32)
+    m = rng.randn(row_len).astype(np.float32)
+    a = rng.randn(row_len).astype(np.float32)
+    return jnp.array(img), jnp.array(m), jnp.array(a)
+
+
+def _check(row_len, rows, s, tile=None, seed=0):
+    img, m, a = _data(rows, row_len, seed)
+    got = np.asarray(make_lintra_fn(row_len, rows, s, tile=tile)(img, m, a)[0])
+    want = np.asarray(lintra_ref(img, m, a))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_all_valid_variants_small_row():
+    # Representative small row (width 32, 3 bands -> 96 elements).
+    row_len = 96
+    n = 0
+    for s in valid_variants(row_len):
+        _check(row_len, 4, s)
+        n += 1
+    assert n > 20
+
+
+@pytest.mark.parametrize("width,bands", [(1600, 3), (2336, 3)])
+def test_paper_row_lengths_sampled(width, bands):
+    row_len = width * bands
+    vs = list(valid_variants(row_len))
+    for s in vs[:: max(1, len(vs) // 6)]:
+        _check(row_len, 2, s)
+
+
+def test_band_tiled_vectors_semantics():
+    """mulvec/addvec band-tiling matches per-band scaling of pixels."""
+    width, bands = 16, 3
+    row_len = width * bands
+    mul = np.array([2.0, 0.5, -1.0], np.float32)
+    add = np.array([1.0, 0.0, 3.0], np.float32)
+    mulvec = jnp.array(np.tile(mul, width))
+    addvec = jnp.array(np.tile(add, width))
+    img = jnp.array(np.arange(2 * row_len, dtype=np.float32).reshape(2, row_len))
+    s = Structural(ve=1, vect_len=1, hot_uf=1, cold_uf=1)
+    got = np.asarray(make_lintra_fn(row_len, 2, s)(img, mulvec, addvec)[0])
+    want = np.asarray(img).reshape(2, width, bands) * mul + add
+    np.testing.assert_allclose(got, want.reshape(2, row_len), rtol=1e-6)
+
+
+def test_leftover_strip():
+    # 7986 = 2 * 3 * 11^3 (the simlarge row length): almost everything has
+    # leftover, which is why the paper's VIPS search allows leftovers.
+    s = Structural(ve=1, vect_len=1, hot_uf=1, cold_uf=4)  # epi = 16
+    row_len = 7986
+    assert s.leftover(row_len) == 7986 % 16
+    _check(row_len, 1, s)
+
+
+def test_identity_transform():
+    row_len = 64
+    img = jnp.array(np.random.RandomState(3).randn(4, row_len).astype(np.float32))
+    one = jnp.ones((row_len,), jnp.float32)
+    zero = jnp.zeros((row_len,), jnp.float32)
+    s = Structural(ve=0, vect_len=2, hot_uf=2, cold_uf=2)
+    got = np.asarray(make_lintra_fn(row_len, 4, s)(img, one, zero)[0])
+    np.testing.assert_allclose(got, np.asarray(img), rtol=1e-6)
+
+
+def test_invalid_variant_raises():
+    with pytest.raises(ValueError):
+        make_lintra_fn(8, 4, Structural(ve=1, vect_len=4, hot_uf=2, cold_uf=64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vid=st.integers(0, len(list(structural_grid())) - 1),
+    row_len=st.sampled_from([48, 96, 192, 300, 1024]),
+    rows=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_lintra_sweep(vid, row_len, rows, seed):
+    s = from_vid(vid)
+    if not s.valid_for(row_len):
+        return
+    _check(row_len, rows, s, tile=rows, seed=seed)

@@ -1,0 +1,90 @@
+"""Tuning-space invariants (paper §3.2, Eq. 1)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import variants as V
+from compile.variants import Structural, from_vid, structural_grid, valid_variants
+
+
+def test_eq1_total_count():
+    # Eq. (1) over the declared ranges: 3*7*3*2*3*2*2 = 1512.
+    assert V.n_code_variants() == (
+        len(V.HOT_UF) * len(V.COLD_UF) * len(V.VECT_LEN) * len(V.VE)
+        * len(V.PLD_STRIDE) * len(V.ISCHED) * len(V.SMIN)
+    )
+    assert V.n_code_variants() == 1512
+
+
+def test_structural_grid_size():
+    grid = list(structural_grid())
+    assert len(grid) == len(V.VE) * len(V.VECT_LEN) * len(V.HOT_UF) * len(V.COLD_UF)
+    # vid is exactly the enumeration index.
+    for i, s in enumerate(grid):
+        assert s.vid == i
+
+
+def test_vid_roundtrip_all():
+    for s in structural_grid():
+        assert from_vid(s.vid) == s
+
+
+def test_elems_per_iter():
+    s = Structural(ve=1, vect_len=2, hot_uf=2, cold_uf=4)
+    assert s.unit == 4
+    assert s.width == 8
+    assert s.elems_per_iter == 64
+    s = Structural(ve=0, vect_len=2, hot_uf=2, cold_uf=4)
+    assert s.unit == 1
+    assert s.elems_per_iter == 16
+
+
+def test_register_pressure_holes():
+    # vectLen * hotUF > 8 runs out of NEON registers: a hole in the space.
+    assert not Structural(1, 4, 4, 1).reg_ok()
+    assert Structural(1, 4, 2, 1).reg_ok()
+    assert not Structural(1, 4, 4, 1).valid_for(1024)
+
+
+def test_too_small_dimension_holes():
+    # Fully-unrolled body longer than the data cannot generate code
+    # ("empty results" of Figure 1).
+    s = Structural(ve=1, vect_len=4, hot_uf=2, cold_uf=64)  # epi = 2048
+    assert not s.valid_for(32)
+    assert s.valid_for(2048)
+
+
+def test_no_leftover():
+    s = Structural(ve=1, vect_len=1, hot_uf=1, cold_uf=2)  # epi = 8
+    assert s.no_leftover(32)
+    assert not s.no_leftover(36)
+    assert s.valid_for(36)
+    assert s.leftover(36) == 4
+    assert s.num_iter(36) == 4
+
+
+@given(st.sampled_from(list(structural_grid())), st.integers(1, 4096))
+def test_leftover_decomposition(s, length):
+    """num_iter * elems_per_iter + leftover == length whenever valid."""
+    if s.valid_for(length):
+        assert s.num_iter(length) * s.elems_per_iter + s.leftover(length) == length
+        assert 0 <= s.leftover(length) < s.elems_per_iter
+        assert s.num_iter(length) >= 1
+
+
+@given(st.integers(1, 8192))
+def test_valid_variants_subset_of_grid(length):
+    vs = list(valid_variants(length))
+    assert all(s.valid_for(length) for s in vs)
+    nol = list(valid_variants(length, require_no_leftover=True))
+    assert set(n.vid for n in nol) <= set(v.vid for v in vs)
+
+
+def test_explorable_versions_matches_table4_scale():
+    """Paper Table 4: 330-858 explorable versions per benchmark/input.
+
+    Our space should land in the same order of magnitude for the paper's
+    specialisations."""
+    for length in (32, 64, 128, 4800, 7008, 7986):
+        n = V.explorable_versions(length)
+        assert 100 <= n <= 2000, (length, n)

@@ -1,0 +1,50 @@
+//! Minimal bench harness shared by all `cargo bench` targets (criterion is
+//! unavailable offline). Each paper-table/figure bench regenerates its
+//! experiment at `--quick` scale, reports wall time, and prints the
+//! claims table; `perf_hotpath` micro-benchmarks the hot paths.
+
+use std::time::Instant;
+
+pub fn run_experiment_bench(id: &str) {
+    println!("== bench: experiment {id} (quick scale) ==");
+    let t0 = Instant::now();
+    match degoal_rt::experiments::run(id, true) {
+        Ok(rep) => {
+            let dt = t0.elapsed();
+            let ok = rep.claims.iter().filter(|c| c.holds).count();
+            println!(
+                "{id}: regenerated in {:.2} s — {} tables, {}/{} claims hold",
+                dt.as_secs_f64(),
+                rep.tables.len(),
+                ok,
+                rep.claims.len()
+            );
+            for c in &rep.claims {
+                println!(
+                    "  [{}] {} — paper {}, measured {}",
+                    if c.holds { "ok" } else { "!!" },
+                    c.name,
+                    c.paper,
+                    c.measured
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("{id}: FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Time a closure over `iters` iterations, reporting per-iteration stats.
+pub fn time<F: FnMut()>(label: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label}: {:.3} ms/iter ({iters} iters)", per * 1e3);
+    per
+}

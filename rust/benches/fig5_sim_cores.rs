@@ -1,0 +1,7 @@
+//! `cargo bench` target regenerating paper fig5 (see rust/src/experiments/).
+mod bench_harness;
+
+fn main() {
+    degoal_rt::util::logging::init();
+    bench_harness::run_experiment_bench("fig5");
+}

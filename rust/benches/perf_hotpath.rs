@@ -1,0 +1,98 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable): simulator
+//! throughput, trace generation, tuner step overhead, and — when
+//! artifacts are present — PJRT compile ("codegen") and call latency.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+mod bench_harness;
+
+use bench_harness::time;
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::{Backend as _, EvalData, KernelVersion};
+use degoal_rt::coordinator::{AutoTuner, TunerConfig};
+use degoal_rt::simulator::{core_by_name, KernelKind, Pipeline, RefKind, TraceGen};
+use degoal_rt::tunespace::{Structural, TuningParams};
+
+fn main() {
+    degoal_rt::util::logging::init();
+    println!("== perf_hotpath ==");
+
+    // --- L3.a: trace generation (no allocation on the hot path) ---
+    let kind = KernelKind::Distance { dim: 128, batch: 256 };
+    let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+    let mut gen = TraceGen::new();
+    let n = gen.kernel_trace(&kind, &p).len();
+    let per = time("trace_gen (dim128 x 256 pts)", 50, || {
+        let t = gen.kernel_trace(&kind, &p);
+        std::hint::black_box(t.len());
+    });
+    println!("  -> {:.1} M insts/s generated", n as f64 / per / 1e6);
+
+    // --- L3.b: pipeline simulation throughput ---
+    let cfg = core_by_name("DI-O1").unwrap();
+    let trace = gen.kernel_trace(&kind, &p).to_vec();
+    let mut pipe = Pipeline::new(cfg);
+    pipe.run(&trace); // warm caches
+    let per = time("pipeline_sim (warm, OOO)", 20, || {
+        std::hint::black_box(pipe.run(&trace).cycles);
+    });
+    println!("  -> {:.1} M trace-insts/s simulated", trace.len() as f64 / per / 1e6);
+
+    let cfg_io = core_by_name("DI-I1").unwrap();
+    let mut pipe_io = Pipeline::new(cfg_io);
+    pipe_io.run(&trace);
+    let per = time("pipeline_sim (warm, IO)", 20, || {
+        std::hint::black_box(pipe_io.run(&trace).cycles);
+    });
+    println!("  -> {:.1} M trace-insts/s simulated", trace.len() as f64 / per / 1e6);
+
+    // --- L3.c: steady-state app_call overhead (memoised backend) ---
+    let mut b = SimBackend::new(cfg, kind, 1);
+    let mut tuner = AutoTuner::new(TunerConfig::default(), 128, Some(true));
+    for _ in 0..2000 {
+        tuner.app_call(&mut b).unwrap(); // drive past exploration
+    }
+    time("tuner app_call steady state (x1000)", 50, || {
+        for _ in 0..1000 {
+            tuner.app_call(&mut b).unwrap();
+        }
+    });
+
+    // --- L3.d: full two-phase exploration cost over a synthetic backend ---
+    let mut mb = MockBackend::new(64, 7);
+    time("tuner full exploration (mock, 137 versions)", 5, || {
+        let mut t2 = AutoTuner::new(TunerConfig::default(), 64, None);
+        t2.run_exhaustive(&mut mb).unwrap();
+        std::hint::black_box(t2.stats.explored_count());
+    });
+
+    // --- host PJRT codegen + call latency (the real regeneration cost) ---
+    let dir = degoal_rt::paths::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = degoal_rt::runtime::Runtime::cpu().unwrap();
+        let man = degoal_rt::codegen::Manifest::load(&dir).unwrap();
+        let spec = man.streamcluster(32).unwrap().clone();
+        let mut hb = degoal_rt::backend::host::HostBackend::new(&rt, spec.clone(), 1).unwrap();
+        // Codegen: compile each variant once, report the distribution.
+        let mut costs = Vec::new();
+        for v in spec.variants.iter().take(12) {
+            let s = Structural::from_vid(v.vid);
+            let c = hb.generate(TuningParams::phase1_default(s)).unwrap();
+            costs.push(c);
+        }
+        println!(
+            "pjrt codegen: mean {:.1} ms, min {:.1} ms, max {:.1} ms (12 variants)",
+            degoal_rt::util::stats::mean(&costs) * 1e3,
+            degoal_rt::util::stats::min(&costs) * 1e3,
+            degoal_rt::util::stats::max(&costs) * 1e3,
+        );
+        let v = KernelVersion::Reference(RefKind::SimdSpecialized);
+        hb.call(&v, EvalData::Real).unwrap();
+        time("pjrt kernel call (256x32 distance)", 200, || {
+            hb.call(&v, EvalData::Real).unwrap();
+        });
+    } else {
+        println!("pjrt section skipped: run `make artifacts`");
+    }
+}

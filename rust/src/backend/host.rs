@@ -1,0 +1,223 @@
+//! Host (PJRT) execution: real online auto-tuning on the machine running
+//! this process.
+//!
+//! "Machine code generation" is an actual XLA compilation of the variant's
+//! HLO artifact (measured, charged as regeneration overhead); calls are
+//! wall-clock-timed PJRT executions with the inputs staged once. Training
+//! and real input sets are distinct buffers, mirroring §3.4.
+//!
+//! Host limitations (documented in DESIGN.md §3): phase-2 parameters
+//! (pldStride, IS, SM) do not alter the HLO, so on this backend they map
+//! to the same executable — exactly like a `pld` hint on a core that
+//! ignores it; and the single reference artifact stands for all four
+//! RefKind flavours (XLA specialises and vectorises the naive expression).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::{Backend, EvalData, KernelVersion, Sample};
+use crate::codegen::{ArtifactSpec, CodeCache};
+use crate::runtime::{Executable, InputF32, Runtime};
+use crate::tunespace::TuningParams;
+use crate::util::rng::Rng;
+
+/// Inputs for one benchmark call, staged as PJRT literals.
+struct CallInputs {
+    inputs: Vec<InputF32>,
+}
+
+impl CallInputs {
+    fn refs(&self) -> Vec<&InputF32> {
+        self.inputs.iter().collect()
+    }
+}
+
+pub struct HostBackend<'rt> {
+    cache: CodeCache<'rt>,
+    training: CallInputs,
+    real: CallInputs,
+    /// Executables by structural vid (phase-2 knobs share the artifact).
+    exes: HashMap<u32, Rc<Executable>>,
+    ref_exe: Option<Rc<Executable>>,
+}
+
+impl<'rt> HostBackend<'rt> {
+    /// Build a backend for one artifact spec. `seed` controls the
+    /// synthetic input data.
+    pub fn new(rt: &'rt Runtime, spec: ArtifactSpec, seed: u64) -> Result<HostBackend<'rt>> {
+        let mut rng_t = Rng::new(seed ^ 0x7ea1);
+        let mut rng_r = Rng::new(seed ^ 0x0dd5);
+        let training = Self::make_inputs(rt, &spec, &mut rng_t)?;
+        let real = Self::make_inputs(rt, &spec, &mut rng_r)?;
+        Ok(HostBackend {
+            cache: CodeCache::new(rt, spec),
+            training,
+            real,
+            exes: HashMap::new(),
+            ref_exe: None,
+        })
+    }
+
+    fn make_inputs(rt: &Runtime, spec: &ArtifactSpec, rng: &mut Rng) -> Result<CallInputs> {
+        let len = spec.length as usize;
+        let outer = spec.outer as usize;
+        let mut inputs = Vec::new();
+        if spec.benchmark == "streamcluster" {
+            let mut points = vec![0f32; outer * len];
+            rng.fill_gauss_f32(&mut points);
+            let mut center = vec![0f32; len];
+            rng.fill_gauss_f32(&mut center);
+            inputs.push(InputF32::stage(rt, &points, &[outer as i64, len as i64])?);
+            inputs.push(InputF32::stage(rt, &center, &[len as i64])?);
+        } else {
+            let mut img = vec![0f32; outer * len];
+            rng.fill_gauss_f32(&mut img);
+            let bands = spec.bands.unwrap_or(3) as usize;
+            let mut mulvec = vec![0f32; len];
+            let mut addvec = vec![0f32; len];
+            let mul: Vec<f32> = (0..bands).map(|_| rng.f32() * 2.0).collect();
+            let add: Vec<f32> = (0..bands).map(|_| rng.f32()).collect();
+            for i in 0..len {
+                mulvec[i] = mul[i % bands];
+                addvec[i] = add[i % bands];
+            }
+            inputs.push(InputF32::stage(rt, &img, &[outer as i64, len as i64])?);
+            inputs.push(InputF32::stage(rt, &mulvec, &[len as i64])?);
+            inputs.push(InputF32::stage(rt, &addvec, &[len as i64])?);
+        }
+        Ok(CallInputs { inputs })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        self.cache.spec()
+    }
+
+    pub fn total_codegen(&self) -> f64 {
+        self.cache.total_codegen().as_secs_f64()
+    }
+
+    fn executable(&mut self, v: &KernelVersion) -> Result<Rc<Executable>> {
+        match v {
+            KernelVersion::Variant(p) => {
+                let vid = p.s.vid();
+                if let Some(e) = self.exes.get(&vid) {
+                    return Ok(e.clone());
+                }
+                let (e, _) = self.cache.generate(p.s).context("variant not generated")?;
+                self.exes.insert(vid, e.clone());
+                Ok(e)
+            }
+            KernelVersion::Reference(_) => {
+                if let Some(e) = &self.ref_exe {
+                    return Ok(e.clone());
+                }
+                let (e, _) = self.cache.reference()?;
+                self.ref_exe = Some(e.clone());
+                Ok(e)
+            }
+        }
+    }
+
+    /// Run one call and also return the outputs (for the workload driver,
+    /// which needs the distances/pixels, not just the timing).
+    pub fn call_with_output(
+        &mut self,
+        v: &KernelVersion,
+        data: EvalData,
+    ) -> Result<(Vec<f32>, f64)> {
+        let exe = self.executable(v)?;
+        let inputs = match data {
+            EvalData::Training => self.training.refs(),
+            EvalData::Real => self.real.refs(),
+        };
+        let (out, dt) = exe.call_f32(&inputs)?;
+        Ok((out, dt.as_secs_f64()))
+    }
+}
+
+impl Backend for HostBackend<'_> {
+    fn generate(&mut self, p: TuningParams) -> Result<f64> {
+        let (e, cost) = self.cache.generate(p.s)?;
+        self.exes.insert(p.s.vid(), e);
+        Ok(cost.as_secs_f64())
+    }
+
+    fn call(&mut self, v: &KernelVersion, data: EvalData) -> Result<Sample> {
+        let exe = self.executable(v)?;
+        let inputs = match data {
+            EvalData::Training => self.training.refs(),
+            EvalData::Real => self.real.refs(),
+        };
+        // Host training inputs share the artifact's fixed shape, so a
+        // training call costs the same as a real one.
+        Ok(Sample::real(exe.call_timed(&inputs)?.as_secs_f64()))
+    }
+
+    fn name(&self) -> String {
+        format!("host:{}", self.cache.spec().benchmark)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::Manifest;
+    use crate::simulator::RefKind;
+    use crate::tunespace::Structural;
+
+    fn setup(rt: &Runtime) -> Option<HostBackend<'_>> {
+        let man = Manifest::load(crate::paths::artifacts_dir()).ok()?;
+        let spec = man.streamcluster(32)?.clone();
+        HostBackend::new(rt, spec, 42).ok()
+    }
+
+    #[test]
+    fn generate_then_call() {
+        let Ok(rt) = Runtime::cpu() else { return };
+        let Some(mut b) = setup(&rt) else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+        let cost = b.generate(p).unwrap();
+        assert!(cost > 0.0, "first compile has real cost");
+        let again = b.generate(p).unwrap();
+        assert_eq!(again, 0.0);
+        let t = b.call(&KernelVersion::Variant(p), EvalData::Training).unwrap().score;
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn variant_output_matches_reference_output() {
+        let Ok(rt) = Runtime::cpu() else { return };
+        let Some(mut b) = setup(&rt) else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let p = TuningParams::phase1_default(Structural::new(true, 1, 2, 1));
+        b.generate(p).unwrap();
+        let (a, _) = b
+            .call_with_output(&KernelVersion::Reference(RefKind::SimdSpecialized), EvalData::Real)
+            .unwrap();
+        let (v, _) = b.call_with_output(&KernelVersion::Variant(p), EvalData::Real).unwrap();
+        assert_eq!(a.len(), v.len());
+        for (x, y) in a.iter().zip(&v) {
+            assert!((x - y).abs() <= 1e-3 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn training_and_real_data_differ() {
+        let Ok(rt) = Runtime::cpu() else { return };
+        let Some(mut b) = setup(&rt) else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let r = KernelVersion::Reference(RefKind::SimdSpecialized);
+        let (a, _) = b.call_with_output(&r, EvalData::Training).unwrap();
+        let (c, _) = b.call_with_output(&r, EvalData::Real).unwrap();
+        assert_ne!(a, c, "training and real input sets must differ");
+    }
+}

@@ -1,0 +1,149 @@
+//! Synthetic backend with a known performance landscape — used by the
+//! coordinator tests to verify exploration, decision, and replacement
+//! logic deterministically.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use super::{Backend, EvalData, KernelVersion, Sample};
+use crate::tunespace::TuningParams;
+use crate::util::rng::Rng;
+
+/// Landscape: per-call seconds as a function of the tuning parameters.
+pub type Landscape = fn(&TuningParams) -> f64;
+
+/// Reference per-call time is fixed; variants follow the landscape.
+pub struct MockBackend {
+    pub ref_time: f64,
+    pub landscape: Landscape,
+    pub codegen_cost: f64,
+    pub length: u32,
+    pub noise_sigma: f64,
+    rng: Rng,
+    pub generated: HashSet<u32>,
+    pub calls: u64,
+    pub eval_calls: u64,
+}
+
+/// A simple landscape rewarding moderate unrolling and SIMD: minimum at
+/// (ve=1, vectLen=2, hotUF=2, coldUF=4).
+pub fn default_landscape(p: &TuningParams) -> f64 {
+    let s = p.s;
+    let mut t = 100e-6;
+    if !s.ve {
+        t *= 2.0;
+    }
+    t *= 1.0 + 0.08 * (s.vect_len as f64 - 2.0).abs();
+    t *= 1.0 + 0.06 * (s.hot_uf as f64 - 2.0).abs();
+    t *= 1.0 + 0.02 * ((s.cold_uf as f64).log2() - 2.0).abs();
+    // Phase-2 sweeteners: prefetch 32 and IS help a bit.
+    if p.pld_stride == 32 {
+        t *= 0.97;
+    }
+    if p.isched {
+        t *= 0.98;
+    }
+    if p.smin {
+        t *= 0.995;
+    }
+    t
+}
+
+impl MockBackend {
+    pub fn new(length: u32, seed: u64) -> MockBackend {
+        MockBackend {
+            ref_time: 180e-6,
+            landscape: default_landscape,
+            codegen_cost: 20e-6,
+            length,
+            noise_sigma: 0.0,
+            rng: Rng::new(seed),
+            generated: HashSet::new(),
+            calls: 0,
+            eval_calls: 0,
+        }
+    }
+
+    pub fn best_possible(&self) -> (TuningParams, f64) {
+        let mut best: Option<(TuningParams, f64)> = None;
+        for s in crate::tunespace::Space::new(self.length).valid_structural() {
+            for p in crate::tunespace::Space::phase2_grid(s) {
+                let t = (self.landscape)(&p);
+                if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                    best = Some((p, t));
+                }
+            }
+        }
+        best.unwrap()
+    }
+}
+
+impl Backend for MockBackend {
+    fn generate(&mut self, p: TuningParams) -> Result<f64> {
+        if !p.s.valid_for(self.length) {
+            bail!("invalid variant {p}");
+        }
+        if self.generated.insert(p.full_id()) {
+            Ok(self.codegen_cost)
+        } else {
+            Ok(0.0)
+        }
+    }
+
+    fn call(&mut self, v: &KernelVersion, data: EvalData) -> Result<Sample> {
+        self.calls += 1;
+        if data == EvalData::Training {
+            self.eval_calls += 1;
+        }
+        let base = match v {
+            KernelVersion::Reference(_) => self.ref_time,
+            KernelVersion::Variant(p) => {
+                if !self.generated.contains(&p.full_id()) {
+                    bail!("variant called before generate: {p}");
+                }
+                (self.landscape)(p)
+            }
+        };
+        Ok(Sample::real(base * (1.0 + self.noise_sigma * self.rng.gauss())))
+    }
+
+    fn name(&self) -> String {
+        "mock".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::RefKind;
+    use crate::tunespace::Structural;
+
+    #[test]
+    fn landscape_minimum_where_expected() {
+        let b = MockBackend::new(64, 1);
+        let (best, t) = b.best_possible();
+        assert!(best.s.ve);
+        assert_eq!(best.s.vect_len, 2);
+        assert_eq!(best.s.hot_uf, 2);
+        assert!(t < b.ref_time);
+    }
+
+    #[test]
+    fn call_before_generate_fails() {
+        let mut b = MockBackend::new(64, 1);
+        let p = TuningParams::phase1_default(Structural::new(true, 1, 1, 1));
+        assert!(b.call(&KernelVersion::Variant(p), EvalData::Real).is_err());
+        b.generate(p).unwrap();
+        assert!(b.call(&KernelVersion::Variant(p), EvalData::Real).is_ok());
+    }
+
+    #[test]
+    fn reference_always_callable() {
+        let mut b = MockBackend::new(64, 1);
+        let t = b
+            .call(&KernelVersion::Reference(RefKind::SisdSpecialized), EvalData::Real)
+            .unwrap();
+        assert_eq!(t.score, 180e-6);
+    }
+}

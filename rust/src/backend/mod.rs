@@ -1,0 +1,90 @@
+//! Execution backends for the online auto-tuner.
+//!
+//! The coordinator (paper §3) is generic over *where* kernels run:
+//!
+//! * [`host::HostBackend`] — real execution on the host CPU through PJRT:
+//!   "machine code generation" is an actual XLA compile of the variant's
+//!   HLO artifact and measurements are wall-clock. This is the end-to-end
+//!   online-auto-tuning configuration.
+//! * [`sim::SimBackend`] — the gem5/McPAT analogue: per-call time comes
+//!   from the cycle model of one of the 11 simulated cores (plus A8/A9
+//!   stand-ins), with measurement noise injected to exercise the paper's
+//!   filtering machinery. Time is virtual; energy is reported.
+//! * [`mock::MockBackend`] — a synthetic performance landscape for
+//!   deterministic coordinator tests.
+
+pub mod host;
+pub mod mock;
+pub mod sim;
+
+use crate::simulator::RefKind;
+use crate::tunespace::TuningParams;
+use anyhow::Result;
+
+/// A kernel version the application can run: the compiled-C reference or
+/// an auto-tuned variant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelVersion {
+    Reference(RefKind),
+    Variant(TuningParams),
+}
+
+impl KernelVersion {
+    pub fn is_variant(&self) -> bool {
+        matches!(self, KernelVersion::Variant(_))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            KernelVersion::Reference(rk) => format!("ref:{rk:?}"),
+            KernelVersion::Variant(p) => format!("var:{p}"),
+        }
+    }
+}
+
+/// Input data used for an evaluation call (paper §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalData {
+    /// Training input with warmed caches: very stable measurements, but
+    /// the work is thrown away.
+    Training,
+    /// Real application data: useful work, noisier measurements.
+    Real,
+}
+
+/// One measurement sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Measured per-(real-)call seconds — the comparison score.
+    pub score: f64,
+    /// Wall/virtual time this measurement actually consumed. Equal to
+    /// `score` for real calls; smaller for training calls on backends
+    /// where the training input is a reduced warmed data set (§3.4).
+    pub cost: f64,
+}
+
+impl Sample {
+    pub fn real(t: f64) -> Sample {
+        Sample { score: t, cost: t }
+    }
+}
+
+/// Where the auto-tuner's kernels execute.
+pub trait Backend {
+    /// Generate machine code for a variant (PJRT compile / deGoal model).
+    /// Returns the codegen cost in seconds. Idempotent: regenerating an
+    /// already-generated variant costs ~0.
+    fn generate(&mut self, p: TuningParams) -> Result<f64>;
+
+    /// Run one kernel call of `v`. `Training` calls do no useful
+    /// application work.
+    fn call(&mut self, v: &KernelVersion, data: EvalData) -> Result<Sample>;
+
+    /// Joules for one call of `v`, when the backend models energy.
+    fn energy_per_call(&mut self, _v: &KernelVersion) -> Option<f64> {
+        None
+    }
+
+    /// Backend label for reports.
+    fn name(&self) -> String;
+}

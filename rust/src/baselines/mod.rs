@@ -1,0 +1,7 @@
+//! Baselines the paper compares against: the compiled-C reference kernels
+//! (Ref / Spec-Ref rows of Table 3) and the best statically auto-tuned
+//! kernel (BS-AT) found by exhaustive offline search.
+
+pub mod static_search;
+
+pub use static_search::{static_search, StaticSearchResult};

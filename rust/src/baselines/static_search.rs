@@ -1,0 +1,128 @@
+//! Static (offline) auto-tuning — the BS-AT baseline of Table 3 and the
+//! exploration behind Figure 1.
+//!
+//! The paper statically explores the tuning space per platform and input
+//! set to find the best kernel. To bound exploration time it restricts
+//! Streamcluster to optimal (no-leftover) solutions and guarantees at
+//! least ~1000 explored points for VIPS by allowing leftovers (§4.4); we
+//! expose the same switch.
+
+use anyhow::Result;
+
+use crate::backend::{Backend, KernelVersion};
+use crate::coordinator::{EvalMode, Evaluator};
+use crate::tunespace::{Space, Structural, TuningParams};
+
+#[derive(Debug, Clone)]
+pub struct StaticSearchResult {
+    pub best: TuningParams,
+    pub best_score: f64,
+    /// Every (variant, score) evaluated — the Figure 1 exploration data.
+    pub explored: Vec<(TuningParams, f64)>,
+    /// Total (virtual) time spent exploring — the "several hours per
+    /// dimension and per platform" cost the paper pays offline.
+    pub search_cost: f64,
+}
+
+/// Exhaustively evaluate the tuning space on `backend`.
+///
+/// * `ve_filter`: restrict to SISD/SIMD like the online fair-comparison.
+/// * `no_leftover_only`: the paper's Streamcluster restriction.
+/// * `structural_only`: evaluate phase-1 defaults only (Figure 1 sweeps
+///   structure); otherwise the full structural x phase-2 cross product.
+pub fn static_search<B: Backend>(
+    backend: &mut B,
+    length: u32,
+    ve_filter: Option<bool>,
+    no_leftover_only: bool,
+    structural_only: bool,
+) -> Result<StaticSearchResult> {
+    let space = Space::new(length);
+    let structs: Vec<Structural> = if no_leftover_only {
+        space.no_leftover_structural()
+    } else {
+        space.valid_structural()
+    }
+    .into_iter()
+    .filter(|s| ve_filter.map(|ve| s.ve == ve).unwrap_or(true))
+    .collect();
+
+    let mut explored = Vec::new();
+    let mut search_cost = 0.0;
+    for s in structs {
+        let candidates: Vec<TuningParams> = if structural_only {
+            vec![TuningParams::phase1_default(s)]
+        } else {
+            Space::phase2_grid(s)
+        };
+        for p in candidates {
+            search_cost += backend.generate(p)?;
+            let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(p), EvalMode::TrainingFiltered)?;
+            search_cost += ev.cost;
+            explored.push((p, ev.score));
+        }
+    }
+    anyhow::ensure!(!explored.is_empty(), "empty search space for length {length}");
+    let (best, best_score) = explored
+        .iter()
+        .cloned()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    Ok(StaticSearchResult { best, best_score, explored, search_cost })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+    use crate::backend::sim::SimBackend;
+    use crate::simulator::{core_by_name, KernelKind};
+
+    #[test]
+    fn finds_mock_optimum() {
+        let mut b = MockBackend::new(64, 21);
+        let r = static_search(&mut b, 64, None, false, false).unwrap();
+        let (expect, t) = b.best_possible();
+        assert_eq!(r.best.full_id(), expect.full_id());
+        assert!((r.best_score - t).abs() < 1e-12);
+        assert!(r.search_cost > 0.0);
+    }
+
+    #[test]
+    fn no_leftover_restriction_shrinks_space() {
+        let mut b = MockBackend::new(96, 22);
+        let all = static_search(&mut b, 96, None, false, true).unwrap();
+        let mut b2 = MockBackend::new(96, 22);
+        let nol = static_search(&mut b2, 96, None, true, true).unwrap();
+        assert!(nol.explored.len() < all.explored.len());
+    }
+
+    #[test]
+    fn bsat_beats_reference_on_sim() {
+        use crate::backend::{Backend as _, EvalData, KernelVersion};
+        use crate::simulator::RefKind;
+        let mut b = SimBackend::new(
+            core_by_name("A9").unwrap(),
+            KernelKind::Distance { dim: 64, batch: 64 },
+            23,
+        );
+        let r = static_search(&mut b, 64, Some(true), true, true).unwrap();
+        let ref_t = b
+            .call(&KernelVersion::Reference(RefKind::SimdSpecialized), EvalData::Training)
+            .unwrap()
+            .score;
+        assert!(
+            r.best_score < ref_t,
+            "BS-AT {} must beat the specialised reference {}",
+            r.best_score,
+            ref_t
+        );
+    }
+
+    #[test]
+    fn ve_filter_respected() {
+        let mut b = MockBackend::new(32, 24);
+        let r = static_search(&mut b, 32, Some(false), false, true).unwrap();
+        assert!(r.explored.iter().all(|(p, _)| !p.s.ve));
+    }
+}

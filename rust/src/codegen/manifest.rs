@@ -1,0 +1,195 @@
+//! `artifacts/manifest.json` — the index written by `python -m compile.aot`
+//! mapping every (benchmark, specialisation, structural variant) to its
+//! HLO text artifact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One structural-variant artifact.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub vid: u32,
+    pub ve: bool,
+    pub vect_len: u32,
+    pub hot_uf: u32,
+    pub cold_uf: u32,
+    pub no_leftover: bool,
+    /// Artifact path relative to the manifest root.
+    pub path: String,
+}
+
+/// One benchmark specialisation (a `(benchmark, length)` pair).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub benchmark: String,
+    /// Tuned-loop trip length in f32 elements (dim / row_len).
+    pub length: u32,
+    /// Streamcluster: batch points per call; VIPS: rows per call.
+    pub outer: u32,
+    /// VIPS only: image width and bands behind `length`.
+    pub width: Option<u32>,
+    pub bands: Option<u32>,
+    pub explorable_versions: u32,
+    pub ref_path: String,
+    pub variants: Vec<VariantEntry>,
+    /// Manifest root directory (for resolving relative paths).
+    pub root: PathBuf,
+}
+
+impl ArtifactSpec {
+    pub fn variant(&self, vid: u32) -> Option<&VariantEntry> {
+        self.variants.iter().find(|v| v.vid == vid)
+    }
+
+    pub fn has_variant(&self, vid: u32) -> bool {
+        self.variant(vid).is_some()
+    }
+}
+
+/// The whole artifacts index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub specs: Vec<ArtifactSpec>,
+    pub sc_batch: u32,
+    pub vips_rows: u32,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&v, root)
+    }
+
+    fn from_json(v: &Json, root: PathBuf) -> Result<Manifest> {
+        let version = v.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != 3 {
+            bail!("manifest version {version} unsupported (want 3); re-run `make artifacts`");
+        }
+        let sc_batch = v.get("sc_batch").and_then(Json::as_u64).unwrap_or(256) as u32;
+        let vips_rows = v.get("vips_rows").and_then(Json::as_u64).unwrap_or(8) as u32;
+        let mut specs = Vec::new();
+        for spec in v.get("specs").and_then(Json::as_arr).unwrap_or(&[]) {
+            let benchmark = spec
+                .get("benchmark")
+                .and_then(Json::as_str)
+                .context("spec.benchmark")?
+                .to_string();
+            let length = spec.get("length").and_then(Json::as_u64).context("spec.length")? as u32;
+            let outer = if benchmark == "streamcluster" {
+                spec.get("batch").and_then(Json::as_u64).unwrap_or(sc_batch as u64) as u32
+            } else {
+                spec.get("rows").and_then(Json::as_u64).unwrap_or(vips_rows as u64) as u32
+            };
+            let mut variants = Vec::new();
+            for e in spec.get("variants").and_then(Json::as_arr).unwrap_or(&[]) {
+                variants.push(VariantEntry {
+                    vid: e.get("vid").and_then(Json::as_u64).context("vid")? as u32,
+                    ve: e.get("ve").and_then(Json::as_u64).unwrap_or(0) != 0,
+                    vect_len: e.get("vect_len").and_then(Json::as_u64).context("vect_len")? as u32,
+                    hot_uf: e.get("hot_uf").and_then(Json::as_u64).context("hot_uf")? as u32,
+                    cold_uf: e.get("cold_uf").and_then(Json::as_u64).context("cold_uf")? as u32,
+                    no_leftover: e.get("no_leftover").and_then(Json::as_bool).unwrap_or(false),
+                    path: e.get("path").and_then(Json::as_str).context("path")?.to_string(),
+                });
+            }
+            specs.push(ArtifactSpec {
+                benchmark,
+                length,
+                outer,
+                width: spec.get("width").and_then(Json::as_u64).map(|w| w as u32),
+                bands: spec.get("bands").and_then(Json::as_u64).map(|b| b as u32),
+                explorable_versions: spec
+                    .get("explorable_versions")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0) as u32,
+                ref_path: spec.get("ref").and_then(Json::as_str).context("ref")?.to_string(),
+                variants,
+                root: root.clone(),
+            });
+        }
+        if specs.is_empty() {
+            bail!("manifest has no specs");
+        }
+        Ok(Manifest { specs, sc_batch, vips_rows })
+    }
+
+    pub fn streamcluster(&self, dim: u32) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.benchmark == "streamcluster" && s.length == dim)
+    }
+
+    pub fn vips(&self, width: u32) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.benchmark == "vips" && s.width == Some(width))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let json = r#"{
+            "version": 3, "sc_batch": 256, "vips_rows": 8,
+            "specs": [{
+                "benchmark": "streamcluster", "dim": 32, "batch": 256,
+                "length": 32, "ref": "streamcluster/d32/ref.hlo.txt",
+                "explorable_versions": 624,
+                "variants": [
+                    {"vid": 0, "ve": 0, "vect_len": 1, "hot_uf": 1,
+                     "cold_uf": 1, "elems_per_iter": 1, "no_leftover": true,
+                     "path": "streamcluster/d32/v0.hlo.txt"}
+                ]
+            }]
+        }"#;
+        let v = Json::parse(json).unwrap();
+        let m = Manifest::from_json(&v, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.specs.len(), 1);
+        let spec = m.streamcluster(32).unwrap();
+        assert_eq!(spec.outer, 256);
+        assert!(spec.has_variant(0));
+        assert!(!spec.has_variant(99));
+        assert!(m.vips(1600).is_none());
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let v = Json::parse(r#"{"version": 1, "specs": []}"#).unwrap();
+        assert!(Manifest::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::paths::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 6);
+        for dim in [32u32, 64, 128] {
+            let s = m.streamcluster(dim).unwrap();
+            assert!(s.variants.len() >= 50, "{dim}: {}", s.variants.len());
+            // Variant metadata consistent with the shared vid codec.
+            for v in &s.variants {
+                let st = crate::tunespace::Structural::from_vid(v.vid);
+                assert_eq!(st.ve, v.ve);
+                assert_eq!(st.vect_len, v.vect_len);
+                assert_eq!(st.hot_uf, v.hot_uf);
+                assert_eq!(st.cold_uf, v.cold_uf);
+                assert_eq!(st.no_leftover(s.length), v.no_leftover);
+            }
+        }
+        for w in [1600u32, 2336, 2662] {
+            assert!(m.vips(w).is_some());
+        }
+    }
+}

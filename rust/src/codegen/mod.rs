@@ -1,0 +1,136 @@
+//! Run-time code generation — the deGoal role on this stack.
+//!
+//! Build time (`python -m compile.aot`) traced every valid structural
+//! variant to HLO text under `artifacts/`. At run time, "generating a new
+//! kernel version" (paper Fig. 2 "parametrizable function generator")
+//! means: resolve the variant's artifact from the [`Manifest`] and compile
+//! it on the live PJRT client via [`CodeCache`]. The measured compile time
+//! is the regeneration overhead the decision logic budgets.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, VariantEntry};
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Executable, Runtime};
+use crate::tunespace::Structural;
+
+/// Lazy per-spec compile cache: the run-time "function generator".
+///
+/// Variants are compiled at most once per process (a regenerated kernel in
+/// the paper is likewise kept in its code buffer); the *first* compile of
+/// each variant is the honest codegen cost.
+pub struct CodeCache<'rt> {
+    rt: &'rt Runtime,
+    spec: ArtifactSpec,
+    cache: HashMap<u32, Rc<Executable>>,
+    reference: Option<Rc<Executable>>,
+    total_codegen: Duration,
+    compiles: u32,
+}
+
+impl<'rt> CodeCache<'rt> {
+    pub fn new(rt: &'rt Runtime, spec: ArtifactSpec) -> CodeCache<'rt> {
+        CodeCache {
+            rt,
+            spec,
+            cache: HashMap::new(),
+            reference: None,
+            total_codegen: Duration::ZERO,
+            compiles: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Generate machine code for a structural variant (cached). Returns
+    /// the executable and the codegen cost of *this* call (zero on cache
+    /// hit).
+    pub fn generate(&mut self, s: Structural) -> Result<(Rc<Executable>, Duration)> {
+        let vid = s.vid();
+        if let Some(e) = self.cache.get(&vid) {
+            return Ok((e.clone(), Duration::ZERO));
+        }
+        let entry = self
+            .spec
+            .variant(vid)
+            .with_context(|| format!("variant {s} (vid {vid}) has no artifact"))?;
+        let path = self.spec.root.join(&entry.path);
+        let exe = Rc::new(self.rt.load_hlo_text(&path)?);
+        let cost = exe.compile_time();
+        self.total_codegen += cost;
+        self.compiles += 1;
+        self.cache.insert(vid, exe.clone());
+        Ok((exe, cost))
+    }
+
+    /// Compile the reference kernel artifact (gcc -O3 analogue).
+    pub fn reference(&mut self) -> Result<(Rc<Executable>, Duration)> {
+        if let Some(e) = &self.reference {
+            return Ok((e.clone(), Duration::ZERO));
+        }
+        let path = self.spec.root.join(&self.spec.ref_path);
+        let exe = Rc::new(self.rt.load_hlo_text(&path)?);
+        let cost = exe.compile_time();
+        self.total_codegen += cost;
+        self.reference = Some(exe.clone());
+        Ok((exe, cost))
+    }
+
+    pub fn total_codegen(&self) -> Duration {
+        self.total_codegen
+    }
+
+    pub fn compiles(&self) -> u32 {
+        self.compiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::Structural;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(crate::paths::artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn codegen_is_cached() {
+        let Some(man) = manifest() else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let spec = man.streamcluster(32).unwrap().clone();
+        let vid = spec.variants[0].vid;
+        let s = Structural::from_vid(vid);
+        let mut cache = CodeCache::new(&rt, spec);
+        let (_, c1) = cache.generate(s).unwrap();
+        assert!(c1 > Duration::ZERO, "first compile must cost time");
+        let (_, c2) = cache.generate(s).unwrap();
+        assert_eq!(c2, Duration::ZERO, "second generate is a cache hit");
+        assert_eq!(cache.compiles(), 1);
+    }
+
+    #[test]
+    fn missing_variant_is_hole() {
+        let Some(man) = manifest() else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let spec = man.streamcluster(32).unwrap().clone();
+        let mut cache = CodeCache::new(&rt, spec);
+        // (ve=1, v=4, h=4, c=64) overflows the register file: no artifact.
+        let s = Structural::new(true, 4, 4, 64);
+        assert!(cache.generate(s).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! The auto-tuner main loop (paper Figure 2).
+//!
+//! Cooperative driving model: the application calls
+//! [`AutoTuner::app_call`] for every kernel invocation; the tuner runs the
+//! active function, accounts its time, and — when the wake period elapses
+//! and the regeneration budget allows — generates and evaluates exactly
+//! one new version, replacing the active function if it scores better.
+//! All tool time (codegen + evaluation) is charged to `overhead`, exactly
+//! as in the paper's single-core `taskset` measurements.
+
+use anyhow::Result;
+
+use super::decision::RegenDecision;
+use super::evaluator::{EvalMode, Evaluator};
+use super::stats::{ExploredVersion, TuneStats};
+use crate::backend::{Backend, EvalData, KernelVersion};
+use crate::simulator::RefKind;
+use crate::tunespace::{ExplorationPlan, Phase, TuningParams};
+
+/// Tuner policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct TunerConfig {
+    pub decision: RegenDecision,
+    /// Use training data + filter in phase 1 (§3.4 "Training & real");
+    /// false = real data everywhere ("Real input data only").
+    pub training_phase1: bool,
+    /// Samples for real-data evaluation (plain average).
+    pub real_samples: usize,
+    /// Seconds between tuning-thread wake-ups.
+    pub wake_period: f64,
+    /// Initial active function: the SISD reference, "because this is a
+    /// realistic scenario" (§4.4).
+    pub initial_ref: RefKind,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            decision: RegenDecision::default(),
+            training_phase1: true,
+            real_samples: 5,
+            wake_period: 0.02,
+            initial_ref: RefKind::SisdGeneric,
+        }
+    }
+}
+
+/// What a tuning wake-up did (for logs and tests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepEvent {
+    /// Not time to wake yet, or budget exhausted, or exploration done.
+    Idle,
+    /// Measured the initial reference score.
+    MeasuredReference { score: f64 },
+    /// Generated + evaluated a candidate.
+    Explored { params: TuningParams, score: f64, swapped: bool },
+    /// Both phases exhausted at this wake-up.
+    ExplorationDone,
+}
+
+pub struct AutoTuner {
+    cfg: TunerConfig,
+    plan: ExplorationPlan,
+    active: KernelVersion,
+    /// Score of the active function under the *current* evaluation mode.
+    active_score: Option<f64>,
+    /// Score of the initial reference (baseline for gain estimation).
+    ref_score: Option<f64>,
+    best: Option<(TuningParams, f64)>,
+    next_wake: f64,
+    last_phase: Phase,
+    pub stats: TuneStats,
+}
+
+impl AutoTuner {
+    /// `length`: tuned-loop trip length (kernel specialisation);
+    /// `ve_filter`: restrict exploration to SISD (false) / SIMD (true) for
+    /// the paper's fair-comparison runs, or None for the real scenario.
+    pub fn new(cfg: TunerConfig, length: u32, ve_filter: Option<bool>) -> AutoTuner {
+        let plan = ExplorationPlan::new(length, ve_filter);
+        let last_phase = plan.phase();
+        AutoTuner {
+            cfg,
+            plan,
+            active: KernelVersion::Reference(cfg.initial_ref),
+            active_score: None,
+            ref_score: None,
+            best: None,
+            next_wake: 0.0,
+            last_phase,
+            stats: TuneStats::default(),
+        }
+    }
+
+    pub fn active(&self) -> &KernelVersion {
+        &self.active
+    }
+
+    pub fn best(&self) -> Option<(TuningParams, f64)> {
+        self.best
+    }
+
+    /// Current virtual/real time: application time + tool overhead (the
+    /// single-core accounting of §4.1).
+    pub fn now(&self) -> f64 {
+        self.stats.app_time + self.stats.overhead
+    }
+
+    pub fn exploration_done(&self) -> bool {
+        self.stats.exploration_done_at.is_some()
+    }
+
+    /// Application-side kernel invocation: runs the active function on
+    /// real data, then lets the tuning logic wake if due. Returns the
+    /// call's seconds.
+    pub fn app_call<B: Backend>(&mut self, backend: &mut B) -> Result<f64> {
+        let dt = backend.call(&self.active, EvalData::Real)?.score;
+        self.stats.app_time += dt;
+        self.stats.kernel_calls += 1;
+        // Gain estimate (§3.3): per call, reference minus active score.
+        if let (Some(r), Some(a)) = (self.ref_score, self.active_score) {
+            if self.active.is_variant() {
+                self.stats.gained += r - a;
+            }
+        }
+        self.tune_step(backend)?;
+        Ok(dt)
+    }
+
+    /// One wake-up of the tuning thread. Public so experiment harnesses
+    /// can drive the tuner without an application loop.
+    pub fn tune_step<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
+        if self.now() < self.next_wake {
+            return Ok(StepEvent::Idle);
+        }
+        self.next_wake = self.now() + self.cfg.wake_period;
+
+        // Bootstrap: evaluate the reference function (Fig. 2: "evaluate
+        // reference function" precedes the main loop).
+        if self.ref_score.is_none() {
+            let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
+            self.stats.overhead += ev.cost;
+            self.ref_score = Some(ev.score);
+            self.active_score = Some(ev.score);
+            return Ok(StepEvent::MeasuredReference { score: ev.score });
+        }
+
+        if self.exploration_done() {
+            return Ok(StepEvent::Idle);
+        }
+
+        // Regeneration decision (§3.3).
+        if !self.cfg.decision.allow(self.stats.overhead, self.stats.app_time, self.stats.gained) {
+            return Ok(StepEvent::Idle);
+        }
+
+        self.explore_next(backend)
+    }
+
+    /// Generate + evaluate the next candidate, bypassing the wake/budget
+    /// gates (the gated path is `tune_step`).
+    fn explore_next<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
+        let best_params = self.best.map(|(p, _)| p);
+        let Some(cand) = self.plan.next(best_params) else {
+            self.stats.exploration_done_at = Some(self.now());
+            return Ok(StepEvent::ExplorationDone);
+        };
+
+        // Phase transition: re-score the active function under the new
+        // evaluation mode so comparisons stay apples-to-apples (§3.4:
+        // real data is mandatory in phase 2).
+        if self.plan.phase() != self.last_phase {
+            self.last_phase = self.plan.phase();
+            let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
+            self.stats.overhead += ev.cost;
+            self.active_score = Some(ev.score);
+        }
+
+        // Generate (machine code) + evaluate the candidate.
+        let gen_cost = backend.generate(cand)?;
+        self.stats.overhead += gen_cost;
+        let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(cand), self.eval_mode())?;
+        self.stats.overhead += ev.cost;
+
+        if self.best.map(|(_, s)| ev.score < s).unwrap_or(true) {
+            self.best = Some((cand, ev.score));
+        }
+
+        // Replacement decision: "simply comparing the calculated
+        // run-times" (§3.4).
+        let swapped = ev.score < self.active_score.unwrap_or(f64::INFINITY);
+        if swapped {
+            self.active = KernelVersion::Variant(cand);
+            self.active_score = Some(ev.score);
+            self.stats.swaps += 1;
+            self.stats.last_swap_at = Some(self.now());
+        }
+        self.stats.explored.push(ExploredVersion {
+            params: cand,
+            score: ev.score,
+            at: self.now(),
+            swapped_in: swapped,
+        });
+        Ok(StepEvent::Explored { params: cand, score: ev.score, swapped })
+    }
+
+    fn eval_mode(&self) -> EvalMode {
+        if self.cfg.training_phase1 && self.plan.phase() == Phase::One {
+            EvalMode::TrainingFiltered
+        } else {
+            EvalMode::RealAveraged(self.cfg.real_samples)
+        }
+    }
+
+    /// Drive the tuner to exploration completion regardless of budget —
+    /// used by the static-search baseline and by tests. Returns the best
+    /// (params, score).
+    pub fn run_exhaustive<B: Backend>(&mut self, backend: &mut B) -> Result<Option<(TuningParams, f64)>> {
+        if self.ref_score.is_none() {
+            let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
+            self.stats.overhead += ev.cost;
+            self.ref_score = Some(ev.score);
+            self.active_score = Some(ev.score);
+        }
+        while !self.exploration_done() {
+            self.explore_next(backend)?;
+        }
+        Ok(self.best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+
+    fn drive(tuner: &mut AutoTuner, backend: &mut MockBackend, calls: usize) {
+        for _ in 0..calls {
+            tuner.app_call(backend).unwrap();
+        }
+    }
+
+    fn fast_cfg() -> TunerConfig {
+        TunerConfig { wake_period: 1e-4, ..Default::default() }
+    }
+
+    #[test]
+    fn starts_with_reference_active() {
+        let tuner = AutoTuner::new(TunerConfig::default(), 64, None);
+        assert!(matches!(tuner.active(), KernelVersion::Reference(_)));
+    }
+
+    #[test]
+    fn finds_landscape_optimum() {
+        let mut b = MockBackend::new(64, 1);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        assert!(tuner.exploration_done(), "exploration should finish");
+        let (expect, expect_t) = b.best_possible();
+        let (got, got_t) = tuner.best().unwrap();
+        // The two-phase search is not exhaustive over the cross product,
+        // but on this separable landscape it must land on the optimum.
+        assert_eq!(got.s, expect.s, "structure: got {got} want {expect}");
+        assert!(got_t <= expect_t * 1.02, "{got_t} vs {expect_t}");
+        assert!(tuner.active().is_variant());
+    }
+
+    #[test]
+    fn overhead_respects_budget() {
+        let mut b = MockBackend::new(64, 2);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut tuner, &mut b, 5_000);
+        let s = &tuner.stats;
+        // Budget: 1 % of app time + 10 % of gains, +1 version overshoot.
+        let budget = tuner.cfg.decision.budget(s.app_time, s.gained);
+        let max_one_eval = 20e-6 + 15.0 * 250e-6;
+        assert!(
+            s.overhead <= budget + max_one_eval,
+            "overhead {} vs budget {}",
+            s.overhead,
+            budget
+        );
+    }
+
+    #[test]
+    fn no_regen_when_cap_zero() {
+        let mut b = MockBackend::new(64, 3);
+        let mut cfg = fast_cfg();
+        cfg.decision = RegenDecision { max_overhead_frac: 0.0, invest_frac: 0.0 };
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        drive(&mut tuner, &mut b, 2_000);
+        // Only the reference bootstrap evaluation may happen.
+        assert_eq!(tuner.stats.explored_count(), 0);
+        assert!(!tuner.active().is_variant());
+    }
+
+    #[test]
+    fn swap_only_improves() {
+        let mut b = MockBackend::new(64, 4);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        // Every swap must have had a better score than the previous active.
+        let mut last = f64::INFINITY;
+        for e in tuner.stats.explored.iter().filter(|e| e.swapped_in) {
+            assert!(e.score < last, "swap to worse score");
+            last = e.score;
+        }
+        assert!(tuner.stats.swaps >= 1);
+    }
+
+    #[test]
+    fn explored_versions_are_unique() {
+        let mut b = MockBackend::new(64, 5);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        let ids: std::collections::HashSet<u32> =
+            tuner.stats.explored.iter().map(|e| e.params.full_id()).collect();
+        assert_eq!(ids.len(), tuner.stats.explored.len(), "no version explored twice");
+    }
+
+    #[test]
+    fn gains_accumulate_after_swap() {
+        let mut b = MockBackend::new(64, 6);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        assert!(tuner.stats.gained > 0.0, "landscape optimum beats the reference");
+    }
+
+    #[test]
+    fn run_exhaustive_visits_whole_plan() {
+        let mut b = MockBackend::new(32, 7);
+        let mut tuner = AutoTuner::new(TunerConfig::default(), 32, Some(true));
+        let best = tuner.run_exhaustive(&mut b).unwrap();
+        assert!(best.is_some());
+        assert!(tuner.exploration_done());
+        // Phase 1 SIMD variants for length 32 + 11 phase-2 combos.
+        let expected = crate::tunespace::Space::new(32).valid_structural_ve(true).len() + 11;
+        assert_eq!(tuner.stats.explored_count(), expected);
+    }
+
+    #[test]
+    fn ve_filter_keeps_active_in_class() {
+        let mut b = MockBackend::new(64, 8);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, Some(false));
+        drive(&mut tuner, &mut b, 60_000);
+        if let KernelVersion::Variant(p) = tuner.active() {
+            assert!(!p.s.ve, "SISD-filtered run must keep SISD active");
+        }
+    }
+
+    #[test]
+    fn wake_period_limits_exploration_rate() {
+        let mut b = MockBackend::new(64, 9);
+        let mut cfg = fast_cfg();
+        cfg.wake_period = 10.0; // enormous: at most bootstrap + 1 explore
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        drive(&mut tuner, &mut b, 5_000);
+        assert!(tuner.stats.explored_count() <= 1);
+    }
+}

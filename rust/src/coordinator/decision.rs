@@ -1,0 +1,86 @@
+//! Regeneration decision (paper §3.3): "The regeneration decision takes
+//! into account two factors: the regeneration overhead and the achieved
+//! speedup since the beginning of the execution. [...] Both factors are
+//! represented as percentage values, for example limiting the regeneration
+//! overhead to 1 % and investing 10 % of gained time to explore new
+//! versions."
+
+#[derive(Debug, Clone, Copy)]
+pub struct RegenDecision {
+    /// Maximum tool overhead as a fraction of application time (keeps the
+    /// cost bounded when no better kernel is ever found).
+    pub max_overhead_frac: f64,
+    /// Fraction of the estimated gained time re-invested in exploration.
+    pub invest_frac: f64,
+}
+
+impl Default for RegenDecision {
+    fn default() -> Self {
+        // The paper's running example: 1 % overhead cap, 10 % investment.
+        RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.10 }
+    }
+}
+
+impl RegenDecision {
+    /// The overhead budget available at this instant.
+    ///
+    /// `app_time` is the time the application has spent in kernel calls;
+    /// `gained` is the estimated time saved so far (call count times the
+    /// reference-vs-active per-call difference — §3.3 notes this is an
+    /// estimate that can drift if the application has phases).
+    pub fn budget(&self, app_time: f64, gained: f64) -> f64 {
+        self.max_overhead_frac * app_time + self.invest_frac * gained.max(0.0)
+    }
+
+    /// May we regenerate now? The check is on *spent* overhead: the last
+    /// regeneration may overshoot the budget by one version, which is how
+    /// the paper keeps the tool from stalling at startup when `app_time`
+    /// is still tiny.
+    pub fn allow(&self, overhead_spent: f64, app_time: f64, gained: f64) -> bool {
+        overhead_spent < self.budget(app_time, gained)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_papers_example() {
+        let d = RegenDecision::default();
+        assert_eq!(d.max_overhead_frac, 0.01);
+        assert_eq!(d.invest_frac, 0.10);
+    }
+
+    #[test]
+    fn budget_grows_with_app_time() {
+        let d = RegenDecision::default();
+        assert!(d.budget(10.0, 0.0) > d.budget(1.0, 0.0));
+        assert_eq!(d.budget(10.0, 0.0), 0.1);
+    }
+
+    #[test]
+    fn gains_are_invested() {
+        let d = RegenDecision::default();
+        assert_eq!(d.budget(10.0, 5.0), 0.1 + 0.5);
+        // Negative gains (a bad swap) must not create negative budget.
+        assert_eq!(d.budget(10.0, -5.0), 0.1);
+    }
+
+    #[test]
+    fn allow_until_budget_spent() {
+        let d = RegenDecision::default();
+        assert!(d.allow(0.0, 1.0, 0.0));
+        assert!(d.allow(0.009, 1.0, 0.0));
+        assert!(!d.allow(0.010, 1.0, 0.0));
+        assert!(!d.allow(0.5, 1.0, 0.0));
+        // Investment unlocks more exploration.
+        assert!(d.allow(0.5, 1.0, 10.0));
+    }
+
+    #[test]
+    fn zero_invest_caps_hard() {
+        let d = RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.0 };
+        assert!(!d.allow(0.02, 1.0, 100.0));
+    }
+}

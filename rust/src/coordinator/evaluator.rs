@@ -1,0 +1,134 @@
+//! Kernel evaluation (paper §3.4).
+//!
+//! Two data policies:
+//! * **Training data** (phase 1): warmed caches, very stable measurements;
+//!   filtered by the worst-of-the-three-best-of-groups-of-five rule to
+//!   reject oscillations from hardware and interrupts. No useful work is
+//!   performed, so this is only used for kernels called often enough.
+//! * **Real data** (mandatory in phase 2, because prefetch adequacy
+//!   depends on the interaction of real data and code with the pipeline):
+//!   the score is the plain average of a predetermined number of runs.
+
+use anyhow::Result;
+
+use crate::backend::{Backend, EvalData, KernelVersion};
+use crate::util::stats::{filter_worst_of_best, mean, FILTER_GROUP, FILTER_GROUPS, FILTER_SAMPLES};
+
+/// Warmup calls before training-data sampling (§3.4: warmed caches).
+pub const TRAINING_WARMUP: usize = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Warmed training input, 15 samples, worst-of-best filter.
+    TrainingFiltered,
+    /// Real input, `n` samples, arithmetic mean.
+    RealAveraged(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    /// The kernel's score (seconds per call — lower is better).
+    pub score: f64,
+    /// Total measurement time spent (charged as tool overhead).
+    pub cost: f64,
+    pub samples: usize,
+}
+
+pub struct Evaluator;
+
+impl Evaluator {
+    pub fn evaluate<B: Backend>(
+        backend: &mut B,
+        version: &KernelVersion,
+        mode: EvalMode,
+    ) -> Result<Evaluation> {
+        match mode {
+            EvalMode::TrainingFiltered => {
+                let mut scores = [0f64; FILTER_SAMPLES];
+                let mut cost = 0.0;
+                // §3.4: training data is used *with warmed caches* — the
+                // first calls of a freshly generated kernel pay one-time
+                // costs (instruction-cache fill, PJRT first-execution
+                // setup) that must not pollute the score.
+                for _ in 0..TRAINING_WARMUP {
+                    cost += backend.call(version, EvalData::Training)?.cost;
+                }
+                for s in scores.iter_mut() {
+                    let sample = backend.call(version, EvalData::Training)?;
+                    *s = sample.score;
+                    cost += sample.cost;
+                }
+                Ok(Evaluation {
+                    score: filter_worst_of_best(&scores, FILTER_GROUP, FILTER_GROUPS),
+                    cost,
+                    samples: FILTER_SAMPLES,
+                })
+            }
+            EvalMode::RealAveraged(n) => {
+                let n = n.max(1);
+                let mut scores = Vec::with_capacity(n);
+                let mut cost = 0.0;
+                for _ in 0..n {
+                    let sample = backend.call(version, EvalData::Real)?;
+                    scores.push(sample.score);
+                    cost += sample.cost;
+                }
+                Ok(Evaluation { score: mean(&scores), cost, samples: n })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+    use crate::simulator::RefKind;
+    use crate::tunespace::{Structural, TuningParams};
+
+    #[test]
+    fn training_eval_is_stable_under_noise() {
+        let mut b = MockBackend::new(64, 3);
+        b.noise_sigma = 0.01;
+        let v = KernelVersion::Reference(RefKind::SisdSpecialized);
+        let e1 = Evaluator::evaluate(&mut b, &v, EvalMode::TrainingFiltered).unwrap();
+        let e2 = Evaluator::evaluate(&mut b, &v, EvalMode::TrainingFiltered).unwrap();
+        let diff = (e1.score - e2.score).abs() / e1.score;
+        assert!(diff < 0.02, "filtered scores should be stable: {diff}");
+        assert_eq!(e1.samples, 15);
+        assert!(e1.cost > e1.score * 14.0);
+    }
+
+    #[test]
+    fn real_eval_averages() {
+        let mut b = MockBackend::new(64, 4);
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 4));
+        b.generate(p).unwrap();
+        let e = Evaluator::evaluate(&mut b, &KernelVersion::Variant(p), EvalMode::RealAveraged(5))
+            .unwrap();
+        assert_eq!(e.samples, 5);
+        // Noise-free mock: mean equals landscape value.
+        let expected = crate::backend::mock::default_landscape(&p);
+        assert!((e.score - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_cost_equals_sample_time() {
+        let mut b = MockBackend::new(64, 5);
+        let v = KernelVersion::Reference(RefKind::SisdSpecialized);
+        let e = Evaluator::evaluate(&mut b, &v, EvalMode::RealAveraged(4)).unwrap();
+        assert!((e.cost - 4.0 * 180e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn filter_beats_mean_under_spikes() {
+        // Construct a backend whose real data occasionally spikes; the
+        // filtered training score must be closer to the true value than a
+        // plain mean of real samples would be in the worst case.
+        let mut b = MockBackend::new(64, 6);
+        b.noise_sigma = 0.05;
+        let v = KernelVersion::Reference(RefKind::SisdSpecialized);
+        let e = Evaluator::evaluate(&mut b, &v, EvalMode::TrainingFiltered).unwrap();
+        assert!((e.score - 180e-6).abs() / 180e-6 < 0.08);
+    }
+}

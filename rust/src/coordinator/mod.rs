@@ -1,0 +1,26 @@
+//! The online auto-tuning framework — paper §3, Figure 2.
+//!
+//! A reference function starts as the *active function*. While the
+//! application repeatedly calls the active function, the auto-tuning logic
+//! periodically wakes up, decides whether the regeneration budget allows
+//! producing a new version (overhead cap + investment of achieved gains,
+//! §3.3), generates it through the backend (PJRT compile / deGoal model),
+//! evaluates it (training-data filtered or real-data averaged, §3.4), and
+//! replaces the active function when the new score is better.
+//!
+//! The tuner here is *cooperative*: [`AutoTuner::app_call`] runs one
+//! application kernel call and then gives the tuning logic its chance to
+//! wake. This is time-accounting-equivalent to the paper's single-core
+//! experiments (they `taskset` the benchmark to one core so the
+//! regeneration thread's work is serialised with the application and all
+//! overheads are included in the measured run time).
+
+pub mod autotuner;
+pub mod decision;
+pub mod evaluator;
+pub mod stats;
+
+pub use autotuner::{AutoTuner, StepEvent, TunerConfig};
+pub use decision::RegenDecision;
+pub use evaluator::{EvalMode, Evaluator};
+pub use stats::TuneStats;

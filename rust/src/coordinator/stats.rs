@@ -1,0 +1,121 @@
+//! Online auto-tuning statistics — the counters behind paper Table 4.
+
+use crate::tunespace::TuningParams;
+
+/// One explored version and its measured score.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploredVersion {
+    pub params: TuningParams,
+    pub score: f64,
+    /// Virtual/real time at which it was evaluated.
+    pub at: f64,
+    pub swapped_in: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TuneStats {
+    /// Versions generated + evaluated so far ("Explored", Table 4).
+    pub explored: Vec<ExploredVersion>,
+    /// Application kernel calls ("Kernel calls").
+    pub kernel_calls: u64,
+    /// Time spent in application kernel calls (seconds).
+    pub app_time: f64,
+    /// Regeneration + evaluation overhead (seconds) — "Overhead to
+    /// bench. run-time".
+    pub overhead: f64,
+    /// Estimated time gained vs the reference (§3.3 investment input).
+    pub gained: f64,
+    /// Time at which exploration finished (both phases exhausted), if it
+    /// did — "Duration to kernel life" is derived from this.
+    pub exploration_done_at: Option<f64>,
+    /// Time of the last successful kernel replacement.
+    pub last_swap_at: Option<f64>,
+    /// Number of replacements of the active function.
+    pub swaps: u32,
+}
+
+impl TuneStats {
+    pub fn total_time(&self) -> f64 {
+        self.app_time + self.overhead
+    }
+
+    /// Overhead as a fraction of the benchmark run time (Table 4).
+    pub fn overhead_frac(&self) -> f64 {
+        let t = self.total_time();
+        if t > 0.0 {
+            self.overhead / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the run spent before exploration ended; 1.0 when the
+    /// exploration did not finish within the run (the paper's VIPS-small
+    /// case reports 100 %).
+    pub fn exploration_duration_frac(&self) -> f64 {
+        match self.exploration_done_at {
+            Some(t) if self.total_time() > 0.0 => (t / self.total_time()).min(1.0),
+            Some(_) => 0.0,
+            None => 1.0,
+        }
+    }
+
+    pub fn explored_count(&self) -> usize {
+        self.explored.len()
+    }
+
+    pub fn best(&self) -> Option<&ExploredVersion> {
+        self.explored
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::Structural;
+
+    fn ev(score: f64, at: f64) -> ExploredVersion {
+        ExploredVersion {
+            params: TuningParams::phase1_default(Structural::new(true, 1, 1, 1)),
+            score,
+            at,
+            swapped_in: false,
+        }
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let s = TuneStats { app_time: 9.9, overhead: 0.1, ..Default::default() };
+        assert!((s.overhead_frac() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unfinished_exploration_is_100_percent() {
+        let s = TuneStats { app_time: 1.0, ..Default::default() };
+        assert_eq!(s.exploration_duration_frac(), 1.0);
+        let s2 = TuneStats {
+            app_time: 10.0,
+            exploration_done_at: Some(2.0),
+            ..Default::default()
+        };
+        assert!((s2.exploration_duration_frac() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_is_min_score() {
+        let mut s = TuneStats::default();
+        s.explored.push(ev(2.0, 0.1));
+        s.explored.push(ev(1.0, 0.2));
+        s.explored.push(ev(3.0, 0.3));
+        assert_eq!(s.best().unwrap().score, 1.0);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = TuneStats::default();
+        assert_eq!(s.overhead_frac(), 0.0);
+        assert!(s.best().is_none());
+    }
+}

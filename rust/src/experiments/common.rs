@@ -1,0 +1,219 @@
+//! Shared machinery for the experiment harnesses: one "cell" = one
+//! (core, benchmark-input, SISD/SIMD) configuration, measured with all
+//! four kernel provenances of Table 3 (Ref, Spec-Ref, O-AT, BS-AT).
+
+use anyhow::Result;
+
+use crate::backend::sim::SimBackend;
+use crate::baselines::static_search;
+use crate::coordinator::{AutoTuner, TunerConfig};
+use crate::simulator::{CoreConfig, KernelKind, RefKind};
+use crate::tunespace::TuningParams;
+use crate::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
+use crate::workloads::vips::{VipsApp, VipsConfig};
+use crate::workloads::AppRun;
+
+/// Which benchmark + input set a cell runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bench {
+    Streamcluster(&'static str),
+    Vips(&'static str),
+}
+
+pub const SC_INPUTS: [&str; 3] = ["small", "medium", "large"];
+pub const VIPS_INPUTS: [&str; 3] = ["small", "medium", "large"];
+
+impl Bench {
+    pub fn label(&self) -> String {
+        match self {
+            Bench::Streamcluster(i) => format!("streamcluster/{i}"),
+            Bench::Vips(i) => format!("vips/{i}"),
+        }
+    }
+
+    pub fn kind_and_length(&self, quick: bool) -> (KernelKind, u32) {
+        match self {
+            Bench::Streamcluster(i) => {
+                let cfg = StreamclusterConfig::input_set(i);
+                let cfg = if quick { cfg.scaled(8) } else { cfg };
+                (KernelKind::Distance { dim: cfg.dim, batch: cfg.batch }, cfg.dim)
+            }
+            Bench::Vips(i) => {
+                let cfg = VipsConfig::input_set(i);
+                let cfg = if quick { cfg.scaled(4) } else { cfg };
+                (
+                    KernelKind::Lintra { row_len: cfg.row_len(), rows: cfg.rows_per_call },
+                    cfg.row_len(),
+                )
+            }
+        }
+    }
+
+    /// Wake period tuned per benchmark: VIPS runs are an order of
+    /// magnitude shorter, so the tuning thread wakes more often (the
+    /// paper's thread wakes on a fixed period; we keep the ratio of wakes
+    /// to application length comparable).
+    pub fn wake_period(&self) -> f64 {
+        match self {
+            Bench::Streamcluster(_) => 0.02,
+            Bench::Vips(_) => 0.002,
+        }
+    }
+
+    fn run_app(&self, backend: &mut SimBackend, mode: RunMode<'_>, quick: bool) -> Result<AppRun> {
+        match self {
+            Bench::Streamcluster(i) => {
+                let cfg = StreamclusterConfig::input_set(i);
+                let cfg = if quick { cfg.scaled(8) } else { cfg };
+                StreamclusterApp::new(cfg).run(backend, mode)
+            }
+            Bench::Vips(i) => {
+                let cfg = VipsConfig::input_set(i);
+                let cfg = if quick { cfg.scaled(4) } else { cfg };
+                VipsApp::new(cfg).run(backend, mode)
+            }
+        }
+    }
+
+    /// The paper restricts the Streamcluster static search to no-leftover
+    /// solutions (§4.4).
+    fn bsat_no_leftover_only(&self) -> bool {
+        matches!(self, Bench::Streamcluster(_))
+    }
+}
+
+/// Full measurement of one cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub core: &'static str,
+    pub bench: String,
+    pub ve: bool,
+    pub ref_run: AppRun,
+    pub spec_ref_run: AppRun,
+    pub oat_run: AppRun,
+    pub bsat_run: Option<AppRun>,
+    pub tuner_stats: crate::coordinator::TuneStats,
+    pub oat_best: Option<TuningParams>,
+    pub explorable_versions: usize,
+    pub plan_size: usize,
+}
+
+impl CellResult {
+    pub fn speedup_oat(&self) -> f64 {
+        self.ref_run.total_time / self.oat_run.total_time
+    }
+
+    pub fn speedup_spec(&self) -> f64 {
+        self.ref_run.total_time / self.spec_ref_run.total_time
+    }
+
+    pub fn speedup_bsat(&self) -> Option<f64> {
+        self.bsat_run.as_ref().map(|b| self.ref_run.total_time / b.total_time)
+    }
+
+    /// Energy-efficiency improvement of O-AT over Ref (Fig 5 right axis).
+    pub fn energy_improvement(&self) -> Option<f64> {
+        match (self.ref_run.energy_j, self.oat_run.energy_j) {
+            (Some(r), Some(o)) if o > 0.0 => Some(r / o),
+            _ => None,
+        }
+    }
+
+    pub fn overhead_frac(&self) -> f64 {
+        if self.oat_run.total_time > 0.0 {
+            self.oat_run.overhead / self.oat_run.total_time
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure one cell on the simulator backend. `with_bsat` additionally
+/// runs the (expensive) exhaustive static search.
+pub fn run_cell(
+    core: &'static CoreConfig,
+    bench: Bench,
+    ve: bool,
+    seed: u64,
+    quick: bool,
+    with_bsat: bool,
+) -> Result<CellResult> {
+    let (kind, length) = bench.kind_and_length(quick);
+    let (ref_kind, spec_kind) = if ve {
+        (RefKind::SimdGeneric, RefKind::SimdSpecialized)
+    } else {
+        (RefKind::SisdGeneric, RefKind::SisdSpecialized)
+    };
+
+    // Ref + Spec-Ref runs.
+    let mut b = SimBackend::new(core, kind, seed);
+    let ref_run = bench.run_app(&mut b, RunMode::Reference(ref_kind), quick)?;
+    let mut b = SimBackend::new(core, kind, seed + 1);
+    let spec_ref_run = bench.run_app(&mut b, RunMode::Reference(spec_kind), quick)?;
+
+    // O-AT run: online auto-tuning, SISD reference active initially.
+    let mut b = SimBackend::new(core, kind, seed + 2);
+    let tuner_cfg = TunerConfig {
+        wake_period: bench.wake_period(),
+        initial_ref: ref_kind,
+        ..Default::default()
+    };
+    let mut tuner = AutoTuner::new(tuner_cfg, length, Some(ve));
+    let oat_run = bench.run_app(&mut b, RunMode::Tuned(&mut tuner), quick)?;
+    let oat_best = tuner.best().map(|(p, _)| p);
+    let plan_size = crate::tunespace::ExplorationPlan::new(length, Some(ve)).plan_size();
+    let stats = tuner.stats.clone();
+
+    // BS-AT: exhaustive offline search, then a run with the winner.
+    let bsat_run = if with_bsat {
+        let mut sb = SimBackend::new(core, kind, seed + 3);
+        let sr = static_search(
+            &mut sb,
+            length,
+            Some(ve),
+            bench.bsat_no_leftover_only(),
+            false,
+        )?;
+        let mut b = SimBackend::new(core, kind, seed + 4);
+        Some(bench.run_app(&mut b, RunMode::Fixed(sr.best), quick)?)
+    } else {
+        None
+    };
+
+    Ok(CellResult {
+        core: core.name,
+        bench: bench.label(),
+        ve,
+        ref_run,
+        spec_ref_run,
+        oat_run,
+        bsat_run,
+        tuner_stats: stats,
+        oat_best,
+        explorable_versions: crate::tunespace::Space::new(length).explorable_versions(),
+        plan_size,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::core_by_name;
+
+    #[test]
+    fn cell_produces_consistent_speedups() {
+        let core = core_by_name("A9").unwrap();
+        let cell = run_cell(core, Bench::Streamcluster("small"), true, 5, true, false).unwrap();
+        assert!(cell.speedup_oat() > 0.5);
+        assert!(cell.ref_run.total_time > 0.0);
+        assert!(cell.oat_run.overhead > 0.0, "tuned run must have nonzero overhead");
+        assert!(cell.energy_improvement().is_some());
+        assert!(cell.bsat_run.is_none());
+    }
+
+    #[test]
+    fn bench_labels() {
+        assert_eq!(Bench::Streamcluster("small").label(), "streamcluster/small");
+        assert_eq!(Bench::Vips("large").label(), "vips/large");
+    }
+}

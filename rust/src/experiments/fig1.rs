@@ -1,0 +1,128 @@
+//! Figure 1 + §2 motivational numbers: static exploration of the tuning
+//! space on the two "real" platforms (A8/A9 stand-ins).
+//!
+//! For each core and dimension, every valid SIMD structural variant is
+//! evaluated offline and reported as a speedup over the specialised
+//! hand-vectorised reference — the series behind the Fig. 1 scatter.
+//! The §2 claims checked: auto-tuning finds >1.2x over the specialised
+//! reference, and the best configuration of one core is *not* the best of
+//! the other (poor performance portability).
+
+use anyhow::Result;
+
+use super::common::Bench;
+use super::report::ExperimentReport;
+use crate::backend::sim::SimBackend;
+use crate::backend::{Backend as _, EvalData, KernelVersion};
+use crate::baselines::static_search;
+use crate::simulator::{core_by_name, RefKind};
+use crate::tunespace::TuningParams;
+use crate::util::table::{fnum, Table};
+
+pub fn run(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("fig1");
+    let dims: &[u32] = if quick { &[32] } else { &[32, 128] };
+    let cores = ["A8", "A9"];
+
+    for &dim in dims {
+        let mut table = Table::new(
+            &format!("Fig 1 — static exploration, streamcluster dim {dim} (speedup vs Spec-Ref SIMD)"),
+            &["vid", "variant", "A8", "A9"],
+        );
+        let (kind, length) = Bench::Streamcluster(match dim {
+            32 => "small",
+            64 => "medium",
+            _ => "large",
+        })
+        .kind_and_length(false);
+
+        // Per-core exploration and reference time.
+        let mut per_core: Vec<Vec<(TuningParams, f64)>> = Vec::new();
+        let mut ref_time = Vec::new();
+        for core in cores {
+            let c = core_by_name(core).unwrap();
+            let mut b = SimBackend::new(c, kind, 101);
+            let sr = static_search(&mut b, length, Some(true), true, true)?;
+            let r = b.call(&KernelVersion::Reference(RefKind::SimdSpecialized), EvalData::Training)?.score;
+            per_core.push(sr.explored);
+            ref_time.push(r);
+        }
+
+        // Rows indexed by the A8 exploration order (both cores share it).
+        for (i, (p, t_a8)) in per_core[0].iter().enumerate() {
+            let t_a9 = per_core[1][i].1;
+            table.row(vec![
+                p.full_id().to_string(),
+                p.to_string(),
+                fnum(ref_time[0] / t_a8, 3),
+                fnum(ref_time[1] / t_a9, 3),
+            ]);
+        }
+        table.write_csv(crate::paths::results_dir().join("fig1").join(format!("dim{dim}.csv")))?;
+
+        // Claims (on the full-resolution dim only).
+        let best = |v: &[(TuningParams, f64)]| {
+            v.iter().cloned().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap()
+        };
+        let (best_a8, t_best_a8) = best(&per_core[0]);
+        let (best_a9, t_best_a9) = best(&per_core[1]);
+        let peak_a8 = ref_time[0] / t_best_a8;
+        let peak_a9 = ref_time[1] / t_best_a9;
+        rep.claim(
+            &format!("d{dim}: peak static speedup A8"),
+            "up to 1.46",
+            format!("{peak_a8:.2}"),
+            peak_a8 > 1.1,
+        );
+        rep.claim(
+            &format!("d{dim}: peak static speedup A9"),
+            "up to 1.52",
+            format!("{peak_a9:.2}"),
+            peak_a9 > 1.1,
+        );
+
+        // Cross-platform portability penalty: run each core's best on the
+        // other core.
+        let time_of = |explored: &[(TuningParams, f64)], p: TuningParams| {
+            explored.iter().find(|(q, _)| *q == p).map(|(_, t)| *t)
+        };
+        if let (Some(t_a9_of_a8best), Some(t_a8_of_a9best)) =
+            (time_of(&per_core[1], best_a8), time_of(&per_core[0], best_a9))
+        {
+            let pen_a9 = t_a9_of_a8best / t_best_a9 - 1.0;
+            let pen_a8 = t_a8_of_a9best / t_best_a8 - 1.0;
+            rep.claim(
+                &format!("d{dim}: A8-best run on A9 penalty"),
+                "+55 % (dim 128)",
+                format!("{:+.1} %", pen_a9 * 100.0),
+                pen_a9 >= 0.0,
+            );
+            rep.claim(
+                &format!("d{dim}: A9-best run on A8 penalty"),
+                "+21 % (dim 128)",
+                format!("{:+.1} %", pen_a8 * 100.0),
+                pen_a8 >= 0.0,
+            );
+        }
+
+        // Summary table only (the full scatter goes to CSV).
+        let mut summary = Table::new(
+            &format!("Fig 1 summary — dim {dim}"),
+            &["core", "explored", "best variant", "peak speedup"],
+        );
+        summary.row(vec![
+            "A8".into(),
+            per_core[0].len().to_string(),
+            best_a8.to_string(),
+            fnum(peak_a8, 3),
+        ]);
+        summary.row(vec![
+            "A9".into(),
+            per_core[1].len().to_string(),
+            best_a9.to_string(),
+            fnum(peak_a9, 3),
+        ]);
+        rep.table(summary);
+    }
+    Ok(rep)
+}

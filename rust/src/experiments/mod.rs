@@ -1,0 +1,35 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the index). Each regenerates the
+//! paper's rows/series on this testbed, prints ASCII tables, writes CSVs
+//! under `results/`, and checks the paper's claims (shape, not absolute
+//! numbers) as paper-vs-measured rows.
+
+pub mod common;
+pub mod fig1;
+pub mod fig7;
+pub mod realplat;
+pub mod report;
+pub mod simcores;
+pub mod tab5;
+
+pub use report::ExperimentReport;
+
+use anyhow::Result;
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 8] = ["fig1", "tab3", "tab4", "fig4", "fig5", "fig6", "fig7", "tab5"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, quick: bool) -> Result<ExperimentReport> {
+    match id {
+        "fig1" => fig1::run(quick),
+        "tab3" => realplat::tab3(quick),
+        "tab4" => realplat::tab4(quick),
+        "fig4" => realplat::fig4(quick),
+        "fig5" => simcores::fig5(quick),
+        "fig6" => simcores::fig6(quick),
+        "fig7" => fig7::run(quick),
+        "tab5" => tab5::run(quick),
+        other => anyhow::bail!("unknown experiment {other}; known: {ALL:?}"),
+    }
+}

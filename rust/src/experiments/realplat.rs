@@ -1,0 +1,226 @@
+//! Tables 3 & 4 and Figure 4 — the "real platform" experiments on the
+//! A8/A9 stand-ins: both benchmarks, three input sets, SISD and SIMD,
+//! with all four kernel provenances (Ref, Spec-Ref, O-AT, BS-AT).
+
+use anyhow::Result;
+
+use super::common::{run_cell, Bench, CellResult, SC_INPUTS, VIPS_INPUTS};
+use super::report::ExperimentReport;
+use crate::simulator::core_by_name;
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+
+pub const PLATFORMS: [&str; 2] = ["A8", "A9"];
+
+/// The full 2 (bench) x 3 (input) x 2 (SISD/SIMD) x 2 (platform) matrix.
+pub fn matrix(quick: bool, with_bsat: bool) -> Result<Vec<CellResult>> {
+    let mut out = Vec::new();
+    let benches: Vec<Bench> = SC_INPUTS
+        .iter()
+        .map(|i| Bench::Streamcluster(i))
+        .chain(VIPS_INPUTS.iter().map(|i| Bench::Vips(i)))
+        .collect();
+    let mut seed = 1000;
+    for bench in benches {
+        for ve in [false, true] {
+            for plat in PLATFORMS {
+                let core = core_by_name(plat).unwrap();
+                out.push(run_cell(core, bench, ve, seed, quick, with_bsat)?);
+                seed += 10;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Table 3: execution times (seconds) of all configurations.
+pub fn tab3(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("tab3");
+    let cells = matrix(quick, true)?;
+
+    let mut t = Table::new(
+        "Table 3 — execution times (s), all run-time overheads included",
+        &["benchmark", "input", "version", "platform", "Ref", "Spec. Ref", "O-AT", "BS-AT"],
+    );
+    for c in &cells {
+        let (bench, input) = c.bench.split_once('/').unwrap();
+        t.row(vec![
+            bench.to_string(),
+            input.to_string(),
+            if c.ve { "SIMD".into() } else { "SISD".into() },
+            c.core.to_string(),
+            fnum(c.ref_run.total_time, 3),
+            fnum(c.spec_ref_run.total_time, 3),
+            fnum(c.oat_run.total_time, 3),
+            c.bsat_run.as_ref().map(|b| fnum(b.total_time, 3)).unwrap_or_default(),
+        ]);
+    }
+    rep.table(t);
+
+    // Headline claims from §5.1.
+    let sc: Vec<&CellResult> = cells.iter().filter(|c| c.bench.starts_with("stream")).collect();
+    let vips: Vec<&CellResult> = cells.iter().filter(|c| c.bench.starts_with("vips")).collect();
+    let sp = |cs: &[&CellResult], plat: &str| -> f64 {
+        geomean(&cs.iter().filter(|c| c.core == plat).map(|c| c.speedup_oat()).collect::<Vec<_>>())
+    };
+    let sc_a8 = sp(&sc, "A8");
+    let sc_a9 = sp(&sc, "A9");
+    rep.claim("SC avg O-AT speedup on A8", "1.12", format!("{sc_a8:.2}"), sc_a8 > 1.02);
+    rep.claim("SC avg O-AT speedup on A9", "1.41", format!("{sc_a9:.2}"), sc_a9 > 1.05);
+    let v_a8 = sp(&vips, "A8");
+    let v_a9 = sp(&vips, "A9");
+    rep.claim(
+        "VIPS avg O-AT speedup on A8",
+        "1.10",
+        format!("{v_a8:.2}"),
+        v_a8 > 0.97,
+    );
+    rep.claim(
+        "VIPS avg O-AT speedup on A9",
+        "1.04",
+        format!("{v_a9:.2}"),
+        v_a9 > 0.97,
+    );
+
+    // O-AT within ~6 % of BS-AT on average (the paper reports the gap on
+    // the CPU-bound benchmark; memory-bound runs are bandwidth-saturated
+    // either way).
+    let gaps: Vec<f64> = sc
+        .iter()
+        .filter_map(|c| {
+            c.bsat_run
+                .as_ref()
+                .map(|b| c.oat_run.total_time / b.total_time)
+        })
+        .collect();
+    let gap = geomean(&gaps) - 1.0;
+    rep.claim(
+        "O-AT gap to best-static (SC avg)",
+        "~4.6-5.8 %",
+        format!("{:.1} %", gap * 100.0),
+        gap < 0.15,
+    );
+
+    // CPU-bound gains exceed memory-bound gains.
+    let sc_all = geomean(&sc.iter().map(|c| c.speedup_oat()).collect::<Vec<_>>());
+    let vips_all = geomean(&vips.iter().map(|c| c.speedup_oat()).collect::<Vec<_>>());
+    rep.claim(
+        "CPU-bound gains > memory-bound gains",
+        "1.12-1.41 vs 1.04-1.10",
+        format!("{sc_all:.2} vs {vips_all:.2}"),
+        sc_all > vips_all,
+    );
+    Ok(rep)
+}
+
+/// Table 4: auto-tuning statistics.
+pub fn tab4(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("tab4");
+    let cells = matrix(quick, false)?;
+
+    let mut t = Table::new(
+        "Table 4 — online auto-tuning statistics",
+        &[
+            "benchmark",
+            "input",
+            "version",
+            "platform",
+            "explorable",
+            "limit/run",
+            "kernel calls",
+            "explored",
+            "overhead",
+            "overhead (ms)",
+            "explor. duration",
+        ],
+    );
+    for c in &cells {
+        let (bench, input) = c.bench.split_once('/').unwrap();
+        t.row(vec![
+            bench.to_string(),
+            input.to_string(),
+            if c.ve { "SIMD".into() } else { "SISD".into() },
+            c.core.to_string(),
+            c.explorable_versions.to_string(),
+            c.plan_size.to_string(),
+            c.oat_run.kernel_calls.to_string(),
+            c.tuner_stats.explored_count().to_string(),
+            format!("{:.2} %", c.overhead_frac() * 100.0),
+            fnum(c.oat_run.overhead * 1e3, 1),
+            format!("{:.0} %", c.tuner_stats.exploration_duration_frac() * 100.0),
+        ]);
+    }
+    rep.table(t);
+
+    // Claims: overhead in the paper's envelope; explorable counts in the
+    // paper's 330-858 range; small VIPS exploration does not finish.
+    let worst = cells.iter().map(|c| c.overhead_frac()).fold(0.0, f64::max);
+    rep.claim(
+        "max overhead across configs",
+        "0.2-4.2 %",
+        format!("{:.2} %", worst * 100.0),
+        worst < 0.06,
+    );
+    let explorable_ok = cells
+        .iter()
+        .all(|c| (300..=1400).contains(&c.explorable_versions));
+    rep.claim(
+        "explorable versions per config",
+        "330-858",
+        format!(
+            "{}-{}",
+            cells.iter().map(|c| c.explorable_versions).min().unwrap(),
+            cells.iter().map(|c| c.explorable_versions).max().unwrap()
+        ),
+        explorable_ok,
+    );
+    if !quick {
+        let vips_small_unfinished = cells
+            .iter()
+            .filter(|c| c.bench == "vips/small")
+            .all(|c| c.tuner_stats.exploration_duration_frac() > 0.95);
+        rep.claim(
+            "VIPS small: exploration does not finish",
+            "100 %",
+            format!("{vips_small_unfinished}"),
+            vips_small_unfinished,
+        );
+    }
+    Ok(rep)
+}
+
+/// Figure 4: speedups of Spec-Ref and O-AT over Ref on both platforms.
+pub fn fig4(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("fig4");
+    let cells = matrix(quick, false)?;
+    let mut t = Table::new(
+        "Fig 4 — speedup over the reference benchmark",
+        &["benchmark", "input", "version", "platform", "Spec. Ref", "O-AT"],
+    );
+    for c in &cells {
+        let (bench, input) = c.bench.split_once('/').unwrap();
+        t.row(vec![
+            bench.to_string(),
+            input.to_string(),
+            if c.ve { "SIMD".into() } else { "SISD".into() },
+            c.core.to_string(),
+            fnum(c.speedup_spec(), 3),
+            fnum(c.speedup_oat(), 3),
+        ]);
+    }
+    rep.table(t);
+
+    // §5.1: "even if the reference kernels are statically specialized,
+    // they can not provide significant speedups" — specialisation alone
+    // buys far less than online auto-tuning.
+    let sc: Vec<&CellResult> = cells.iter().filter(|c| c.bench.starts_with("stream")).collect();
+    let spec = geomean(&sc.iter().map(|c| c.speedup_spec()).collect::<Vec<_>>());
+    let oat = geomean(&sc.iter().map(|c| c.speedup_oat()).collect::<Vec<_>>());
+    rep.claim(
+        "SC: specialisation alone vs O-AT",
+        "spec ~1.0 << O-AT",
+        format!("{spec:.2} vs {oat:.2}"),
+        oat > spec,
+    );
+    Ok(rep)
+}

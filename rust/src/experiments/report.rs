@@ -1,0 +1,106 @@
+//! Experiment report plumbing: render + persist tables, and compare
+//! measured values against the paper's expectations.
+
+use std::path::PathBuf;
+
+use crate::util::table::Table;
+
+/// A check of one paper claim against our measurement.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub name: String,
+    pub paper: String,
+    pub measured: String,
+    pub holds: bool,
+}
+
+/// Everything an experiment produces.
+#[derive(Debug, Default)]
+pub struct ExperimentReport {
+    pub id: String,
+    pub tables: Vec<Table>,
+    pub claims: Vec<Claim>,
+}
+
+impl ExperimentReport {
+    pub fn new(id: &str) -> ExperimentReport {
+        ExperimentReport { id: id.to_string(), ..Default::default() }
+    }
+
+    pub fn table(&mut self, t: Table) {
+        self.tables.push(t);
+    }
+
+    pub fn claim(&mut self, name: &str, paper: &str, measured: String, holds: bool) {
+        self.claims.push(Claim {
+            name: name.to_string(),
+            paper: paper.to_string(),
+            measured,
+            holds,
+        });
+    }
+
+    /// Print to stdout and write CSVs under `results/<id>/`.
+    pub fn emit(&self) -> std::io::Result<PathBuf> {
+        let dir = crate::paths::results_dir().join(&self.id);
+        std::fs::create_dir_all(&dir)?;
+        for (i, t) in self.tables.iter().enumerate() {
+            println!("{}", t.render());
+            let name = if t.title.is_empty() {
+                format!("table{i}.csv")
+            } else {
+                format!("{}.csv", slug(&t.title))
+            };
+            t.write_csv(dir.join(name))?;
+        }
+        if !self.claims.is_empty() {
+            let mut t = Table::new(
+                &format!("{} — paper-vs-measured", self.id),
+                &["claim", "paper", "measured", "holds"],
+            );
+            for c in &self.claims {
+                t.row(vec![
+                    c.name.clone(),
+                    c.paper.clone(),
+                    c.measured.clone(),
+                    if c.holds { "yes".into() } else { "NO".into() },
+                ]);
+            }
+            println!("{}", t.render());
+            t.write_csv(dir.join("claims.csv"))?;
+        }
+        Ok(dir)
+    }
+
+    pub fn all_hold(&self) -> bool {
+        self.claims.iter().all(|c| c.holds)
+    }
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect::<String>()
+        .split('_')
+        .filter(|p| !p.is_empty())
+        .collect::<Vec<_>>()
+        .join("_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slug_normalises() {
+        assert_eq!(slug("Table 3 — exec times"), "table_3_exec_times");
+    }
+
+    #[test]
+    fn claims_tracked() {
+        let mut r = ExperimentReport::new("t");
+        r.claim("a", "1.0", "1.1".into(), true);
+        r.claim("b", "2.0", "0.5".into(), false);
+        assert!(!r.all_hold());
+    }
+}

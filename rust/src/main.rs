@@ -1,0 +1,170 @@
+//! degoal-rt CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   experiment <id>|all [--quick]   regenerate a paper table/figure
+//!   tune [--input I] [--core C] [--sisd]
+//!                                   one online auto-tuning run (simulator)
+//!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
+//!   cores                           list simulated core configs
+//!   artifacts-check                 validate artifacts/manifest.json
+
+use anyhow::Result;
+
+use degoal_rt::backend::host::HostBackend;
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::codegen::Manifest;
+use degoal_rt::coordinator::{AutoTuner, TunerConfig};
+use degoal_rt::experiments;
+use degoal_rt::runtime::Runtime;
+use degoal_rt::simulator::{core_by_name, KernelKind, ALL_SIM_CORES};
+use degoal_rt::util::cli::Args;
+use degoal_rt::util::table::{fnum, Table};
+use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
+
+fn main() {
+    degoal_rt::util::logging::init();
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "experiment" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let quick = args.flag("quick");
+            let ids: Vec<&str> =
+                if id == "all" { experiments::ALL.to_vec() } else { vec![id] };
+            let mut failed = Vec::new();
+            for id in ids {
+                log::info!("running experiment {id} (quick={quick})");
+                let rep = experiments::run(id, quick)?;
+                rep.emit()?;
+                if !rep.all_hold() {
+                    failed.push(id.to_string());
+                }
+            }
+            if !failed.is_empty() {
+                eprintln!(
+                    "note: some paper-vs-measured claims did not hold in {failed:?} \
+                     (see EXPERIMENTS.md for known divergences)"
+                );
+                if args.flag("strict") {
+                    anyhow::bail!("claims failed in: {failed:?}");
+                }
+            }
+            Ok(())
+        }
+        "tune" => {
+            let core = core_by_name(args.get_or("core", "A9"))
+                .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
+            let input = args.get_or("input", "small");
+            let ve = !args.flag("sisd");
+            let cfg = StreamclusterConfig::input_set(input);
+            let kind = KernelKind::Distance { dim: cfg.dim, batch: cfg.batch };
+            let mut b = SimBackend::new(core, kind, args.get_u64("seed", 42));
+            let mut tuner = AutoTuner::new(TunerConfig::default(), cfg.dim, Some(ve));
+            let r = StreamclusterApp::new(cfg).run(&mut b, RunMode::Tuned(&mut tuner))?;
+            println!(
+                "core={} input={} mode={} total={:.3}s overhead={:.1}ms ({:.2} %) explored={} swaps={} best={}",
+                core.name,
+                input,
+                if ve { "SIMD" } else { "SISD" },
+                r.total_time,
+                r.overhead * 1e3,
+                100.0 * r.overhead / r.total_time,
+                tuner.stats.explored_count(),
+                tuner.stats.swaps,
+                tuner.best().map(|(p, _)| p.to_string()).unwrap_or_default(),
+            );
+            Ok(())
+        }
+        "host-tune" => {
+            let dim = args.get_usize("dim", 32) as u32;
+            let rt = Runtime::cpu()?;
+            let man = Manifest::load(degoal_rt::paths::artifacts_dir())?;
+            let spec = man
+                .streamcluster(dim)
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for dim {dim}; run make artifacts"))?
+                .clone();
+            let mut backend = HostBackend::new(&rt, spec, 42)?;
+            let mut tuner = AutoTuner::new(
+                TunerConfig { wake_period: 0.01, ..Default::default() },
+                dim,
+                Some(true),
+            );
+            let calls = args.get_u64("calls", 3000);
+            for _ in 0..calls {
+                tuner.app_call(&mut backend)?;
+            }
+            let s = &tuner.stats;
+            println!(
+                "host PJRT tuning: calls={} app={:.3}s overhead={:.3}s ({:.2} %) explored={} swaps={} best={}",
+                s.kernel_calls,
+                s.app_time,
+                s.overhead,
+                100.0 * s.overhead_frac(),
+                s.explored_count(),
+                s.swaps,
+                tuner.best().map(|(p, _)| p.to_string()).unwrap_or_default(),
+            );
+            Ok(())
+        }
+        "cores" => {
+            let mut t = Table::new(
+                "Simulated cores (paper Tables 1-2)",
+                &["name", "width", "type", "VPUs", "clock GHz", "L2 kB", "core mm²", "total mm²"],
+            );
+            for c in ALL_SIM_CORES
+                .iter()
+                .chain([&degoal_rt::simulator::CORE_A8, &degoal_rt::simulator::CORE_A9])
+            {
+                t.row(vec![
+                    c.name.into(),
+                    c.width.to_string(),
+                    if c.is_ooo() { "OOO".into() } else { "IO".into() },
+                    c.vpus.to_string(),
+                    fnum(c.clock_ghz, 1),
+                    c.l2.size_kb.to_string(),
+                    fnum(c.area_core_mm2, 2),
+                    fnum(c.area_total_mm2(), 2),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        "artifacts-check" => {
+            let man = Manifest::load(degoal_rt::paths::artifacts_dir())?;
+            let rt = Runtime::cpu()?;
+            for spec in &man.specs {
+                let path = spec.root.join(&spec.ref_path);
+                let exe = rt.load_hlo_text(&path)?;
+                println!(
+                    "{} len={} variants={} ref compiles in {:?}",
+                    spec.benchmark,
+                    spec.length,
+                    spec.variants.len(),
+                    exe.compile_time()
+                );
+            }
+            println!("manifest OK: {} specs", man.specs.len());
+            Ok(())
+        }
+        _ => {
+            println!(
+                "degoal-rt — online auto-tuning of machine code in short-running kernels\n\
+                 usage: degoal-rt <experiment [id|all] [--quick] | tune | host-tune | cores | artifacts-check>\n\
+                 experiments: {:?}",
+                experiments::ALL
+            );
+            Ok(())
+        }
+    }
+}

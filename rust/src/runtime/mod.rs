@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile, execute — the
+//! machinery behind "machine code generation" on the host backend.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 protos are rejected by
+//! xla_extension 0.5.1 — see DESIGN.md and python/compile/aot.py).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact. The returned `compile_time` is the
+    /// measured code-generation cost — the quantity the paper's
+    /// regeneration-decision logic budgets against.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
+            .with_context(|| format!("parsing HLO text {:?}", path.as_ref()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {:?}", path.as_ref()))?;
+        Ok(Executable { exe, compile_time: t0.elapsed() })
+    }
+}
+
+/// A compiled kernel variant resident on the PJRT device.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    compile_time: Duration,
+}
+
+/// An f32 input tensor staged as a PJRT *device buffer*, created once and
+/// reused across calls. Executing with pre-staged buffers (`execute_b`)
+/// keeps the host→device copy — and, on the published `xla` crate, a
+/// per-call device-buffer leak in the literal-argument path — off the hot
+/// path entirely.
+pub struct InputF32 {
+    buf: xla::PjRtBuffer,
+    pub shape: Vec<i64>,
+}
+
+impl InputF32 {
+    /// Stage on the first addressable device of `rt`'s client.
+    pub fn stage(rt: &Runtime, data: &[f32], shape: &[i64]) -> Result<InputF32> {
+        let n: i64 = shape.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+        let buf = rt
+            .client
+            .buffer_from_host_buffer(data, &dims, None)
+            .context("staging input buffer")?;
+        Ok(InputF32 { buf, shape: shape.to_vec() })
+    }
+}
+
+impl Executable {
+    pub fn compile_time(&self) -> Duration {
+        self.compile_time
+    }
+
+    /// Execute with the staged inputs; returns the first output (the
+    /// artifacts are lowered with `return_tuple=True`, so the root tuple
+    /// is unwrapped) and the measured wall-clock call time.
+    pub fn call_f32(&self, inputs: &[&InputF32]) -> Result<(Vec<f32>, Duration)> {
+        let args: Vec<&xla::PjRtBuffer> = inputs.iter().map(|i| &i.buf).collect();
+        let t0 = Instant::now();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed();
+        let out = result.to_tuple1()?;
+        Ok((out.to_vec::<f32>()?, dt))
+    }
+
+    /// Execute for timing only (output fetched to synchronise, values
+    /// discarded without conversion).
+    pub fn call_timed(&self, inputs: &[&InputF32]) -> Result<Duration> {
+        let args: Vec<&xla::PjRtBuffer> = inputs.iter().map(|i| &i.buf).collect();
+        let t0 = Instant::now();
+        let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        // to_literal_sync forces completion (PJRT execution is async).
+        let _ = bufs[0][0].to_literal_sync()?;
+        Ok(t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need the artifacts tree (`make artifacts`).
+    fn any_artifact() -> Option<std::path::PathBuf> {
+        let dir = crate::paths::artifacts_dir().join("streamcluster/d32");
+        let p = dir.join("ref.hlo.txt");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn compile_and_run_reference() {
+        let Some(path) = any_artifact() else {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        assert!(exe.compile_time() > Duration::ZERO);
+
+        // ref kernel: (points[256,32], center[32]) -> [256] sq. distances.
+        let points = vec![1.0f32; 256 * 32];
+        let mut center = vec![1.0f32; 32];
+        center[0] = 3.0; // distance contribution 4 per point
+        let p = InputF32::stage(&rt, &points, &[256, 32]).unwrap();
+        let c = InputF32::stage(&rt, &center, &[32]).unwrap();
+        let (out, dt) = exe.call_f32(&[&p, &c]).unwrap();
+        assert_eq!(out.len(), 256);
+        assert!(out.iter().all(|&d| (d - 4.0).abs() < 1e-5), "{:?}", &out[..4]);
+        assert!(dt > Duration::ZERO);
+    }
+
+    #[test]
+    fn variant_matches_reference_numerics() {
+        let dir = crate::paths::artifacts_dir().join("streamcluster/d32");
+        if !dir.join("ref.hlo.txt").exists() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let refe = rt.load_hlo_text(dir.join("ref.hlo.txt")).unwrap();
+        // Pick any variant artifact.
+        let var_path = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.file_name().unwrap().to_str().unwrap().starts_with('v'))
+            .expect("a variant artifact");
+        let var = rt.load_hlo_text(&var_path).unwrap();
+
+        let mut points = vec![0.0f32; 256 * 32];
+        for (i, v) in points.iter_mut().enumerate() {
+            *v = (i % 37) as f32 * 0.25 - 4.0;
+        }
+        let center: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 8.0).collect();
+        let p = InputF32::stage(&rt, &points, &[256, 32]).unwrap();
+        let c = InputF32::stage(&rt, &center, &[32]).unwrap();
+        let (a, _) = refe.call_f32(&[&p, &c]).unwrap();
+        let (b, _) = var.call_f32(&[&p, &c]).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-3 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let Ok(rt) = Runtime::cpu() else { return };
+        assert!(InputF32::stage(&rt, &[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Core configurations — paper Table 1 (pipeline/cache parameters) and
+//! Table 2 (abbreviations and silicon areas), plus calibrated stand-ins
+//! for the two real boards (Cortex-A8 BeagleBoard-xM, Cortex-A9 Snowball).
+
+/// Pipeline style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    InOrder,
+    OutOfOrder,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CacheCfg {
+    pub size_kb: u32,
+    pub assoc: u32,
+    pub latency: u32,
+    pub mshrs: u32,
+    pub write_buffers: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    pub name: &'static str,
+    pub kind: CoreKind,
+    /// Front-end (issue) width.
+    pub width: u32,
+    /// Back-end width (max insts completed/retired per cycle; Table 1
+    /// "front-end/back-end width").
+    pub backend_width: u32,
+    /// Number of FP/SIMD execution ports (VPUs).
+    pub vpus: u32,
+    pub clock_ghz: f64,
+
+    pub l1d: CacheCfg,
+    pub l2: CacheCfg,
+    pub line_bytes: u32,
+    pub dram_latency_ns: f64,
+
+    /// Stride prefetcher: degree and buffer size (Table 1).
+    pub prefetch_degree: u32,
+    pub prefetch_buffer: u32,
+
+    /// Branch predictor: global-history entries and mispredict penalty
+    /// (front-end refill = INT pipeline depth + extra OOO stages).
+    pub bp_entries: u32,
+    pub mispredict_penalty: u32,
+
+    /// INT pipeline.
+    pub int_alu_ports: u32,
+    pub int_mul_ports: u32,
+    pub int_add_lat: u32,
+    pub int_mul_lat: u32,
+
+    /// FP/SIMD latencies (Table 1: VADD/VMUL/VMLA cycles).
+    pub vadd_lat: u32,
+    pub vmul_lat: u32,
+    pub vmla_lat: u32,
+
+    /// Load/store.
+    pub ls_ports: u32,
+    /// True when load and store share one port (SI/DI designs).
+    pub ls_shared: bool,
+    pub load_lat: u32,
+    pub store_lat: u32,
+
+    /// OOO resources (0 for IO cores).
+    pub rob: u32,
+    pub lsq: u32,
+
+    /// Cortex-A8 quirk: scalar VFP is not pipelined (initiation interval =
+    /// latency). NEON is always pipelined.
+    pub scalar_fp_pipelined: bool,
+
+    /// McPAT outputs (Table 2), mm² at 28 nm, 47 °C.
+    pub area_core_mm2: f64,
+    pub area_l2_mm2: f64,
+}
+
+impl CoreConfig {
+    pub fn is_ooo(&self) -> bool {
+        self.kind == CoreKind::OutOfOrder
+    }
+
+    pub fn area_total_mm2(&self) -> f64 {
+        self.area_core_mm2 + self.area_l2_mm2
+    }
+
+    /// The equivalent design with the other scheduling style, if it exists
+    /// (paper §5.2: "equivalent" = same configuration except dynamic
+    /// scheduling). SI-I1 has no OOO twin.
+    pub fn equivalent_twin(&self) -> Option<&'static CoreConfig> {
+        let (prefix, rest) = self.name.split_once('-')?;
+        let style = match self.kind {
+            CoreKind::InOrder => "O",
+            CoreKind::OutOfOrder => "I",
+        };
+        let twin = format!("{prefix}-{style}{}", &rest[1..]);
+        core_by_name(&twin)
+    }
+}
+
+const DRAM_NS: f64 = 81.0;
+
+fn l1i_independent() -> CacheCfg {
+    // L1-I is modeled implicitly (kernels fit in 32 kB); kept for area.
+    CacheCfg { size_kb: 32, assoc: 2, latency: 1, mshrs: 2, write_buffers: 0 }
+}
+
+macro_rules! core {
+    ($name:literal, $kind:expr, w=$w:expr, bw=$bw:expr, vpus=$v:expr, clk=$clk:expr,
+     l2kb=$l2:expr, l2lat=$l2lat:expr, l2mshr=$l2m:expr,
+     l1mshr=$l1m:expr, l1wb=$l1wb:expr, l1assoc=$l1a:expr,
+     pfd=$pfd:expr, pfb=$pfb:expr, bp=$bp:expr, mpen=$mp:expr,
+     ialu=$ialu:expr, vadd=$va:expr, vmul=$vm:expr, vmla=$vmla:expr,
+     lsp=$lsp:expr, shared=$sh:expr, ldlat=$ld:expr, stlat=$st:expr,
+     rob=$rob:expr, lsq=$lsq:expr, amm=$amm:expr, al2=$al2:expr) => {
+        CoreConfig {
+            name: $name,
+            kind: $kind,
+            width: $w,
+            backend_width: $bw,
+            vpus: $v,
+            clock_ghz: $clk,
+            l1d: CacheCfg { size_kb: 32, assoc: $l1a, latency: 1, mshrs: $l1m, write_buffers: $l1wb },
+            l2: CacheCfg { size_kb: $l2, assoc: 8, latency: $l2lat, mshrs: $l2m, write_buffers: 16 },
+            line_bytes: 64,
+            dram_latency_ns: DRAM_NS,
+            prefetch_degree: $pfd,
+            prefetch_buffer: $pfb,
+            bp_entries: $bp,
+            mispredict_penalty: $mp,
+            int_alu_ports: $ialu,
+            int_mul_ports: 1,
+            int_add_lat: 1,
+            int_mul_lat: 4,
+            vadd_lat: $va,
+            vmul_lat: $vm,
+            vmla_lat: $vmla,
+            ls_ports: $lsp,
+            ls_shared: $sh,
+            load_lat: $ld,
+            store_lat: $st,
+            rob: $rob,
+            lsq: $lsq,
+            scalar_fp_pipelined: true,
+            area_core_mm2: $amm,
+            area_l2_mm2: $al2,
+        }
+    };
+}
+
+use CoreKind::{InOrder as IO, OutOfOrder as OOO};
+
+/// The 11 simulated cores of paper Tables 1 & 2.
+///
+/// Naming: {S,D,T}I = single/dual/triple issue; -I/-O = in-order /
+/// out-of-order; trailing digit = number of VPUs.
+pub static ALL_SIM_CORES: [CoreConfig; 11] = [
+    // Single-issue, IO only, 1.4 GHz, 512 kB L2 (lat 3), VADD/VMUL/VMLA 3/4/6.
+    core!("SI-I1", IO, w=1, bw=1, vpus=1, clk=1.4, l2kb=512, l2lat=3, l2mshr=8,
+          l1mshr=4, l1wb=4, l1assoc=4, pfd=1, pfb=8, bp=256, mpen=8,
+          ialu=1, vadd=3, vmul=4, vmla=6, lsp=1, shared=true, ldlat=1, stlat=1,
+          rob=0, lsq=8, amm=0.45, al2=1.52),
+    // Dual-issue, 1.6 GHz, 1 MB L2 (lat 5), VADD/VMUL/VMLA 4/5/8, depth 8 (+3 OOO).
+    core!("DI-I1", IO, w=2, bw=4, vpus=1, clk=1.6, l2kb=1024, l2lat=5, l2mshr=8,
+          l1mshr=5, l1wb=8, l1assoc=4, pfd=1, pfb=12, bp=4096, mpen=8,
+          ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+          rob=0, lsq=12, amm=1.00, al2=3.19),
+    core!("DI-I2", IO, w=2, bw=4, vpus=2, clk=1.6, l2kb=1024, l2lat=5, l2mshr=8,
+          l1mshr=5, l1wb=8, l1assoc=4, pfd=1, pfb=12, bp=4096, mpen=8,
+          ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+          rob=0, lsq=12, amm=1.48, al2=3.19),
+    core!("DI-O1", OOO, w=2, bw=4, vpus=1, clk=1.6, l2kb=1024, l2lat=5, l2mshr=8,
+          l1mshr=5, l1wb=8, l1assoc=4, pfd=1, pfb=12, bp=4096, mpen=11,
+          ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+          rob=40, lsq=12, amm=1.15, al2=3.19),
+    core!("DI-O2", OOO, w=2, bw=4, vpus=2, clk=1.6, l2kb=1024, l2lat=5, l2mshr=8,
+          l1mshr=5, l1wb=8, l1assoc=4, pfd=1, pfb=12, bp=4096, mpen=11,
+          ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+          rob=40, lsq=12, amm=1.67, al2=3.19),
+    // Triple-issue, 2.0 GHz, 2 MB L2 (lat 8), deep FP pipes 10/12/20,
+    // depth 9 (+6 OOO), one LS port for each of load and store.
+    core!("TI-I1", IO, w=3, bw=7, vpus=1, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=9,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=0, lsq=16, amm=1.81, al2=5.88),
+    core!("TI-I2", IO, w=3, bw=7, vpus=2, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=9,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=0, lsq=16, amm=2.89, al2=5.88),
+    core!("TI-I3", IO, w=3, bw=7, vpus=3, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=9,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=0, lsq=16, amm=3.98, al2=5.88),
+    core!("TI-O1", OOO, w=3, bw=7, vpus=1, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=15,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=60, lsq=16, amm=2.08, al2=5.88),
+    core!("TI-O2", OOO, w=3, bw=7, vpus=2, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=15,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=60, lsq=16, amm=3.21, al2=5.88),
+    core!("TI-O3", OOO, w=3, bw=7, vpus=3, clk=2.0, l2kb=2048, l2lat=8, l2mshr=11,
+          l1mshr=6, l1wb=16, l1assoc=2, pfd=1, pfb=16, bp=4096, mpen=15,
+          ialu=2, vadd=10, vmul=12, vmla=20, lsp=2, shared=false, ldlat=3, stlat=2,
+          rob=60, lsq=16, amm=4.35, al2=5.88),
+];
+
+/// Calibrated Cortex-A8 stand-in (BeagleBoard-xM): dual-issue in-order,
+/// 1 GHz, 256 kB L2, **non-pipelined scalar VFP** (the cause of the paper's
+/// Fig 7 SISD/SIMD asymmetry), pipelined NEON with 1 port.
+pub static CORE_A8: CoreConfig = {
+    let mut c = core!("A8", IO, w=2, bw=2, vpus=1, clk=1.0, l2kb=256, l2lat=8, l2mshr=8,
+          l1mshr=4, l1wb=4, l1assoc=4, pfd=1, pfb=8, bp=512, mpen=13,
+          ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+          rob=0, lsq=8, amm=1.1, al2=1.0);
+    c.scalar_fp_pipelined = false;
+    c
+};
+
+/// Calibrated Cortex-A9 stand-in (Snowball): dual-issue out-of-order,
+/// 1 GHz, 512 kB L2, pipelined VFP and NEON.
+pub static CORE_A9: CoreConfig = core!("A9", OOO, w=2, bw=4, vpus=1, clk=1.0,
+      l2kb=512, l2lat=8, l2mshr=8,
+      l1mshr=4, l1wb=8, l1assoc=4, pfd=1, pfb=8, bp=512, mpen=11,
+      ialu=2, vadd=4, vmul=5, vmla=8, lsp=1, shared=true, ldlat=2, stlat=1,
+      rob=32, lsq=8, amm=1.3, al2=2.0);
+
+pub fn core_by_name(name: &str) -> Option<&'static CoreConfig> {
+    if name == "A8" {
+        return Some(&CORE_A8);
+    }
+    if name == "A9" {
+        return Some(&CORE_A9);
+    }
+    ALL_SIM_CORES.iter().find(|c| c.name == name)
+}
+
+/// The five equivalent IO/OOO pairs of paper Fig 6 (SI-I1 has no twin).
+pub fn equivalent_pairs() -> Vec<(&'static CoreConfig, &'static CoreConfig)> {
+    [("DI-I1", "DI-O1"), ("DI-I2", "DI-O2"), ("TI-I1", "TI-O1"), ("TI-I2", "TI-O2"), ("TI-I3", "TI-O3")]
+        .iter()
+        .map(|(i, o)| (core_by_name(i).unwrap(), core_by_name(o).unwrap()))
+        .collect()
+}
+
+#[allow(dead_code)]
+fn _unused() {
+    let _ = l1i_independent();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_cores_table2_names() {
+        let names: Vec<&str> = ALL_SIM_CORES.iter().map(|c| c.name).collect();
+        for n in ["SI-I1", "DI-I1", "DI-I2", "DI-O1", "DI-O2", "TI-I1", "TI-I2", "TI-I3", "TI-O1", "TI-O2", "TI-O3"] {
+            assert!(names.contains(&n), "{n} missing");
+        }
+        assert_eq!(ALL_SIM_CORES.len(), 11);
+    }
+
+    #[test]
+    fn table2_areas_verbatim() {
+        // Spot-check the embedded McPAT areas against paper Table 2.
+        let a = core_by_name("SI-I1").unwrap();
+        assert_eq!((a.area_core_mm2, a.area_l2_mm2), (0.45, 1.52));
+        let b = core_by_name("TI-O3").unwrap();
+        assert_eq!(b.area_core_mm2, 4.35);
+        assert!((b.area_total_mm2() - 10.23).abs() < 0.04); // paper rounds to 10.2
+        let c = core_by_name("DI-O2").unwrap();
+        assert!((c.area_total_mm2() - 4.86).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ooo_area_overhead_positive() {
+        // Fig 6(d): every OOO design is bigger than its equivalent IO.
+        for (io, ooo) in equivalent_pairs() {
+            assert!(ooo.area_core_mm2 > io.area_core_mm2, "{} vs {}", ooo.name, io.name);
+            assert_eq!(io.vpus, ooo.vpus);
+            assert_eq!(io.width, ooo.width);
+            assert_eq!(io.l2.size_kb, ooo.l2.size_kb);
+        }
+    }
+
+    #[test]
+    fn clock_by_width() {
+        for c in ALL_SIM_CORES.iter() {
+            let expect = match c.width {
+                1 => 1.4,
+                2 => 1.6,
+                3 => 2.0,
+                _ => unreachable!(),
+            };
+            assert_eq!(c.clock_ghz, expect, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn a8_quirk() {
+        assert!(!CORE_A8.scalar_fp_pipelined);
+        assert!(CORE_A9.scalar_fp_pipelined);
+        assert!(CORE_A9.is_ooo());
+        assert!(!CORE_A8.is_ooo());
+    }
+
+    #[test]
+    fn rob_only_on_ooo() {
+        for c in ALL_SIM_CORES.iter() {
+            if c.is_ooo() {
+                assert!(c.rob > 0, "{}", c.name);
+            } else {
+                assert_eq!(c.rob, 0, "{}", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn twin_lookup() {
+        let t = core_by_name("DI-I2").unwrap().equivalent_twin().unwrap();
+        assert_eq!(t.name, "DI-O2");
+        let t = core_by_name("TI-O3").unwrap().equivalent_twin().unwrap();
+        assert_eq!(t.name, "TI-I3");
+    }
+}

@@ -1,0 +1,161 @@
+//! McPAT-style energy model (paper §4.2: McPAT at 28 nm, 47 °C).
+//!
+//! Energy = Σ (per-op dynamic energy × class count) + leakage power × time.
+//! Dynamic per-op costs carry a front-end overhead term that grows with
+//! issue width and, for OOO cores, a scheduling overhead (rename, IQ
+//! wakeup/select, ROB) — the McPAT components that make dynamic
+//! scheduling expensive. Constants are calibrated so the IO/OOO
+//! energy-efficiency relations of paper Figs 5-6 hold; absolute joules are
+//! not meaningful beyond their ratios.
+
+use super::config::CoreConfig;
+use super::pipeline::{ExecStats, N_OP_CLASSES};
+
+/// Dynamic energy per op class in pJ, before core scaling:
+/// IAlu, VAdd, VMul, VMla, FAdd, FMul, FMla, Load, Store, Pld, Branch.
+const BASE_PJ: [f64; N_OP_CLASSES] = [
+    4.0,  // IAlu
+    14.0, // VAdd (4-lane)
+    18.0, // VMul
+    26.0, // VMla
+    7.0,  // FAdd
+    9.0,  // FMul
+    13.0, // FMla
+    16.0, // Load (L1 access; miss costs added separately)
+    16.0, // Store
+    4.0,  // Pld
+    3.0,  // Branch
+];
+
+/// Extra energy for cache misses / prefetches (pJ per event).
+const L2_ACCESS_PJ: f64 = 90.0;
+const DRAM_ACCESS_PJ: f64 = 2400.0;
+const PREFETCH_PJ: f64 = 60.0;
+
+/// Front-end (fetch/decode/issue) energy per instruction, pJ, per unit of
+/// issue width.
+const FRONTEND_PJ_PER_WIDTH: f64 = 5.0;
+
+/// OOO scheduling overhead per instruction (rename + IQ + ROB), pJ,
+/// scaled by window size relative to a 40-entry ROB.
+const OOO_PJ_BASE: f64 = 26.0;
+
+/// Leakage power density, W per mm² of core+L2 area at 28 nm, 47 °C —
+/// calibrated so leakage is ~20-30 % of total power on a busy core (the
+/// McPAT regime for 28 nm LP embedded silicon).
+const LEAKAGE_W_PER_MM2: f64 = 0.006;
+
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    width: f64,
+    ooo_overhead_pj: f64,
+    leakage_w: f64,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &CoreConfig) -> EnergyModel {
+        let ooo_overhead_pj = if cfg.is_ooo() {
+            OOO_PJ_BASE * (cfg.rob as f64 / 40.0).max(0.5)
+        } else {
+            0.0
+        };
+        EnergyModel {
+            width: cfg.width as f64,
+            ooo_overhead_pj,
+            leakage_w: LEAKAGE_W_PER_MM2 * cfg.area_total_mm2(),
+        }
+    }
+
+    /// Total energy in joules for one simulated trace.
+    pub fn energy_j(&self, stats: &ExecStats, seconds: f64) -> f64 {
+        let mut pj = 0.0;
+        for (i, &count) in stats.op_counts.iter().enumerate() {
+            pj += BASE_PJ[i] * count as f64;
+        }
+        let per_inst = FRONTEND_PJ_PER_WIDTH * self.width + self.ooo_overhead_pj;
+        pj += per_inst * stats.insts as f64;
+        pj += L2_ACCESS_PJ * (stats.mem.l1_misses + stats.mem.l2_hits) as f64;
+        pj += DRAM_ACCESS_PJ * stats.mem.l2_misses as f64;
+        pj += PREFETCH_PJ * stats.mem.prefetches_issued as f64;
+        pj * 1e-12 + self.leakage_w * seconds
+    }
+
+    pub fn leakage_w(&self) -> f64 {
+        self.leakage_w
+    }
+}
+
+/// Energy efficiency metric used in Figs 5-6: work per joule, normalised
+/// as `(t_ref * e_ref) / (t_new * e_new)` would conflate delay; the paper
+/// plots energy-efficiency improvement = e_ref / e_new for the same work.
+pub fn efficiency_improvement(ref_energy_j: f64, new_energy_j: f64) -> f64 {
+    ref_energy_j / new_energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::config::core_by_name;
+    use crate::simulator::trace::{KernelKind, TraceGen};
+    use crate::simulator::{simulate_call, simulate_trace};
+    use crate::tunespace::{Structural, TuningParams};
+
+    const KIND: KernelKind = KernelKind::Distance { dim: 64, batch: 32 };
+
+    fn p(ve: bool, v: u32, h: u32, c: u32) -> TuningParams {
+        TuningParams::phase1_default(Structural::new(ve, v, h, c))
+    }
+
+    #[test]
+    fn ooo_burns_more_than_equivalent_io_per_inst() {
+        // Same code, same cache config, steady state (warm caches — the
+        // regime the benchmark spends its time in): the OOO twin pays
+        // rename/IQ/ROB energy per instruction and ends up less
+        // energy-efficient (paper: IO refs are ~21 % more efficient than
+        // OOO refs).
+        use crate::backend::sim::SimBackend;
+        use crate::backend::KernelVersion;
+        let code = KernelVersion::Variant(p(true, 1, 1, 1));
+        let mut io = SimBackend::new(core_by_name("DI-I2").unwrap(), KIND, 0);
+        let mut ooo = SimBackend::new(core_by_name("DI-O2").unwrap(), KIND, 0);
+        let (_, e_io) = io.exact(&code).unwrap();
+        let (_, e_ooo) = ooo.exact(&code).unwrap();
+        assert!(e_io < e_ooo, "IO {e_io} !< OOO {e_ooo}");
+    }
+
+    #[test]
+    fn leakage_scales_with_area() {
+        let small = EnergyModel::new(core_by_name("SI-I1").unwrap());
+        let big = EnergyModel::new(core_by_name("TI-O3").unwrap());
+        assert!(big.leakage_w() > small.leakage_w() * 3.0);
+    }
+
+    #[test]
+    fn faster_kernel_on_same_core_saves_energy() {
+        // Fewer instructions (SIMD vectLen 4) on the same core -> less
+        // dynamic energy + less leakage time.
+        let mut gen = TraceGen::new();
+        let core = core_by_name("DI-I1").unwrap();
+        let slow = simulate_call(core, &KIND, &p(false, 1, 1, 1), &mut gen);
+        let fast = simulate_call(core, &KIND, &p(true, 4, 2, 1), &mut gen);
+        assert!(fast.seconds < slow.seconds);
+        assert!(fast.energy_j < slow.energy_j);
+    }
+
+    #[test]
+    fn efficiency_improvement_ratio() {
+        assert!((efficiency_improvement(2.0, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_dominated_by_dynamic_for_busy_trace() {
+        // Sanity: on a compute-dense trace the dynamic part should not be
+        // dwarfed by leakage (otherwise all comparisons collapse to time).
+        let mut gen = TraceGen::new();
+        let core = core_by_name("DI-I1").unwrap();
+        let trace = gen.kernel_trace(&KIND, &p(true, 2, 2, 1)).to_vec();
+        let r = simulate_trace(core, &trace);
+        let leak = EnergyModel::new(core).leakage_w() * r.seconds;
+        assert!(r.energy_j > leak * 1.5, "dynamic part too small");
+    }
+}

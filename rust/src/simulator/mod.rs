@@ -1,0 +1,131 @@
+//! Micro-architectural simulator — the gem5 + McPAT analogue (paper §4.2).
+//!
+//! A trace-driven, cycle-approximate model of the 11 simulated cores of
+//! paper Table 1/2 plus calibrated Cortex-A8/A9 stand-ins for the real
+//! platforms. The deGoal compilette's machine-code output is modeled as an
+//! abstract RISC trace (`trace`), executed by an in-order scoreboard or an
+//! out-of-order window pipeline model (`pipeline`) over a two-level cache
+//! hierarchy with stride prefetching (`cache`), a bimodal branch predictor
+//! (`branch`), and a McPAT-style energy/area model (`energy`).
+//!
+//! The model is *approximate by design*: the goal is the paper's
+//! experimental shape (IO vs OOO gaps, parameter/pipeline correlations,
+//! crossover positions), not absolute cycle counts of the authors' testbed.
+
+pub mod branch;
+pub mod cache;
+pub mod config;
+pub mod energy;
+pub mod pipeline;
+pub mod trace;
+
+pub use config::{core_by_name, equivalent_pairs, CoreConfig, CoreKind, ALL_SIM_CORES, CORE_A8, CORE_A9};
+pub use energy::EnergyModel;
+pub use pipeline::{ExecStats, Pipeline};
+pub use trace::{Inst, KernelKind, OpClass, RefKind, TraceGen};
+
+use crate::tunespace::TuningParams;
+
+/// Result of simulating one kernel call on one core.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub insts: u64,
+    /// Seconds at the core's clock.
+    pub seconds: f64,
+    /// Dynamic + leakage energy in joules.
+    pub energy_j: f64,
+}
+
+/// Convenience front door: simulate one kernel call of `kind` with tuning
+/// parameters `params` on `core`.
+pub fn simulate_call(
+    core: &CoreConfig,
+    kind: &KernelKind,
+    params: &TuningParams,
+    gen: &mut TraceGen,
+) -> SimResult {
+    let trace = gen.kernel_trace(kind, params);
+    simulate_trace(core, trace)
+}
+
+/// Simulate a reference (compiled-C analogue) kernel call.
+pub fn simulate_ref_call(
+    core: &CoreConfig,
+    kind: &KernelKind,
+    rk: RefKind,
+    gen: &mut TraceGen,
+) -> SimResult {
+    let trace = gen.ref_trace(kind, rk);
+    simulate_trace(core, trace)
+}
+
+pub fn simulate_trace(core: &CoreConfig, trace: &[Inst]) -> SimResult {
+    let mut pipe = Pipeline::new(core);
+    let stats = pipe.run(trace);
+    let seconds = stats.cycles as f64 / (core.clock_ghz * 1e9);
+    let energy = EnergyModel::new(core).energy_j(&stats, seconds);
+    SimResult { cycles: stats.cycles, insts: stats.insts, seconds, energy_j: energy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::{Structural, TuningParams};
+
+    fn sc_kind() -> KernelKind {
+        KernelKind::Distance { dim: 64, batch: 64 }
+    }
+
+    #[test]
+    fn ooo_not_slower_than_equivalent_io() {
+        // DI-O1 vs DI-I1 and TI-O2 vs TI-I2: the OOO core must not lose to
+        // its equivalent IO design on the same (dependency-heavy) code.
+        let mut gen = TraceGen::new();
+        let p = TuningParams::phase1_default(Structural::new(true, 1, 1, 1));
+        for (io, ooo) in [("DI-I1", "DI-O1"), ("TI-I2", "TI-O2")] {
+            let io = config::core_by_name(io).unwrap();
+            let ooo = config::core_by_name(ooo).unwrap();
+            let t_io = simulate_call(io, &sc_kind(), &p, &mut gen).cycles;
+            let t_ooo = simulate_call(ooo, &sc_kind(), &p, &mut gen).cycles;
+            assert!(t_ooo <= t_io, "{}: {} vs {}: {}", ooo.name, t_ooo, io.name, t_io);
+        }
+    }
+
+    #[test]
+    fn unrolling_helps_in_order() {
+        // On an IO core, hotUF unrolling must beat the rolled version for
+        // dependency-limited SIMD code (the paper's core premise).
+        let mut gen = TraceGen::new();
+        let rolled = TuningParams::phase1_default(Structural::new(true, 1, 1, 1));
+        let unrolled = TuningParams::phase1_default(Structural::new(true, 1, 4, 2));
+        let core = config::core_by_name("DI-I1").unwrap();
+        let t_rolled = simulate_call(core, &sc_kind(), &rolled, &mut gen).cycles;
+        let t_unrolled = simulate_call(core, &sc_kind(), &unrolled, &mut gen).cycles;
+        assert!(
+            t_unrolled < t_rolled,
+            "unrolled {t_unrolled} !< rolled {t_rolled}"
+        );
+    }
+
+    #[test]
+    fn energy_positive_and_scales_with_area() {
+        let mut gen = TraceGen::new();
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 1, 2));
+        let small = simulate_call(config::core_by_name("SI-I1").unwrap(), &sc_kind(), &p, &mut gen);
+        let big = simulate_call(config::core_by_name("TI-O3").unwrap(), &sc_kind(), &p, &mut gen);
+        assert!(small.energy_j > 0.0 && big.energy_j > 0.0);
+        // The triple-issue OOO core burns more energy per call on this
+        // short kernel than the single-issue IO core (paper Fig 6).
+        assert!(big.energy_j > small.energy_j * 0.8);
+    }
+
+    #[test]
+    fn seconds_consistent_with_clock() {
+        let mut gen = TraceGen::new();
+        let p = TuningParams::phase1_default(Structural::new(false, 1, 1, 1));
+        let core = config::core_by_name("SI-I1").unwrap();
+        let r = simulate_call(core, &sc_kind(), &p, &mut gen);
+        assert!((r.seconds - r.cycles as f64 / 1.4e9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,780 @@
+//! Abstract machine-code traces — the model of deGoal's generated code.
+//!
+//! The compilette of paper Fig. 3 emits ARM/NEON machine code whose shape
+//! is fully determined by (specialised constants, tuning parameters). This
+//! module reproduces that shape as a trace of abstract RISC instructions
+//! with register dependencies and memory addresses, which the pipeline
+//! model executes. Reference (compiled-C) kernels get their own trace
+//! shapes, modeling what gcc -O3 emits for the benchmark sources
+//! (`RefKind`).
+//!
+//! Register model mirrors the NEON file: vector regs hold `SIMD_WIDTH`
+//! f32 lanes; a logical vector of `width = unit*vectLen` elements occupies
+//! `vectLen` architectural registers (1 in SISD mode). Load-multiple
+//! instructions (one inst, several registers) model the paper's
+//! observation that longer vectors save code size and issue slots.
+
+use crate::tunespace::{Structural, TuningParams};
+
+/// Instruction classes the pipeline model understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Integer ALU op (address increment, loop counter).
+    IAlu,
+    /// SIMD add/sub over one vector register (4 lanes).
+    VAdd,
+    /// SIMD multiply.
+    VMul,
+    /// SIMD fused multiply-accumulate.
+    VMla,
+    /// Scalar FP add/sub.
+    FAdd,
+    /// Scalar FP multiply.
+    FMul,
+    /// Scalar FP fused multiply-accumulate.
+    FMla,
+    /// Load `bytes` bytes (possibly a load-multiple).
+    Load,
+    /// Store `bytes` bytes.
+    Store,
+    /// Prefetch hint (pld).
+    Pld,
+    /// Conditional branch.
+    Branch,
+}
+
+pub const NO_REG: u16 = u16::MAX;
+
+/// One abstract instruction. `dst`/`src*` are virtual register ids; NO_REG
+/// marks unused slots. Memory ops carry a byte address and length.
+#[derive(Debug, Clone, Copy)]
+pub struct Inst {
+    pub op: OpClass,
+    pub dst: u16,
+    pub src1: u16,
+    pub src2: u16,
+    pub src3: u16,
+    pub addr: u64,
+    pub bytes: u32,
+    /// Branch: taken flag; static branch site id lives in `addr`.
+    pub taken: bool,
+}
+
+impl Inst {
+    fn alu(dst: u16, src1: u16) -> Inst {
+        Inst { op: OpClass::IAlu, dst, src1, src2: NO_REG, src3: NO_REG, addr: 0, bytes: 0, taken: false }
+    }
+
+    fn fp(op: OpClass, dst: u16, src1: u16, src2: u16, src3: u16) -> Inst {
+        Inst { op, dst, src1, src2, src3, addr: 0, bytes: 0, taken: false }
+    }
+
+    fn load(dst: u16, base: u16, addr: u64, bytes: u32) -> Inst {
+        Inst { op: OpClass::Load, dst, src1: base, src2: NO_REG, src3: NO_REG, addr, bytes, taken: false }
+    }
+
+    fn store(src: u16, addr: u64, bytes: u32) -> Inst {
+        Inst { op: OpClass::Store, dst: NO_REG, src1: src, src2: NO_REG, src3: NO_REG, addr, bytes, taken: false }
+    }
+
+    fn pld(addr: u64) -> Inst {
+        Inst { op: OpClass::Pld, dst: NO_REG, src1: NO_REG, src2: NO_REG, src3: NO_REG, addr, bytes: 64, taken: false }
+    }
+
+    fn branch(site: u64, taken: bool) -> Inst {
+        Inst { op: OpClass::Branch, dst: NO_REG, src1: NO_REG, src2: NO_REG, src3: NO_REG, addr: site, bytes: 0, taken }
+    }
+}
+
+/// Which kernel a trace models, with its specialised constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Squared euclidean distance: `batch` points of `dim` f32 vs 1 center.
+    Distance { dim: u32, batch: u32 },
+    /// VIPS lintra over `rows` rows of `row_len` f32 elements.
+    Lintra { row_len: u32, rows: u32 },
+}
+
+impl KernelKind {
+    pub fn length(&self) -> u32 {
+        match self {
+            KernelKind::Distance { dim, .. } => *dim,
+            KernelKind::Lintra { row_len, .. } => *row_len,
+        }
+    }
+
+    /// Outer repetition count (points / rows per kernel call).
+    pub fn outer(&self) -> u32 {
+        match self {
+            KernelKind::Distance { batch, .. } => *batch,
+            KernelKind::Lintra { rows, .. } => *rows,
+        }
+    }
+}
+
+/// Reference-kernel flavours (paper §4.3/§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefKind {
+    /// gcc -O3 scalar code, generic dimension (run-time loop bound). gcc
+    /// emits prefetch for this shape (-fprefetch-loop-arrays).
+    SisdGeneric,
+    /// Same, with the dimension specialised at compile time.
+    SisdSpecialized,
+    /// PARVEC hand-vectorised NEON, generic dimension; the paper notes gcc
+    /// does NOT emit prefetch instructions in the SIMD code.
+    SimdGeneric,
+    /// Specialised PARVEC kernel.
+    SimdSpecialized,
+}
+
+impl RefKind {
+    pub fn is_simd(&self) -> bool {
+        matches!(self, RefKind::SimdGeneric | RefKind::SimdSpecialized)
+    }
+
+    pub fn is_specialized(&self) -> bool {
+        matches!(self, RefKind::SisdSpecialized | RefKind::SimdSpecialized)
+    }
+}
+
+// Virtual register map.
+const R_PTR1: u16 = 0; // coord1 / img pointer
+const R_PTR2: u16 = 1; // coord2 / out pointer
+const R_CNT: u16 = 2; // loop counter
+const R_TMP: u16 = 3; // scalar temporary
+const R_SCALAR0: u16 = 8; // scalar FP temps: 8..16
+const V_BASE: u16 = 32; // vector regs 32..64: load destinations
+const V_ACC: u16 = 64; // accumulators 64..96 (one per hotUF·vectLen lane)
+const V_TMP: u16 = 96; // difference temporaries 96..128
+
+// Address-space layout for the modeled arrays (byte addresses). Bases are
+// staggered by distinct line offsets so that independently-allocated
+// arrays do not pathologically alias to the same cache set (as real
+// allocators ensure with high probability).
+const A_POINTS: u64 = 0x1000_0000;
+const A_CENTER: u64 = 0x2000_1040;
+const A_RESULT: u64 = 0x3000_2080;
+const A_MULVEC: u64 = 0x4000_30c0;
+const A_ADDVEC: u64 = 0x5000_4100;
+const A_OUT: u64 = 0x6000_5140;
+const A_STACK: u64 = 0x7000_6180;
+
+/// Trace generator with a reusable buffer (no allocation on the hot path).
+#[derive(Debug, Default)]
+pub struct TraceGen {
+    buf: Vec<Inst>,
+}
+
+impl TraceGen {
+    pub fn new() -> TraceGen {
+        TraceGen { buf: Vec::with_capacity(1 << 18) }
+    }
+
+    /// Generate the trace of one kernel call for an auto-tuned variant.
+    pub fn kernel_trace(&mut self, kind: &KernelKind, p: &TuningParams) -> &[Inst] {
+        self.buf.clear();
+        match kind {
+            KernelKind::Distance { dim, batch } => self.distance(*dim, *batch, p),
+            KernelKind::Lintra { row_len, rows } => self.lintra(*row_len, *rows, p),
+        }
+        &self.buf
+    }
+
+    /// Generate the trace of one reference-kernel call.
+    pub fn ref_trace(&mut self, kind: &KernelKind, rk: RefKind) -> &[Inst] {
+        self.buf.clear();
+        match kind {
+            KernelKind::Distance { dim, batch } => self.distance_ref(*dim, *batch, rk),
+            KernelKind::Lintra { row_len, rows } => self.lintra_ref(*row_len, *rows, rk),
+        }
+        &self.buf
+    }
+
+    // ---- auto-tuned distance kernel (models the Fig. 3 compilette) ----
+
+    fn distance(&mut self, dim: u32, batch: u32, p: &TuningParams) {
+        let s = p.s;
+        let epi = s.elems_per_iter();
+        let num_iter = dim / epi;
+        let leftover = dim - num_iter * epi;
+        let w_bytes = s.width() * 4;
+
+        // One accumulator register per (hotUF lane, vectLen q-register):
+        // a logical vector of vectLen q-regs accumulates into vectLen
+        // distinct registers — this is why the register-pressure bound is
+        // vectLen * hotUF (MAX_REG_PRODUCT).
+        let n_accs = (s.hot_uf * s.vect_len) as u16;
+        for b in 0..batch {
+            let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+            self.prologue(p, 2);
+            // Zero the accumulators (NEON veor).
+            for a in 0..n_accs {
+                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC + a, NO_REG, NO_REG, NO_REG));
+            }
+            for it in 0..num_iter {
+                let base = (it * epi) as u64 * 4;
+                self.distance_body(s, p, pbase + base, A_CENTER + base, w_bytes, it);
+                if num_iter > 1 {
+                    // Loop counter + backward branch (taken except last).
+                    self.buf.push(Inst::alu(R_CNT, R_CNT));
+                    self.buf.push(Inst::branch(1, it + 1 != num_iter));
+                }
+            }
+            // Leftover strip: scalar element loop.
+            for e in 0..leftover {
+                let off = ((num_iter * epi + e) as u64) * 4;
+                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                self.buf.push(Inst::fp(OpClass::FMla, V_ACC, R_SCALAR0 + 2, R_SCALAR0 + 2, V_ACC));
+                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+                self.buf.push(Inst::branch(2, e + 1 != leftover));
+            }
+            self.distance_reduce(s);
+            self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
+            self.epilogue(p, 2);
+        }
+    }
+
+    /// One main-loop body: coldUF x hotUF pattern over `width()`-element
+    /// vectors, with optional software scheduling (IS) and prefetch (pld).
+    ///
+    /// With IS off, each (c, h) step is emitted naively: load, load, sub,
+    /// mac, pointer bumps — a tight dependency spine that stalls in-order
+    /// pipelines. With IS on, deGoal's scheduler reorders *within each
+    /// coldUF block* (the register-reuse boundary: lanes are unique inside
+    /// one block): all loads first, then all subs, then all macs — the
+    /// grouped macs rotate across the hotUF·vectLen accumulator lanes,
+    /// hiding the MLA latency. OOO cores achieve the same in hardware,
+    /// which is why IS correlates with in-order designs (Table 5).
+    #[allow(clippy::too_many_arguments)]
+    fn distance_body(&mut self, s: Structural, p: &TuningParams, pbase: u64, cbase: u64, w_bytes: u32, iter: u32) {
+        let steps = s.cold_uf * s.hot_uf;
+        for c in 0..s.cold_uf {
+            let mut loads = Vec::new();
+            let mut plds = Vec::new();
+            let mut subs = Vec::new();
+            let mut macs = Vec::new();
+            let mut rest = Vec::new();
+            for h in 0..s.hot_uf {
+                let step = c * s.hot_uf + h;
+                let off = (step * w_bytes) as u64;
+                let vp = V_BASE + (h as u16) * 2;
+                let vq = vp + 1;
+                // Vector loads: one load-multiple per operand when
+                // vectorised (ldm; port-busy scales with bytes), or
+                // per-element scalar loads in SISD mode.
+                if s.ve {
+                    loads.push(Inst::load(vp, R_PTR1, pbase + off, w_bytes));
+                    loads.push(Inst::load(vq, R_PTR2, cbase + off, w_bytes));
+                } else {
+                    for e in 0..s.vect_len {
+                        loads.push(Inst::load(vp, R_PTR1, pbase + off + e as u64 * 4, 4));
+                        loads.push(Inst::load(vq, R_PTR2, cbase + off + e as u64 * 4, 4));
+                    }
+                }
+                // Prefetch hints for the next iteration (Fig. 3 lines 10-13).
+                if p.pld_stride != 0 && step == steps - 1 && iter == 0 {
+                    let stride = p.pld_stride as u64;
+                    plds.push(Inst::pld(pbase + off + (s.width() as u64 - 1) * 4 + stride));
+                    plds.push(Inst::pld(cbase + off + (s.width() as u64 - 1) * 4 + stride));
+                }
+                // Compute: one op per architectural vector register
+                // (vectLen q-regs per logical vector), or scalar FP ops.
+                // Each (h, lane) pair owns its difference temp and its
+                // accumulator register — the register-file budget the
+                // MAX_REG_PRODUCT bound protects.
+                for e in 0..s.vect_len {
+                    let lane = (h * s.vect_len + e) as u16;
+                    let acc = V_ACC + lane;
+                    let tmp = V_TMP + lane;
+                    if s.ve {
+                        subs.push(Inst::fp(OpClass::VAdd, tmp, vp, vq, NO_REG)); // sub
+                        macs.push(Inst::fp(OpClass::VMla, acc, tmp, tmp, acc));
+                    } else {
+                        subs.push(Inst::fp(OpClass::FAdd, tmp, vp, vq, NO_REG));
+                        macs.push(Inst::fp(OpClass::FMla, acc, tmp, tmp, acc));
+                    }
+                }
+                // Pointer bumps (Fig. 3 lines 17-18).
+                rest.push(Inst::alu(R_PTR1, R_PTR1));
+                rest.push(Inst::alu(R_PTR2, R_PTR2));
+            }
+            if p.isched {
+                self.buf.extend(loads);
+                self.buf.extend(plds);
+                self.buf.extend(subs);
+                self.buf.extend(macs);
+                self.buf.extend(rest);
+            } else {
+                // Naive interleaved order: per h-step, loads then its own
+                // compute then bumps; prefetch hints trail the block.
+                let per_h = s.hot_uf as usize;
+                let lph = loads.len() / per_h;
+                let cph = subs.len() / per_h;
+                for h in 0..per_h {
+                    self.buf.extend(loads[h * lph..(h + 1) * lph].iter().copied());
+                    for e in 0..cph {
+                        self.buf.push(subs[h * cph + e]);
+                        self.buf.push(macs[h * cph + e]);
+                    }
+                    self.buf.push(rest[h * 2]);
+                    self.buf.push(rest[h * 2 + 1]);
+                }
+                self.buf.extend(plds);
+            }
+        }
+    }
+
+    /// Horizontal reduction of the hotUF·vectLen accumulators into a
+    /// scalar — a pairwise tree (log depth), as deGoal emits it, so the
+    /// per-point tail does not serialise the in-order pipeline.
+    fn distance_reduce(&mut self, s: Structural) {
+        let n_accs = (s.hot_uf * s.vect_len) as u16;
+        let mut stride = 1u16;
+        while stride < n_accs {
+            let mut a = 0u16;
+            while a + stride < n_accs {
+                self.buf.push(Inst::fp(
+                    OpClass::VAdd,
+                    V_ACC + a,
+                    V_ACC + a,
+                    V_ACC + a + stride,
+                    NO_REG,
+                ));
+                a += stride * 2;
+            }
+            stride *= 2;
+        }
+        if s.ve {
+            // Pairwise lane reduction (vpadd x2) + final scalar move.
+            self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+            self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+        }
+        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0, V_ACC, NO_REG, NO_REG));
+    }
+
+    // ---- auto-tuned lintra kernel ----
+
+    fn lintra(&mut self, row_len: u32, rows: u32, p: &TuningParams) {
+        let s = p.s;
+        let epi = s.elems_per_iter();
+        let num_iter = row_len / epi;
+        let leftover = row_len - num_iter * epi;
+        let w_bytes = s.width() * 4;
+
+        for r in 0..rows {
+            let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
+            let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+            self.prologue(p, 3);
+            for it in 0..num_iter {
+                let base = (it * epi) as u64 * 4;
+                for c in 0..s.cold_uf {
+                    // Like distance_body: IS groups loads / macs / stores
+                    // within the coldUF block (the register-reuse
+                    // boundary); the naive order interleaves per step.
+                    let mut loads = Vec::new();
+                    let mut macs = Vec::new();
+                    let mut stores = Vec::new();
+                    let mut rest = Vec::new();
+                    for h in 0..s.hot_uf {
+                        let step = c * s.hot_uf + h;
+                        let off = base + (step * w_bytes) as u64;
+                        let vp = V_BASE + (h as u16) * 3;
+                        let vm = vp + 1;
+                        let va = vp + 2;
+                        if s.ve {
+                            loads.push(Inst::load(vp, R_PTR1, ibase + off, w_bytes));
+                            loads.push(Inst::load(vm, R_TMP, A_MULVEC + off, w_bytes));
+                            loads.push(Inst::load(va, R_TMP, A_ADDVEC + off, w_bytes));
+                            for _ in 0..s.vect_len {
+                                macs.push(Inst::fp(OpClass::VMla, vp, vp, vm, va));
+                            }
+                            stores.push(Inst::store(vp, obase + off, w_bytes));
+                        } else {
+                            for e in 0..s.vect_len {
+                                let ea = off + e as u64 * 4;
+                                loads.push(Inst::load(vp, R_PTR1, ibase + ea, 4));
+                                loads.push(Inst::load(vm, R_TMP, A_MULVEC + ea, 4));
+                                loads.push(Inst::load(va, R_TMP, A_ADDVEC + ea, 4));
+                                macs.push(Inst::fp(OpClass::FMla, vp, vp, vm, va));
+                                stores.push(Inst::store(vp, obase + ea, 4));
+                            }
+                        }
+                        if p.pld_stride != 0 && step == s.cold_uf * s.hot_uf - 1 && it == 0 {
+                            rest.push(Inst::pld(ibase + off + p.pld_stride as u64));
+                        }
+                        rest.push(Inst::alu(R_PTR1, R_PTR1));
+                    }
+                    if p.isched {
+                        self.buf.extend(loads);
+                        self.buf.extend(macs);
+                        self.buf.extend(stores);
+                        self.buf.extend(rest);
+                    } else {
+                        let per_h = s.hot_uf as usize;
+                        let lph = loads.len() / per_h;
+                        let mph = macs.len() / per_h;
+                        let sph = stores.len() / per_h;
+                        for h in 0..per_h {
+                            self.buf.extend(loads[h * lph..(h + 1) * lph].iter().copied());
+                            self.buf.extend(macs[h * mph..(h + 1) * mph].iter().copied());
+                            self.buf.extend(stores[h * sph..(h + 1) * sph].iter().copied());
+                        }
+                        self.buf.extend(rest);
+                    }
+                }
+                if num_iter > 1 {
+                    self.buf.push(Inst::alu(R_CNT, R_CNT));
+                    self.buf.push(Inst::branch(3, it + 1 != num_iter));
+                }
+            }
+            for e in 0..leftover {
+                let off = ((num_iter * epi + e) as u64) * 4;
+                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
+                self.buf.push(Inst::fp(OpClass::FMla, R_SCALAR0, R_SCALAR0, R_SCALAR0 + 1, R_SCALAR0 + 2));
+                self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
+                self.buf.push(Inst::branch(4, e + 1 != leftover));
+            }
+            self.epilogue(p, 3);
+        }
+    }
+
+    // ---- reference kernels (gcc -O3 / PARVEC analogues) ----
+
+    fn distance_ref(&mut self, dim: u32, batch: u32, rk: RefKind) {
+        // gcc -O3 unrolls the scalar loop modestly (x4 here) and the
+        // PARVEC NEON kernel processes one q-register per step. A generic
+        // (non-specialised) dimension costs an extra bound-check ALU op
+        // per iteration. gcc emits prefetch for the scalar loop
+        // (-fprefetch-loop-arrays) but not for the NEON intrinsics loop.
+        let simd = rk.is_simd();
+        let unroll: u32 = if simd { 1 } else { 4 };
+        let step_elems = if simd { 4 } else { unroll };
+        let num_iter = dim / step_elems;
+        let leftover = dim % step_elems;
+        for b in 0..batch {
+            let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+            // Compiled C: frame setup (not stack-minimised).
+            self.buf.push(Inst::store(R_TMP, A_STACK, 8));
+            self.buf.push(Inst::alu(R_PTR1, NO_REG));
+            self.buf.push(Inst::alu(R_PTR2, NO_REG));
+            self.buf.push(Inst::fp(if simd { OpClass::VAdd } else { OpClass::FAdd }, V_ACC, NO_REG, NO_REG, NO_REG));
+            for it in 0..num_iter {
+                let base = (it * step_elems) as u64 * 4;
+                if simd {
+                    self.buf.push(Inst::load(V_BASE, R_PTR1, pbase + base, 16));
+                    self.buf.push(Inst::load(V_BASE + 1, R_PTR2, A_CENTER + base, 16));
+                    self.buf.push(Inst::fp(OpClass::VAdd, V_BASE, V_BASE, V_BASE + 1, NO_REG));
+                    self.buf.push(Inst::fp(OpClass::VMla, V_ACC, V_BASE, V_BASE, V_ACC));
+                } else {
+                    if it % 16 == 0 {
+                        // gcc prefetch for the scalar loop.
+                        self.buf.push(Inst::pld(pbase + base + 256));
+                        self.buf.push(Inst::pld(A_CENTER + base + 256));
+                    }
+                    for e in 0..unroll {
+                        let off = base + e as u64 * 4;
+                        self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+                        self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+                        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                        // gcc without -ffast-math keeps mul + add separate.
+                        self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
+                        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
+                    }
+                }
+                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+                self.buf.push(Inst::alu(R_PTR2, R_PTR2));
+                self.buf.push(Inst::alu(R_CNT, R_CNT));
+                if !rk.is_specialized() {
+                    // Run-time loop bound: compare against a register.
+                    self.buf.push(Inst::alu(R_TMP, R_CNT));
+                }
+                self.buf.push(Inst::branch(5, it + 1 != num_iter));
+            }
+            for e in 0..leftover {
+                let off = ((num_iter * step_elems + e) as u64) * 4;
+                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
+                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
+            }
+            if simd {
+                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+            }
+            self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0, V_ACC, NO_REG, NO_REG));
+            self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
+            self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
+        }
+    }
+
+    fn lintra_ref(&mut self, row_len: u32, rows: u32, rk: RefKind) {
+        // The VIPS reference reloads the run-time constants (mul/add
+        // factors) and recomputes the band index in every loop iteration —
+        // the paper calls this out as the main source of the auto-tuned
+        // SISD speedup.
+        let simd = rk.is_simd();
+        let step_elems: u32 = if simd { 4 } else { 1 };
+        let num_iter = row_len / step_elems;
+        let leftover = row_len % step_elems;
+        for r in 0..rows {
+            let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
+            let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+            self.buf.push(Inst::store(R_TMP, A_STACK, 8));
+            for it in 0..num_iter {
+                let off = (it * step_elems) as u64 * 4;
+                // Band-index computation (modulo by bands) + constant
+                // reload from memory, every iteration.
+                self.buf.push(Inst::alu(R_TMP, R_CNT));
+                self.buf.push(Inst::alu(R_TMP, R_TMP));
+                if simd {
+                    self.buf.push(Inst::load(V_BASE, R_PTR1, ibase + off, 16));
+                    self.buf.push(Inst::load(V_BASE + 1, R_TMP, A_MULVEC + off, 16));
+                    self.buf.push(Inst::load(V_BASE + 2, R_TMP, A_ADDVEC + off, 16));
+                    self.buf.push(Inst::fp(OpClass::VMla, V_BASE, V_BASE, V_BASE + 1, V_BASE + 2));
+                    self.buf.push(Inst::store(V_BASE, obase + off, 16));
+                } else {
+                    self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
+                    self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
+                    self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
+                    self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                    self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 3, R_SCALAR0 + 3, R_SCALAR0 + 2, NO_REG));
+                    self.buf.push(Inst::store(R_SCALAR0 + 3, obase + off, 4));
+                }
+                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+                self.buf.push(Inst::alu(R_CNT, R_CNT));
+                if !rk.is_specialized() {
+                    self.buf.push(Inst::alu(R_TMP, R_CNT));
+                }
+                self.buf.push(Inst::branch(6, it + 1 != num_iter));
+            }
+            for e in 0..leftover {
+                let off = ((num_iter * step_elems + e) as u64) * 4;
+                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
+                self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0, R_SCALAR0, R_SCALAR0, NO_REG));
+                self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
+            }
+            self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
+        }
+    }
+
+    // ---- shared prologue/epilogue (SM option) ----
+
+    /// Function-entry stack management: with stack minimisation (SM) the
+    /// compilette only uses scratch registers; without it, callee-saved
+    /// registers are spilled.
+    fn prologue(&mut self, p: &TuningParams, saves: u32) {
+        self.buf.push(Inst::alu(R_PTR1, NO_REG));
+        self.buf.push(Inst::alu(R_PTR2, NO_REG));
+        if !p.smin {
+            for i in 0..saves {
+                self.buf.push(Inst::store(R_TMP, A_STACK + i as u64 * 8, 8));
+            }
+        }
+    }
+
+    fn epilogue(&mut self, p: &TuningParams, saves: u32) {
+        if !p.smin {
+            for i in 0..saves {
+                self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK + i as u64 * 8, 8));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::{Structural, TuningParams};
+
+    fn params(ve: bool, v: u32, h: u32, c: u32) -> TuningParams {
+        // SM on: keeps stack spill/reload loads out of the op counts.
+        let mut p = TuningParams::phase1_default(Structural::new(ve, v, h, c));
+        p.smin = true;
+        p
+    }
+
+    fn count(trace: &[Inst], op: OpClass) -> usize {
+        trace.iter().filter(|i| i.op == op).count()
+    }
+
+    #[test]
+    fn distance_simd_op_counts() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        let p = params(true, 1, 1, 1); // 4 elems/iter -> 8 iters
+        let t = g.kernel_trace(&kind, &p);
+        // 8 iterations x (2 loads + 1 vsub + 1 vmla).
+        assert_eq!(count(t, OpClass::Load), 16 + 0);
+        assert_eq!(count(t, OpClass::VMla), 8);
+        // Partially-unrolled loop: a branch per iteration.
+        assert_eq!(count(t, OpClass::Branch), 8);
+        // Last branch not taken, others taken.
+        let branches: Vec<bool> = t.iter().filter(|i| i.op == OpClass::Branch).map(|i| i.taken).collect();
+        assert_eq!(branches.iter().filter(|&&b| b).count(), 7);
+    }
+
+    #[test]
+    fn fully_unrolled_has_no_branch() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        let p = params(true, 2, 1, 4); // epi = 32 = dim -> numIter = 1
+        let t = g.kernel_trace(&kind, &p);
+        assert_eq!(count(t, OpClass::Branch), 0, "paper §3.1 case 2");
+    }
+
+    #[test]
+    fn leftover_strip_emitted() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 36, batch: 1 };
+        let p = params(true, 2, 1, 1); // epi 8, 36 = 4*8 + 4 leftover
+        let t = g.kernel_trace(&kind, &p);
+        // 4 leftover elements -> 4 scalar FMla.
+        assert_eq!(count(t, OpClass::FMla), 4);
+    }
+
+    #[test]
+    fn hot_uf_uses_distinct_accumulators() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        let p = params(true, 1, 4, 1);
+        let t = g.kernel_trace(&kind, &p);
+        let accs: std::collections::HashSet<u16> = t
+            .iter()
+            .filter(|i| i.op == OpClass::VMla)
+            .map(|i| i.dst)
+            .collect();
+        assert_eq!(accs.len(), 4, "4 hotUF lanes -> 4 accumulator registers");
+    }
+
+    #[test]
+    fn cold_uf_reuses_registers() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        let p = params(true, 1, 1, 4);
+        let t = g.kernel_trace(&kind, &p);
+        let accs: std::collections::HashSet<u16> =
+            t.iter().filter(|i| i.op == OpClass::VMla).map(|i| i.dst).collect();
+        assert_eq!(accs.len(), 1, "coldUF replicates the pattern on one accumulator");
+    }
+
+    #[test]
+    fn sisd_uses_scalar_fp() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 16, batch: 1 };
+        let t = g.kernel_trace(&kind, &params(false, 1, 1, 1));
+        assert!(count(t, OpClass::FMla) > 0);
+        assert_eq!(count(t, OpClass::VMla), 0);
+    }
+
+    #[test]
+    fn simd_loads_are_load_multiple() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        // vectLen 4 SIMD: 32 elems per (h,c) step, 1 ldm of 64 B each side.
+        let t = g.kernel_trace(&kind, &params(true, 4, 1, 1));
+        let loads: Vec<u32> = t.iter().filter(|i| i.op == OpClass::Load).map(|i| i.bytes).collect();
+        assert!(loads.iter().all(|&b| b == 64));
+        assert_eq!(loads.len(), 4); // 2 iters x 2 operands
+    }
+
+    #[test]
+    fn pld_only_with_stride() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 64, batch: 2 };
+        let p0 = params(true, 1, 1, 1);
+        assert_eq!(count(g.kernel_trace(&kind, &p0), OpClass::Pld), 0);
+        let mut p1 = p0;
+        p1.pld_stride = 64;
+        assert!(count(g.kernel_trace(&kind, &p1), OpClass::Pld) > 0);
+    }
+
+    #[test]
+    fn smin_removes_stack_traffic() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 4 };
+        let mut p = params(true, 1, 1, 1);
+        p.smin = false;
+        let n_default = g.kernel_trace(&kind, &p).len();
+        p.smin = true;
+        let n_smin = g.kernel_trace(&kind, &p).len();
+        assert!(n_smin < n_default);
+    }
+
+    #[test]
+    fn isched_groups_within_register_scope() {
+        // IS reorders within a coldUF block (the register-reuse
+        // boundary): with hotUF 4, all four lanes' loads precede the
+        // first VMla; the naive order interleaves per lane.
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 32, batch: 1 };
+        let mut p = params(true, 1, 4, 2);
+        p.isched = true;
+        let t: Vec<Inst> = g.kernel_trace(&kind, &p).to_vec();
+        let first_mla = t.iter().position(|i| i.op == OpClass::VMla).unwrap();
+        let loads_before_is =
+            t[..first_mla].iter().filter(|i| i.op == OpClass::Load).count();
+        p.isched = false;
+        let t0: Vec<Inst> = g.kernel_trace(&kind, &p).to_vec();
+        let first_mla0 = t0.iter().position(|i| i.op == OpClass::VMla).unwrap();
+        let loads_before_no =
+            t0[..first_mla0].iter().filter(|i| i.op == OpClass::Load).count();
+        assert!(loads_before_is > loads_before_no, "{loads_before_is} vs {loads_before_no}");
+        // Same multiset of instructions either way.
+        assert_eq!(t.len(), t0.len());
+
+        // hotUF 1 leaves IS no scope: the schedule is unchanged — this is
+        // the hotUF x IS synergy of the paper's parameter analysis.
+        let mut p1 = params(true, 1, 1, 8);
+        p1.isched = true;
+        let a = g.kernel_trace(&kind, &p1).len();
+        p1.isched = false;
+        let b = g.kernel_trace(&kind, &p1).len();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn generic_ref_has_more_insts_than_specialized() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 64, batch: 4 };
+        let n_gen = g.ref_trace(&kind, RefKind::SisdGeneric).len();
+        let n_spec = g.ref_trace(&kind, RefKind::SisdSpecialized).len();
+        assert!(n_gen > n_spec);
+    }
+
+    #[test]
+    fn simd_ref_has_no_prefetch_sisd_ref_does() {
+        // Paper §5.1: gcc emits prefetch in the SISD reference but not in
+        // the PARVEC SIMD code — the reason SIMD refs lose to SISD refs on
+        // the A9 by ~11 %.
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 128, batch: 2 };
+        assert!(count(g.ref_trace(&kind, RefKind::SisdGeneric), OpClass::Pld) > 0);
+        assert_eq!(count(g.ref_trace(&kind, RefKind::SimdGeneric), OpClass::Pld), 0);
+    }
+
+    #[test]
+    fn lintra_ref_reloads_constants() {
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Lintra { row_len: 96, rows: 1 };
+        let t_ref = g.ref_trace(&kind, RefKind::SisdSpecialized).to_vec();
+        let t_var = g.kernel_trace(&kind, &params(false, 1, 1, 1)).to_vec();
+        // Reference performs 3 loads per element + extra index ALU; the
+        // variant also loads 3 streams but skips the per-element band
+        // arithmetic, so the ref trace must be strictly longer.
+        assert!(t_ref.len() > t_var.len());
+    }
+
+    #[test]
+    fn trace_scales_with_batch() {
+        let mut g = TraceGen::new();
+        let p = params(true, 2, 2, 1);
+        let n1 = g.kernel_trace(&KernelKind::Distance { dim: 64, batch: 8 }, &p).len();
+        let n2 = g.kernel_trace(&KernelKind::Distance { dim: 64, batch: 16 }, &p).len();
+        assert_eq!(n2, n1 * 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! The tuning space of paper §3.2: seven auto-tuned parameters, their
+//! ranges, validity holes, and the two-phase exploration ordering.
+//!
+//! The *structural* sub-space (VE, vectLen, hotUF, coldUF) changes the
+//! generated machine code and therefore maps 1:1 to HLO artifacts (see
+//! `python/compile/variants.py`, which must stay in sync — `vid` values are
+//! shared across the language boundary and checked by integration tests).
+//! The phase-2 parameters (pldStride, IS, SM) are code-generation options
+//! that do not change the HLO structure.
+
+pub mod params;
+pub mod phases;
+pub mod space;
+
+pub use params::{Structural, TuningParams};
+pub use phases::{ExplorationPlan, Phase};
+pub use space::Space;

@@ -1,0 +1,260 @@
+//! Tuning parameters and their ranges (paper Fig. 3 + Table 5 header).
+
+/// hotUF: loop unrolling with distinct registers (range 1-4).
+pub const HOT_UF: [u32; 3] = [1, 2, 4];
+/// coldUF: loop unrolling by pattern replication (range 1-64; §3.3 limits
+/// the range to 64 after pre-profiling).
+pub const COLD_UF: [u32; 7] = [1, 2, 4, 8, 16, 32, 64];
+/// vectLen: vector length normalised to the SIMD width (range 1-4).
+pub const VECT_LEN: [u32; 3] = [1, 2, 4];
+/// VE: vectorisation on/off.
+pub const VE: [bool; 2] = [false, true];
+/// pldStride: data pre-fetch hint stride in bytes — 0 (off), or the two
+/// possible ARM cache-line lengths (§3.3).
+pub const PLD_STRIDE: [u32; 3] = [0, 32, 64];
+/// IS: instruction scheduling on/off.
+pub const ISCHED: [bool; 2] = [false, true];
+/// SM: stack minimisation on/off.
+pub const SMIN: [bool; 2] = [false, true];
+
+/// f32 lanes per SIMD vector (ARM NEON quad register).
+pub const SIMD_WIDTH: u32 = 4;
+
+/// Register-pressure bound: vectLen * hotUF beyond this runs out of NEON
+/// registers (a "hole" in the space, §3.3).
+pub const MAX_REG_PRODUCT: u32 = 8;
+
+/// The structural sub-space: parameters that change the generated machine
+/// code (one HLO artifact per valid point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Structural {
+    pub ve: bool,
+    pub vect_len: u32,
+    pub hot_uf: u32,
+    pub cold_uf: u32,
+}
+
+impl Structural {
+    pub fn new(ve: bool, vect_len: u32, hot_uf: u32, cold_uf: u32) -> Structural {
+        Structural { ve, vect_len, hot_uf, cold_uf }
+    }
+
+    /// Lanes per vector element: SIMD width if vectorised, else scalar.
+    pub fn unit(&self) -> u32 {
+        if self.ve {
+            SIMD_WIDTH
+        } else {
+            1
+        }
+    }
+
+    /// f32 elements touched per (hotUF-lane, coldUF-step) vector op.
+    pub fn width(&self) -> u32 {
+        self.unit() * self.vect_len
+    }
+
+    /// f32 elements consumed by one fully-unrolled main-loop body.
+    pub fn elems_per_iter(&self) -> u32 {
+        self.width() * self.hot_uf * self.cold_uf
+    }
+
+    pub fn reg_ok(&self) -> bool {
+        self.vect_len * self.hot_uf <= MAX_REG_PRODUCT
+    }
+
+    /// Can code be generated for a kernel of `length` f32 elements?
+    pub fn valid_for(&self, length: u32) -> bool {
+        let epi = self.elems_per_iter();
+        self.reg_ok() && epi >= 1 && epi <= length
+    }
+
+    /// Optimal solution in the paper's sense: no leftover strip.
+    pub fn no_leftover(&self, length: u32) -> bool {
+        self.valid_for(length) && length % self.elems_per_iter() == 0
+    }
+
+    pub fn num_iter(&self, length: u32) -> u32 {
+        length / self.elems_per_iter()
+    }
+
+    pub fn leftover(&self, length: u32) -> u32 {
+        length - self.num_iter(length) * self.elems_per_iter()
+    }
+
+    /// Stable structural id shared with `python/compile/variants.py`.
+    pub fn vid(&self) -> u32 {
+        let i_ve = self.ve as u32;
+        let i_v = VECT_LEN.iter().position(|&v| v == self.vect_len).expect("vect_len") as u32;
+        let i_h = HOT_UF.iter().position(|&v| v == self.hot_uf).expect("hot_uf") as u32;
+        let i_c = COLD_UF.iter().position(|&v| v == self.cold_uf).expect("cold_uf") as u32;
+        ((i_ve * VECT_LEN.len() as u32 + i_v) * HOT_UF.len() as u32 + i_h) * COLD_UF.len() as u32
+            + i_c
+    }
+
+    pub fn from_vid(mut vid: u32) -> Structural {
+        let i_c = (vid % COLD_UF.len() as u32) as usize;
+        vid /= COLD_UF.len() as u32;
+        let i_h = (vid % HOT_UF.len() as u32) as usize;
+        vid /= HOT_UF.len() as u32;
+        let i_v = (vid % VECT_LEN.len() as u32) as usize;
+        vid /= VECT_LEN.len() as u32;
+        Structural {
+            ve: vid != 0,
+            vect_len: VECT_LEN[i_v],
+            hot_uf: HOT_UF[i_h],
+            cold_uf: COLD_UF[i_c],
+        }
+    }
+
+    pub fn n_structural() -> u32 {
+        (VE.len() * VECT_LEN.len() * HOT_UF.len() * COLD_UF.len()) as u32
+    }
+}
+
+impl std::fmt::Display for Structural {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}·v{}·h{}·c{}",
+            if self.ve { "SIMD" } else { "SISD" },
+            self.vect_len,
+            self.hot_uf,
+            self.cold_uf
+        )
+    }
+}
+
+/// A full point in the 7-dimensional tuning space: one "binary code
+/// instance" of paper §3.2 (structure + code-generation options).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TuningParams {
+    pub s: Structural,
+    pub pld_stride: u32,
+    pub isched: bool,
+    pub smin: bool,
+}
+
+impl TuningParams {
+    pub fn new(s: Structural, pld_stride: u32, isched: bool, smin: bool) -> TuningParams {
+        TuningParams { s, pld_stride, isched, smin }
+    }
+
+    /// Default code-generation options used while phase 1 explores
+    /// structure (paper §3.3: "the initial state of the remaining
+    /// auto-tuning parameters are determined through pre-profiling" —
+    /// pre-profiling on our targets picks IS on, SM off, no prefetch).
+    pub fn phase1_default(s: Structural) -> TuningParams {
+        TuningParams { s, pld_stride: 0, isched: true, smin: false }
+    }
+
+    /// The reference kernel configuration (gcc -O3 analogue): no manual
+    /// unrolling, scheduling on.
+    pub fn reference(ve: bool) -> TuningParams {
+        TuningParams::phase1_default(Structural::new(ve, 1, 1, 1))
+    }
+
+    /// Full-space id: structural vid x phase-2 combination index.
+    pub fn full_id(&self) -> u32 {
+        let i_p = PLD_STRIDE.iter().position(|&v| v == self.pld_stride).expect("pld") as u32;
+        let p2 = (i_p * ISCHED.len() as u32 + self.isched as u32) * SMIN.len() as u32
+            + self.smin as u32;
+        self.s.vid() * n_phase2() + p2
+    }
+
+    pub fn from_full_id(id: u32) -> TuningParams {
+        let p2 = id % n_phase2();
+        let s = Structural::from_vid(id / n_phase2());
+        let smin = p2 % 2 != 0;
+        let rest = p2 / 2;
+        let isched = rest % 2 != 0;
+        let i_p = (rest / 2) as usize;
+        TuningParams { s, pld_stride: PLD_STRIDE[i_p], isched, smin }
+    }
+}
+
+impl std::fmt::Display for TuningParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}·pld{}·IS{}·SM{}",
+            self.s, self.pld_stride, self.isched as u8, self.smin as u8
+        )
+    }
+}
+
+/// Number of phase-2 (code-generation option) combinations.
+pub fn n_phase2() -> u32 {
+    (PLD_STRIDE.len() * ISCHED.len() * SMIN.len()) as u32
+}
+
+/// Eq. (1): N_codeVariants = prod RangeSize(Nc_i) over the 7 parameters.
+pub fn n_code_variants() -> u64 {
+    Structural::n_structural() as u64 * n_phase2() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_matches_python() {
+        // 2*3*3*7 structural x 3*2*2 phase-2 = 1512, same as variants.py.
+        assert_eq!(n_code_variants(), 1512);
+    }
+
+    #[test]
+    fn vid_roundtrip() {
+        for vid in 0..Structural::n_structural() {
+            assert_eq!(Structural::from_vid(vid).vid(), vid);
+        }
+    }
+
+    #[test]
+    fn full_id_roundtrip() {
+        for id in 0..(n_code_variants() as u32) {
+            assert_eq!(TuningParams::from_full_id(id).full_id(), id);
+        }
+    }
+
+    #[test]
+    fn vid_matches_python_convention() {
+        // Spot checks against python/compile/variants.py's enumeration:
+        // vid 0 = (ve=0, v=1, h=1, c=1); last = (ve=1, v=4, h=4, c=64).
+        let s0 = Structural::from_vid(0);
+        assert_eq!(s0, Structural::new(false, 1, 1, 1));
+        let last = Structural::from_vid(Structural::n_structural() - 1);
+        assert_eq!(last, Structural::new(true, 4, 4, 64));
+        // python: Structural(1,2,2,2).vid — computed by the same formula:
+        // ((1*3+1)*3+1)*7+1 = 92.
+        assert_eq!(Structural::new(true, 2, 2, 2).vid(), 92);
+    }
+
+    #[test]
+    fn elems_and_validity() {
+        let s = Structural::new(true, 2, 2, 4);
+        assert_eq!(s.width(), 8);
+        assert_eq!(s.elems_per_iter(), 64);
+        assert!(s.valid_for(64));
+        assert!(s.no_leftover(128));
+        assert!(!s.no_leftover(96));
+        assert!(s.valid_for(96));
+        assert_eq!(s.leftover(96), 32);
+        assert!(!s.valid_for(32));
+    }
+
+    #[test]
+    fn register_holes() {
+        assert!(!Structural::new(true, 4, 4, 1).reg_ok());
+        assert!(Structural::new(true, 4, 2, 1).reg_ok());
+    }
+
+    #[test]
+    fn reference_params() {
+        let r = TuningParams::reference(true);
+        assert_eq!(r.s.vect_len, 1);
+        assert_eq!(r.s.hot_uf, 1);
+        assert_eq!(r.s.cold_uf, 1);
+        assert!(r.s.ve);
+        assert_eq!(r.pld_stride, 0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Two-phase online space exploration (paper §3.3).
+//!
+//! Phase 1 explores the parameters that affect the *structure* of the code
+//! — hotUF, coldUF, vectLen, VE — in that order of switching frequency
+//! ("going from the least switched to the most switched parameter"), with
+//! the remaining code-generation options pinned to pre-profiled defaults.
+//! Within phase 1, variants with no leftover code are searched first; once
+//! exhausted the condition is softened by gradually allowing leftover
+//! processing (ordered by growing leftover size).
+//!
+//! Phase 2 fixes the best structure found and explores the combinatorial
+//! choices of the remaining code-generation options (IS, SM, pldStride).
+
+use super::params::{Structural, TuningParams};
+use super::space::Space;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    One,
+    Two,
+    Done,
+}
+
+/// Iterator-with-feedback over the two-phase exploration sequence.
+#[derive(Debug, Clone)]
+pub struct ExplorationPlan {
+    length: u32,
+    phase1: Vec<Structural>,
+    phase2: Vec<TuningParams>,
+    idx1: usize,
+    idx2: usize,
+    phase: Phase,
+}
+
+impl ExplorationPlan {
+    /// `ve_filter`: Some(false) explores only SISD variants, Some(true)
+    /// only SIMD (paper §4.4 fair-comparison rule), None explores both
+    /// (the real-deployment scenario).
+    pub fn new(length: u32, ve_filter: Option<bool>) -> ExplorationPlan {
+        let space = Space::new(length);
+        let keep = |s: &Structural| ve_filter.map(|ve| s.ve == ve).unwrap_or(true);
+
+        let mut no_leftover: Vec<Structural> =
+            space.no_leftover_structural().into_iter().filter(keep).collect();
+        let mut leftover: Vec<Structural> = space
+            .valid_structural()
+            .into_iter()
+            .filter(keep)
+            .filter(|s| !s.no_leftover(length))
+            .collect();
+
+        Self::phase1_order(&mut no_leftover);
+        // Softening: smaller leftovers first, then the usual phase-1 order.
+        leftover.sort_by_key(|s| s.leftover(length));
+        let mut phase1 = no_leftover;
+        phase1.extend(leftover);
+
+        ExplorationPlan { length, phase1, phase2: Vec::new(), idx1: 0, idx2: 0, phase: Phase::One }
+    }
+
+    /// Least-switched -> most-switched ordering: hotUF outermost, then
+    /// coldUF, then vectLen, then VE innermost. Sorting by the tuple
+    /// (hotUF, coldUF, vectLen, VE) realises exactly that switching
+    /// pattern over a filtered grid.
+    fn phase1_order(v: &mut [Structural]) {
+        v.sort_by_key(|s| (s.hot_uf, s.cold_uf, s.vect_len, s.ve as u32));
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn length(&self) -> u32 {
+        self.length
+    }
+
+    /// Total candidates this plan will emit ("exploration limit in one
+    /// run", Table 4): phase-1 variants + 11 remaining phase-2 combos.
+    pub fn plan_size(&self) -> usize {
+        self.phase1.len() + Space::phase2_grid(Structural::new(false, 1, 1, 1)).len() - 1
+    }
+
+    /// Next candidate to generate and evaluate. `best` is the
+    /// best-performing configuration found so far — required to build the
+    /// phase-2 sequence when phase 1 is exhausted; pass the phase-1 winner.
+    pub fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        match self.phase {
+            Phase::One => {
+                if self.idx1 < self.phase1.len() {
+                    let s = self.phase1[self.idx1];
+                    self.idx1 += 1;
+                    return Some(TuningParams::phase1_default(s));
+                }
+                // Transition: fix the winning structure, enumerate the
+                // remaining code-generation combinations.
+                let Some(best) = best else {
+                    self.phase = Phase::Done;
+                    return None;
+                };
+                let default = TuningParams::phase1_default(best.s);
+                self.phase2 = Space::phase2_grid(best.s)
+                    .into_iter()
+                    .filter(|p| *p != default) // already evaluated in phase 1
+                    .collect();
+                self.phase = Phase::Two;
+                self.next(Some(best))
+            }
+            Phase::Two => {
+                if self.idx2 < self.phase2.len() {
+                    let p = self.phase2[self.idx2];
+                    self.idx2 += 1;
+                    Some(p)
+                } else {
+                    self.phase = Phase::Done;
+                    None
+                }
+            }
+            Phase::Done => None,
+        }
+    }
+
+    /// Remaining candidates (upper bound).
+    pub fn remaining(&self) -> usize {
+        match self.phase {
+            Phase::One => self.phase1.len() - self.idx1 + 11,
+            Phase::Two => self.phase2.len() - self.idx2,
+            Phase::Done => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn drain(mut plan: ExplorationPlan) -> Vec<TuningParams> {
+        let mut out = Vec::new();
+        let mut best: Option<TuningParams> = None;
+        while let Some(p) = plan.next(best) {
+            // Pretend the first candidate stays best forever.
+            if best.is_none() {
+                best = Some(p);
+            }
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn no_repeats() {
+        let seq = drain(ExplorationPlan::new(64, None));
+        let ids: HashSet<u32> = seq.iter().map(|p| p.full_id()).collect();
+        assert_eq!(ids.len(), seq.len(), "duplicate candidate in plan");
+    }
+
+    #[test]
+    fn phase1_explores_structures_with_defaults() {
+        let mut plan = ExplorationPlan::new(64, Some(true));
+        let first = plan.next(None).unwrap();
+        assert_eq!(first.pld_stride, 0);
+        assert!(first.isched);
+        assert!(!first.smin);
+        assert!(first.s.ve);
+    }
+
+    #[test]
+    fn no_leftover_comes_first() {
+        let seq = drain(ExplorationPlan::new(96, None));
+        let n_struct = Space::new(96).valid_structural().len();
+        let phase1 = &seq[..n_struct];
+        // Find the first leftover candidate; everything before must be
+        // no-leftover.
+        let first_lo = phase1.iter().position(|p| !p.s.no_leftover(96)).unwrap();
+        assert!(phase1[..first_lo].iter().all(|p| p.s.no_leftover(96)));
+        assert!(phase1[first_lo..].iter().all(|p| !p.s.no_leftover(96)));
+    }
+
+    #[test]
+    fn phase2_fixes_best_structure() {
+        let mut plan = ExplorationPlan::new(32, Some(true));
+        let mut best = None;
+        let mut candidates = Vec::new();
+        while let Some(p) = plan.next(best) {
+            if best.is_none() {
+                best = Some(p);
+            }
+            candidates.push(p);
+        }
+        let best = best.unwrap();
+        let tail: Vec<_> = candidates.iter().rev().take(11).collect();
+        assert!(tail.iter().all(|p| p.s == best.s), "phase 2 must pin the structure");
+        // Phase 2 actually varies the codegen options.
+        let plds: HashSet<u32> = tail.iter().map(|p| p.pld_stride).collect();
+        assert!(plds.len() > 1);
+    }
+
+    #[test]
+    fn plan_size_matches_table4_limits() {
+        // Table 4 "exploration limit in one run": SC 43-73, VIPS 106-112.
+        // Ours: valid-structural + 11.
+        assert_eq!(ExplorationPlan::new(32, None).plan_size(), 52 + 11);
+        assert_eq!(ExplorationPlan::new(128, None).plan_size(), 83 + 11);
+        assert_eq!(ExplorationPlan::new(4800, None).plan_size(), 112 + 11);
+    }
+
+    #[test]
+    fn ve_filter_respected() {
+        let seq = drain(ExplorationPlan::new(64, Some(false)));
+        // Phase-1 portion: all SISD.
+        assert!(seq.iter().all(|p| !p.s.ve));
+    }
+
+    #[test]
+    fn hot_uf_least_switched() {
+        // In phase-1 order, hotUF must be monotonically non-decreasing for
+        // the no-leftover prefix (it is the outermost loop).
+        let plan = ExplorationPlan::new(64, Some(true));
+        let p = plan.clone();
+        let mut hots = Vec::new();
+        let mut prev_nol = true;
+        let mut best = None;
+        let mut it = p;
+        while let Some(c) = it.next(best) {
+            if best.is_none() {
+                best = Some(c);
+            }
+            if it.phase() != Phase::One {
+                break;
+            }
+            if c.s.no_leftover(64) && prev_nol {
+                hots.push(c.s.hot_uf);
+            } else {
+                prev_nol = false;
+            }
+        }
+        assert!(hots.windows(2).all(|w| w[0] <= w[1]), "{hots:?}");
+        let _ = plan;
+    }
+
+    #[test]
+    fn empty_space_terminates() {
+        // length 1: only (ve=0, v=1, h=1, c=1) is valid.
+        let seq = drain(ExplorationPlan::new(1, None));
+        assert_eq!(seq.len(), 1 + 11);
+    }
+}

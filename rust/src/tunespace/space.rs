@@ -1,0 +1,141 @@
+//! Enumeration of the valid tuning space for a given kernel specialisation.
+//!
+//! The space has "holes" (paper Fig. 1): points where code generation is
+//! impossible — register-file overflow or an unrolled body longer than the
+//! specialised data length.
+
+use super::params::{Structural, TuningParams, COLD_UF, HOT_UF, ISCHED, PLD_STRIDE, SMIN, VECT_LEN, VE};
+
+/// The tuning space for one kernel specialisation (one `length` in f32
+/// elements: the point dimension for Streamcluster, the row length for
+/// VIPS).
+#[derive(Debug, Clone, Copy)]
+pub struct Space {
+    pub length: u32,
+}
+
+impl Space {
+    pub fn new(length: u32) -> Space {
+        Space { length }
+    }
+
+    /// Canonical enumeration of the structural grid (vid order).
+    pub fn structural_grid() -> impl Iterator<Item = Structural> {
+        VE.iter().flat_map(move |&ve| {
+            VECT_LEN.iter().flat_map(move |&v| {
+                HOT_UF.iter().flat_map(move |&h| {
+                    COLD_UF.iter().map(move |&c| Structural::new(ve, v, h, c))
+                })
+            })
+        })
+    }
+
+    /// All structural variants that can generate code for this length.
+    pub fn valid_structural(&self) -> Vec<Structural> {
+        let l = self.length;
+        Self::structural_grid().filter(|s| s.valid_for(l)).collect()
+    }
+
+    /// Optimal (no-leftover) structural variants, explored first (§3.3).
+    pub fn no_leftover_structural(&self) -> Vec<Structural> {
+        let l = self.length;
+        Self::structural_grid().filter(|s| s.no_leftover(l)).collect()
+    }
+
+    /// All phase-2 combinations for a fixed structure, in exploration order.
+    pub fn phase2_grid(s: Structural) -> Vec<TuningParams> {
+        let mut out = Vec::new();
+        for &pld in PLD_STRIDE.iter() {
+            for &is in ISCHED.iter() {
+                for &sm in SMIN.iter() {
+                    out.push(TuningParams::new(s, pld, is, sm));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total explorable versions (Table 4 column "explorable versions"):
+    /// valid structural variants x phase-2 combinations.
+    pub fn explorable_versions(&self) -> usize {
+        self.valid_structural().len() * Space::phase2_grid(Structural::new(false, 1, 1, 1)).len()
+    }
+
+    /// Only SISD or only SIMD variants (the paper evaluates both sides
+    /// separately for a fair comparison, §4.4).
+    pub fn valid_structural_ve(&self, ve: bool) -> Vec<Structural> {
+        self.valid_structural().into_iter().filter(|s| s.ve == ve).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size() {
+        assert_eq!(Space::structural_grid().count(), 126);
+    }
+
+    #[test]
+    fn valid_counts_match_python_aot() {
+        // These counts are pinned by the artifact build (aot.py output):
+        // streamcluster d32: 52, d64: 68, d128: 83; vips w1600 (4800): 112.
+        assert_eq!(Space::new(32).valid_structural().len(), 52);
+        assert_eq!(Space::new(64).valid_structural().len(), 68);
+        assert_eq!(Space::new(128).valid_structural().len(), 83);
+        assert_eq!(Space::new(4800).valid_structural().len(), 112);
+        assert_eq!(Space::new(7008).valid_structural().len(), 112);
+        assert_eq!(Space::new(7986).valid_structural().len(), 112);
+    }
+
+    #[test]
+    fn explorable_versions_table4_scale() {
+        // Paper Table 4 reports 330-858 explorable versions; ours land in
+        // the same range for the same specialisations.
+        for len in [32, 64, 128, 4800, 7008, 7986] {
+            let n = Space::new(len).explorable_versions();
+            assert!((300..=1400).contains(&n), "len {len}: {n}");
+        }
+    }
+
+    #[test]
+    fn no_leftover_is_subset() {
+        let sp = Space::new(96);
+        let all: std::collections::HashSet<u32> =
+            sp.valid_structural().iter().map(|s| s.vid()).collect();
+        for s in sp.no_leftover_structural() {
+            assert!(all.contains(&s.vid()));
+            assert_eq!(96 % s.elems_per_iter(), 0);
+        }
+    }
+
+    #[test]
+    fn vips_7986_has_few_no_leftover() {
+        // 7986 = 2·3·11³: almost no power-of-two unrolling divides it,
+        // which is why the paper's VIPS search must allow leftovers.
+        let n = Space::new(7986).no_leftover_structural().len();
+        assert!(n <= 8, "{n}");
+    }
+
+    #[test]
+    fn phase2_grid_is_12() {
+        let g = Space::phase2_grid(Structural::new(true, 1, 1, 1));
+        assert_eq!(g.len(), 12);
+        // All share the structure.
+        assert!(g.iter().all(|p| p.s == Structural::new(true, 1, 1, 1)));
+        // All distinct.
+        let ids: std::collections::HashSet<u32> = g.iter().map(|p| p.full_id()).collect();
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn ve_partition() {
+        let sp = Space::new(64);
+        let sisd = sp.valid_structural_ve(false);
+        let simd = sp.valid_structural_ve(true);
+        assert_eq!(sisd.len() + simd.len(), sp.valid_structural().len());
+        assert!(sisd.iter().all(|s| !s.ve));
+        assert!(simd.iter().all(|s| s.ve));
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny argument parser: `--key value`, `--flag`, and positionals.
+//!
+//! Replaces clap (unavailable offline) for the CLI, examples, and bench
+//! binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — tokens exclude argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn mixed_parsing() {
+        let a = Args::parse_from(toks("experiment fig5 --seed 7 --quick --out results"));
+        assert_eq!(a.positional, vec!["experiment", "fig5"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_or("out", "x"), "results");
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse_from(toks("--dim=64 --bench=streamcluster"));
+        assert_eq!(a.get_usize("dim", 0), 64);
+        assert_eq!(a.get("bench"), Some("streamcluster"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(toks("run --verbose"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = Args::parse_from(toks(""));
+        assert_eq!(a.get_usize("n", 5), 5);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+    }
+}

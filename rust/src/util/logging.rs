@@ -1,0 +1,60 @@
+//! Minimal `log` facade backend (env_logger is unavailable offline).
+//!
+//! Level comes from `DEGOAL_LOG` (error|warn|info|debug|trace), default
+//! `info`. Call [`init`] once from binaries; the library itself only emits
+//! through the `log` macros.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct SimpleLogger {
+    start: Instant,
+}
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Safe to call more than once (later calls are no-ops).
+pub fn init() {
+    let level = match std::env::var("DEGOAL_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(SimpleLogger { start: Instant::now() });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_ok() {
+        super::init();
+        super::init();
+        log::info!("logger alive");
+    }
+}

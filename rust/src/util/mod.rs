@@ -1,0 +1,12 @@
+//! Self-contained substrates: JSON, PRNG, statistics, CLI parsing, logging.
+//!
+//! This repo builds fully offline; these small modules replace the usual
+//! crates (serde_json, rand, env_logger, clap) with exactly what the
+//! system needs.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,169 @@
+//! Measurement statistics, including the paper's oscillation filter.
+//!
+//! Paper §3.4: *"we took the worst value between the three best values of
+//! groups with five measurements"* — measurements arrive in groups of five;
+//! the best (minimum) of each group is kept; the filtered score is the
+//! worst (maximum) of three such group-minima. This rejects downward
+//! outliers (torn timers) and upward outliers (interrupts, cache pollution).
+
+pub const FILTER_GROUP: usize = 5;
+pub const FILTER_GROUPS: usize = 3;
+
+/// Number of raw samples the training-data filter consumes.
+pub const FILTER_SAMPLES: usize = FILTER_GROUP * FILTER_GROUPS;
+
+/// The paper's training-data filter: worst of the per-group minima.
+///
+/// `samples.len()` must be at least `groups * group`; extra samples are
+/// ignored. Panics on insufficient samples.
+pub fn filter_worst_of_best(samples: &[f64], group: usize, groups: usize) -> f64 {
+    assert!(
+        samples.len() >= group * groups,
+        "need {} samples, got {}",
+        group * groups,
+        samples.len()
+    );
+    (0..groups)
+        .map(|g| {
+            samples[g * group..(g + 1) * group]
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min)
+        })
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Pearson correlation coefficient — used by the Table 5 / Fig 8 analysis of
+/// auto-tuning-parameter vs pipeline-feature correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Normalise values to [0, 1] given an inclusive range (Fig 8's y-axis).
+pub fn normalize(v: f64, lo: f64, hi: f64) -> f64 {
+    if hi <= lo {
+        return 0.0;
+    }
+    ((v - lo) / (hi - lo)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_rejects_both_outlier_directions() {
+        // Group minima: 10 (clean), 10, 12 (interrupt-contaminated group
+        // still has one clean sample). A torn-timer 1.0 in group 2 is
+        // rejected by taking the max of minima only if other groups..
+        let mut samples = vec![10.0, 11.0, 15.0, 10.5, 12.0]; // min 10
+        samples.extend([10.0, 10.2, 30.0, 11.0, 10.9]); // min 10 (30 = interrupt, dropped)
+        samples.extend([12.0, 13.0, 14.0, 12.5, 12.2]); // min 12
+        assert_eq!(filter_worst_of_best(&samples, 5, 3), 12.0);
+    }
+
+    #[test]
+    fn filter_drops_torn_low_sample() {
+        // A bogus near-zero reading must not win.
+        let mut samples = vec![10.0; 15];
+        samples[7] = 0.001; // torn timer in group 2 -> group-min 0.001
+        // worst-of-best = max(10, 0.001, 10) = 10.
+        assert_eq!(filter_worst_of_best(&samples, 5, 3), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn filter_insufficient_samples_panics() {
+        filter_worst_of_best(&[1.0; 7], 5, 3);
+    }
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&x, &[5.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn normalize_clamps() {
+        assert_eq!(normalize(5.0, 0.0, 10.0), 0.5);
+        assert_eq!(normalize(-1.0, 0.0, 10.0), 0.0);
+        assert_eq!(normalize(11.0, 0.0, 10.0), 1.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Synthetic input generation standing in for the PARSEC input sets
+//! (DESIGN.md §3 substitution 3): gaussian point clouds for Streamcluster
+//! and band-interleaved images for VIPS, deterministic per seed.
+
+use crate::util::rng::Rng;
+
+/// `n` points of dimension `dim`, drawn from `k` gaussian clusters —
+/// matching the clustering structure of the PARSEC generator.
+pub fn cluster_points(n: usize, dim: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<f32> = (0..k * dim).map(|_| (rng.gauss() * 4.0) as f32).collect();
+    let mut out = vec![0f32; n * dim];
+    for p in 0..n {
+        let c = rng.below(k as u64) as usize;
+        for d in 0..dim {
+            out[p * dim + d] = centers[c * dim + d] + rng.gauss() as f32;
+        }
+    }
+    out
+}
+
+/// Initial centers: the first `k` points (the Streamcluster heuristic).
+pub fn initial_centers(points: &[f32], dim: usize, k: usize) -> Vec<f32> {
+    points[..k * dim].to_vec()
+}
+
+/// A `h x w x bands` image flattened row-major to `h` rows of
+/// `w * bands` f32, values in [0, 255).
+pub fn image(h: usize, w: usize, bands: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0f32; h * w * bands];
+    // Smooth-ish content: per-row base + noise (keeps it compressible and
+    // realistic without mattering to the kernel).
+    for (r, row) in out.chunks_mut(w * bands).enumerate() {
+        let base = (r % 256) as f32;
+        for v in row.iter_mut() {
+            *v = (base + rng.f32() * 64.0) % 255.0;
+        }
+    }
+    out
+}
+
+/// Band-tiled multiply/add factor vectors of length `w * bands`.
+pub fn lintra_factors(w: usize, bands: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ 0xfac);
+    let mul: Vec<f32> = (0..bands).map(|_| 0.5 + rng.f32()).collect();
+    let add: Vec<f32> = (0..bands).map(|_| rng.f32() * 16.0).collect();
+    let mut mulvec = vec![0f32; w * bands];
+    let mut addvec = vec![0f32; w * bands];
+    for i in 0..w * bands {
+        mulvec[i] = mul[i % bands];
+        addvec[i] = add[i % bands];
+    }
+    (mulvec, addvec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_deterministic_and_clustered() {
+        let a = cluster_points(128, 8, 4, 9);
+        let b = cluster_points(128, 8, 4, 9);
+        assert_eq!(a, b);
+        let c = cluster_points(128, 8, 4, 10);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 128 * 8);
+    }
+
+    #[test]
+    fn centers_are_prefix() {
+        let pts = cluster_points(64, 4, 2, 1);
+        let c = initial_centers(&pts, 4, 8);
+        assert_eq!(c, &pts[..32]);
+    }
+
+    #[test]
+    fn image_shape_and_range() {
+        let img = image(10, 16, 3, 5);
+        assert_eq!(img.len(), 480);
+        assert!(img.iter().all(|&v| (0.0..255.0).contains(&v)));
+    }
+
+    #[test]
+    fn factors_band_tiled() {
+        let (m, a) = lintra_factors(8, 3, 0);
+        assert_eq!(m.len(), 24);
+        assert_eq!(m[0], m[3]);
+        assert_eq!(m[1], m[4]);
+        assert_eq!(a[2], a[5]);
+    }
+}

@@ -1,0 +1,28 @@
+//! Benchmark applications (paper §4.3): the online-clustering
+//! Streamcluster driver (CPU-bound) and the VIPS `im_lintra_vec` image
+//! driver (memory-bound). Both spend >80 % of their time in the tuned
+//! kernel, calling it through the auto-tuner's active function.
+
+pub mod datagen;
+pub mod streamcluster;
+pub mod vips;
+
+pub use streamcluster::{StreamclusterApp, StreamclusterConfig};
+pub use vips::{VipsApp, VipsConfig};
+
+/// Result of one application run (with or without auto-tuning).
+#[derive(Debug, Clone)]
+pub struct AppRun {
+    /// Total application time (kernel time + tool overhead), seconds.
+    pub total_time: f64,
+    /// Kernel-only time.
+    pub kernel_time: f64,
+    /// Auto-tuning overhead (0 for reference runs).
+    pub overhead: f64,
+    pub kernel_calls: u64,
+    /// Total energy (sim backends only).
+    pub energy_j: Option<f64>,
+    /// Benchmark-specific figure of merit (clustering cost / checksum),
+    /// used to verify the tuned run computes the same thing.
+    pub metric: f64,
+}

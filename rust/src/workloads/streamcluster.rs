@@ -1,0 +1,202 @@
+//! Streamcluster (PARSEC) driver — the CPU-bound case study.
+//!
+//! Online clustering: a stream of points is assigned to the nearest of
+//! `k` centers; the quality metric is the sum of squared distances. The
+//! euclidean-distance kernel (the auto-tuned function) accounts for >80 %
+//! of the execution time and is called once per (center, point-batch)
+//! pair per round.
+
+use anyhow::Result;
+
+use super::AppRun;
+use crate::backend::{Backend, EvalData, KernelVersion};
+use crate::coordinator::AutoTuner;
+use crate::simulator::RefKind;
+use crate::tunespace::TuningParams;
+
+#[derive(Debug, Clone, Copy)]
+pub struct StreamclusterConfig {
+    pub dim: u32,
+    /// Points in the stream (simsmall: 4096).
+    pub n_points: u32,
+    /// Points per kernel call (the artifact batch).
+    pub batch: u32,
+    /// Cluster centers evaluated per round.
+    pub k: u32,
+    /// Local-search rounds over the stream.
+    pub rounds: u32,
+}
+
+impl StreamclusterConfig {
+    /// The paper's input sets: simsmall with dim 32 / 64 / 128
+    /// (small / medium / large).
+    pub fn input_set(name: &str) -> StreamclusterConfig {
+        let dim = match name {
+            "small" => 32,
+            "medium" => 64,
+            "large" => 128,
+            other => panic!("unknown input set {other}"),
+        };
+        StreamclusterConfig { dim, n_points: 4096, batch: 256, k: 16, rounds: 1600 }
+    }
+
+    /// Total kernel calls one run performs.
+    pub fn n_calls(&self) -> u64 {
+        self.rounds as u64 * self.k as u64 * (self.n_points / self.batch) as u64
+    }
+
+    /// A scaled-down copy for fast tests/benches.
+    pub fn scaled(mut self, factor: u32) -> StreamclusterConfig {
+        self.rounds = (self.rounds / factor).max(1);
+        self
+    }
+}
+
+/// How the application resolves its kernel.
+pub enum RunMode<'t> {
+    /// A fixed reference kernel (the non-tuned baseline rows of Table 3).
+    Reference(RefKind),
+    /// A fixed auto-tuned variant (the BS-AT rows).
+    Fixed(TuningParams),
+    /// Online auto-tuning (the O-AT rows).
+    Tuned(&'t mut AutoTuner),
+}
+
+pub struct StreamclusterApp {
+    pub cfg: StreamclusterConfig,
+}
+
+impl StreamclusterApp {
+    pub fn new(cfg: StreamclusterConfig) -> StreamclusterApp {
+        StreamclusterApp { cfg }
+    }
+
+    /// Run the whole application through `backend`.
+    pub fn run<B: Backend>(&self, backend: &mut B, mut mode: RunMode<'_>) -> Result<AppRun> {
+        let n_calls = self.cfg.n_calls();
+        let mut kernel_time = 0.0;
+        let mut energy = 0.0;
+        let mut have_energy = true;
+
+        // BS-AT: the variant is generated once before the run; its codegen
+        // cost is *not* part of the run (it was found offline).
+        if let RunMode::Fixed(p) = &mode {
+            backend.generate(*p)?;
+        }
+
+        for _ in 0..n_calls {
+            match &mut mode {
+                RunMode::Reference(rk) => {
+                    let v = KernelVersion::Reference(*rk);
+                    kernel_time += backend.call(&v, EvalData::Real)?.score;
+                    match backend.energy_per_call(&v) {
+                        Some(e) => energy += e,
+                        None => have_energy = false,
+                    }
+                }
+                RunMode::Fixed(p) => {
+                    let v = KernelVersion::Variant(*p);
+                    kernel_time += backend.call(&v, EvalData::Real)?.score;
+                    match backend.energy_per_call(&v) {
+                        Some(e) => energy += e,
+                        None => have_energy = false,
+                    }
+                }
+                RunMode::Tuned(tuner) => {
+                    let active = *tuner.active();
+                    kernel_time += tuner.app_call(&mut *backend)?;
+                    match backend.energy_per_call(&active) {
+                        Some(e) => energy += e,
+                        None => have_energy = false,
+                    }
+                }
+            }
+        }
+
+        let overhead = match &mode {
+            RunMode::Tuned(t) => t.stats.overhead,
+            _ => 0.0,
+        };
+        Ok(AppRun {
+            total_time: kernel_time + overhead,
+            kernel_time,
+            overhead,
+            kernel_calls: n_calls,
+            energy_j: have_energy.then_some(energy),
+            metric: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::SimBackend;
+    use crate::coordinator::TunerConfig;
+    use crate::simulator::{core_by_name, KernelKind};
+
+    fn sim(core: &str, dim: u32) -> SimBackend {
+        SimBackend::new(
+            core_by_name(core).unwrap(),
+            KernelKind::Distance { dim, batch: 256 },
+            11,
+        )
+    }
+
+    #[test]
+    fn input_sets() {
+        assert_eq!(StreamclusterConfig::input_set("small").dim, 32);
+        assert_eq!(StreamclusterConfig::input_set("large").dim, 128);
+        assert!(StreamclusterConfig::input_set("medium").n_calls() > 100_000);
+    }
+
+    #[test]
+    fn tuned_beats_reference_on_io_core() {
+        let cfg = StreamclusterConfig::input_set("small").scaled(8);
+        let app = StreamclusterApp::new(cfg);
+
+        let mut b_ref = sim("DI-I1", cfg.dim);
+        let r_ref =
+            app.run(&mut b_ref, RunMode::Reference(RefKind::SimdSpecialized)).unwrap();
+
+        let mut b_tuned = sim("DI-I1", cfg.dim);
+        let mut tuner = AutoTuner::new(
+            TunerConfig { wake_period: 2e-3, ..Default::default() },
+            cfg.dim,
+            Some(true),
+        );
+        let r_tuned = app.run(&mut b_tuned, RunMode::Tuned(&mut tuner)).unwrap();
+
+        let speedup = r_ref.total_time / r_tuned.total_time;
+        assert!(
+            speedup > 1.02,
+            "online auto-tuning must beat the SIMD ref on an IO core: {speedup:.3}"
+        );
+        // Overhead within the paper's envelope (0.2-4.2 %), generously.
+        let frac = r_tuned.overhead / r_tuned.total_time;
+        assert!(frac < 0.06, "overhead {frac:.3}");
+    }
+
+    #[test]
+    fn reference_run_has_no_overhead() {
+        let cfg = StreamclusterConfig::input_set("small").scaled(64);
+        let app = StreamclusterApp::new(cfg);
+        let mut b = sim("A9", cfg.dim);
+        let r = app.run(&mut b, RunMode::Reference(RefKind::SisdGeneric)).unwrap();
+        assert_eq!(r.overhead, 0.0);
+        assert_eq!(r.kernel_calls, cfg.n_calls());
+        assert!(r.energy_j.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fixed_variant_run() {
+        use crate::tunespace::Structural;
+        let cfg = StreamclusterConfig::input_set("small").scaled(64);
+        let app = StreamclusterApp::new(cfg);
+        let mut b = sim("A9", cfg.dim);
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+        let r = app.run(&mut b, RunMode::Fixed(p)).unwrap();
+        assert!(r.total_time > 0.0);
+        assert_eq!(r.overhead, 0.0);
+    }
+}
