@@ -1,0 +1,81 @@
+//! Warm start: persistent tuning cache across two "process lifetimes".
+//!
+//!     cargo run --release --example warm_start
+//!
+//! Run 1 (cold) explores the full two-phase space online and writes the
+//! winner to a tunecache file. Run 2 (warm) — a fresh tuner and a fresh
+//! backend, as after a process restart — looks the winner up by device
+//! fingerprint + kernel key, regenerates *one* version, validates it, and
+//! skips exploration entirely: the paper's 0.2–4.2 % regeneration
+//! overhead collapses to a single generate + one short evaluation.
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::Backend as _;
+use degoal_rt::cache::{CacheEntry, TuneCache, TuneKey};
+use degoal_rt::coordinator::{AutoTuner, TunerConfig};
+use degoal_rt::simulator::{core_by_name, KernelKind};
+
+fn main() -> anyhow::Result<()> {
+    degoal_rt::util::logging::init();
+
+    let core = core_by_name("DI-I1").unwrap();
+    let kind = KernelKind::Distance { dim: 64, batch: 256 };
+    let cfg = TunerConfig { wake_period: 1e-3, ..Default::default() };
+    let cache_path = std::env::temp_dir().join("degoal_warm_start_example.json");
+
+    // ---- run 1: cold — full two-phase online exploration ----
+    let mut backend = SimBackend::new(core, kind, 42);
+    let fp = backend.device_fingerprint();
+    let key = TuneKey::new(backend.kernel_id(), kind.length());
+    let mut cold = AutoTuner::new(cfg, kind.length(), Some(true));
+    let mut calls = 0u64;
+    while !cold.exploration_done() && calls < 400_000 {
+        cold.app_call(&mut backend)?;
+        calls += 1;
+    }
+    let (best, score) = cold.best().expect("cold run finds a winner");
+    let ref_score = cold.ref_score().unwrap();
+    println!(
+        "cold:  {} generate calls, best {} ({:.2}x vs ref) after {} app calls",
+        cold.stats.generate_calls,
+        best,
+        ref_score / score,
+        calls,
+    );
+
+    // Persist the outcome, keyed by device + kernel.
+    let mut cache = TuneCache::new();
+    cache.insert(&fp, &key, CacheEntry::new(best, score, ref_score, cold.stats.explored_count() as u32));
+    cache.save(&cache_path)?;
+
+    // ---- run 2: warm — a fresh process lifetime ----
+    let mut cache = TuneCache::load(&cache_path)?;
+    let mut backend = SimBackend::new(core, kind, 77);
+    let entry = cache
+        .lookup(&backend.device_fingerprint(), &key)
+        .expect("cache hit on the same device + kernel");
+    let mut warm = AutoTuner::with_warm_start(cfg, kind.length(), Some(true), entry.params);
+    let mut calls = 0u64;
+    while !warm.exploration_done() && calls < 400_000 {
+        warm.app_call(&mut backend)?;
+        calls += 1;
+    }
+    let (wbest, wscore) = warm.best().unwrap();
+    println!(
+        "warm:  {} generate call(s), best {} ({:.2}x vs ref) after {} app calls — outcome {:?}",
+        warm.stats.generate_calls,
+        wbest,
+        warm.ref_score().unwrap() / wscore,
+        calls,
+        warm.stats.warm_outcome.unwrap(),
+    );
+    println!(
+        "saved {}x of the regeneration work ({} -> {} generate calls); cache: {}",
+        cold.stats.generate_calls / warm.stats.generate_calls.max(1),
+        cold.stats.generate_calls,
+        warm.stats.generate_calls,
+        cache_path.display(),
+    );
+    std::fs::remove_file(&cache_path).ok();
+    Ok(())
+}

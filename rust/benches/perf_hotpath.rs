@@ -68,6 +68,14 @@ fn main() {
     });
 
     // --- host PJRT codegen + call latency (the real regeneration cost) ---
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt section skipped: built without the `pjrt` feature");
+    #[cfg(feature = "pjrt")]
+    run_pjrt_section();
+}
+
+#[cfg(feature = "pjrt")]
+fn run_pjrt_section() {
     let dir = degoal_rt::paths::artifacts_dir();
     if dir.join("manifest.json").exists() {
         let rt = degoal_rt::runtime::Runtime::cpu().unwrap();

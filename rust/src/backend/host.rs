@@ -18,6 +18,7 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use super::{Backend, EvalData, KernelVersion, Sample};
+use crate::cache::DeviceFingerprint;
 use crate::codegen::{ArtifactSpec, CodeCache};
 use crate::runtime::{Executable, InputF32, Runtime};
 use crate::tunespace::TuningParams;
@@ -157,6 +158,15 @@ impl Backend for HostBackend<'_> {
 
     fn name(&self) -> String {
         format!("host:{}", self.cache.spec().benchmark)
+    }
+
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        DeviceFingerprint::host()
+    }
+
+    fn kernel_id(&self) -> String {
+        let spec = self.cache.spec();
+        format!("{}/len{}", spec.benchmark, spec.length)
     }
 }
 

@@ -7,6 +7,7 @@ use std::collections::HashSet;
 use anyhow::{bail, Result};
 
 use super::{Backend, EvalData, KernelVersion, Sample};
+use crate::cache::DeviceFingerprint;
 use crate::tunespace::TuningParams;
 use crate::util::rng::Rng;
 
@@ -20,6 +21,9 @@ pub struct MockBackend {
     pub codegen_cost: f64,
     pub length: u32,
     pub noise_sigma: f64,
+    /// Device-fingerprint detail — tests override it to model "the same
+    /// kernel on a different device" for cache-transfer checks.
+    pub device_tag: String,
     rng: Rng,
     pub generated: HashSet<u32>,
     pub calls: u64,
@@ -58,6 +62,7 @@ impl MockBackend {
             codegen_cost: 20e-6,
             length,
             noise_sigma: 0.0,
+            device_tag: "mock0".into(),
             rng: Rng::new(seed),
             generated: HashSet::new(),
             calls: 0,
@@ -110,6 +115,14 @@ impl Backend for MockBackend {
 
     fn name(&self) -> String {
         "mock".into()
+    }
+
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        DeviceFingerprint::new("mock", self.device_tag.clone())
+    }
+
+    fn kernel_id(&self) -> String {
+        format!("mock/len{}", self.length)
     }
 }
 

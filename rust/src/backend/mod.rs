@@ -13,17 +13,21 @@
 //! * [`mock::MockBackend`] — a synthetic performance landscape for
 //!   deterministic coordinator tests.
 
+#[cfg(feature = "pjrt")]
 pub mod host;
 pub mod mock;
 pub mod sim;
 
+use crate::cache::DeviceFingerprint;
 use crate::simulator::RefKind;
 use crate::tunespace::TuningParams;
+use crate::util::json::{obj, s as jstr, Json};
 use anyhow::Result;
 
 /// A kernel version the application can run: the compiled-C reference or
 /// an auto-tuned variant.
 #[derive(Debug, Clone, Copy, PartialEq)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
 pub enum KernelVersion {
     Reference(RefKind),
     Variant(TuningParams),
@@ -39,6 +43,22 @@ impl KernelVersion {
             KernelVersion::Reference(rk) => format!("ref:{rk:?}"),
             KernelVersion::Variant(p) => format!("var:{p}"),
         }
+    }
+
+    /// Stable on-disk form (tuning cache / report tooling).
+    pub fn to_json(&self) -> Json {
+        match self {
+            KernelVersion::Reference(rk) => obj(vec![("ref", jstr(rk.as_str()))]),
+            KernelVersion::Variant(p) => obj(vec![("var", p.to_json())]),
+        }
+    }
+
+    /// Inverse of [`KernelVersion::to_json`].
+    pub fn from_json(v: &Json) -> Option<KernelVersion> {
+        if let Some(rk) = v.get("ref") {
+            return Some(KernelVersion::Reference(RefKind::from_str_name(rk.as_str()?)?));
+        }
+        Some(KernelVersion::Variant(TuningParams::from_json(v.get("var")?)?))
     }
 }
 
@@ -87,4 +107,39 @@ pub trait Backend {
 
     /// Backend label for reports.
     fn name(&self) -> String;
+
+    /// Stable identity of the *device* executing kernels — the tuning
+    /// cache's outer key. Backends refine the default (the backend label
+    /// with no detail) with the simulated-core configuration or the host
+    /// CPU identity; tuning outcomes only transfer between identical
+    /// fingerprints.
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        DeviceFingerprint::new(self.name(), "")
+    }
+
+    /// Stable identity of the kernel *stream* this backend executes
+    /// (e.g. `distance/d64/b256`) — the kernel part of a cache key.
+    fn kernel_id(&self) -> String {
+        self.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::Structural;
+
+    #[test]
+    fn kernel_version_json_roundtrip() {
+        let vs = [
+            KernelVersion::Reference(RefKind::SisdGeneric),
+            KernelVersion::Reference(RefKind::SimdSpecialized),
+            KernelVersion::Variant(TuningParams::phase1_default(Structural::new(true, 2, 2, 4))),
+        ];
+        for v in vs {
+            let j = Json::parse(&v.to_json().to_string()).unwrap();
+            assert_eq!(KernelVersion::from_json(&j), Some(v));
+        }
+        assert_eq!(KernelVersion::from_json(&jstr("garbage")), None);
+    }
 }

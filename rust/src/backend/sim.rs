@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use super::{Backend, EvalData, KernelVersion, Sample};
+use crate::cache::DeviceFingerprint;
 use crate::simulator::{
     simulate_ref_call, simulate_trace, CoreConfig, KernelKind, TraceGen,
 };
@@ -227,6 +228,30 @@ impl Backend for SimBackend {
 
     fn name(&self) -> String {
         format!("sim:{}", self.core.name)
+    }
+
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        // Pin the micro-architectural parameters, not just the name: a
+        // renamed-but-identical core transfers, a retuned one does not.
+        let c = self.core;
+        DeviceFingerprint::new(
+            format!("sim:{}", c.name),
+            format!(
+                "{}-w{}-v{}-{:.1}GHz-l2:{}kB",
+                if c.is_ooo() { "ooo" } else { "io" },
+                c.width,
+                c.vpus,
+                c.clock_ghz,
+                c.l2.size_kb,
+            ),
+        )
+    }
+
+    fn kernel_id(&self) -> String {
+        match self.kind {
+            KernelKind::Distance { dim, batch } => format!("distance/d{dim}/b{batch}"),
+            KernelKind::Lintra { row_len, rows } => format!("lintra/r{row_len}/x{rows}"),
+        }
     }
 }
 

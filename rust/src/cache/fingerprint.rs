@@ -1,0 +1,103 @@
+//! Cache keys: device identity and kernel-stream identity.
+
+/// Stable identity of the device that produced (or will consume) a tuning
+/// outcome. `backend` is the coarse class (`sim:DI-I1`, `host`, `mock`);
+/// `detail` pins the configuration within the class — the simulated
+/// core's micro-architectural parameters, or the host CPU identity. Two
+/// fingerprints must compare equal for a cached outcome to transfer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
+pub struct DeviceFingerprint {
+    pub backend: String,
+    pub detail: String,
+}
+
+impl DeviceFingerprint {
+    pub fn new(backend: impl Into<String>, detail: impl Into<String>) -> DeviceFingerprint {
+        DeviceFingerprint { backend: backend.into(), detail: detail.into() }
+    }
+
+    /// Identity of the machine running this process (the host-PJRT
+    /// configuration): architecture + OS, overridable with
+    /// `DEGOAL_HOST_ID` when a deployment knows better (e.g. a specific
+    /// CPU SKU behind a fleet-wide image).
+    pub fn host() -> DeviceFingerprint {
+        let detail = std::env::var("DEGOAL_HOST_ID")
+            .unwrap_or_else(|_| format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS));
+        DeviceFingerprint::new("host", detail)
+    }
+
+    /// Flat string form (`backend|detail`) for logs and tooling.
+    pub fn key(&self) -> String {
+        format!("{}|{}", self.backend, self.detail)
+    }
+}
+
+impl std::fmt::Display for DeviceFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.detail.is_empty() {
+            write!(f, "{}", self.backend)
+        } else {
+            write!(f, "{}|{}", self.backend, self.detail)
+        }
+    }
+}
+
+/// What was tuned: one kernel stream. `kernel` is the backend's stable
+/// kernel id (`distance/d64/b256`), `length` the tuned-loop trip length
+/// the variants were specialised for, and `shape` an input-shape class
+/// for callers that tune the same kernel under distinct data regimes
+/// (batch sizes, aspect ratios); `-` when unused.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
+pub struct TuneKey {
+    pub kernel: String,
+    pub length: u32,
+    pub shape: String,
+}
+
+impl TuneKey {
+    pub fn new(kernel: impl Into<String>, length: u32) -> TuneKey {
+        TuneKey { kernel: kernel.into(), length, shape: "-".into() }
+    }
+
+    pub fn with_shape(kernel: impl Into<String>, length: u32, shape: impl Into<String>) -> TuneKey {
+        TuneKey { kernel: kernel.into(), length, shape: shape.into() }
+    }
+
+    /// Flat string form (`kernel|length|shape`) for logs and tooling.
+    pub fn key(&self) -> String {
+        format!("{}|{}|{}", self.kernel, self.length, self.shape)
+    }
+}
+
+impl std::fmt::Display for TuneKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}(len {}, shape {})", self.kernel, self.length, self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_stable_and_distinct() {
+        let a = DeviceFingerprint::new("sim:DI-I1", "w2/1.4GHz");
+        let b = DeviceFingerprint::new("sim:DI-O1", "w2/1.4GHz");
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.key(), DeviceFingerprint::new("sim:DI-I1", "w2/1.4GHz").key());
+
+        let k1 = TuneKey::new("distance/d64/b256", 64);
+        let k2 = TuneKey::with_shape("distance/d64/b256", 64, "small");
+        assert_ne!(k1.key(), k2.key());
+        assert_eq!(k1.shape, "-");
+    }
+
+    #[test]
+    fn host_fingerprint_is_deterministic() {
+        // Not asserting the value (env-dependent), only stability.
+        assert_eq!(DeviceFingerprint::host(), DeviceFingerprint::host());
+        assert_eq!(DeviceFingerprint::host().backend, "host");
+    }
+}

@@ -1,0 +1,28 @@
+//! Persistent tuning cache — the warm-start layer over the online
+//! auto-tuner.
+//!
+//! The paper's overhead envelope (0.2–4.2 % of the benchmark run) is paid
+//! *per process*: the seed `AutoTuner` relearns the whole search space on
+//! every start. Production autotuners (kubecl, KTT) instead cache tuning
+//! outcomes keyed by device and reuse them across runs — even shipping the
+//! cache with the binary to kill cold starts. This module is that layer:
+//!
+//! * [`DeviceFingerprint`] — who measured: backend name + simulated-core
+//!   configuration or host CPU identity. Outcomes never transfer across
+//!   fingerprints (a DI-I1 winner is meaningless on a TI-O3).
+//! * [`TuneKey`] — what was tuned: kernel id, tuned-loop trip length, and
+//!   an input-shape class.
+//! * [`CacheEntry`] — the outcome: winning
+//!   [`TuningParams`](crate::tunespace::TuningParams), its measured score,
+//!   the reference score it beat, and how many versions the search
+//!   explored.
+//! * [`TuneCache`] — LRU-bounded in-memory shards (one per device) with
+//!   hit/miss/stale counters, JSON-on-disk persistence (versioned format,
+//!   `DEGOAL_TUNECACHE` / `results/tunecache.json`), and import/export so
+//!   a cache can be shipped with a deployment.
+
+mod fingerprint;
+mod store;
+
+pub use fingerprint::{DeviceFingerprint, TuneKey};
+pub use store::{CacheCounters, CacheEntry, TuneCache, TUNECACHE_FORMAT_VERSION};

@@ -1,0 +1,531 @@
+//! The tuning-outcome store: LRU-bounded in-memory shards with versioned
+//! JSON persistence.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use super::fingerprint::{DeviceFingerprint, TuneKey};
+use crate::tunespace::TuningParams;
+use crate::util::json::{num, obj, s as jstr, Json};
+
+/// On-disk format version; bump on breaking layout changes. A file with a
+/// different version is ignored (cold start), never misread.
+pub const TUNECACHE_FORMAT_VERSION: u64 = 1;
+
+/// One cached tuning outcome.
+#[derive(Debug, Clone, PartialEq)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
+pub struct CacheEntry {
+    /// The winning configuration.
+    pub params: TuningParams,
+    /// Its measured score (seconds per call — lower is better).
+    pub score: f64,
+    /// The reference-kernel score it was measured against.
+    pub ref_score: f64,
+    /// Versions the search explored to find it (context for reports).
+    pub explored: u32,
+    /// Unix seconds of the last write.
+    pub updated_unix: u64,
+}
+
+impl CacheEntry {
+    pub fn new(params: TuningParams, score: f64, ref_score: f64, explored: u32) -> CacheEntry {
+        let updated_unix = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        CacheEntry { params, score, ref_score, explored, updated_unix }
+    }
+
+    /// Speedup over the reference at tuning time.
+    pub fn speedup(&self) -> f64 {
+        if self.score > 0.0 {
+            self.ref_score / self.score
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Aggregate cache-behaviour counters (process lifetime, not persisted).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Lookups that returned an entry.
+    pub hits: u64,
+    /// Lookups that found nothing (cold start follows).
+    pub misses: u64,
+    /// Warm starts whose cached variant no longer generates (stale
+    /// artifact); the consumer fell back to full exploration.
+    pub stale: u64,
+    /// Entries dropped by the per-shard LRU bound.
+    pub evictions: u64,
+    /// Entries adopted from `import`/`merge`.
+    pub imported: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    entry: CacheEntry,
+    /// Monotonic recency tick for LRU eviction (in-memory only).
+    last_used: u64,
+}
+
+/// The persistent tuning cache. Shards (one per device fingerprint) are
+/// LRU-bounded so a long-lived service multiplexing many kernel streams
+/// keeps bounded memory; persistence is whole-cache JSON.
+#[derive(Debug, Clone)]
+pub struct TuneCache {
+    shards: HashMap<DeviceFingerprint, HashMap<TuneKey, Slot>>,
+    shard_cap: usize,
+    tick: u64,
+    pub counters: CacheCounters,
+}
+
+impl Default for TuneCache {
+    fn default() -> Self {
+        TuneCache::new()
+    }
+}
+
+impl TuneCache {
+    /// Default per-device entry bound — generous for the two benchmarks ×
+    /// a handful of specialisations, tight enough to bound a service that
+    /// churns through thousands of shapes.
+    pub const DEFAULT_SHARD_CAP: usize = 64;
+
+    pub fn new() -> TuneCache {
+        TuneCache::with_shard_cap(Self::DEFAULT_SHARD_CAP)
+    }
+
+    pub fn with_shard_cap(shard_cap: usize) -> TuneCache {
+        TuneCache {
+            shards: HashMap::new(),
+            shard_cap: shard_cap.max(1),
+            tick: 0,
+            counters: CacheCounters::default(),
+        }
+    }
+
+    /// Total entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.values().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look an outcome up, counting a hit or a miss and refreshing LRU
+    /// recency.
+    pub fn lookup(&mut self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
+        self.lookup_filtered(fp, key, |_| true)
+    }
+
+    /// Like [`TuneCache::lookup`], but an entry the caller cannot use
+    /// (e.g. outside a warm start's VE class) counts as a miss instead of
+    /// a hit, keeping hit-rate statistics honest.
+    pub fn lookup_filtered(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl FnOnce(&CacheEntry) -> bool,
+    ) -> Option<CacheEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.shards.get_mut(fp).and_then(|s| s.get_mut(key)) {
+            Some(slot) if usable(&slot.entry) => {
+                slot.last_used = tick;
+                self.counters.hits += 1;
+                Some(slot.entry.clone())
+            }
+            _ => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Counter-free read (tools, tests).
+    pub fn peek(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<&CacheEntry> {
+        self.shards.get(fp).and_then(|s| s.get(key)).map(|slot| &slot.entry)
+    }
+
+    /// Insert or overwrite an outcome, evicting the least-recently-used
+    /// entry if the device shard exceeds its bound.
+    pub fn insert(&mut self, fp: &DeviceFingerprint, key: &TuneKey, entry: CacheEntry) {
+        self.tick += 1;
+        let tick = self.tick;
+        let shard = self.shards.entry(fp.clone()).or_default();
+        shard.insert(key.clone(), Slot { entry, last_used: tick });
+        while shard.len() > self.shard_cap {
+            if let Some(oldest) = shard
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                shard.remove(&oldest);
+                self.counters.evictions += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drop one outcome (e.g. after its artifact went stale).
+    pub fn invalidate(&mut self, fp: &DeviceFingerprint, key: &TuneKey) -> bool {
+        match self.shards.get_mut(fp) {
+            Some(shard) => shard.remove(key).is_some(),
+            None => false,
+        }
+    }
+
+    /// Record that a warm start hit a stale artifact.
+    pub fn note_stale(&mut self) {
+        self.counters.stale += 1;
+    }
+
+    // ---- persistence ----
+
+    /// The default cache location (`$DEGOAL_TUNECACHE`, else
+    /// `<results dir>/tunecache.json`).
+    pub fn default_path() -> std::path::PathBuf {
+        crate::paths::tunecache_path()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = Vec::new();
+        for (fp, shard) in &self.shards {
+            for (key, slot) in shard {
+                let e = &slot.entry;
+                entries.push(obj(vec![
+                    ("device", jstr(&fp.backend)),
+                    ("detail", jstr(&fp.detail)),
+                    ("kernel", jstr(&key.kernel)),
+                    ("length", num(key.length as f64)),
+                    ("shape", jstr(&key.shape)),
+                    ("params", e.params.to_json()),
+                    ("score", num(e.score)),
+                    ("ref_score", num(e.ref_score)),
+                    ("explored", num(e.explored as f64)),
+                    ("updated_unix", num(e.updated_unix as f64)),
+                ]));
+            }
+        }
+        obj(vec![
+            ("version", num(TUNECACHE_FORMAT_VERSION as f64)),
+            ("shard_cap", num(self.shard_cap as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild a cache from its JSON form. A version mismatch yields an
+    /// *empty* cache (cold start beats misreading a future layout);
+    /// individual malformed entries are skipped with a warning.
+    pub fn from_json(v: &Json) -> TuneCache {
+        // Restore the writer's shard bound: rebuilding a 256-entry-shard
+        // cache under the default cap would silently LRU-evict entries
+        // during the load loop.
+        let cap = v
+            .get("shard_cap")
+            .and_then(Json::as_usize)
+            .unwrap_or(Self::DEFAULT_SHARD_CAP);
+        let mut cache = TuneCache::with_shard_cap(cap);
+        let version = v.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != TUNECACHE_FORMAT_VERSION {
+            log::warn!(
+                "tunecache format version {version} != {TUNECACHE_FORMAT_VERSION}; starting cold"
+            );
+            return cache;
+        }
+        let entries = v.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+        for e in entries {
+            let parsed = (|| {
+                let fp = DeviceFingerprint::new(
+                    e.get("device")?.as_str()?,
+                    e.get("detail").and_then(Json::as_str).unwrap_or(""),
+                );
+                let key = TuneKey::with_shape(
+                    e.get("kernel")?.as_str()?,
+                    e.get("length")?.as_u64()? as u32,
+                    e.get("shape").and_then(Json::as_str).unwrap_or("-"),
+                );
+                let params = TuningParams::from_json(e.get("params")?)?;
+                let score = e.get("score")?.as_f64()?;
+                let ref_score = e.get("ref_score")?.as_f64()?;
+                if !(score.is_finite() && ref_score.is_finite() && score > 0.0) {
+                    return None;
+                }
+                let entry = CacheEntry {
+                    params,
+                    score,
+                    ref_score,
+                    explored: e.get("explored").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    updated_unix: e.get("updated_unix").and_then(Json::as_u64).unwrap_or(0),
+                };
+                Some((fp, key, entry))
+            })();
+            match parsed {
+                Some((fp, key, entry)) => cache.insert(&fp, &key, entry),
+                None => log::warn!("tunecache: skipping malformed entry {e}"),
+            }
+        }
+        cache.counters = CacheCounters::default();
+        cache
+    }
+
+    /// Persist to `path` (parent directories are created).
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing tunecache {path:?}"))
+    }
+
+    /// Alias of [`TuneCache::save`] for the warm-start-shipping workflow.
+    pub fn export<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save(path)
+    }
+
+    /// Load from `path`. A missing file is an empty cache; malformed JSON
+    /// is an error (the caller decides whether to start cold).
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<TuneCache> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(TuneCache::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tunecache {path:?}"))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing tunecache {path:?}: {e}"))?;
+        Ok(TuneCache::from_json(&v))
+    }
+
+    /// Load, treating any failure as a cold start (service boot path).
+    pub fn load_or_default<P: AsRef<Path>>(path: P) -> TuneCache {
+        match TuneCache::load(&path) {
+            Ok(c) => c,
+            Err(e) => {
+                log::warn!("tunecache load failed ({e:#}); starting cold");
+                TuneCache::new()
+            }
+        }
+    }
+
+    /// Merge another cache in (warm-start shipping): a foreign entry wins
+    /// only where we have none or it has a strictly better score. Returns
+    /// the number of entries adopted.
+    pub fn merge(&mut self, other: &TuneCache) -> usize {
+        let mut adopted = 0;
+        for (fp, shard) in &other.shards {
+            for (key, slot) in shard {
+                let better = match self.peek(fp, key) {
+                    Some(existing) => slot.entry.score < existing.score,
+                    None => true,
+                };
+                if better {
+                    self.insert(fp, key, slot.entry.clone());
+                    adopted += 1;
+                }
+            }
+        }
+        self.counters.imported += adopted as u64;
+        adopted
+    }
+
+    /// Merge entries from a cache file (deployment warm start). Returns
+    /// the number adopted.
+    pub fn import<P: AsRef<Path>>(&mut self, path: P) -> Result<usize> {
+        let other = TuneCache::load(path)?;
+        Ok(self.merge(&other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::Structural;
+
+    fn fp(n: &str) -> DeviceFingerprint {
+        DeviceFingerprint::new("sim:test", n)
+    }
+
+    fn key(n: &str) -> TuneKey {
+        TuneKey::new(n, 64)
+    }
+
+    fn entry(score: f64) -> CacheEntry {
+        CacheEntry::new(
+            TuningParams::phase1_default(Structural::new(true, 2, 2, 4)),
+            score,
+            2.0 * score,
+            42,
+        )
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("degoal_store_test_{}_{name}.json", std::process::id()))
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = TuneCache::new();
+        assert!(c.lookup(&fp("a"), &key("k")).is_none());
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        assert!(c.lookup(&fp("a"), &key("k")).is_some());
+        // Same key, different device: a miss — outcomes don't transfer.
+        assert!(c.lookup(&fp("b"), &key("k")).is_none());
+        assert_eq!(c.counters.hits, 1);
+        assert_eq!(c.counters.misses, 2);
+    }
+
+    #[test]
+    fn lookup_filtered_counts_unusable_as_miss() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        // The stored entry is SIMD; a SISD-only consumer cannot use it.
+        assert!(c.lookup_filtered(&fp("a"), &key("k"), |e| !e.params.s.ve).is_none());
+        assert_eq!(c.counters.hits, 0);
+        assert_eq!(c.counters.misses, 1);
+        assert!(c.lookup_filtered(&fp("a"), &key("k"), |_| true).is_some());
+        assert_eq!(c.counters.hits, 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k1"), entry(1e-4));
+        c.insert(&fp("a"), &key("k2"), entry(2e-4));
+        c.insert(&fp("b"), &TuneKey::with_shape("k3", 128, "big"), entry(3e-4));
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = TuneCache::from_json(&j);
+        assert_eq!(c2.len(), 3);
+        for (f, k) in [
+            (fp("a"), key("k1")),
+            (fp("a"), key("k2")),
+            (fp("b"), TuneKey::with_shape("k3", 128, "big")),
+        ] {
+            assert_eq!(c2.peek(&f, &k), c.peek(&f, &k), "{f} {k}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let path = tmp("roundtrip");
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        c.save(&path).unwrap();
+        let c2 = TuneCache::load(&path).unwrap();
+        assert_eq!(c2.peek(&fp("a"), &key("k")), c.peek(&fp("a"), &key("k")));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_cold_start() {
+        let c = TuneCache::load(tmp("never_written")).unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn version_mismatch_is_cold_start() {
+        let v = Json::parse(r#"{"version": 999, "entries": [{"junk": 1}]}"#).unwrap();
+        assert!(TuneCache::from_json(&v).is_empty());
+    }
+
+    #[test]
+    fn malformed_entries_are_skipped_not_fatal() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        let mut j = c.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(entries)) = m.get_mut("entries") {
+                entries.push(Json::parse(r#"{"device": "x"}"#).unwrap());
+            }
+        }
+        let c2 = TuneCache::from_json(&j);
+        assert_eq!(c2.len(), 1);
+    }
+
+    #[test]
+    fn shard_cap_survives_roundtrip() {
+        let mut c = TuneCache::with_shard_cap(200);
+        for i in 0..100 {
+            c.insert(&fp("a"), &key(&format!("k{i}")), entry(1e-4 + i as f64 * 1e-6));
+        }
+        assert_eq!(c.len(), 100);
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = TuneCache::from_json(&j);
+        assert_eq!(c2.len(), 100, "no entries may be evicted while loading");
+        assert_eq!(c2.counters.evictions, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        let mut c = TuneCache::with_shard_cap(2);
+        c.insert(&fp("a"), &key("k1"), entry(1.0));
+        c.insert(&fp("a"), &key("k2"), entry(2.0));
+        // Touch k1 so k2 becomes the LRU entry.
+        assert!(c.lookup(&fp("a"), &key("k1")).is_some());
+        c.insert(&fp("a"), &key("k3"), entry(3.0));
+        assert_eq!(c.counters.evictions, 1);
+        assert!(c.peek(&fp("a"), &key("k1")).is_some());
+        assert!(c.peek(&fp("a"), &key("k2")).is_none(), "LRU entry must go");
+        assert!(c.peek(&fp("a"), &key("k3")).is_some());
+        // Other shards are unaffected by this shard's bound.
+        c.insert(&fp("b"), &key("k4"), entry(4.0));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn merge_prefers_better_scores() {
+        let mut ours = TuneCache::new();
+        ours.insert(&fp("a"), &key("k"), entry(1e-4));
+        let mut theirs = TuneCache::new();
+        theirs.insert(&fp("a"), &key("k"), entry(5e-4)); // worse
+        theirs.insert(&fp("a"), &key("k2"), entry(2e-4)); // new
+        assert_eq!(ours.merge(&theirs), 1);
+        assert_eq!(ours.peek(&fp("a"), &key("k")).unwrap().score, 1e-4);
+        assert!(ours.peek(&fp("a"), &key("k2")).is_some());
+
+        let mut theirs_better = TuneCache::new();
+        theirs_better.insert(&fp("a"), &key("k"), entry(1e-5));
+        assert_eq!(ours.merge(&theirs_better), 1);
+        assert_eq!(ours.peek(&fp("a"), &key("k")).unwrap().score, 1e-5);
+    }
+
+    #[test]
+    fn import_from_file() {
+        let path = tmp("import");
+        let mut shipped = TuneCache::new();
+        shipped.insert(&fp("a"), &key("k"), entry(1e-4));
+        shipped.export(&path).unwrap();
+        let mut c = TuneCache::new();
+        assert_eq!(c.import(&path).unwrap(), 1);
+        assert!(c.peek(&fp("a"), &key("k")).is_some());
+        assert_eq!(c.counters.imported, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn invalidate_removes_entry() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        assert!(c.invalidate(&fp("a"), &key("k")));
+        assert!(!c.invalidate(&fp("a"), &key("k")));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn speedup_and_entry_sanity() {
+        let e = entry(1e-4);
+        assert!((e.speedup() - 2.0).abs() < 1e-12);
+        assert!(e.updated_unix > 0);
+    }
+}

@@ -11,13 +11,21 @@ pub mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, VariantEntry};
 
+// The live compile cache needs the PJRT runtime (`xla` crate); the
+// manifest above is plain JSON and stays in the default build.
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
+#[cfg(feature = "pjrt")]
 use std::time::Duration;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::tunespace::Structural;
 
 /// Lazy per-spec compile cache: the run-time "function generator".
@@ -25,6 +33,7 @@ use crate::tunespace::Structural;
 /// Variants are compiled at most once per process (a regenerated kernel in
 /// the paper is likewise kept in its code buffer); the *first* compile of
 /// each variant is the honest codegen cost.
+#[cfg(feature = "pjrt")]
 pub struct CodeCache<'rt> {
     rt: &'rt Runtime,
     spec: ArtifactSpec,
@@ -34,6 +43,7 @@ pub struct CodeCache<'rt> {
     compiles: u32,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'rt> CodeCache<'rt> {
     pub fn new(rt: &'rt Runtime, spec: ArtifactSpec) -> CodeCache<'rt> {
         CodeCache {
@@ -93,10 +103,9 @@ impl<'rt> CodeCache<'rt> {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
-    use crate::tunespace::Structural;
 
     fn manifest() -> Option<Manifest> {
         Manifest::load(crate::paths::artifacts_dir()).ok()

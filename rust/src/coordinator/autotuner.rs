@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use super::decision::RegenDecision;
 use super::evaluator::{EvalMode, Evaluator};
-use super::stats::{ExploredVersion, TuneStats};
+use super::stats::{ExploredVersion, TuneStats, WarmOutcome};
 use crate::backend::{Backend, EvalData, KernelVersion};
 use crate::simulator::RefKind;
 use crate::tunespace::{ExplorationPlan, Phase, TuningParams};
@@ -67,8 +67,17 @@ pub struct AutoTuner {
     /// Score of the initial reference (baseline for gain estimation).
     ref_score: Option<f64>,
     best: Option<(TuningParams, f64)>,
+    /// Whether `best`'s score was measured on real data. Persisted scores
+    /// must be real-data comparable (§3.4), so a training-data best is
+    /// re-scored once when exploration completes.
+    best_is_real: bool,
     next_wake: f64,
     last_phase: Phase,
+    /// Cached winner awaiting validation (persistent-cache warm start).
+    warm: Option<TuningParams>,
+    /// External regeneration gate — a [`crate::service::TuningService`]
+    /// clears it when the *global* budget across lanes is exhausted.
+    regen_enabled: bool,
     pub stats: TuneStats,
 }
 
@@ -86,10 +95,36 @@ impl AutoTuner {
             active_score: None,
             ref_score: None,
             best: None,
+            best_is_real: false,
             next_wake: 0.0,
             last_phase,
+            warm: None,
+            regen_enabled: true,
             stats: TuneStats::default(),
         }
+    }
+
+    /// A tuner warm-started from a persistent-cache outcome: instead of
+    /// the full two-phase exploration it generates `warm`, runs one short
+    /// validation evaluation, and — when the cached variant still beats
+    /// the reference — adopts it and declares exploration done. A warm
+    /// candidate that fails to generate (stale artifact) or no longer
+    /// wins falls back to the full exploration plan.
+    ///
+    /// A candidate outside `ve_filter`'s class is ignored (cold start):
+    /// fair-comparison runs must not smuggle in the other class.
+    pub fn with_warm_start(
+        cfg: TunerConfig,
+        length: u32,
+        ve_filter: Option<bool>,
+        warm: TuningParams,
+    ) -> AutoTuner {
+        let mut tuner = AutoTuner::new(cfg, length, ve_filter);
+        let in_class = ve_filter.map(|ve| warm.s.ve == ve).unwrap_or(true);
+        if in_class {
+            tuner.warm = Some(warm);
+        }
+        tuner
     }
 
     pub fn active(&self) -> &KernelVersion {
@@ -98,6 +133,24 @@ impl AutoTuner {
 
     pub fn best(&self) -> Option<(TuningParams, f64)> {
         self.best
+    }
+
+    /// Measured score of the initial reference, once bootstrapped.
+    pub fn ref_score(&self) -> Option<f64> {
+        self.ref_score
+    }
+
+    /// True while a cache warm start is pending validation.
+    pub fn warm_start_pending(&self) -> bool {
+        self.warm.is_some()
+    }
+
+    /// External regeneration gate (default on). While off, the tuner
+    /// keeps serving the active function and accounting time but will
+    /// not generate or evaluate new versions — the multi-kernel service
+    /// uses this to enforce a global budget across concurrent lanes.
+    pub fn set_regen_enabled(&mut self, on: bool) {
+        self.regen_enabled = on;
     }
 
     /// Current virtual/real time: application time + tool overhead (the
@@ -149,12 +202,86 @@ impl AutoTuner {
             return Ok(StepEvent::Idle);
         }
 
-        // Regeneration decision (§3.3).
+        // External (service-level) gate, then the local regeneration
+        // decision (§3.3).
+        if !self.regen_enabled {
+            return Ok(StepEvent::Idle);
+        }
         if !self.cfg.decision.allow(self.stats.overhead, self.stats.app_time, self.stats.gained) {
             return Ok(StepEvent::Idle);
         }
 
+        // Warm start: validate the cached winner before (instead of)
+        // walking the exploration plan.
+        if let Some(p) = self.warm.take() {
+            return self.warm_validate(backend, p);
+        }
+
         self.explore_next(backend)
+    }
+
+    /// Validate a persistent-cache candidate: one generate + a short
+    /// real-data evaluation of both the reference and the candidate
+    /// (§3.4: real data is mandatory for accept decisions — the cached
+    /// winner is normally a phase-2 configuration, and persisted scores
+    /// must stay comparable across generations and across `merge`d
+    /// caches). Adopting it skips the full two-phase exploration; a
+    /// stale or no-longer-winning candidate falls back to the untouched
+    /// exploration plan.
+    fn warm_validate<B: Backend>(&mut self, backend: &mut B, p: TuningParams) -> Result<StepEvent> {
+        let gen_cost = match backend.generate(p) {
+            Ok(c) => c,
+            Err(e) => {
+                // Stale artifact: the cached winner can no longer be
+                // regenerated (artifact tree changed under the cache).
+                log::warn!("warm-start candidate {p} is stale ({e:#}); falling back to exploration");
+                self.stats.warm_outcome = Some(WarmOutcome::Stale);
+                return self.explore_next(backend);
+            }
+        };
+        self.stats.generate_calls += 1;
+        self.stats.overhead += gen_cost;
+
+        // Warm validation precedes any exploration, so the active
+        // function is still the initial reference: re-score it under the
+        // real-data mode for an apples-to-apples comparison.
+        let mode = EvalMode::RealAveraged(self.cfg.real_samples);
+        let ref_ev = Evaluator::evaluate(backend, &self.active, mode)?;
+        self.stats.overhead += ref_ev.cost;
+        let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(p), mode)?;
+        self.stats.overhead += ev.cost;
+
+        let swapped = ev.score < ref_ev.score;
+        if swapped {
+            // The cached winner still wins on this device: adopt it and
+            // skip the full exploration — the whole point of the cache.
+            // Baseline and active move to the real-data scores so the
+            // write-back pair (score, ref_score) shares one mode.
+            self.best = Some((p, ev.score));
+            self.best_is_real = true;
+            self.active = KernelVersion::Variant(p);
+            self.active_score = Some(ev.score);
+            self.ref_score = Some(ref_ev.score);
+            self.stats.swaps += 1;
+            self.stats.last_swap_at = Some(self.now());
+            self.stats.warm_outcome = Some(WarmOutcome::Adopted);
+            self.stats.exploration_done_at = Some(self.now());
+        } else {
+            // Generated fine but no longer beats the reference: the
+            // landscape drifted; explore from scratch. The loser is NOT
+            // seeded into `best` (its real-data score is incommensurable
+            // with phase-1 training scores and would risk mis-seeding the
+            // phase-2 structure), and phase-1 state stays untouched so
+            // the fallback exploration is internally consistent.
+            self.stats.warm_outcome = Some(WarmOutcome::Rejected);
+        }
+        self.stats.explored.push(ExploredVersion {
+            params: p,
+            score: ev.score,
+            at: self.now(),
+            swapped_in: swapped,
+        });
+        Ok(StepEvent::Explored { params: p, score: ev.score, swapped })
     }
 
     /// Generate + evaluate the next candidate, bypassing the wake/budget
@@ -162,6 +289,22 @@ impl AutoTuner {
     fn explore_next<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
         let best_params = self.best.map(|(p, _)| p);
         let Some(cand) = self.plan.next(best_params) else {
+            // Exploration exhausted. The score that outlives this run
+            // (cache write-back) must be real-data comparable (§3.4): if
+            // the overall best was only ever measured on training data,
+            // re-score it on real data once.
+            if let Some((bp, _)) = self.best {
+                if !self.best_is_real {
+                    let ev = Evaluator::evaluate(
+                        backend,
+                        &KernelVersion::Variant(bp),
+                        EvalMode::RealAveraged(self.cfg.real_samples),
+                    )?;
+                    self.stats.overhead += ev.cost;
+                    self.best = Some((bp, ev.score));
+                    self.best_is_real = true;
+                }
+            }
             self.stats.exploration_done_at = Some(self.now());
             return Ok(StepEvent::ExplorationDone);
         };
@@ -178,12 +321,14 @@ impl AutoTuner {
 
         // Generate (machine code) + evaluate the candidate.
         let gen_cost = backend.generate(cand)?;
+        self.stats.generate_calls += 1;
         self.stats.overhead += gen_cost;
         let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(cand), self.eval_mode())?;
         self.stats.overhead += ev.cost;
 
         if self.best.map(|(_, s)| ev.score < s).unwrap_or(true) {
             self.best = Some((cand, ev.score));
+            self.best_is_real = matches!(self.eval_mode(), EvalMode::RealAveraged(_));
         }
 
         // Replacement decision: "simply comparing the calculated
@@ -346,6 +491,83 @@ mod tests {
         if let KernelVersion::Variant(p) = tuner.active() {
             assert!(!p.s.ve, "SISD-filtered run must keep SISD active");
         }
+    }
+
+    #[test]
+    fn warm_start_adopts_cached_winner_with_one_generate() {
+        // Cold run to find the landscape optimum.
+        let mut b = MockBackend::new(64, 20);
+        let mut cold = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut cold, &mut b, 60_000);
+        assert!(cold.exploration_done());
+        let (best_p, best_s) = cold.best().unwrap();
+        let cold_gens = cold.stats.generate_calls;
+        assert!(cold_gens >= 50, "cold run explores the space: {cold_gens}");
+
+        // Warm run on a fresh backend starting from the cached winner.
+        let mut b2 = MockBackend::new(64, 21);
+        let mut warm = AutoTuner::with_warm_start(fast_cfg(), 64, None, best_p);
+        assert!(warm.warm_start_pending());
+        drive(&mut warm, &mut b2, 5_000);
+        assert_eq!(warm.stats.warm_outcome, Some(WarmOutcome::Adopted));
+        assert!(warm.exploration_done());
+        assert_eq!(warm.stats.generate_calls, 1, "warm start pays exactly one generate");
+        let (warm_p, warm_s) = warm.best().unwrap();
+        assert_eq!(warm_p.full_id(), best_p.full_id());
+        assert!(warm_s <= best_s * 1.02, "warm {warm_s} vs cold {best_s}");
+        assert!(warm.active().is_variant());
+    }
+
+    #[test]
+    fn warm_start_rejected_falls_back_to_exploration() {
+        // A variant *worse* than the reference (SISD rolled loop on this
+        // landscape): validation must reject it and explore fully.
+        let worse = TuningParams::phase1_default(crate::tunespace::Structural::new(false, 1, 1, 1));
+        let mut b = MockBackend::new(64, 22);
+        assert!(crate::backend::mock::default_landscape(&worse) > b.ref_time);
+        let mut tuner = AutoTuner::with_warm_start(fast_cfg(), 64, None, worse);
+        drive(&mut tuner, &mut b, 60_000);
+        assert_eq!(tuner.stats.warm_outcome, Some(WarmOutcome::Rejected));
+        assert!(tuner.exploration_done());
+        assert!(tuner.stats.generate_calls > 10, "full exploration must follow");
+        let (got, _) = tuner.best().unwrap();
+        let (expect, _) = b.best_possible();
+        assert_eq!(got.s, expect.s, "fallback still finds the optimum");
+    }
+
+    #[test]
+    fn warm_start_stale_artifact_falls_back() {
+        // elems_per_iter = 4*2*2*8 = 128 > 64: generate fails on this
+        // backend — the stale-cache case.
+        let stale = TuningParams::phase1_default(crate::tunespace::Structural::new(true, 2, 2, 8));
+        let mut b = MockBackend::new(64, 23);
+        let mut tuner = AutoTuner::with_warm_start(fast_cfg(), 64, None, stale);
+        drive(&mut tuner, &mut b, 60_000);
+        assert_eq!(tuner.stats.warm_outcome, Some(WarmOutcome::Stale));
+        assert!(tuner.exploration_done(), "fallback exploration must run to completion");
+        let (expect, _) = b.best_possible();
+        assert_eq!(tuner.best().unwrap().0.s, expect.s);
+    }
+
+    #[test]
+    fn warm_start_outside_ve_filter_is_ignored() {
+        let simd = TuningParams::phase1_default(crate::tunespace::Structural::new(true, 2, 2, 4));
+        let tuner = AutoTuner::with_warm_start(fast_cfg(), 64, Some(false), simd);
+        assert!(!tuner.warm_start_pending(), "SIMD candidate must not enter a SISD-only run");
+    }
+
+    #[test]
+    fn regen_gate_blocks_exploration() {
+        let mut b = MockBackend::new(64, 24);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        tuner.set_regen_enabled(false);
+        drive(&mut tuner, &mut b, 5_000);
+        // Bootstrap reference measurement still happens; no exploration.
+        assert_eq!(tuner.stats.explored_count(), 0);
+        assert!(tuner.ref_score().is_some());
+        tuner.set_regen_enabled(true);
+        drive(&mut tuner, &mut b, 60_000);
+        assert!(tuner.stats.explored_count() > 0, "re-enabling resumes exploration");
     }
 
     #[test]

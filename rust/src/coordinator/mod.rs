@@ -23,4 +23,4 @@ pub mod stats;
 pub use autotuner::{AutoTuner, StepEvent, TunerConfig};
 pub use decision::RegenDecision;
 pub use evaluator::{EvalMode, Evaluator};
-pub use stats::TuneStats;
+pub use stats::{TuneStats, WarmOutcome};

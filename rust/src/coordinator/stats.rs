@@ -12,6 +12,20 @@ pub struct ExploredVersion {
     pub swapped_in: bool,
 }
 
+/// What happened to a warm start taken from the persistent tuning cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmOutcome {
+    /// The cached variant validated better than the reference and was
+    /// adopted; the full two-phase exploration was skipped.
+    Adopted,
+    /// The cached variant generated but no longer beats the reference
+    /// (device or data regime drifted); full exploration proceeds.
+    Rejected,
+    /// The cached variant failed `Backend::generate` (stale artifact);
+    /// full exploration proceeds and the cache records a stale hit.
+    Stale,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct TuneStats {
     /// Versions generated + evaluated so far ("Explored", Table 4).
@@ -32,6 +46,12 @@ pub struct TuneStats {
     pub last_swap_at: Option<f64>,
     /// Number of replacements of the active function.
     pub swaps: u32,
+    /// `Backend::generate` invocations this tuner issued — the number the
+    /// warm-start path exists to minimise.
+    pub generate_calls: u64,
+    /// Warm-start outcome, once known (`None` for cold tuners and before
+    /// the warm candidate was validated).
+    pub warm_outcome: Option<WarmOutcome>,
 }
 
 impl TuneStats {

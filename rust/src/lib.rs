@@ -20,13 +20,43 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
+//!
+//! ## L3 persistence and serving (the production layer)
+//!
+//! On top of the single-stream tuner, L3 has a persistence and serving
+//! layer so regeneration work amortises across *runs* and *kernels*, not
+//! just across calls of one process:
+//!
+//! * [`cache`] — a persistent, versioned tuning cache. Outcomes are keyed
+//!   by ([`cache::DeviceFingerprint`], [`cache::TuneKey`]) and stored as
+//!   JSON on disk (`results/tunecache.json` by default, `DEGOAL_TUNECACHE`
+//!   override), with LRU-bounded in-memory shards and hit/miss/stale
+//!   counters. A cache file can be exported and shipped with a deployment
+//!   to warm-start cold processes ("autotune cache with the binary").
+//! * [`coordinator::AutoTuner`] warm start — a tuner constructed from a
+//!   cached entry pays one `generate` + one short validation instead of
+//!   the full two-phase exploration; a stale artifact (generate failure)
+//!   falls back to full exploration.
+//! * [`service`] — a multi-kernel tuning service: N independent tuner
+//!   lanes (one per [`cache::TuneKey`]) over one shared cache, multiplexed
+//!   `app_call`s from many logical clients, and a *global* regeneration
+//!   budget so concurrent exploration cannot blow the paper's overhead
+//!   envelope. `degoal-rt service` replays a mixed streamcluster + VIPS
+//!   workload through it and reports cold-vs-warm behaviour.
+//!
+//! The host-PJRT execution path (`runtime`, `backend::host`,
+//! `codegen::CodeCache`) is gated behind the `pjrt` cargo feature; the
+//! default build is fully self-contained (simulator + mock backends).
 
 pub mod backend;
 pub mod baselines;
+pub mod cache;
 pub mod codegen;
 pub mod coordinator;
 pub mod experiments;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod tunespace;
 pub mod util;
@@ -59,5 +89,15 @@ pub mod paths {
             return PathBuf::from(p);
         }
         PathBuf::from("results")
+    }
+
+    /// The persistent tuning-cache file: `$DEGOAL_TUNECACHE`, else
+    /// `<results dir>/tunecache.json`. Ship this file with a deployment
+    /// to warm-start tuning on identical devices.
+    pub fn tunecache_path() -> PathBuf {
+        if let Ok(p) = std::env::var("DEGOAL_TUNECACHE") {
+            return PathBuf::from(p);
+        }
+        results_dir().join("tunecache.json")
     }
 }

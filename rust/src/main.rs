@@ -4,19 +4,29 @@
 //!   experiment <id>|all [--quick]   regenerate a paper table/figure
 //!   tune [--input I] [--core C] [--sisd]
 //!                                   one online auto-tuning run (simulator)
+//!   service [--core C] [--calls N] [--cache PATH] [--seed S]
+//!                                   multi-kernel tuning service: mixed
+//!                                   streamcluster+vips workload, cold vs
+//!                                   warm via the persistent tuning cache
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
+//!                                   (needs the `pjrt` feature)
 //!   cores                           list simulated core configs
 //!   artifacts-check                 validate artifacts/manifest.json
 
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use degoal_rt::backend::host::HostBackend;
 use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::Backend as _;
+use degoal_rt::cache::{TuneCache, TuneKey};
 use degoal_rt::codegen::Manifest;
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::experiments;
+#[cfg(feature = "pjrt")]
 use degoal_rt::runtime::Runtime;
-use degoal_rt::simulator::{core_by_name, KernelKind, ALL_SIM_CORES};
+use degoal_rt::service::{LaneId, ServiceConfig, TuningService};
+use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
 use degoal_rt::util::table::{fnum, Table};
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
@@ -86,8 +96,53 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "service" => {
+            let core = core_by_name(args.get_or("core", "DI-I1"))
+                .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
+            let calls = args.get_usize("calls", 120_000);
+            let seed = args.get_u64("seed", 42);
+            let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
+
+            println!(
+                "== multi-kernel tuning service on {} (mixed streamcluster + vips) ==",
+                core.name
+            );
+            let (cold, cold_lines, cache) = run_service_phase(core, calls, seed, TuneCache::new())?;
+            print_service_phase("cold (empty cache)", &cold, &cold_lines);
+            // Merge into whatever is already on disk — the demo must not
+            // clobber a production tunecache at the default path.
+            let mut on_disk = TuneCache::load_or_default(&cache_path);
+            let adopted = on_disk.merge(&cache);
+            on_disk.save(&cache_path)?;
+            println!(
+                "  cache merged into {} ({} new/updated entries, {} total)",
+                cache_path.display(),
+                adopted,
+                on_disk.len()
+            );
+
+            let reloaded = TuneCache::load(&cache_path)?;
+            let (warm, warm_lines, _) =
+                run_service_phase(core, calls, seed + 100, reloaded)?;
+            print_service_phase("warm (cache reloaded from disk)", &warm, &warm_lines);
+
+            let gen_ratio = cold.generate_calls as f64 / warm.generate_calls.max(1) as f64;
+            let oh_ratio = cold.overhead / warm.overhead.max(1e-12);
+            println!(
+                "\n  warm start: {:.1}x fewer generate calls ({} -> {}), {:.1}x less tuning \
+                 overhead ({:.1} ms -> {:.1} ms)",
+                gen_ratio,
+                cold.generate_calls,
+                warm.generate_calls,
+                oh_ratio,
+                cold.overhead * 1e3,
+                warm.overhead * 1e3,
+            );
+            Ok(())
+        }
+        #[cfg(feature = "pjrt")]
         "host-tune" => {
-            let dim = args.get_usize("dim", 32) as u32;
+            let dim = args.get_u32("dim", 32);
             let rt = Runtime::cpu()?;
             let man = Manifest::load(degoal_rt::paths::artifacts_dir())?;
             let spec = man
@@ -140,18 +195,37 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!("{}", t.render());
             Ok(())
         }
+        #[cfg(not(feature = "pjrt"))]
+        "host-tune" => {
+            anyhow::bail!(
+                "host-tune needs the PJRT runtime: rebuild with `--features pjrt` \
+                 (and the xla dependency enabled in Cargo.toml)"
+            )
+        }
         "artifacts-check" => {
             let man = Manifest::load(degoal_rt::paths::artifacts_dir())?;
-            let rt = Runtime::cpu()?;
+            #[cfg(feature = "pjrt")]
+            {
+                let rt = Runtime::cpu()?;
+                for spec in &man.specs {
+                    let path = spec.root.join(&spec.ref_path);
+                    let exe = rt.load_hlo_text(&path)?;
+                    println!(
+                        "{} len={} variants={} ref compiles in {:?}",
+                        spec.benchmark,
+                        spec.length,
+                        spec.variants.len(),
+                        exe.compile_time()
+                    );
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
             for spec in &man.specs {
-                let path = spec.root.join(&spec.ref_path);
-                let exe = rt.load_hlo_text(&path)?;
                 println!(
-                    "{} len={} variants={} ref compiles in {:?}",
+                    "{} len={} variants={} (manifest only: compile check needs --features pjrt)",
                     spec.benchmark,
                     spec.length,
                     spec.variants.len(),
-                    exe.compile_time()
                 );
             }
             println!("manifest OK: {} specs", man.specs.len());
@@ -160,11 +234,81 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "degoal-rt — online auto-tuning of machine code in short-running kernels\n\
-                 usage: degoal-rt <experiment [id|all] [--quick] | tune | host-tune | cores | artifacts-check>\n\
+                 usage: degoal-rt <experiment [id|all] [--quick] | tune | service | host-tune | cores | artifacts-check>\n\
                  experiments: {:?}",
                 experiments::ALL
             );
             Ok(())
         }
+    }
+}
+
+/// One pass of the mixed streamcluster + vips workload through the
+/// tuning service: three kernel lanes on one simulated core, interleaved
+/// round-robin (many logical clients sharing the device). Returns the
+/// aggregate stats, per-lane report lines, and the (checkpointed) cache.
+fn run_service_phase(
+    core: &'static CoreConfig,
+    calls: usize,
+    seed: u64,
+    cache: TuneCache,
+) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache)> {
+    let cfg = ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let mut svc: TuningService<SimBackend> = TuningService::with_cache(cfg, cache);
+    let kinds = [
+        KernelKind::Distance { dim: 32, batch: 256 },
+        KernelKind::Distance { dim: 64, batch: 256 },
+        KernelKind::Lintra { row_len: 4800, rows: 8 },
+    ];
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (i, kind) in kinds.iter().enumerate() {
+        let b = SimBackend::new(core, *kind, seed + i as u64);
+        let key = TuneKey::new(b.kernel_id(), kind.length());
+        lanes.push(svc.register(key, Some(true), b));
+    }
+    for i in 0..calls {
+        svc.app_call(lanes[i % lanes.len()])?;
+    }
+    let stats = svc.stats();
+    let mut lines = Vec::new();
+    for &l in &lanes {
+        let t = svc.tuner(l).unwrap();
+        let key = svc.lane_key(l).unwrap();
+        let (best, speedup) = match (t.best(), t.ref_score()) {
+            (Some((p, s)), Some(r)) => (p.to_string(), r / s),
+            _ => ("-".into(), 1.0),
+        };
+        lines.push(format!(
+            "    {key}: best={best} speedup={speedup:.2}x explored={} gen={} done={}",
+            t.stats.explored_count(),
+            t.stats.generate_calls,
+            t.exploration_done(),
+        ));
+    }
+    Ok((stats, lines, svc.into_cache()))
+}
+
+fn print_service_phase(label: &str, st: &degoal_rt::service::ServiceStats, lines: &[String]) {
+    println!(
+        "  {label}: lanes={} (warm {}) calls={} app={:.3}s overhead={:.1}ms ({:.2} %) \
+         explored={} generate={} swaps={} cache[h/m/s]={}/{}/{}",
+        st.lanes,
+        st.warm_lanes,
+        st.kernel_calls,
+        st.app_time,
+        st.overhead * 1e3,
+        100.0 * st.overhead_frac(),
+        st.explored,
+        st.generate_calls,
+        st.swaps,
+        st.cache.hits,
+        st.cache.misses,
+        st.cache.stale,
+    );
+    for l in lines {
+        println!("{l}");
     }
 }

@@ -1,0 +1,442 @@
+//! Multi-kernel tuning service — many tuner lanes, one shared cache,
+//! one global regeneration budget.
+//!
+//! The single-stream [`AutoTuner`] drives exactly one kernel stream; a
+//! real deployment (the ROADMAP's serving-shaped north star) multiplexes
+//! *many* logical clients, each with their own kernel / trip-length /
+//! input-shape, over one device. [`TuningService`] owns:
+//!
+//! * N independent lanes — one `(TuneKey, AutoTuner, Backend)` triple per
+//!   kernel stream, registered with [`TuningService::register`] and driven
+//!   with interleaved [`TuningService::app_call`]s;
+//! * one shared persistent [`TuneCache`]: lanes warm-start from it on
+//!   registration and write their winners back when exploration finishes
+//!   ([`TuningService::checkpoint`] also flushes unfinished lanes' best so
+//!   short-lived processes still seed the next run);
+//! * a **global** regeneration budget: each lane keeps the paper's local
+//!   §3.3 decision, but the service additionally disables regeneration on
+//!   every lane while the *aggregate* overhead across lanes exceeds the
+//!   global allowance — N concurrent explorations must not multiply the
+//!   paper's 0.2–4.2 % envelope by N.
+//!
+//! `degoal-rt service` replays a mixed streamcluster + VIPS workload
+//! through this type on `SimBackend` and prints cold-vs-warm behaviour.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::backend::Backend;
+use crate::cache::{CacheCounters, CacheEntry, DeviceFingerprint, TuneCache, TuneKey};
+use crate::coordinator::{AutoTuner, RegenDecision, TunerConfig, WarmOutcome};
+
+/// Service policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Per-lane tuner policy (local wake period, decision, eval modes).
+    pub tuner: TunerConfig,
+    /// Global regeneration budget over the *sum* of all lanes' app time,
+    /// overhead, and gains. Defaults to the paper's 1 % / 10 % — i.e. the
+    /// whole service stays inside the envelope one tuner was allowed.
+    pub global: RegenDecision,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { tuner: TunerConfig::default(), global: RegenDecision::default() }
+    }
+}
+
+/// Handle to a registered kernel stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneId(pub usize);
+
+struct Lane<B: Backend> {
+    key: TuneKey,
+    fp: DeviceFingerprint,
+    backend: B,
+    tuner: AutoTuner,
+    warm_hit: bool,
+    /// Warm outcome already propagated to the cache counters.
+    warm_reported: bool,
+    /// Winner already written back to the cache.
+    committed: bool,
+}
+
+/// Aggregate service statistics (Table-4-style counters summed over
+/// lanes, plus cache behaviour).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub lanes: usize,
+    /// Lanes that found a cache entry at registration.
+    pub warm_lanes: usize,
+    /// Lanes whose exploration has finished.
+    pub done_lanes: usize,
+    pub kernel_calls: u64,
+    pub app_time: f64,
+    pub overhead: f64,
+    pub gained: f64,
+    pub explored: usize,
+    pub generate_calls: u64,
+    pub swaps: u32,
+    pub cache: CacheCounters,
+}
+
+impl ServiceStats {
+    pub fn total_time(&self) -> f64 {
+        self.app_time + self.overhead
+    }
+
+    /// Aggregate overhead fraction — the number the global budget bounds.
+    pub fn overhead_frac(&self) -> f64 {
+        let t = self.total_time();
+        if t > 0.0 {
+            self.overhead / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The multi-kernel tuning service. Generic over the backend type so the
+/// same service drives simulated cores, the mock landscape, or (with the
+/// `pjrt` feature) real host execution.
+pub struct TuningService<B: Backend> {
+    cfg: ServiceConfig,
+    cache: TuneCache,
+    lanes: Vec<Lane<B>>,
+    /// Lane index by (device fingerprint, tune key): the same kernel
+    /// stream on two devices is two lanes.
+    by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
+    /// Running (overhead, app_time, gained) sums over all lanes, updated
+    /// incrementally so the global budget check on the request path is
+    /// O(1) instead of O(lanes).
+    agg: (f64, f64, f64),
+}
+
+impl<B: Backend> TuningService<B> {
+    /// A service with an empty (cold) cache.
+    pub fn new(cfg: ServiceConfig) -> TuningService<B> {
+        TuningService::with_cache(cfg, TuneCache::new())
+    }
+
+    /// A service over an existing cache (e.g. [`TuneCache::load`] of a
+    /// previous run, or a cache shipped with the deployment).
+    pub fn with_cache(cfg: ServiceConfig, cache: TuneCache) -> TuningService<B> {
+        TuningService {
+            cfg,
+            cache,
+            lanes: Vec::new(),
+            by_key: HashMap::new(),
+            agg: (0.0, 0.0, 0.0),
+        }
+    }
+
+    pub fn cache(&self) -> &TuneCache {
+        &self.cache
+    }
+
+    pub fn cache_mut(&mut self) -> &mut TuneCache {
+        &mut self.cache
+    }
+
+    /// Register a kernel stream. Consults the cache under the backend's
+    /// device fingerprint: a usable hit warm-starts the lane's tuner, a
+    /// miss (or an entry outside `ve_filter`'s class) starts cold.
+    /// Registering an already-known (device, key) pair returns the
+    /// existing lane (idempotent — many logical clients may share a
+    /// stream).
+    pub fn register(&mut self, key: TuneKey, ve_filter: Option<bool>, backend: B) -> LaneId {
+        let fp = backend.device_fingerprint();
+        let map_key = (fp.clone(), key.clone());
+        if let Some(&idx) = self.by_key.get(&map_key) {
+            return LaneId(idx);
+        }
+        let cached = self.cache.lookup_filtered(&fp, &key, |e| {
+            ve_filter.map(|ve| e.params.s.ve == ve).unwrap_or(true)
+        });
+        let warm_hit = cached.is_some();
+        let tuner = match cached {
+            Some(entry) => {
+                log::info!(
+                    "lane {key}: warm start from cache ({} @ {:.3}x)",
+                    entry.params,
+                    entry.speedup()
+                );
+                AutoTuner::with_warm_start(self.cfg.tuner, key.length, ve_filter, entry.params)
+            }
+            None => AutoTuner::new(self.cfg.tuner, key.length, ve_filter),
+        };
+        let idx = self.lanes.len();
+        self.by_key.insert(map_key, idx);
+        self.lanes.push(Lane {
+            key,
+            fp,
+            backend,
+            tuner,
+            warm_hit,
+            warm_reported: false,
+            committed: false,
+        });
+        LaneId(idx)
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The lane's tuner, for per-lane reporting.
+    pub fn tuner(&self, lane: LaneId) -> Option<&AutoTuner> {
+        self.lanes.get(lane.0).map(|l| &l.tuner)
+    }
+
+    pub fn lane_key(&self, lane: LaneId) -> Option<&TuneKey> {
+        self.lanes.get(lane.0).map(|l| &l.key)
+    }
+
+    /// One application kernel call on `lane` — the service's request
+    /// path. Runs the lane's active function, lets its tuner wake under
+    /// the *global* regeneration budget, propagates warm-start outcomes
+    /// to the cache counters, and writes the winner back when the lane's
+    /// exploration completes.
+    pub fn app_call(&mut self, lane: LaneId) -> Result<f64> {
+        let (overhead, app_time, gained) = self.agg;
+        let allow = self.cfg.global.allow(overhead, app_time, gained);
+        let Some(l) = self.lanes.get_mut(lane.0) else {
+            bail!("unknown lane {lane:?}");
+        };
+        l.tuner.set_regen_enabled(allow);
+        let before = {
+            let s = &l.tuner.stats;
+            (s.overhead, s.app_time, s.gained)
+        };
+        let dt = l.tuner.app_call(&mut l.backend)?;
+        {
+            let s = &l.tuner.stats;
+            self.agg.0 += s.overhead - before.0;
+            self.agg.1 += s.app_time - before.1;
+            self.agg.2 += s.gained - before.2;
+        }
+
+        // Warm-start outcome → cache counters (once per lane). A stale
+        // entry is also invalidated so the re-explored winner replaces it.
+        if !l.warm_reported {
+            if let Some(outcome) = l.tuner.stats.warm_outcome {
+                l.warm_reported = true;
+                if outcome == WarmOutcome::Stale {
+                    self.cache.note_stale();
+                    self.cache.invalidate(&l.fp, &l.key);
+                }
+            }
+        }
+
+        // Write-back: exploration finished — persist the winner with its
+        // measured score and the reference score it beat. A "best" that
+        // loses to the reference is worthless as a warm start (it would
+        // be validated, rejected, and re-explored every run): skip it.
+        if !l.committed && l.tuner.exploration_done() {
+            l.committed = true;
+            if let (Some((params, score)), Some(ref_score)) =
+                (l.tuner.best(), l.tuner.ref_score())
+            {
+                if score < ref_score {
+                    let explored = l.tuner.stats.explored_count() as u32;
+                    self.cache.insert(
+                        &l.fp,
+                        &l.key,
+                        CacheEntry::new(params, score, ref_score, explored),
+                    );
+                }
+            }
+        }
+        Ok(dt)
+    }
+
+    /// Write best-so-far entries for lanes whose exploration has not
+    /// finished but already found something better than the reference
+    /// (service shutdown path: a partial search result still warm-starts
+    /// the next run). Returns entries written.
+    pub fn checkpoint(&mut self) -> usize {
+        let mut written = 0;
+        for l in &self.lanes {
+            if l.committed || l.tuner.exploration_done() {
+                continue;
+            }
+            if let (Some((params, score)), Some(ref_score)) = (l.tuner.best(), l.tuner.ref_score())
+            {
+                if score < ref_score {
+                    let explored = l.tuner.stats.explored_count() as u32;
+                    self.cache.insert(
+                        &l.fp,
+                        &l.key,
+                        CacheEntry::new(params, score, ref_score, explored),
+                    );
+                    written += 1;
+                }
+            }
+        }
+        written
+    }
+
+    /// Checkpoint unfinished lanes and persist the cache.
+    pub fn save_cache<P: AsRef<Path>>(&mut self, path: P) -> Result<()> {
+        self.checkpoint();
+        self.cache.save(path)
+    }
+
+    /// Tear the service down, checkpointing unfinished lanes, and hand
+    /// the cache back (shutdown / hand-over path).
+    pub fn into_cache(mut self) -> TuneCache {
+        self.checkpoint();
+        self.cache
+    }
+
+    /// Aggregate statistics over all lanes plus cache counters.
+    pub fn stats(&self) -> ServiceStats {
+        let mut st = ServiceStats {
+            lanes: self.lanes.len(),
+            cache: self.cache.counters,
+            ..Default::default()
+        };
+        for l in &self.lanes {
+            let s = &l.tuner.stats;
+            st.warm_lanes += l.warm_hit as usize;
+            st.done_lanes += l.tuner.exploration_done() as usize;
+            st.kernel_calls += s.kernel_calls;
+            st.app_time += s.app_time;
+            st.overhead += s.overhead;
+            st.gained += s.gained;
+            st.explored += s.explored_count();
+            st.generate_calls += s.generate_calls;
+            st.swaps += s.swaps;
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+    use crate::coordinator::TunerConfig;
+
+    fn fast_cfg() -> ServiceConfig {
+        ServiceConfig {
+            tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    fn drive(svc: &mut TuningService<MockBackend>, lanes: &[LaneId], calls: usize) {
+        for i in 0..calls {
+            svc.app_call(lanes[i % lanes.len()]).unwrap();
+        }
+    }
+
+    #[test]
+    fn register_is_idempotent_per_device_and_key() {
+        let mut svc = TuningService::new(fast_cfg());
+        let a = svc.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 1));
+        let b = svc.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 2));
+        let c = svc.register(TuneKey::new("mock/len32", 32), None, MockBackend::new(32, 3));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(svc.n_lanes(), 2);
+        // The same kernel stream on a *different device* is its own lane,
+        // not an alias of the first device's lane.
+        let mut other = MockBackend::new(64, 4);
+        other.device_tag = "mock1".into();
+        let d = svc.register(TuneKey::new("mock/len64", 64), None, other);
+        assert_ne!(a, d);
+        assert_eq!(svc.n_lanes(), 3);
+    }
+
+    #[test]
+    fn out_of_class_cache_entry_is_a_cold_start_and_a_miss() {
+        use crate::cache::{CacheEntry, DeviceFingerprint};
+        use crate::tunespace::{Structural, TuningParams};
+        let simd = TuningParams::phase1_default(Structural::new(true, 2, 2, 4));
+        let fp = DeviceFingerprint::new("mock", "mock0");
+        let key = TuneKey::new("mock/len64", 64);
+
+        let mut svc = TuningService::new(fast_cfg());
+        svc.cache_mut().insert(&fp, &key, CacheEntry::new(simd, 9e-5, 1.8e-4, 60));
+        // SISD-only lane cannot use the SIMD entry: cold start, honest miss.
+        let lane = svc.register(key, Some(false), MockBackend::new(64, 7));
+        let st = svc.stats();
+        assert_eq!(st.warm_lanes, 0);
+        assert_eq!(st.cache.hits, 0);
+        assert_eq!(st.cache.misses, 1);
+        assert!(!svc.tuner(lane).unwrap().warm_start_pending());
+    }
+
+    #[test]
+    fn lanes_explore_and_write_back() {
+        let mut svc = TuningService::new(fast_cfg());
+        let l64 = svc.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 4));
+        let l96 = svc.register(TuneKey::new("mock/len96", 96), None, MockBackend::new(96, 5));
+        drive(&mut svc, &[l64, l96], 160_000);
+        let st = svc.stats();
+        assert_eq!(st.done_lanes, 2, "both lanes must finish: {st:?}");
+        assert_eq!(svc.cache().len(), 2, "winners written back");
+        assert_eq!(st.warm_lanes, 0);
+        // Each lane's entry matches its tuner's best.
+        for lane in [l64, l96] {
+            let t = svc.tuner(lane).unwrap();
+            let (p, s) = t.best().unwrap();
+            let key = svc.lane_key(lane).unwrap().clone();
+            let fp = DeviceFingerprint::new("mock", "mock0");
+            let e = svc.cache().peek(&fp, &key).unwrap();
+            assert_eq!(e.params, p);
+            assert_eq!(e.score, s);
+            assert!(e.ref_score > e.score, "winner beats the reference");
+        }
+    }
+
+    #[test]
+    fn zero_global_budget_stops_all_lanes() {
+        let mut cfg = fast_cfg();
+        cfg.global = RegenDecision { max_overhead_frac: 0.0, invest_frac: 0.0 };
+        let mut svc = TuningService::new(cfg);
+        let lanes: Vec<LaneId> = (0..4)
+            .map(|i| {
+                svc.register(
+                    TuneKey::with_shape("mock/len64", 64, format!("client{i}")),
+                    None,
+                    MockBackend::new(64, 10 + i),
+                )
+            })
+            .collect();
+        drive(&mut svc, &lanes, 40_000);
+        let st = svc.stats();
+        // Per-lane decisions would happily explore (default 1 %/10 %);
+        // the global gate must keep every lane idle.
+        assert_eq!(st.explored, 0, "global budget must stop exploration: {st:?}");
+        assert_eq!(st.generate_calls, 0);
+    }
+
+    #[test]
+    fn checkpoint_flushes_unfinished_winners_only() {
+        let mut svc = TuningService::new(fast_cfg());
+        let lane = svc.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 6));
+        // Enough calls to explore a handful of candidates, far too few to
+        // finish the ~79-version plan.
+        drive(&mut svc, &[lane], 12_000);
+        let t = svc.tuner(lane).unwrap();
+        assert!(!t.exploration_done());
+        assert_eq!(svc.cache().len(), 0, "no write-back before exploration ends");
+        match (t.best(), t.ref_score()) {
+            (Some((_, s)), Some(r)) if s < r => {
+                assert_eq!(svc.checkpoint(), 1);
+                assert_eq!(svc.cache().len(), 1);
+            }
+            _ => {
+                // Best-so-far loses to the reference (or nothing explored
+                // yet): a useless warm start must NOT be cached.
+                assert_eq!(svc.checkpoint(), 0);
+                assert_eq!(svc.cache().len(), 0);
+            }
+        }
+    }
+}

@@ -113,7 +113,8 @@ impl KernelKind {
 }
 
 /// Reference-kernel flavours (paper §4.3/§5.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
 pub enum RefKind {
     /// gcc -O3 scalar code, generic dimension (run-time loop bound). gcc
     /// emits prefetch for this shape (-fprefetch-loop-arrays).
@@ -128,12 +129,34 @@ pub enum RefKind {
 }
 
 impl RefKind {
+    pub const ALL: [RefKind; 4] = [
+        RefKind::SisdGeneric,
+        RefKind::SisdSpecialized,
+        RefKind::SimdGeneric,
+        RefKind::SimdSpecialized,
+    ];
+
     pub fn is_simd(&self) -> bool {
         matches!(self, RefKind::SimdGeneric | RefKind::SimdSpecialized)
     }
 
     pub fn is_specialized(&self) -> bool {
         matches!(self, RefKind::SisdSpecialized | RefKind::SimdSpecialized)
+    }
+
+    /// Stable on-disk name (tuning cache / report tooling).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RefKind::SisdGeneric => "sisd-generic",
+            RefKind::SisdSpecialized => "sisd-specialized",
+            RefKind::SimdGeneric => "simd-generic",
+            RefKind::SimdSpecialized => "simd-specialized",
+        }
+    }
+
+    /// Inverse of [`RefKind::as_str`].
+    pub fn from_str_name(name: &str) -> Option<RefKind> {
+        RefKind::ALL.iter().copied().find(|rk| rk.as_str() == name)
     }
 }
 

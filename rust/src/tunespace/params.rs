@@ -1,5 +1,7 @@
 //! Tuning parameters and their ranges (paper Fig. 3 + Table 5 header).
 
+use crate::util::json::{num, obj, s as jstr, Json};
+
 /// hotUF: loop unrolling with distinct registers (range 1-4).
 pub const HOT_UF: [u32; 3] = [1, 2, 4];
 /// coldUF: loop unrolling by pattern replication (range 1-64; §3.3 limits
@@ -27,6 +29,7 @@ pub const MAX_REG_PRODUCT: u32 = 8;
 /// The structural sub-space: parameters that change the generated machine
 /// code (one HLO artifact per valid point).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
 pub struct Structural {
     pub ve: bool,
     pub vect_len: u32,
@@ -127,6 +130,7 @@ impl std::fmt::Display for Structural {
 /// A full point in the 7-dimensional tuning space: one "binary code
 /// instance" of paper §3.2 (structure + code-generation options).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[cfg_attr(feature = "serde", derive(serde::Serialize, serde::Deserialize))]
 pub struct TuningParams {
     pub s: Structural,
     pub pld_stride: u32,
@@ -169,6 +173,23 @@ impl TuningParams {
         let isched = rest % 2 != 0;
         let i_p = (rest / 2) as usize;
         TuningParams { s, pld_stride: PLD_STRIDE[i_p], isched, smin }
+    }
+
+    /// Stable on-disk form for the tuning cache: the full-space id (the
+    /// cross-language version identity) plus a human-readable label that
+    /// is ignored on read.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("id", num(self.full_id() as f64)), ("label", jstr(&self.to_string()))])
+    }
+
+    /// Inverse of [`TuningParams::to_json`]; `None` for ids outside the
+    /// 7-dimensional space (a corrupt or future-version cache entry).
+    pub fn from_json(v: &Json) -> Option<TuningParams> {
+        let id = v.get("id")?.as_u64()?;
+        if id >= n_code_variants() {
+            return None;
+        }
+        Some(TuningParams::from_full_id(id as u32))
     }
 }
 
@@ -246,6 +267,20 @@ mod tests {
     fn register_holes() {
         assert!(!Structural::new(true, 4, 4, 1).reg_ok());
         assert!(Structural::new(true, 4, 2, 1).reg_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejects_out_of_space() {
+        let p = TuningParams::new(Structural::new(true, 2, 2, 4), 32, true, false);
+        let j = p.to_json();
+        assert_eq!(TuningParams::from_json(&j), Some(p));
+        // Survives an actual serialise → parse cycle.
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(TuningParams::from_json(&reparsed), Some(p));
+        // Out-of-space ids and malformed objects are rejected.
+        let bad = obj(vec![("id", num(n_code_variants() as f64))]);
+        assert_eq!(TuningParams::from_json(&bad), None);
+        assert_eq!(TuningParams::from_json(&jstr("nope")), None);
     }
 
     #[test]

@@ -49,16 +49,35 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+    /// `--name VALUE` parsed as `T`, else `default` (also on parse error).
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_parsed(name, default)
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.get_parsed(name, default)
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> u32 {
+        self.get_parsed(name, default)
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.get_parsed(name, default)
+    }
+
+    /// `--name PATH` as a `PathBuf`, else `default()` (lazily built so
+    /// env-dependent defaults are only resolved when needed).
+    pub fn get_path_or(
+        &self,
+        name: &str,
+        default: impl FnOnce() -> std::path::PathBuf,
+    ) -> std::path::PathBuf {
+        self.get(name).map(std::path::PathBuf::from).unwrap_or_else(default)
     }
 }
 
@@ -98,5 +117,15 @@ mod tests {
         let a = Args::parse_from(toks(""));
         assert_eq!(a.get_usize("n", 5), 5);
         assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert_eq!(a.get_u32("d", 7), 7);
+    }
+
+    #[test]
+    fn path_option() {
+        let a = Args::parse_from(toks("--cache /tmp/x.json"));
+        let p = a.get_path_or("cache", || std::path::PathBuf::from("default.json"));
+        assert_eq!(p, std::path::PathBuf::from("/tmp/x.json"));
+        let d = a.get_path_or("other", || std::path::PathBuf::from("default.json"));
+        assert_eq!(d, std::path::PathBuf::from("default.json"));
     }
 }

@@ -1,0 +1,234 @@
+//! Integration tests for the persistence + serving layer: the persistent
+//! tuning cache ([`degoal_rt::cache`]) and the multi-kernel tuning
+//! service ([`degoal_rt::service`]).
+
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::Backend;
+use degoal_rt::cache::{CacheEntry, DeviceFingerprint, TuneCache, TuneKey};
+use degoal_rt::coordinator::{RegenDecision, TunerConfig, WarmOutcome};
+use degoal_rt::service::{LaneId, ServiceConfig, TuningService};
+use degoal_rt::simulator::{core_by_name, KernelKind};
+use degoal_rt::tunespace::{Structural, TuningParams};
+
+fn fast_service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("degoal_cache_it_{}_{name}.json", std::process::id()))
+}
+
+fn drive(svc: &mut TuningService<MockBackend>, lanes: &[LaneId], calls: usize) {
+    for i in 0..calls {
+        svc.app_call(lanes[i % lanes.len()]).unwrap();
+    }
+}
+
+// ---------- the headline: cold explore -> persist -> warm serve ----------
+
+#[test]
+fn warm_service_reaches_cold_best_with_5x_fewer_generates() {
+    let path = tmp("warm_e2e");
+    let keys =
+        [TuneKey::new("mock/len64", 64), TuneKey::new("mock/len96", 96)];
+
+    // Cold service instance: full exploration on both lanes, then save.
+    let mut cold = TuningService::new(fast_service_cfg());
+    let lanes: Vec<LaneId> = keys
+        .iter()
+        .map(|k| cold.register(k.clone(), None, MockBackend::new(k.length, k.length as u64)))
+        .collect();
+    drive(&mut cold, &lanes, 200_000);
+    let cold_stats = cold.stats();
+    assert_eq!(cold_stats.done_lanes, 2, "cold lanes must finish: {cold_stats:?}");
+    assert_eq!(cold_stats.warm_lanes, 0);
+    let cold_best: Vec<(TuningParams, f64)> =
+        lanes.iter().map(|&l| cold.tuner(l).unwrap().best().unwrap()).collect();
+    cold.save_cache(&path).unwrap();
+
+    // Second service instance, fresh backends: the save/load round trip.
+    let mut warm = TuningService::with_cache(fast_service_cfg(), TuneCache::load(&path).unwrap());
+    let wlanes: Vec<LaneId> = keys
+        .iter()
+        .map(|k| warm.register(k.clone(), None, MockBackend::new(k.length, 1000 + k.length as u64)))
+        .collect();
+    drive(&mut warm, &wlanes, 30_000);
+    let warm_stats = warm.stats();
+    assert_eq!(warm_stats.warm_lanes, 2, "both lanes must warm-start");
+    assert_eq!(warm_stats.done_lanes, 2, "adopted warm starts end exploration");
+
+    for (&l, (cold_p, cold_s)) in wlanes.iter().zip(&cold_best) {
+        let t = warm.tuner(l).unwrap();
+        assert_eq!(t.stats.warm_outcome, Some(WarmOutcome::Adopted));
+        let (p, s) = t.best().unwrap();
+        assert_eq!(p.full_id(), cold_p.full_id(), "identical best after round trip");
+        assert!(s <= cold_s * 1.02, "warm score {s} must reach cold best {cold_s}");
+    }
+    assert!(
+        cold_stats.generate_calls >= 5 * warm_stats.generate_calls.max(1),
+        "warm must save >=5x generates: cold {} vs warm {}",
+        cold_stats.generate_calls,
+        warm_stats.generate_calls,
+    );
+    assert_eq!(warm_stats.generate_calls, 2, "one validation generate per lane");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------- persistence round trip ----------
+
+#[test]
+fn save_load_roundtrip_identical_best() {
+    let path = tmp("roundtrip");
+    let fp = DeviceFingerprint::new("sim:DI-I1", "io-w2");
+    let key = TuneKey::new("distance/d64/b256", 64);
+    let params = TuningParams::phase1_default(Structural::new(true, 2, 2, 4));
+    let mut cache = TuneCache::new();
+    cache.insert(&fp, &key, CacheEntry::new(params, 1.1e-4, 2.3e-4, 68));
+    cache.save(&path).unwrap();
+
+    let mut loaded = TuneCache::load(&path).unwrap();
+    let e = loaded.lookup(&fp, &key).expect("entry survives the round trip");
+    assert_eq!(e.params, params);
+    assert_eq!(e.score, 1.1e-4);
+    assert_eq!(e.ref_score, 2.3e-4);
+    assert_eq!(e.explored, 68);
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------- fingerprint mismatch -> cold start ----------
+
+#[test]
+fn fingerprint_mismatch_starts_cold() {
+    let key = TuneKey::new("mock/len64", 64);
+    let good = TuningParams::phase1_default(Structural::new(true, 2, 2, 4));
+
+    let mut svc = TuningService::new(fast_service_cfg());
+    // Seed the cache with an entry measured on a *different* device.
+    let other_fp = DeviceFingerprint::new("mock", "some-other-device");
+    svc.cache_mut().insert(&other_fp, &key, CacheEntry::new(good, 9e-5, 1.8e-4, 60));
+
+    let lane = svc.register(key, None, MockBackend::new(64, 9));
+    let st = svc.stats();
+    assert_eq!(st.warm_lanes, 0, "outcomes must not transfer across devices");
+    assert_eq!(st.cache.misses, 1);
+    assert_eq!(st.cache.hits, 0);
+    assert!(!svc.tuner(lane).unwrap().warm_start_pending());
+
+    // Same device (MockBackend's default tag) does transfer.
+    let mut svc2 = TuningService::new(fast_service_cfg());
+    let same_fp = MockBackend::new(64, 9).device_fingerprint();
+    svc2.cache_mut()
+        .insert(&same_fp, &TuneKey::new("mock/len64", 64), CacheEntry::new(good, 9e-5, 1.8e-4, 60));
+    let lane2 = svc2.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 9));
+    assert_eq!(svc2.stats().warm_lanes, 1);
+    assert!(svc2.tuner(lane2).unwrap().warm_start_pending());
+}
+
+// ---------- sim-backend fingerprints distinguish cores ----------
+
+#[test]
+fn sim_cores_have_distinct_fingerprints() {
+    let kind = KernelKind::Distance { dim: 64, batch: 256 };
+    let a = SimBackend::new(core_by_name("DI-I1").unwrap(), kind, 1).device_fingerprint();
+    let b = SimBackend::new(core_by_name("DI-O1").unwrap(), kind, 1).device_fingerprint();
+    let a2 = SimBackend::new(core_by_name("DI-I1").unwrap(), kind, 2).device_fingerprint();
+    assert_ne!(a, b, "IO and OOO cores must not share tuning outcomes");
+    assert_eq!(a, a2, "the seed is not part of the device identity");
+    assert_eq!(
+        SimBackend::new(core_by_name("A9").unwrap(), kind, 1).kernel_id(),
+        "distance/d64/b256"
+    );
+}
+
+// ---------- stale cached artifact -> fallback + counter ----------
+
+#[test]
+fn stale_cache_entry_falls_back_and_counts() {
+    let key = TuneKey::new("mock/len64", 64);
+    // elems_per_iter = 128 > 64: Backend::generate rejects this variant,
+    // modelling an artifact tree that no longer carries the cached vid.
+    let stale = TuningParams::phase1_default(Structural::new(true, 2, 2, 8));
+    let fp = MockBackend::new(64, 5).device_fingerprint();
+
+    let mut svc = TuningService::new(fast_service_cfg());
+    svc.cache_mut().insert(&fp, &key, CacheEntry::new(stale, 9e-5, 1.8e-4, 60));
+    let lane = svc.register(key.clone(), None, MockBackend::new(64, 5));
+    assert_eq!(svc.stats().warm_lanes, 1);
+    drive(&mut svc, &[lane], 200_000);
+
+    let t = svc.tuner(lane).unwrap();
+    assert_eq!(t.stats.warm_outcome, Some(WarmOutcome::Stale));
+    assert!(t.exploration_done(), "fallback must run the full exploration");
+    let st = svc.stats();
+    assert_eq!(st.cache.stale, 1, "stale hit must be counted");
+    // The stale entry was replaced by the re-explored winner.
+    let e = svc.cache().peek(&fp, &key).expect("write-back after fallback");
+    assert_ne!(e.params, stale);
+    assert!(e.params.s.valid_for(64));
+}
+
+// ---------- concurrent-lane global budget enforcement ----------
+
+#[test]
+fn global_budget_bounds_aggregate_overhead() {
+    // Tight global budget, permissive per-lane budgets: the aggregate
+    // overhead across concurrently-tuning lanes must track the *global*
+    // allowance (plus bootstrap evaluations, which are not regeneration,
+    // and at most one in-flight version per lane of overshoot).
+    let frac = 0.004;
+    let cfg = ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        global: RegenDecision { max_overhead_frac: frac, invest_frac: 0.0 },
+    };
+    let mut svc = TuningService::new(cfg);
+    let lanes: Vec<LaneId> = (0..4)
+        .map(|i| {
+            svc.register(
+                TuneKey::with_shape("mock/len64", 64, format!("client{i}")),
+                None,
+                MockBackend::new(64, 30 + i),
+            )
+        })
+        .collect();
+    drive(&mut svc, &lanes, 80_000);
+
+    let st = svc.stats();
+    let budget = frac * st.app_time;
+    // Bootstrap: 18 training calls at the 180us reference; one version:
+    // generate + 18 training calls at <=280us landscape ceiling.
+    let bootstrap = 18.0 * 190e-6;
+    let version = 20e-6 + 18.0 * 290e-6;
+    let slack = st.lanes as f64 * (bootstrap + version);
+    assert!(
+        st.overhead <= budget + slack,
+        "aggregate overhead {} vs global budget {} (+slack {})",
+        st.overhead,
+        budget,
+        slack,
+    );
+    // And the budget is not vacuous: some exploration did happen.
+    assert!(st.explored > 0, "lanes must still explore under the budget: {st:?}");
+}
+
+// ---------- DEGOAL_TUNECACHE env override ----------
+
+#[test]
+fn tunecache_path_env_override() {
+    // Serialised within this test (env vars are process-global; no other
+    // test in this binary touches DEGOAL_TUNECACHE).
+    let orig = std::env::var("DEGOAL_TUNECACHE").ok();
+    std::env::set_var("DEGOAL_TUNECACHE", "/tmp/custom_tc.json");
+    assert_eq!(
+        degoal_rt::paths::tunecache_path(),
+        std::path::PathBuf::from("/tmp/custom_tc.json")
+    );
+    match orig {
+        Some(v) => std::env::set_var("DEGOAL_TUNECACHE", v),
+        None => std::env::remove_var("DEGOAL_TUNECACHE"),
+    }
+    assert_eq!(TuneCache::default_path(), degoal_rt::paths::tunecache_path());
+}
