@@ -1,0 +1,111 @@
+//! Threaded serving: many kernel streams tuned concurrently on worker
+//! threads, one sharded cache, one global regeneration budget.
+//!
+//!     cargo run --release --example threaded_service [-- --threads 4]
+//!
+//! Phase 1 drives a mixed 6-lane workload through the *sequential*
+//! [`TuningService`] (the paper-faithful single-core mode). Phase 2
+//! replays the identical workload through the threaded [`TuningEngine`]:
+//! same lanes, same per-lane call counts, `--threads` workers. The
+//! engine's winners match the sequential mode's (the simulator is
+//! deterministic per lane), the aggregate overhead fraction stays inside
+//! the single-tuner envelope — only the wall-clock changes. Phase 3
+//! reuses phase 2's cache to show the warm threaded start.
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::cache::{SharedTuneCache, TuneCache};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::service::{LaneId, ServiceConfig, TuningEngine, TuningService};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::util::cli::Args;
+use degoal_rt::workloads::mixed_service_workload as workload;
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    degoal_rt::util::logging::init();
+    let args = Args::parse();
+    let threads = args.get_usize_min("threads", 4, 1);
+    let calls_per_lane = args.get_usize("calls-per-lane", 20_000);
+    let core = core_by_name(args.get_or("core", "DI-I1")).expect("known core");
+
+    // ---- phase 1: sequential baseline ----
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg());
+    let lanes: Vec<LaneId> =
+        workload(core, 42).into_iter().map(|(k, b)| svc.register(k, Some(true), b)).collect();
+    let t0 = std::time::Instant::now();
+    for i in 0..(lanes.len() * calls_per_lane) {
+        svc.app_call(lanes[i % lanes.len()])?;
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let seq = svc.stats();
+    println!(
+        "sequential: {} calls in {:.2}s ({:.0} calls/s), overhead {:.2} %, explored {}",
+        seq.kernel_calls,
+        seq_secs,
+        seq.kernel_calls as f64 / seq_secs.max(1e-9),
+        100.0 * seq.overhead_frac(),
+        seq.explored,
+    );
+
+    // ---- phase 2: same workload, threaded ----
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::new(cfg(), threads);
+    let elanes: Vec<LaneId> = workload(core, 42)
+        .into_iter()
+        .map(|(k, b)| eng.register(k, Some(true), b))
+        .collect::<anyhow::Result<_>>()?;
+    let cache = eng.cache();
+    let t1 = std::time::Instant::now();
+    for &l in &elanes {
+        eng.submit_n(l, calls_per_lane as u32)?; // non-blocking
+    }
+    let (thr, reports) = eng.finish()?;
+    let thr_secs = t1.elapsed().as_secs_f64();
+    println!(
+        "threaded ({threads} workers): {} calls in {:.2}s ({:.0} calls/s, {:.2}x), \
+         overhead {:.2} %, explored {}",
+        thr.kernel_calls,
+        thr_secs,
+        thr.kernel_calls as f64 / thr_secs.max(1e-9),
+        (thr.kernel_calls as f64 / thr_secs.max(1e-9))
+            / (seq.kernel_calls as f64 / seq_secs.max(1e-9)).max(1e-9),
+        100.0 * thr.overhead_frac(),
+        thr.explored,
+    );
+    for r in &reports {
+        println!(
+            "  {}: best={} speedup={:.2}x done={}",
+            r.key,
+            r.best.map(|(p, _)| p.to_string()).unwrap_or_else(|| "-".into()),
+            r.speedup(),
+            r.done
+        );
+    }
+
+    // ---- phase 3: warm threaded restart from phase 2's cache ----
+    let snapshot: TuneCache = cache.snapshot();
+    let mut warm_eng: TuningEngine<SimBackend> =
+        TuningEngine::with_cache(cfg(), SharedTuneCache::from_cache(snapshot, 8), threads);
+    let wlanes: Vec<LaneId> = workload(core, 142)
+        .into_iter()
+        .map(|(k, b)| warm_eng.register(k, Some(true), b))
+        .collect::<anyhow::Result<_>>()?;
+    for &l in &wlanes {
+        warm_eng.submit_n(l, 3_000)?;
+    }
+    let (warm, _) = warm_eng.finish()?;
+    println!(
+        "warm threaded restart: {} of {} lanes warm, {} generate calls (vs {} cold), overhead {:.2} %",
+        warm.warm_lanes,
+        warm.lanes,
+        warm.generate_calls,
+        thr.generate_calls,
+        100.0 * warm.overhead_frac(),
+    );
+    Ok(())
+}

@@ -11,9 +11,20 @@
 //! to the same executable — exactly like a `pld` hint on a core that
 //! ignores it; and the single reference artifact stands for all four
 //! RefKind flavours (XLA specialises and vectorises the naive expression).
+//!
+//! NOTE(pjrt): `Backend` now has a `Send` supertrait (the multi-threaded
+//! `TuningEngine` moves lanes onto worker threads), so the executable
+//! handles here and in `codegen::CodeCache` are `Arc`, not `Rc`. When
+//! this feature is re-enabled, `impl Backend for HostBackend` therefore
+//! additionally requires `Executable: Send + Sync` (it sits behind the
+//! `Arc`s) and `Runtime: Sync` (this struct holds `&'rt Runtime`). If
+//! the PJRT bindings cannot guarantee those, the `Send` supertrait on
+//! `Backend` must be relaxed back into a `B: Backend + Send` bound on
+//! `TuningEngine` only — the sequential `TuningService` shares the
+//! supertrait, so "just stay sequential" is not an out by itself.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -40,8 +51,8 @@ pub struct HostBackend<'rt> {
     training: CallInputs,
     real: CallInputs,
     /// Executables by structural vid (phase-2 knobs share the artifact).
-    exes: HashMap<u32, Rc<Executable>>,
-    ref_exe: Option<Rc<Executable>>,
+    exes: HashMap<u32, Arc<Executable>>,
+    ref_exe: Option<Arc<Executable>>,
 }
 
 impl<'rt> HostBackend<'rt> {
@@ -99,7 +110,7 @@ impl<'rt> HostBackend<'rt> {
         self.cache.total_codegen().as_secs_f64()
     }
 
-    fn executable(&mut self, v: &KernelVersion) -> Result<Rc<Executable>> {
+    fn executable(&mut self, v: &KernelVersion) -> Result<Arc<Executable>> {
         match v {
             KernelVersion::Variant(p) => {
                 let vid = p.s.vid();

@@ -90,7 +90,12 @@ impl Sample {
 }
 
 /// Where the auto-tuner's kernels execute.
-pub trait Backend {
+///
+/// `Send` is a supertrait: a backend is owned by exactly one tuner lane,
+/// and the multi-threaded [`TuningEngine`](crate::service::TuningEngine)
+/// moves whole lanes (backend + tuner) onto worker threads. Backends are
+/// not required to be `Sync` — there is never more than one caller.
+pub trait Backend: Send {
     /// Generate machine code for a variant (PJRT compile / deGoal model).
     /// Returns the codegen cost in seconds. Idempotent: regenerating an
     /// already-generated variant costs ~0.

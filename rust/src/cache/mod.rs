@@ -16,13 +16,26 @@
 //!   [`TuningParams`](crate::tunespace::TuningParams), its measured score,
 //!   the reference score it beat, and how many versions the search
 //!   explored.
-//! * [`TuneCache`] — LRU-bounded in-memory shards (one per device) with
-//!   hit/miss/stale counters, JSON-on-disk persistence (versioned format,
+//! * [`TuneCache`] — the single-threaded store and persistence codec:
+//!   LRU-bounded in-memory shards (one per device) with hit/miss/stale
+//!   counters, optional age-based TTL eviction (`updated_unix` older than
+//!   the TTL), a shape-class fallback lookup ([`TuneCache::lookup_near`]:
+//!   an exact-key miss may still return a same-no-leftover-class winner
+//!   tuned for a *near* trip length as a warm-start hint, counted in
+//!   `near_hits`), JSON-on-disk persistence (versioned format,
 //!   `DEGOAL_TUNECACHE` / `results/tunecache.json`), and import/export so
 //!   a cache can be shipped with a deployment.
+//! * [`SharedTuneCache`] — the concurrent view: `N` lock shards, each a
+//!   [`TuneCache`], behind one `Clone + Send + Sync` handle; entries are
+//!   placed by hashing ([`DeviceFingerprint`], [`TuneKey`]). Storage and
+//!   the per-shard counters are sharded-locked; the `stale` counter is a
+//!   lock-free atomic (recorded off the locked paths). Snapshotting back
+//!   to a plain [`TuneCache`] keeps the on-disk format bit-compatible.
 
 mod fingerprint;
+mod shared;
 mod store;
 
 pub use fingerprint::{DeviceFingerprint, TuneKey};
-pub use store::{CacheCounters, CacheEntry, TuneCache, TUNECACHE_FORMAT_VERSION};
+pub use shared::{SharedTuneCache, DEFAULT_LOCK_SHARDS};
+pub use store::{CacheCounters, CacheEntry, CacheHit, TuneCache, TUNECACHE_FORMAT_VERSION};

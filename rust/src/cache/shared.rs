@@ -1,0 +1,496 @@
+//! Concurrently-shared tuning cache: lock-sharded [`TuneCache`]s behind
+//! one `Clone + Send + Sync` handle.
+//!
+//! The plain [`TuneCache`] is the single-threaded store and the
+//! persistence codec; [`SharedTuneCache`] composes `N` of them as lock
+//! shards so concurrent tuner lanes contend on `1/N` of the key space
+//! instead of one global lock. Entries are placed by hashing
+//! `(DeviceFingerprint, TuneKey)`, so two lanes tuning different kernels
+//! on the same device usually hit different locks.
+//!
+//! What is where, concurrency-wise:
+//!
+//! * **Sharded-locked** — entry storage, LRU recency, TTL eviction, and
+//!   the hit/miss/eviction counters (they are only touched while the
+//!   owning shard's lock is held, so plain `u64`s suffice).
+//! * **Lock-free** — the `stale` counter ([`SharedTuneCache::note_stale`]
+//!   is called on the warm-validation failure path, which holds no shard
+//!   lock) is a relaxed [`AtomicU64`].
+//! * **Cross-shard** — the shape-class fallback
+//!   ([`SharedTuneCache::lookup_near`]) scans shards one lock at a time
+//!   on the exact-miss slow path; no lock ordering issue because at most
+//!   one shard lock is ever held.
+//!
+//! Persistence stays bit-compatible with [`TuneCache`]'s versioned JSON:
+//! [`SharedTuneCache::snapshot`] folds the shards back into one plain
+//! cache and [`TuneCache::save`]/[`TuneCache::load`] do the rest.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use super::fingerprint::{DeviceFingerprint, TuneKey};
+use super::store::{CacheCounters, CacheEntry, CacheHit, TuneCache};
+
+/// Default number of lock shards — enough that a handful of worker
+/// threads rarely contend, small enough that snapshotting stays trivial.
+pub const DEFAULT_LOCK_SHARDS: usize = 8;
+
+struct Inner {
+    shards: Box<[Mutex<TuneCache>]>,
+    /// The configured per-device LRU bound (see
+    /// [`SharedTuneCache::with_shards`] for how it maps onto shards).
+    device_cap: usize,
+    /// Stale-artifact warm starts; recorded lock-free (the caller is on
+    /// the tuning fallback path and holds no shard lock).
+    stale: AtomicU64,
+}
+
+/// A `Clone + Send + Sync` handle to one sharded tuning cache. Cloning is
+/// an `Arc` bump: every clone sees the same entries and counters. All
+/// methods take `&self` — mutation happens under per-shard locks.
+#[derive(Clone)]
+pub struct SharedTuneCache {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for SharedTuneCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedTuneCache")
+            .field("lock_shards", &self.inner.shards.len())
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+impl Default for SharedTuneCache {
+    fn default() -> Self {
+        SharedTuneCache::new()
+    }
+}
+
+impl SharedTuneCache {
+    pub fn new() -> SharedTuneCache {
+        SharedTuneCache::with_shards(DEFAULT_LOCK_SHARDS, TuneCache::DEFAULT_SHARD_CAP)
+    }
+
+    /// `lock_shards` parallel locks; `device_cap` per-device LRU entry
+    /// bound. Each lock shard gets the *full* `device_cap` — never a
+    /// split — so wrapping an already-full single-threaded cache (the
+    /// warm-boot path) can never evict entries during redistribution,
+    /// whatever the key hashing looks like. The aggregate per-device
+    /// bound is therefore `device_cap * lock_shards` in the worst case:
+    /// a deliberate memory-for-losslessness trade, documented here
+    /// because it differs from the plain [`TuneCache`] bound.
+    pub fn with_shards(lock_shards: usize, device_cap: usize) -> SharedTuneCache {
+        let n = lock_shards.max(1);
+        let cap = device_cap.max(1);
+        let shards: Vec<Mutex<TuneCache>> =
+            (0..n).map(|_| Mutex::new(TuneCache::with_shard_cap(cap))).collect();
+        SharedTuneCache {
+            inner: Arc::new(Inner {
+                shards: shards.into_boxed_slice(),
+                device_cap: cap,
+                stale: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Wrap an existing single-threaded cache (e.g. [`TuneCache::load`]),
+    /// redistributing its entries across `lock_shards` locks. Counters
+    /// restart from zero — they are process-lifetime statistics.
+    pub fn from_cache(cache: TuneCache, lock_shards: usize) -> SharedTuneCache {
+        let shared = SharedTuneCache::with_shards(lock_shards, cache.shard_cap());
+        shared.set_ttl(cache.ttl());
+        for (fp, key, entry) in cache.entries() {
+            shared.shard(&fp, &key).insert(&fp, &key, entry);
+        }
+        // Redistribution is not an import; only count real adoptions.
+        for s in shared.inner.shards.iter() {
+            s.lock().expect("tunecache shard lock").counters = CacheCounters::default();
+        }
+        shared
+    }
+
+    /// Load from disk (missing file or parse failure = cold start), then
+    /// shard. The service boot path.
+    pub fn load_or_default<P: AsRef<Path>>(path: P, lock_shards: usize) -> SharedTuneCache {
+        SharedTuneCache::from_cache(TuneCache::load_or_default(path), lock_shards)
+    }
+
+    pub fn n_lock_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    fn shard_index(&self, fp: &DeviceFingerprint, key: &TuneKey) -> usize {
+        let mut h = DefaultHasher::new();
+        fp.hash(&mut h);
+        key.hash(&mut h);
+        (h.finish() as usize) % self.inner.shards.len()
+    }
+
+    fn shard(&self, fp: &DeviceFingerprint, key: &TuneKey) -> MutexGuard<'_, TuneCache> {
+        self.inner.shards[self.shard_index(fp, key)].lock().expect("tunecache shard lock")
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.shards.iter().map(|s| s.lock().expect("tunecache shard lock").len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Exact lookup, counting a hit or a miss on the owning shard.
+    pub fn lookup(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
+        self.lookup_filtered(fp, key, |_| true)
+    }
+
+    /// Exact lookup with a usability filter (an unusable entry counts as
+    /// a miss, as in [`TuneCache::lookup_filtered`]).
+    pub fn lookup_filtered(
+        &self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl FnOnce(&CacheEntry) -> bool,
+    ) -> Option<CacheEntry> {
+        self.shard(fp, key).lookup_filtered(fp, key, usable)
+    }
+
+    /// Exact lookup with the shape-class fallback. The fallback scan
+    /// visits every lock shard (a near donor for a different trip length
+    /// hashes to a different shard), one lock at a time; it only runs on
+    /// the exact-miss slow path, which is immediately followed by a full
+    /// exploration anyway.
+    pub fn lookup_near(
+        &self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(CacheEntry, CacheHit)> {
+        let home = self.shard_index(fp, key);
+        {
+            let mut guard = self.inner.shards[home].lock().expect("tunecache shard lock");
+            if let Some(e) = guard.lookup_core(fp, key, &usable) {
+                guard.counters.hits += 1;
+                return Some((e, CacheHit::Exact));
+            }
+        }
+        // best_near is a pure scan (no LRU side effects), so losing
+        // candidates are never promoted; only the cross-shard winner is
+        // touched below. Donor preference is store::nearer_donor — the
+        // same rule the plain cache applies, so sequential and threaded
+        // modes pick identical donors.
+        let mut best: Option<(usize, TuneKey, CacheEntry)> = None;
+        for (idx, shard) in self.inner.shards.iter().enumerate() {
+            let mut guard = shard.lock().expect("tunecache shard lock");
+            if let Some((donor_key, e)) = guard.best_near(fp, key, &usable) {
+                let closer = match &best {
+                    Some((_, bk, _)) => super::store::nearer_donor(key, &donor_key, bk),
+                    None => true,
+                };
+                if closer {
+                    best = Some((idx, donor_key, e));
+                }
+            }
+        }
+        if let Some((idx, donor_key, e)) = best {
+            self.inner.shards[idx]
+                .lock()
+                .expect("tunecache shard lock")
+                .touch(fp, &donor_key);
+            let mut home_guard = self.inner.shards[home].lock().expect("tunecache shard lock");
+            home_guard.counters.near_hits += 1;
+            Some((e, CacheHit::Near))
+        } else {
+            let mut home_guard = self.inner.shards[home].lock().expect("tunecache shard lock");
+            home_guard.counters.misses += 1;
+            None
+        }
+    }
+
+    /// Counter-free read (tools, tests). Returns an owned clone — a
+    /// reference cannot outlive the shard lock.
+    pub fn get(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
+        self.shard(fp, key).peek(fp, key).cloned()
+    }
+
+    /// Insert or overwrite an outcome (LRU-bounded within the shard).
+    pub fn insert(&self, fp: &DeviceFingerprint, key: &TuneKey, entry: CacheEntry) {
+        self.shard(fp, key).insert(fp, key, entry)
+    }
+
+    /// Drop one outcome (stale-artifact invalidation).
+    pub fn invalidate(&self, fp: &DeviceFingerprint, key: &TuneKey) -> bool {
+        self.shard(fp, key).invalidate(fp, key)
+    }
+
+    /// Record a stale warm start — lock-free.
+    pub fn note_stale(&self) {
+        self.inner.stale.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Set the staleness TTL on every shard.
+    pub fn set_ttl(&self, ttl_secs: Option<u64>) {
+        for s in self.inner.shards.iter() {
+            s.lock().expect("tunecache shard lock").set_ttl(ttl_secs);
+        }
+    }
+
+    /// The configured staleness TTL (every shard carries the same value;
+    /// read from the first).
+    pub fn ttl(&self) -> Option<u64> {
+        self.inner
+            .shards
+            .first()
+            .and_then(|s| s.lock().expect("tunecache shard lock").ttl())
+    }
+
+    /// Sweep age-expired entries from every shard; returns entries
+    /// dropped.
+    pub fn evict_expired(&self, now_unix: u64) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("tunecache shard lock").evict_expired(now_unix))
+            .sum()
+    }
+
+    /// Aggregate counters across shards plus the lock-free stale count.
+    pub fn counters(&self) -> CacheCounters {
+        let mut total = CacheCounters::default();
+        for s in self.inner.shards.iter() {
+            total.absorb(&s.lock().expect("tunecache shard lock").counters);
+        }
+        total.stale += self.inner.stale.load(Ordering::Relaxed);
+        total
+    }
+
+    /// Merge a foreign cache in (warm-start shipping). Per-entry policy
+    /// is literally [`TuneCache::adopt_if_better`], applied under the
+    /// owning shard's lock. Returns entries adopted.
+    pub fn merge(&self, other: &TuneCache) -> usize {
+        let mut adopted = 0;
+        for (fp, key, entry) in other.entries() {
+            if self.shard(&fp, &key).adopt_if_better(&fp, &key, entry) {
+                adopted += 1;
+            }
+        }
+        adopted
+    }
+
+    /// Fold the shards back into one plain [`TuneCache`] — the
+    /// persistence form (bit-compatible with the single-threaded cache's
+    /// versioned JSON). Counters carry over as the aggregate.
+    ///
+    /// The snapshot's `shard_cap` is the configured per-device cap,
+    /// widened only if some device actually holds more entries than that
+    /// (possible because each lock shard enforces the cap independently)
+    /// — so the fold never LRU-evicts, and a save/load/re-wrap cycle
+    /// does not inflate the cap.
+    pub fn snapshot(&self) -> TuneCache {
+        let mut all: Vec<(DeviceFingerprint, TuneKey, CacheEntry)> = Vec::new();
+        for s in self.inner.shards.iter() {
+            all.extend(s.lock().expect("tunecache shard lock").entries());
+        }
+        let mut per_device: std::collections::HashMap<&DeviceFingerprint, usize> =
+            std::collections::HashMap::new();
+        for (fp, _, _) in &all {
+            *per_device.entry(fp).or_insert(0) += 1;
+        }
+        let needed = per_device.values().copied().max().unwrap_or(0);
+        // Carry ALL runtime policy across the fold — cap, TTL — so a
+        // snapshot/re-wrap cycle (into_cache -> with_cache) changes
+        // nothing about eviction behaviour.
+        let mut snap =
+            TuneCache::with_shard_cap(self.inner.device_cap.max(needed)).with_ttl(self.ttl());
+        for (fp, key, entry) in &all {
+            snap.insert(fp, key, entry.clone());
+        }
+        snap.counters = self.counters();
+        snap
+    }
+
+    /// Persist the snapshot to `path`.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.snapshot().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::{Structural, TuningParams};
+
+    fn fp(n: &str) -> DeviceFingerprint {
+        DeviceFingerprint::new("sim:test", n)
+    }
+
+    fn key(n: &str, len: u32) -> TuneKey {
+        TuneKey::new(n, len)
+    }
+
+    fn entry(score: f64) -> CacheEntry {
+        CacheEntry::new(
+            TuningParams::phase1_default(Structural::new(true, 2, 2, 4)),
+            score,
+            2.0 * score,
+            42,
+        )
+    }
+
+    #[test]
+    fn handle_is_clone_send_sync() {
+        fn assert_css<T: Clone + Send + Sync + 'static>() {}
+        assert_css::<SharedTuneCache>();
+    }
+
+    #[test]
+    fn clones_see_the_same_store() {
+        let a = SharedTuneCache::new();
+        let b = a.clone();
+        a.insert(&fp("d"), &key("k", 64), entry(1e-4));
+        assert_eq!(b.len(), 1);
+        assert!(b.lookup(&fp("d"), &key("k", 64)).is_some());
+        // One hit, recorded once, visible through both handles.
+        assert_eq!(a.counters().hits, 1);
+        assert_eq!(b.counters().hits, 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_plain_cache_json() {
+        let shared = SharedTuneCache::with_shards(4, 64);
+        for i in 0..20 {
+            shared.insert(&fp("d"), &key(&format!("k{i}"), 64), entry(1e-4 + i as f64 * 1e-6));
+        }
+        let snap = shared.snapshot();
+        assert_eq!(snap.len(), 20);
+        let json = crate::util::json::Json::parse(&snap.to_json().to_string()).unwrap();
+        let reloaded = TuneCache::from_json(&json);
+        assert_eq!(reloaded.len(), 20, "sharded -> plain JSON stays lossless");
+        let reshared = SharedTuneCache::from_cache(reloaded, 8);
+        assert_eq!(reshared.len(), 20);
+        for i in 0..20 {
+            assert!(
+                reshared.get(&fp("d"), &key(&format!("k{i}"), 64)).is_some(),
+                "entry k{i} must survive redistribution"
+            );
+        }
+    }
+
+    #[test]
+    fn wrapping_a_full_cache_loses_nothing() {
+        // A device at its full per-device LRU bound (the warm-boot path:
+        // TuneCache::load of a well-filled PR-1 cache) must survive
+        // redistribution across lock shards entry-for-entry, whatever
+        // the key hashing does — and survive the snapshot fold back.
+        let mut plain = TuneCache::new(); // DEFAULT_SHARD_CAP = 64
+        for i in 0..TuneCache::DEFAULT_SHARD_CAP {
+            plain.insert(&fp("d"), &key(&format!("k{i}"), 64), entry(1e-4 + i as f64 * 1e-7));
+        }
+        assert_eq!(plain.len(), TuneCache::DEFAULT_SHARD_CAP);
+        let shared = SharedTuneCache::from_cache(plain, 8);
+        assert_eq!(
+            shared.len(),
+            TuneCache::DEFAULT_SHARD_CAP,
+            "no entry may be LRU-evicted while sharding a full cache"
+        );
+        assert_eq!(shared.counters().evictions, 0);
+        let snap = shared.snapshot();
+        assert_eq!(snap.len(), TuneCache::DEFAULT_SHARD_CAP, "fold back is lossless too");
+        // And the persisted cap does not balloon across wrap cycles.
+        assert_eq!(snap.shard_cap(), TuneCache::DEFAULT_SHARD_CAP);
+    }
+
+    #[test]
+    fn stale_counter_is_lock_free_and_aggregated() {
+        let c = SharedTuneCache::new();
+        c.note_stale();
+        c.note_stale();
+        assert_eq!(c.counters().stale, 2);
+    }
+
+    #[test]
+    fn near_lookup_crosses_lock_shards() {
+        // Donor and request hash to (very likely) different shards; the
+        // fallback must find it regardless of shard placement.
+        let c = SharedTuneCache::with_shards(8, 64);
+        let donor = Structural::new(true, 2, 2, 2); // epi 32
+        c.insert(
+            &fp("d"),
+            &key("k", 64),
+            CacheEntry::new(TuningParams::phase1_default(donor), 1e-4, 2e-4, 9),
+        );
+        let (e, hit) = c.lookup_near(&fp("d"), &key("k", 96), |_| true).expect("near hit");
+        assert_eq!(hit, CacheHit::Near);
+        assert_eq!(e.params.s, donor);
+        let counters = c.counters();
+        assert_eq!(counters.near_hits, 1);
+        assert_eq!(counters.hits, 0);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        let c = SharedTuneCache::with_shards(8, 1024);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        let k = key(&format!("t{t}k{i}"), 64);
+                        c.insert(&fp("d"), &k, entry(1e-4));
+                        assert!(c.lookup(&fp("d"), &k).is_some());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.len(), 800, "no write-back may be lost under contention");
+        assert_eq!(c.counters().hits, 800);
+    }
+
+    #[test]
+    fn merge_prefers_better_scores_across_shards() {
+        let shared = SharedTuneCache::with_shards(4, 64);
+        shared.insert(&fp("d"), &key("k", 64), entry(1e-4));
+        let mut shipped = TuneCache::new();
+        shipped.insert(&fp("d"), &key("k", 64), entry(5e-4)); // worse
+        shipped.insert(&fp("d"), &key("k2", 64), entry(2e-4)); // new
+        assert_eq!(shared.merge(&shipped), 1);
+        assert_eq!(shared.get(&fp("d"), &key("k", 64)).unwrap().score, 1e-4);
+        assert!(shared.get(&fp("d"), &key("k2", 64)).is_some());
+        assert_eq!(shared.counters().imported, 1);
+    }
+
+    #[test]
+    fn ttl_applies_across_shards() {
+        let c = SharedTuneCache::with_shards(4, 64);
+        c.set_ttl(Some(3600));
+        for i in 0..10 {
+            let mut e = entry(1e-4);
+            e.updated_unix = 1_000; // ancient
+            c.insert(&fp("d"), &key(&format!("k{i}"), 64), e);
+        }
+        c.insert(&fp("d"), &key("fresh", 64), entry(1e-4));
+        assert_eq!(c.evict_expired(crate::cache::store::now_unix()), 10);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.counters().expired, 10);
+    }
+
+    #[test]
+    fn ttl_survives_snapshot_and_rewrap() {
+        let c = SharedTuneCache::with_shards(4, 64);
+        c.set_ttl(Some(1234));
+        assert_eq!(c.ttl(), Some(1234));
+        let snap = c.snapshot();
+        assert_eq!(snap.ttl(), Some(1234), "snapshot must carry the TTL policy");
+        let rewrapped = SharedTuneCache::from_cache(snap, 8);
+        assert_eq!(rewrapped.ttl(), Some(1234), "and so must the re-wrap");
+    }
+}

@@ -33,21 +33,32 @@ pub struct CacheEntry {
 
 impl CacheEntry {
     pub fn new(params: TuningParams, score: f64, ref_score: f64, explored: u32) -> CacheEntry {
-        let updated_unix = SystemTime::now()
-            .duration_since(UNIX_EPOCH)
-            .map(|d| d.as_secs())
-            .unwrap_or(0);
-        CacheEntry { params, score, ref_score, explored, updated_unix }
+        CacheEntry { params, score, ref_score, explored, updated_unix: now_unix() }
     }
 
-    /// Speedup over the reference at tuning time.
+    /// Speedup over the reference at tuning time. Malformed entries
+    /// (zero/negative score, non-finite inputs) report 0.0 — never NaN or
+    /// infinity, which would poison downstream averages and report sums.
     pub fn speedup(&self) -> f64 {
-        if self.score > 0.0 {
-            self.ref_score / self.score
-        } else {
-            1.0
-        }
+        crate::util::stats::safe_ratio(self.ref_score, self.score)
     }
+
+    /// Seconds since the entry's last write (`None` when the entry's
+    /// timestamp lies in the future, e.g. a clock step).
+    pub fn age_secs(&self, now_unix: u64) -> Option<u64> {
+        now_unix.checked_sub(self.updated_unix)
+    }
+}
+
+/// How a [`TuneCache::lookup_near`] request was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheHit {
+    /// The exact `(DeviceFingerprint, TuneKey)` entry.
+    Exact,
+    /// A same-kernel, same-shape entry tuned for a *near* trip length
+    /// whose winning structure also divides the requested length evenly
+    /// (same no-leftover class) — a warm-start hint, not a proven winner.
+    Near,
 }
 
 /// Aggregate cache-behaviour counters (process lifetime, not persisted).
@@ -64,6 +75,46 @@ pub struct CacheCounters {
     pub evictions: u64,
     /// Entries adopted from `import`/`merge`.
     pub imported: u64,
+    /// Entries dropped because their `updated_unix` age exceeded the
+    /// staleness TTL (age-based eviction, distinct from LRU `evictions`).
+    pub expired: u64,
+    /// Exact-key misses answered by a same-no-leftover-class entry for a
+    /// near trip length ([`TuneCache::lookup_near`]) — warm-start hints,
+    /// counted separately from exact `hits`.
+    pub near_hits: u64,
+}
+
+impl CacheCounters {
+    /// Field-wise sum — used to aggregate counters across the lock shards
+    /// of a [`super::SharedTuneCache`].
+    pub fn absorb(&mut self, other: &CacheCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.stale += other.stale;
+        self.evictions += other.evictions;
+        self.imported += other.imported;
+        self.expired += other.expired;
+        self.near_hits += other.near_hits;
+    }
+}
+
+/// Unix seconds now (0 on a pre-1970 clock, which only disables TTL
+/// eviction rather than panicking).
+pub(crate) fn now_unix() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// The near-donor preference, in one place so the plain
+/// ([`TuneCache::best_near`]) and cross-shard
+/// ([`super::SharedTuneCache::lookup_near`]) selections cannot drift:
+/// does `cand` beat `incumbent` as a warm-start donor for `request`?
+/// Nearest trip length wins; equidistant donors tie-break to the smaller
+/// length so the choice is deterministic (HashMap iteration order is
+/// not).
+pub(crate) fn nearer_donor(request: &TuneKey, cand: &TuneKey, incumbent: &TuneKey) -> bool {
+    let cd = request.length.abs_diff(cand.length);
+    let id = request.length.abs_diff(incumbent.length);
+    cd < id || (cd == id && cand.length < incumbent.length)
 }
 
 #[derive(Debug, Clone)]
@@ -81,6 +132,10 @@ pub struct TuneCache {
     shards: HashMap<DeviceFingerprint, HashMap<TuneKey, Slot>>,
     shard_cap: usize,
     tick: u64,
+    /// Staleness TTL in seconds: entries older than this are evicted on
+    /// lookup and by [`TuneCache::evict_expired`]. `None` disables
+    /// age-based eviction (the default). Runtime policy — not persisted.
+    ttl_secs: Option<u64>,
     pub counters: CacheCounters,
 }
 
@@ -105,8 +160,66 @@ impl TuneCache {
             shards: HashMap::new(),
             shard_cap: shard_cap.max(1),
             tick: 0,
+            ttl_secs: None,
             counters: CacheCounters::default(),
         }
+    }
+
+    /// Set the staleness TTL (seconds); `None` disables age eviction.
+    pub fn set_ttl(&mut self, ttl_secs: Option<u64>) {
+        self.ttl_secs = ttl_secs;
+    }
+
+    pub fn ttl(&self) -> Option<u64> {
+        self.ttl_secs
+    }
+
+    /// Builder form of [`TuneCache::set_ttl`].
+    pub fn with_ttl(mut self, ttl_secs: Option<u64>) -> TuneCache {
+        self.ttl_secs = ttl_secs;
+        self
+    }
+
+    fn is_expired(&self, entry: &CacheEntry, now_unix: u64) -> bool {
+        match self.ttl_secs {
+            Some(ttl) => entry.age_secs(now_unix).map(|age| age > ttl).unwrap_or(false),
+            None => false,
+        }
+    }
+
+    /// Drop every entry whose age exceeds the TTL. Returns the number
+    /// evicted (0 when no TTL is configured).
+    pub fn evict_expired(&mut self, now_unix: u64) -> usize {
+        if self.ttl_secs.is_none() {
+            return 0;
+        }
+        let mut dropped = 0;
+        // Collect-then-remove: no HashMap retain-with-side-effect games.
+        let doomed: Vec<(DeviceFingerprint, TuneKey)> = self
+            .shards
+            .iter()
+            .flat_map(|(fp, shard)| {
+                shard
+                    .iter()
+                    .filter(|(_, slot)| self.is_expired(&slot.entry, now_unix))
+                    .map(|(k, _)| (fp.clone(), k.clone()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for (fp, key) in doomed {
+            if let Some(shard) = self.shards.get_mut(&fp) {
+                if shard.remove(&key).is_some() {
+                    dropped += 1;
+                }
+            }
+        }
+        self.counters.expired += dropped as u64;
+        dropped
+    }
+
+    /// The per-device LRU entry bound.
+    pub fn shard_cap(&self) -> usize {
+        self.shard_cap
     }
 
     /// Total entries across all shards.
@@ -133,24 +246,154 @@ impl TuneCache {
         key: &TuneKey,
         usable: impl FnOnce(&CacheEntry) -> bool,
     ) -> Option<CacheEntry> {
-        self.tick += 1;
-        let tick = self.tick;
-        match self.shards.get_mut(fp).and_then(|s| s.get_mut(key)) {
-            Some(slot) if usable(&slot.entry) => {
-                slot.last_used = tick;
+        match self.lookup_core(fp, key, usable) {
+            Some(e) => {
                 self.counters.hits += 1;
-                Some(slot.entry.clone())
+                Some(e)
             }
-            _ => {
+            None => {
                 self.counters.misses += 1;
                 None
             }
         }
     }
 
+    /// Counter-neutral exact lookup: refreshes LRU recency and applies
+    /// TTL eviction (an expired entry is removed and bumps `expired`),
+    /// but leaves hit/miss accounting to the caller so composed lookups
+    /// ([`TuneCache::lookup_near`], the sharded
+    /// [`super::SharedTuneCache`]) count each request exactly once.
+    pub(crate) fn lookup_core(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl FnOnce(&CacheEntry) -> bool,
+    ) -> Option<CacheEntry> {
+        let now = now_unix();
+        let expired = self
+            .shards
+            .get(fp)
+            .and_then(|s| s.get(key))
+            .map(|slot| self.is_expired(&slot.entry, now))
+            .unwrap_or(false);
+        if expired {
+            self.shards.get_mut(fp).and_then(|s| s.remove(key));
+            self.counters.expired += 1;
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        match self.shards.get_mut(fp).and_then(|s| s.get_mut(key)) {
+            Some(slot) if usable(&slot.entry) => {
+                slot.last_used = tick;
+                Some(slot.entry.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Counter-neutral shape-class fallback scan: among this device's
+    /// entries for the *same kernel and shape* but a different trip
+    /// length, return the one tuned for the nearest length whose winning
+    /// structure also runs `key.length` with no leftover strip (the
+    /// paper's "optimal solution" class transfers across lengths the
+    /// unrolled body divides evenly). Lengths further than 2x away are
+    /// not "near" — the data regime is too different for the hint to be
+    /// trustworthy. Donor preference is [`nearer_donor`].
+    /// Pure scan: LRU recency is NOT refreshed here — the caller
+    /// promotes only the donor it actually uses (see
+    /// [`TuneCache::touch`]); expired donors are skipped (and left for
+    /// [`TuneCache::evict_expired`]).
+    pub(crate) fn best_near(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(TuneKey, CacheEntry)> {
+        let now = now_unix();
+        let shard = self.shards.get(fp)?;
+        let mut best: Option<TuneKey> = None;
+        for (k, slot) in shard.iter() {
+            if k.kernel != key.kernel || k.shape != key.shape || k.length == key.length {
+                continue;
+            }
+            let lo = key.length.min(k.length) as u64;
+            let hi = key.length.max(k.length) as u64;
+            if hi > 2 * lo {
+                continue;
+            }
+            let s = slot.entry.params.s;
+            if !(s.no_leftover(k.length) && s.no_leftover(key.length)) {
+                continue;
+            }
+            if self.is_expired(&slot.entry, now) || !usable(&slot.entry) {
+                continue;
+            }
+            let better = match &best {
+                Some(bk) => nearer_donor(key, k, bk),
+                None => true,
+            };
+            if better {
+                best = Some(k.clone());
+            }
+        }
+        let donor_key = best?;
+        let entry = self.shards.get(fp).and_then(|s| s.get(&donor_key))?.entry.clone();
+        Some((donor_key, entry))
+    }
+
+    /// Refresh one entry's LRU recency (counter-neutral). Used by the
+    /// near-fallback paths to promote only the donor that was actually
+    /// returned, not every shard-local candidate that lost the
+    /// cross-shard selection.
+    pub(crate) fn touch(&mut self, fp: &DeviceFingerprint, key: &TuneKey) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(slot) = self.shards.get_mut(fp).and_then(|s| s.get_mut(key)) {
+            slot.last_used = tick;
+        }
+    }
+
+    /// Exact lookup with shape-class fallback: an exact usable entry is a
+    /// [`CacheHit::Exact`] (counted in `hits`); otherwise a usable
+    /// same-no-leftover-class entry for a near trip length is returned as
+    /// a [`CacheHit::Near`] warm-start hint (counted in `near_hits`, not
+    /// `hits`); otherwise `None` (counted in `misses`).
+    pub fn lookup_near(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(CacheEntry, CacheHit)> {
+        if let Some(e) = self.lookup_core(fp, key, &usable) {
+            self.counters.hits += 1;
+            return Some((e, CacheHit::Exact));
+        }
+        if let Some((donor_key, e)) = self.best_near(fp, key, &usable) {
+            self.touch(fp, &donor_key);
+            self.counters.near_hits += 1;
+            return Some((e, CacheHit::Near));
+        }
+        self.counters.misses += 1;
+        None
+    }
+
     /// Counter-free read (tools, tests).
     pub fn peek(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<&CacheEntry> {
         self.shards.get(fp).and_then(|s| s.get(key)).map(|slot| &slot.entry)
+    }
+
+    /// Clone out every entry (redistribution across lock shards,
+    /// snapshotting). Caches are small — bounded by `shard_cap` per
+    /// device — so the copy is cheap.
+    pub fn entries(&self) -> Vec<(DeviceFingerprint, TuneKey, CacheEntry)> {
+        let mut out = Vec::with_capacity(self.len());
+        for (fp, shard) in &self.shards {
+            for (key, slot) in shard {
+                out.push((fp.clone(), key.clone(), slot.entry.clone()));
+            }
+        }
+        out
     }
 
     /// Insert or overwrite an outcome, evicting the least-recently-used
@@ -319,24 +562,37 @@ impl TuneCache {
         }
     }
 
+    /// The warm-start-shipping adoption policy, in one place so the
+    /// plain and sharded ([`super::SharedTuneCache`]) merges cannot
+    /// drift: adopt a foreign entry only where we have none or it has a
+    /// strictly better score; bump `imported` on adoption.
+    pub fn adopt_if_better(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        entry: CacheEntry,
+    ) -> bool {
+        let better = match self.peek(fp, key) {
+            Some(existing) => entry.score < existing.score,
+            None => true,
+        };
+        if better {
+            self.insert(fp, key, entry);
+            self.counters.imported += 1;
+        }
+        better
+    }
+
     /// Merge another cache in (warm-start shipping): a foreign entry wins
     /// only where we have none or it has a strictly better score. Returns
     /// the number of entries adopted.
     pub fn merge(&mut self, other: &TuneCache) -> usize {
         let mut adopted = 0;
-        for (fp, shard) in &other.shards {
-            for (key, slot) in shard {
-                let better = match self.peek(fp, key) {
-                    Some(existing) => slot.entry.score < existing.score,
-                    None => true,
-                };
-                if better {
-                    self.insert(fp, key, slot.entry.clone());
-                    adopted += 1;
-                }
+        for (fp, key, entry) in other.entries() {
+            if self.adopt_if_better(&fp, &key, entry) {
+                adopted += 1;
             }
         }
-        self.counters.imported += adopted as u64;
         adopted
     }
 
@@ -527,5 +783,129 @@ mod tests {
         let e = entry(1e-4);
         assert!((e.speedup() - 2.0).abs() < 1e-12);
         assert!(e.updated_unix > 0);
+    }
+
+    #[test]
+    fn speedup_guards_degenerate_inputs() {
+        let mut e = entry(1e-4);
+        e.score = 0.0;
+        assert_eq!(e.speedup(), 0.0, "zero score must not divide");
+        e.score = -1.0;
+        assert_eq!(e.speedup(), 0.0);
+        e.score = f64::NAN;
+        assert_eq!(e.speedup(), 0.0);
+        e.score = 1e-4;
+        e.ref_score = f64::INFINITY;
+        assert_eq!(e.speedup(), 0.0);
+        e.ref_score = f64::NAN;
+        assert_eq!(e.speedup(), 0.0);
+    }
+
+    #[test]
+    fn ttl_expires_on_lookup_and_sweep() {
+        let mut c = TuneCache::new().with_ttl(Some(3600));
+        let mut old = entry(1e-4);
+        old.updated_unix = 1_000; // far in the past
+        c.insert(&fp("a"), &key("old"), old);
+        c.insert(&fp("a"), &key("fresh"), entry(2e-4)); // now-stamped
+        assert_eq!(c.len(), 2);
+
+        // Lookup of the expired entry evicts it and reports a miss.
+        assert!(c.lookup(&fp("a"), &key("old")).is_none());
+        assert_eq!(c.counters.expired, 1);
+        assert_eq!(c.counters.misses, 1);
+        assert_eq!(c.len(), 1);
+        // The fresh entry is untouched.
+        assert!(c.lookup(&fp("a"), &key("fresh")).is_some());
+
+        // Sweep: nothing else is over age.
+        assert_eq!(c.evict_expired(super::now_unix()), 0);
+        // Add another ancient entry and sweep it out explicitly.
+        let mut old2 = entry(3e-4);
+        old2.updated_unix = 2_000;
+        c.insert(&fp("b"), &key("old2"), old2);
+        assert_eq!(c.evict_expired(super::now_unix()), 1);
+        assert_eq!(c.counters.expired, 2);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn no_ttl_means_no_expiry() {
+        let mut c = TuneCache::new();
+        let mut old = entry(1e-4);
+        old.updated_unix = 1;
+        c.insert(&fp("a"), &key("old"), old);
+        assert!(c.lookup(&fp("a"), &key("old")).is_some());
+        assert_eq!(c.evict_expired(super::now_unix()), 0);
+        assert_eq!(c.counters.expired, 0);
+    }
+
+    fn entry_with(s: Structural, score: f64) -> CacheEntry {
+        CacheEntry::new(TuningParams::phase1_default(s), score, 2.0 * score, 10)
+    }
+
+    #[test]
+    fn near_lookup_transfers_no_leftover_class() {
+        let mut c = TuneCache::new();
+        // Winner for length 64: elems_per_iter = 4*2*2*2 = 32 — divides
+        // both 64 and the requested 96 evenly (same no-leftover class).
+        let donor = Structural::new(true, 2, 2, 2);
+        assert!(donor.no_leftover(64) && donor.no_leftover(96));
+        c.insert(&fp("a"), &TuneKey::new("k", 64), entry_with(donor, 1e-4));
+
+        // Exact key misses; the near donor answers as a hint.
+        let (e, hit) = c
+            .lookup_near(&fp("a"), &TuneKey::new("k", 96), |_| true)
+            .expect("near fallback must fire");
+        assert_eq!(hit, CacheHit::Near);
+        assert_eq!(e.params.s, donor);
+        assert_eq!(c.counters.near_hits, 1);
+        assert_eq!(c.counters.hits, 0);
+        assert_eq!(c.counters.misses, 0);
+
+        // An exact entry wins over the near donor.
+        c.insert(&fp("a"), &TuneKey::new("k", 96), entry_with(donor, 2e-4));
+        let (e2, hit2) = c.lookup_near(&fp("a"), &TuneKey::new("k", 96), |_| true).unwrap();
+        assert_eq!(hit2, CacheHit::Exact);
+        assert_eq!(e2.score, 2e-4);
+        assert_eq!(c.counters.hits, 1);
+    }
+
+    #[test]
+    fn near_lookup_rejects_wrong_class_shape_and_distance() {
+        let mut c = TuneCache::new();
+        // elems_per_iter = 4*2*2*4 = 64: no-leftover for 64 but NOT 96.
+        let wrong_class = Structural::new(true, 2, 2, 4);
+        assert!(!wrong_class.no_leftover(96));
+        c.insert(&fp("a"), &TuneKey::new("k", 64), entry_with(wrong_class, 1e-4));
+        assert!(c.lookup_near(&fp("a"), &TuneKey::new("k", 96), |_| true).is_none());
+        assert_eq!(c.counters.misses, 1);
+
+        // Same class but a different shape string must not transfer.
+        let donor = Structural::new(true, 2, 2, 2);
+        c.insert(&fp("a"), &TuneKey::with_shape("k", 64, "big"), entry_with(donor, 1e-4));
+        assert!(c.lookup_near(&fp("a"), &TuneKey::new("k", 96), |_| true).is_none());
+
+        // Same class but >2x away in trip length is not "near".
+        let tiny = Structural::new(true, 1, 1, 1); // epi 4: divides everything
+        c.insert(&fp("a"), &TuneKey::new("k2", 4096), entry_with(tiny, 1e-4));
+        assert!(c.lookup_near(&fp("a"), &TuneKey::new("k2", 64), |_| true).is_none());
+
+        // And the usable filter applies to near donors too.
+        c.insert(&fp("a"), &TuneKey::new("k3", 64), entry_with(donor, 1e-4));
+        assert!(c
+            .lookup_near(&fp("a"), &TuneKey::new("k3", 96), |e| !e.params.s.ve)
+            .is_none());
+    }
+
+    #[test]
+    fn near_lookup_picks_closest_length() {
+        let mut c = TuneCache::new();
+        let donor = Structural::new(true, 1, 1, 1); // epi 4
+        c.insert(&fp("a"), &TuneKey::new("k", 64), entry_with(donor, 1e-4));
+        c.insert(&fp("a"), &TuneKey::new("k", 128), entry_with(donor, 2e-4));
+        let (e, hit) = c.lookup_near(&fp("a"), &TuneKey::new("k", 112), |_| true).unwrap();
+        assert_eq!(hit, CacheHit::Near);
+        assert_eq!(e.score, 2e-4, "128 is nearer to 112 than 64 is");
     }
 }

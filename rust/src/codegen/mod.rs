@@ -16,7 +16,7 @@ pub use manifest::{ArtifactSpec, Manifest, VariantEntry};
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 #[cfg(feature = "pjrt")]
-use std::rc::Rc;
+use std::sync::Arc;
 #[cfg(feature = "pjrt")]
 use std::time::Duration;
 
@@ -37,8 +37,8 @@ use crate::tunespace::Structural;
 pub struct CodeCache<'rt> {
     rt: &'rt Runtime,
     spec: ArtifactSpec,
-    cache: HashMap<u32, Rc<Executable>>,
-    reference: Option<Rc<Executable>>,
+    cache: HashMap<u32, Arc<Executable>>,
+    reference: Option<Arc<Executable>>,
     total_codegen: Duration,
     compiles: u32,
 }
@@ -63,7 +63,7 @@ impl<'rt> CodeCache<'rt> {
     /// Generate machine code for a structural variant (cached). Returns
     /// the executable and the codegen cost of *this* call (zero on cache
     /// hit).
-    pub fn generate(&mut self, s: Structural) -> Result<(Rc<Executable>, Duration)> {
+    pub fn generate(&mut self, s: Structural) -> Result<(Arc<Executable>, Duration)> {
         let vid = s.vid();
         if let Some(e) = self.cache.get(&vid) {
             return Ok((e.clone(), Duration::ZERO));
@@ -73,7 +73,7 @@ impl<'rt> CodeCache<'rt> {
             .variant(vid)
             .with_context(|| format!("variant {s} (vid {vid}) has no artifact"))?;
         let path = self.spec.root.join(&entry.path);
-        let exe = Rc::new(self.rt.load_hlo_text(&path)?);
+        let exe = Arc::new(self.rt.load_hlo_text(&path)?);
         let cost = exe.compile_time();
         self.total_codegen += cost;
         self.compiles += 1;
@@ -82,12 +82,12 @@ impl<'rt> CodeCache<'rt> {
     }
 
     /// Compile the reference kernel artifact (gcc -O3 analogue).
-    pub fn reference(&mut self) -> Result<(Rc<Executable>, Duration)> {
+    pub fn reference(&mut self) -> Result<(Arc<Executable>, Duration)> {
         if let Some(e) = &self.reference {
             return Ok((e.clone(), Duration::ZERO));
         }
         let path = self.spec.root.join(&self.spec.ref_path);
-        let exe = Rc::new(self.rt.load_hlo_text(&path)?);
+        let exe = Arc::new(self.rt.load_hlo_text(&path)?);
         let cost = exe.compile_time();
         self.total_codegen += cost;
         self.reference = Some(exe.clone());

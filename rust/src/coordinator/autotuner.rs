@@ -396,6 +396,16 @@ mod tests {
     }
 
     #[test]
+    fn tuner_and_backends_are_send() {
+        // The threaded service moves (AutoTuner, Backend) lanes onto
+        // worker threads; losing `Send` on either is a regression.
+        fn assert_send<T: Send>() {}
+        assert_send::<AutoTuner>();
+        assert_send::<MockBackend>();
+        assert_send::<crate::backend::sim::SimBackend>();
+    }
+
+    #[test]
     fn finds_landscape_optimum() {
         let mut b = MockBackend::new(64, 1);
         let mut tuner = AutoTuner::new(fast_cfg(), 64, None);

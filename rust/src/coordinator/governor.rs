@@ -1,0 +1,166 @@
+//! Lock-free global regeneration budget — the §3.3 decision lifted from
+//! one tuner to a whole fleet of concurrent tuner lanes.
+//!
+//! The single-lane [`RegenDecision`](super::RegenDecision) bounds one
+//! tuner's overhead against its own application time. A multi-threaded
+//! service runs N lanes concurrently; if each lane budgeted only against
+//! itself, aggregate tool overhead would be N× the paper's 0.2–4.2 %
+//! envelope. [`RegenGovernor`] keeps *one* budget over the *sums*:
+//! every lane reports its (overhead, app-time, gained) deltas after each
+//! call, and every lane consults [`RegenGovernor::allow`] before letting
+//! its tuner wake — so the whole fleet stays inside the envelope a
+//! single tuner was allowed.
+//!
+//! The accounting is lock-free: three `f64` accumulators held as
+//! [`AtomicU64`] bit patterns, updated by compare-and-swap. Relaxed
+//! ordering is sufficient — the budget check is a heuristic rate limit,
+//! not a synchronisation point; a lane racing past a just-exhausted
+//! budget overshoots by at most one version, exactly the overshoot the
+//! paper's own decision rule already tolerates at startup (§3.3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::decision::RegenDecision;
+
+/// An `f64` accumulator usable from many threads without a lock: the
+/// value lives as IEEE-754 bits in an [`AtomicU64`] and additions are
+/// compare-and-swap loops.
+#[derive(Debug)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> AtomicF64 {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, delta: f64) {
+        if delta == 0.0 {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Shared regeneration governor: atomic aggregate accounting plus the
+/// [`RegenDecision`] policy applied to the totals. `Send + Sync`; wrap in
+/// an `Arc` to share across worker threads.
+#[derive(Debug)]
+pub struct RegenGovernor {
+    policy: RegenDecision,
+    overhead: AtomicF64,
+    app_time: AtomicF64,
+    gained: AtomicF64,
+}
+
+impl RegenGovernor {
+    pub fn new(policy: RegenDecision) -> RegenGovernor {
+        RegenGovernor {
+            policy,
+            overhead: AtomicF64::new(0.0),
+            app_time: AtomicF64::new(0.0),
+            gained: AtomicF64::new(0.0),
+        }
+    }
+
+    pub fn policy(&self) -> RegenDecision {
+        self.policy
+    }
+
+    /// Report one lane's accounting deltas after a call.
+    pub fn record(&self, d_overhead: f64, d_app_time: f64, d_gained: f64) {
+        self.overhead.add(d_overhead);
+        self.app_time.add(d_app_time);
+        self.gained.add(d_gained);
+    }
+
+    /// May any lane regenerate right now, given the aggregate totals?
+    pub fn allow(&self) -> bool {
+        self.policy.allow(self.overhead.get(), self.app_time.get(), self.gained.get())
+    }
+
+    /// Aggregate `(overhead, app_time, gained)` seconds so far.
+    pub fn totals(&self) -> (f64, f64, f64) {
+        (self.overhead.get(), self.app_time.get(), self.gained.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn governor_is_send_sync() {
+        fn assert_ss<T: Send + Sync>() {}
+        assert_ss::<RegenGovernor>();
+        assert_ss::<AtomicF64>();
+    }
+
+    #[test]
+    fn atomic_f64_accumulates() {
+        let a = AtomicF64::new(1.5);
+        a.add(2.25);
+        a.add(-0.75);
+        assert!((a.get() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn atomic_f64_is_exact_under_contention() {
+        // Power-of-two increments are exactly representable, so the CAS
+        // loop must lose nothing regardless of interleaving.
+        let a = std::sync::Arc::new(AtomicF64::new(0.0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        a.add(0.25);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.get(), 4.0 * 10_000.0 * 0.25);
+    }
+
+    #[test]
+    fn allow_tracks_aggregate_budget() {
+        let g = RegenGovernor::new(RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.0 });
+        // No app time yet: budget 0, nothing allowed.
+        assert!(!g.allow());
+        g.record(0.0, 10.0, 0.0);
+        assert!(g.allow(), "1% of 10s = 0.1s budget");
+        g.record(0.05, 0.0, 0.0);
+        assert!(g.allow());
+        g.record(0.05, 0.0, 0.0);
+        assert!(!g.allow(), "0.1s spent >= 0.1s budget");
+        // Gains unlock nothing at invest_frac 0; app time does.
+        g.record(0.0, 0.0, 100.0);
+        assert!(!g.allow());
+        g.record(0.0, 10.0, 0.0);
+        assert!(g.allow());
+    }
+
+    #[test]
+    fn totals_reflect_all_lanes() {
+        let g = RegenGovernor::new(RegenDecision::default());
+        g.record(0.1, 1.0, 0.2);
+        g.record(0.2, 2.0, 0.3);
+        let (o, a, gn) = g.totals();
+        assert!((o - 0.3).abs() < 1e-12);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((gn - 0.5).abs() < 1e-12);
+    }
+}

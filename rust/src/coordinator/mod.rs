@@ -15,12 +15,20 @@
 //! regeneration thread's work is serialised with the application and all
 //! overheads are included in the measured run time).
 
+//! Concurrency: [`AutoTuner`] is plain owned data (`Send`), so one tuner
+//! can live on a worker thread; the *global* regeneration budget across
+//! many concurrent tuners is [`RegenGovernor`] — lock-free atomic
+//! accounting of the aggregate overhead / app time / gains, consulted by
+//! every lane so N explorations share the envelope one tuner was allowed.
+
 pub mod autotuner;
 pub mod decision;
 pub mod evaluator;
+pub mod governor;
 pub mod stats;
 
 pub use autotuner::{AutoTuner, StepEvent, TunerConfig};
 pub use decision::RegenDecision;
 pub use evaluator::{EvalMode, Evaluator};
+pub use governor::{AtomicF64, RegenGovernor};
 pub use stats::{TuneStats, WarmOutcome};

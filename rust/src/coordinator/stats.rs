@@ -60,13 +60,10 @@ impl TuneStats {
     }
 
     /// Overhead as a fraction of the benchmark run time (Table 4).
+    /// Degenerate accounting (zero total, non-finite inputs) reports 0.0,
+    /// never NaN — these fractions get summed and averaged in reports.
     pub fn overhead_frac(&self) -> f64 {
-        let t = self.total_time();
-        if t > 0.0 {
-            self.overhead / t
-        } else {
-            0.0
-        }
+        crate::util::stats::safe_ratio(self.overhead, self.total_time())
     }
 
     /// Fraction of the run spent before exploration ended; 1.0 when the
@@ -137,5 +134,13 @@ mod tests {
         let s = TuneStats::default();
         assert_eq!(s.overhead_frac(), 0.0);
         assert!(s.best().is_none());
+    }
+
+    #[test]
+    fn overhead_frac_never_nan() {
+        let nan = TuneStats { app_time: f64::NAN, overhead: 1.0, ..Default::default() };
+        assert_eq!(nan.overhead_frac(), 0.0);
+        let inf = TuneStats { app_time: 1.0, overhead: f64::INFINITY, ..Default::default() };
+        assert_eq!(inf.overhead_frac(), 0.0);
     }
 }

@@ -30,19 +30,32 @@
 //! * [`cache`] — a persistent, versioned tuning cache. Outcomes are keyed
 //!   by ([`cache::DeviceFingerprint`], [`cache::TuneKey`]) and stored as
 //!   JSON on disk (`results/tunecache.json` by default, `DEGOAL_TUNECACHE`
-//!   override), with LRU-bounded in-memory shards and hit/miss/stale
-//!   counters. A cache file can be exported and shipped with a deployment
-//!   to warm-start cold processes ("autotune cache with the binary").
+//!   override), with LRU-bounded in-memory shards, optional age-based TTL
+//!   eviction, hit/miss/stale counters, and a shape-class fallback lookup
+//!   (an exact-key miss may return a same-no-leftover-class winner tuned
+//!   for a near trip length as a warm-start hint). A cache file can be
+//!   exported and shipped with a deployment to warm-start cold processes
+//!   ("autotune cache with the binary").
+//!   [`cache::SharedTuneCache`] is the concurrent view: lock shards
+//!   hashed by (device, key) behind one `Clone + Send + Sync` handle,
+//!   persistence-compatible with the plain cache.
 //! * [`coordinator::AutoTuner`] warm start — a tuner constructed from a
 //!   cached entry pays one `generate` + one short validation instead of
 //!   the full two-phase exploration; a stale artifact (generate failure)
 //!   falls back to full exploration.
 //! * [`service`] — a multi-kernel tuning service: N independent tuner
-//!   lanes (one per [`cache::TuneKey`]) over one shared cache, multiplexed
-//!   `app_call`s from many logical clients, and a *global* regeneration
-//!   budget so concurrent exploration cannot blow the paper's overhead
-//!   envelope. `degoal-rt service` replays a mixed streamcluster + VIPS
-//!   workload through it and reports cold-vs-warm behaviour.
+//!   lanes (one per [`cache::TuneKey`]) over one shared cache, with a
+//!   *global* regeneration budget (the lock-free
+//!   [`coordinator::RegenGovernor`]) so concurrent exploration cannot
+//!   blow the paper's overhead envelope. Two drivers share the lane
+//!   logic: the sequential [`service::TuningService`] (paper-faithful
+//!   single-core accounting) and the threaded [`service::TuningEngine`]
+//!   (per-lane worker threads, non-blocking submit + drain/finish).
+//!   `degoal-rt service` replays a mixed streamcluster + VIPS workload
+//!   through both and reports cold-vs-warm behaviour; pass `--threads N`
+//!   (N > 1) to add a sequential-vs-threaded calls/sec and overhead_frac
+//!   comparison. Per-lane overhead accounting is identical in both modes,
+//!   so the paper's envelope numbers stay comparable at any thread count.
 //!
 //! The host-PJRT execution path (`runtime`, `backend::host`,
 //! `codegen::CodeCache`) is gated behind the `pjrt` cargo feature; the

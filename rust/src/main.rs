@@ -4,10 +4,14 @@
 //!   experiment <id>|all [--quick]   regenerate a paper table/figure
 //!   tune [--input I] [--core C] [--sisd]
 //!                                   one online auto-tuning run (simulator)
-//!   service [--core C] [--calls N] [--cache PATH] [--seed S]
+//!   service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]
 //!                                   multi-kernel tuning service: mixed
-//!                                   streamcluster+vips workload, cold vs
-//!                                   warm via the persistent tuning cache
+//!                                   streamcluster+vips workload (6 lanes),
+//!                                   cold vs warm via the persistent tuning
+//!                                   cache; --threads N > 1 additionally
+//!                                   runs the threaded engine and prints a
+//!                                   sequential-vs-threaded calls/sec and
+//!                                   overhead_frac comparison
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
 //!                                   (needs the `pjrt` feature)
 //!   cores                           list simulated core configs
@@ -18,17 +22,17 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use degoal_rt::backend::host::HostBackend;
 use degoal_rt::backend::sim::SimBackend;
-use degoal_rt::backend::Backend as _;
-use degoal_rt::cache::{TuneCache, TuneKey};
+use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneCache};
 use degoal_rt::codegen::Manifest;
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::experiments;
 #[cfg(feature = "pjrt")]
 use degoal_rt::runtime::Runtime;
-use degoal_rt::service::{LaneId, ServiceConfig, TuningService};
+use degoal_rt::service::{LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService};
 use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
 use degoal_rt::util::table::{fnum, Table};
+use degoal_rt::workloads::mixed_service_workload;
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
 
 fn main() {
@@ -101,14 +105,42 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
             let calls = args.get_usize("calls", 120_000);
             let seed = args.get_u64("seed", 42);
+            let threads = args.get_usize_min("threads", 1, 1);
             let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
 
             println!(
-                "== multi-kernel tuning service on {} (mixed streamcluster + vips) ==",
-                core.name
+                "== multi-kernel tuning service on {} (mixed streamcluster + vips, {} lanes) ==",
+                core.name,
+                degoal_rt::workloads::MIXED_SERVICE_LANES,
             );
-            let (cold, cold_lines, cache) = run_service_phase(core, calls, seed, TuneCache::new())?;
-            print_service_phase("cold (empty cache)", &cold, &cold_lines);
+            let (cold, cold_lines, cache, cold_secs) =
+                run_service_phase(core, calls, seed, TuneCache::new())?;
+            print_service_phase("cold sequential (empty cache)", &cold, &cold_lines, cold_secs);
+
+            if threads > 1 {
+                // Same workload, same total calls, cold cache — the only
+                // variable is the threaded engine.
+                let (tcold, tcold_lines, _, tcold_secs) =
+                    run_engine_phase(core, calls, seed, threads, TuneCache::new())?;
+                print_service_phase(
+                    &format!("cold threaded (--threads {threads}, empty cache)"),
+                    &tcold,
+                    &tcold_lines,
+                    tcold_secs,
+                );
+                let seq_rate = calls as f64 / cold_secs.max(1e-9);
+                let thr_rate = calls as f64 / tcold_secs.max(1e-9);
+                println!(
+                    "\n  throughput: sequential {:.0} calls/s vs threaded {:.0} calls/s \
+                     ({:.2}x); overhead_frac {:.2} % (seq) vs {:.2} % (threaded)",
+                    seq_rate,
+                    thr_rate,
+                    thr_rate / seq_rate.max(1e-9),
+                    100.0 * cold.overhead_frac(),
+                    100.0 * tcold.overhead_frac(),
+                );
+            }
+
             // Merge into whatever is already on disk — the demo must not
             // clobber a production tunecache at the default path.
             let mut on_disk = TuneCache::load_or_default(&cache_path);
@@ -122,9 +154,17 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
 
             let reloaded = TuneCache::load(&cache_path)?;
-            let (warm, warm_lines, _) =
-                run_service_phase(core, calls, seed + 100, reloaded)?;
-            print_service_phase("warm (cache reloaded from disk)", &warm, &warm_lines);
+            let (warm, warm_lines, _, warm_secs) = if threads > 1 {
+                run_engine_phase(core, calls, seed + 100, threads, reloaded)?
+            } else {
+                run_service_phase(core, calls, seed + 100, reloaded)?
+            };
+            let warm_label = if threads > 1 {
+                format!("warm threaded (--threads {threads}, cache reloaded from disk)")
+            } else {
+                "warm sequential (cache reloaded from disk)".to_string()
+            };
+            print_service_phase(&warm_label, &warm, &warm_lines, warm_secs);
 
             let gen_ratio = cold.generate_calls as f64 / warm.generate_calls.max(1) as f64;
             let oh_ratio = cold.overhead / warm.overhead.max(1e-12);
@@ -243,61 +283,126 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
-/// One pass of the mixed streamcluster + vips workload through the
-/// tuning service: three kernel lanes on one simulated core, interleaved
-/// round-robin (many logical clients sharing the device). Returns the
-/// aggregate stats, per-lane report lines, and the (checkpointed) cache.
+/// Calls submitted per lane before moving to the next lane. Batching
+/// models request coalescing and amortises the threaded engine's channel
+/// overhead; the sequential driver uses the same pattern so the two
+/// modes replay identical per-lane call sequences.
+const SERVICE_CHUNK: usize = 64;
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn lane_lines(reports: &[LaneReport]) -> Vec<String> {
+    reports
+        .iter()
+        .map(|r| {
+            let best = r.best.map(|(p, _)| p.to_string()).unwrap_or_else(|| "-".into());
+            let warm = match r.warm {
+                Some(CacheHit::Exact) => " warm=exact",
+                Some(CacheHit::Near) => " warm=near",
+                None => "",
+            };
+            format!(
+                "    {}: best={best} speedup={:.2}x explored={} gen={} done={}{warm}",
+                r.key,
+                r.speedup(),
+                r.explored,
+                r.generate_calls,
+                r.done,
+            )
+        })
+        .collect()
+}
+
+/// One pass of the mixed workload through the *sequential* service mode.
+/// Returns aggregate stats, per-lane report lines, the (checkpointed)
+/// cache, and the wall-clock seconds of the drive loop.
 fn run_service_phase(
     core: &'static CoreConfig,
     calls: usize,
     seed: u64,
     cache: TuneCache,
-) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache)> {
-    let cfg = ServiceConfig {
-        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
-        ..Default::default()
-    };
-    let mut svc: TuningService<SimBackend> = TuningService::with_cache(cfg, cache);
-    let kinds = [
-        KernelKind::Distance { dim: 32, batch: 256 },
-        KernelKind::Distance { dim: 64, batch: 256 },
-        KernelKind::Lintra { row_len: 4800, rows: 8 },
-    ];
+) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache, f64)> {
+    let mut svc: TuningService<SimBackend> = TuningService::with_cache(service_cfg(), cache);
     let mut lanes: Vec<LaneId> = Vec::new();
-    for (i, kind) in kinds.iter().enumerate() {
-        let b = SimBackend::new(core, *kind, seed + i as u64);
-        let key = TuneKey::new(b.kernel_id(), kind.length());
+    for (key, b) in mixed_service_workload(core, seed) {
         lanes.push(svc.register(key, Some(true), b));
     }
-    for i in 0..calls {
-        svc.app_call(lanes[i % lanes.len()])?;
+    let started = std::time::Instant::now();
+    let mut submitted = 0usize;
+    'drive: loop {
+        for &l in &lanes {
+            let n = SERVICE_CHUNK.min(calls - submitted);
+            for _ in 0..n {
+                svc.app_call(l)?;
+            }
+            submitted += n;
+            if submitted >= calls {
+                break 'drive;
+            }
+        }
     }
+    let secs = started.elapsed().as_secs_f64();
     let stats = svc.stats();
-    let mut lines = Vec::new();
-    for &l in &lanes {
-        let t = svc.tuner(l).unwrap();
-        let key = svc.lane_key(l).unwrap();
-        let (best, speedup) = match (t.best(), t.ref_score()) {
-            (Some((p, s)), Some(r)) => (p.to_string(), r / s),
-            _ => ("-".into(), 1.0),
-        };
-        lines.push(format!(
-            "    {key}: best={best} speedup={speedup:.2}x explored={} gen={} done={}",
-            t.stats.explored_count(),
-            t.stats.generate_calls,
-            t.exploration_done(),
-        ));
-    }
-    Ok((stats, lines, svc.into_cache()))
+    let reports: Vec<LaneReport> =
+        lanes.iter().filter_map(|&l| svc.lane_report(l)).collect();
+    Ok((stats, lane_lines(&reports), svc.into_cache(), secs))
 }
 
-fn print_service_phase(label: &str, st: &degoal_rt::service::ServiceStats, lines: &[String]) {
+/// One pass of the mixed workload through the *threaded* engine: same
+/// lanes, same chunked round-robin submission order, `threads` workers.
+fn run_engine_phase(
+    core: &'static CoreConfig,
+    calls: usize,
+    seed: u64,
+    threads: usize,
+    cache: TuneCache,
+) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache, f64)> {
+    let shared = SharedTuneCache::from_cache(cache, degoal_rt::cache::DEFAULT_LOCK_SHARDS);
+    let mut eng: TuningEngine<SimBackend> =
+        TuningEngine::with_cache(service_cfg(), shared, threads);
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in mixed_service_workload(core, seed) {
+        lanes.push(eng.register(key, Some(true), b)?);
+    }
+    let cache_handle = eng.cache();
+    let started = std::time::Instant::now();
+    let mut submitted = 0usize;
+    'drive: loop {
+        for &l in &lanes {
+            let n = SERVICE_CHUNK.min(calls - submitted);
+            eng.submit_n(l, n as u32)?;
+            submitted += n;
+            if submitted >= calls {
+                break 'drive;
+            }
+        }
+    }
+    let (stats, reports) = eng.finish()?;
+    let secs = started.elapsed().as_secs_f64();
+    Ok((stats, lane_lines(&reports), cache_handle.snapshot(), secs))
+}
+
+fn print_service_phase(
+    label: &str,
+    st: &degoal_rt::service::ServiceStats,
+    lines: &[String],
+    secs: f64,
+) {
     println!(
-        "  {label}: lanes={} (warm {}) calls={} app={:.3}s overhead={:.1}ms ({:.2} %) \
-         explored={} generate={} swaps={} cache[h/m/s]={}/{}/{}",
+        "  {label}: lanes={} (warm {}, near {}) calls={} in {:.2}s wall ({:.0} calls/s) \
+         app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} swaps={} \
+         cache[h/n/m/s]={}/{}/{}/{}",
         st.lanes,
         st.warm_lanes,
+        st.near_lanes,
         st.kernel_calls,
+        secs,
+        st.kernel_calls as f64 / secs.max(1e-9),
         st.app_time,
         st.overhead * 1e3,
         100.0 * st.overhead_frac(),
@@ -305,6 +410,7 @@ fn print_service_phase(label: &str, st: &degoal_rt::service::ServiceStats, lines
         st.generate_calls,
         st.swaps,
         st.cache.hits,
+        st.cache.near_hits,
         st.cache.misses,
         st.cache.stale,
     );

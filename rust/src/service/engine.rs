@@ -1,0 +1,321 @@
+//! The multi-threaded tuning engine: per-lane worker threads fed by
+//! request channels over one [`SharedTuneCache`] and one
+//! [`RegenGovernor`].
+//!
+//! Threading model:
+//!
+//! * Each **lane** (kernel stream) is owned by exactly one **worker
+//!   thread** (`lane id % threads`), so a lane's tuner and backend are
+//!   never shared — no locks on the per-call hot path.
+//! * [`TuningEngine::submit`] is a **non-blocking** mpsc send; workers
+//!   drain their queues independently. Per-channel FIFO order means one
+//!   lane's calls execute in submission order (a kernel stream is a
+//!   sequential program); calls on *different* lanes run concurrently.
+//! * The **cache** is the sharded [`SharedTuneCache`]; the **global
+//!   regeneration budget** is the lock-free [`RegenGovernor`]. Both are
+//!   consulted from every worker, which is exactly how N concurrent
+//!   explorations stay inside the single-tuner overhead envelope.
+//! * [`TuningEngine::drain`] is the join/barrier: a `Sync` marker is
+//!   enqueued behind all outstanding calls on every worker and the
+//!   aggregate [`ServiceStats`](super::ServiceStats) is assembled from
+//!   the *per-worker snapshots* it returns. [`TuningEngine::finish`]
+//!   additionally joins the threads, checkpoints unfinished lanes into
+//!   the cache, and returns the final stats + per-lane reports.
+//!
+//! Time accounting stays paper-faithful *per lane*: each tuner still
+//! charges its own overhead against its own virtual clock (the paper's
+//! single-core `taskset` model), and the governor bounds the *sum* —
+//! wall-clock parallelism changes throughput, never the accounted
+//! overhead fractions.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use super::lane::{Lane, LaneReport};
+use super::{LaneId, ServiceConfig, ServiceStats};
+use crate::backend::Backend;
+use crate::cache::{DeviceFingerprint, SharedTuneCache, TuneKey};
+use crate::coordinator::RegenGovernor;
+
+enum Cmd {
+    /// Run `n` consecutive application calls on one lane. Batching
+    /// amortises channel overhead when per-call work is tiny.
+    Call { lane: usize, n: u32 },
+    /// Barrier: enqueueing this behind outstanding `Call`s and waiting
+    /// for the reply proves the worker has drained everything submitted
+    /// before it.
+    Sync(Sender<WorkerSnapshot>),
+}
+
+struct WorkerSnapshot {
+    reports: Vec<LaneReport>,
+    error: Option<String>,
+}
+
+fn worker_loop<B: Backend>(
+    mut lanes: HashMap<usize, Lane<B>>,
+    rx: Receiver<Cmd>,
+    cache: SharedTuneCache,
+    governor: Arc<RegenGovernor>,
+) -> (Vec<Lane<B>>, Option<String>) {
+    let mut error: Option<String> = None;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Call { lane, n } => {
+                if error.is_some() {
+                    continue; // fail fast, but keep draining the queue
+                }
+                match lanes.get_mut(&lane) {
+                    Some(l) => {
+                        for _ in 0..n {
+                            if let Err(e) = l.step(&cache, &governor) {
+                                error = Some(format!("lane {}: {e:#}", l.key));
+                                break;
+                            }
+                        }
+                    }
+                    None => error = Some(format!("lane {lane} not owned by this worker")),
+                }
+            }
+            Cmd::Sync(reply) => {
+                let mut reports: Vec<LaneReport> = lanes.values().map(Lane::report).collect();
+                reports.sort_by_key(|r| r.id);
+                let _ = reply.send(WorkerSnapshot { reports, error: error.clone() });
+            }
+        }
+    }
+    (lanes.into_values().collect(), error)
+}
+
+/// The concurrent serving engine. Construct, [`register`] kernel streams,
+/// then [`submit`] calls; the first submit spawns the workers. The
+/// sequential [`TuningService`](super::TuningService) is the
+/// single-threaded mode over the same per-lane step logic.
+///
+/// [`register`]: TuningEngine::register
+/// [`submit`]: TuningEngine::submit
+pub struct TuningEngine<B: Backend + 'static> {
+    cfg: ServiceConfig,
+    cache: SharedTuneCache,
+    governor: Arc<RegenGovernor>,
+    threads: usize,
+    /// Lanes staged between `register` and the worker spawn.
+    staged: Vec<Lane<B>>,
+    by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
+    keys: Vec<TuneKey>,
+    senders: Vec<Sender<Cmd>>,
+    handles: Vec<JoinHandle<(Vec<Lane<B>>, Option<String>)>>,
+}
+
+impl<B: Backend + 'static> TuningEngine<B> {
+    /// An engine over an empty (cold) shared cache.
+    pub fn new(cfg: ServiceConfig, threads: usize) -> TuningEngine<B> {
+        TuningEngine::with_cache(cfg, SharedTuneCache::new(), threads)
+    }
+
+    pub fn with_cache(
+        cfg: ServiceConfig,
+        cache: SharedTuneCache,
+        threads: usize,
+    ) -> TuningEngine<B> {
+        TuningEngine {
+            cfg,
+            cache,
+            governor: Arc::new(RegenGovernor::new(cfg.global)),
+            threads: threads.max(1),
+            staged: Vec::new(),
+            by_key: HashMap::new(),
+            keys: Vec::new(),
+            senders: Vec::new(),
+            handles: Vec::new(),
+        }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// A handle to the shared cache (clones see the same store — keep
+    /// one to save after [`TuningEngine::finish`]).
+    pub fn cache(&self) -> SharedTuneCache {
+        self.cache.clone()
+    }
+
+    pub fn lane_key(&self, lane: LaneId) -> Option<&TuneKey> {
+        self.keys.get(lane.0)
+    }
+
+    fn started(&self) -> bool {
+        !self.senders.is_empty()
+    }
+
+    /// Register a kernel stream (idempotent per `(device, key)`, like the
+    /// sequential service). Must happen before the first
+    /// [`TuningEngine::submit`] — lanes are moved onto worker threads
+    /// when the workers spawn.
+    pub fn register(
+        &mut self,
+        key: TuneKey,
+        ve_filter: Option<bool>,
+        backend: B,
+    ) -> Result<LaneId> {
+        if self.started() {
+            bail!("register after the workers started; register all lanes first");
+        }
+        let fp = backend.device_fingerprint();
+        let map_key = (fp, key.clone());
+        if let Some(&idx) = self.by_key.get(&map_key) {
+            return Ok(LaneId(idx));
+        }
+        let id = self.staged.len();
+        let lane = Lane::open(&self.cfg, id, key.clone(), ve_filter, backend, &self.cache);
+        self.by_key.insert(map_key, id);
+        self.keys.push(key);
+        self.staged.push(lane);
+        Ok(LaneId(id))
+    }
+
+    fn start(&mut self) {
+        let threads = self.threads.min(self.staged.len()).max(1);
+        let mut per_worker: Vec<HashMap<usize, Lane<B>>> =
+            (0..threads).map(|_| HashMap::new()).collect();
+        for lane in self.staged.drain(..) {
+            per_worker[lane.id % threads].insert(lane.id, lane);
+        }
+        for lanes in per_worker {
+            let (tx, rx) = mpsc::channel();
+            let cache = self.cache.clone();
+            let governor = self.governor.clone();
+            self.senders.push(tx);
+            self.handles
+                .push(std::thread::spawn(move || worker_loop(lanes, rx, cache, governor)));
+        }
+    }
+
+    /// Non-blocking: enqueue one application call on `lane`. Spawns the
+    /// workers on first use.
+    pub fn submit(&mut self, lane: LaneId) -> Result<()> {
+        self.submit_n(lane, 1)
+    }
+
+    /// Non-blocking: enqueue `n` consecutive calls on `lane` (batching
+    /// amortises channel overhead; a kernel stream's calls are ordered
+    /// within its worker queue either way).
+    pub fn submit_n(&mut self, lane: LaneId, n: u32) -> Result<()> {
+        if lane.0 >= self.keys.len() {
+            bail!("unknown lane {lane:?}");
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        if !self.started() {
+            self.start();
+        }
+        let worker = lane.0 % self.senders.len();
+        if self.senders[worker].send(Cmd::Call { lane: lane.0, n }).is_err() {
+            bail!("worker {worker} hung up (earlier failure?)");
+        }
+        Ok(())
+    }
+
+    fn sync_snapshots(&self) -> Result<Vec<WorkerSnapshot>> {
+        let mut out = Vec::with_capacity(self.senders.len());
+        // One barrier channel per worker; waiting for each reply proves
+        // the worker drained everything submitted before the marker.
+        let mut waits = Vec::with_capacity(self.senders.len());
+        for (w, s) in self.senders.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            if s.send(Cmd::Sync(tx)).is_err() {
+                bail!("worker {w} hung up (earlier failure?)");
+            }
+            waits.push((w, rx));
+        }
+        for (w, rx) in waits {
+            match rx.recv() {
+                Ok(snap) => out.push(snap),
+                Err(_) => bail!("worker {w} died before the barrier"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block until every submitted call has executed, then return the
+    /// per-lane reports (ordered by lane id). Fails if any worker hit an
+    /// error.
+    pub fn drain_reports(&mut self) -> Result<Vec<LaneReport>> {
+        if !self.started() {
+            // Nothing submitted yet: report the staged lanes directly.
+            let mut reports: Vec<LaneReport> = self.staged.iter().map(Lane::report).collect();
+            reports.sort_by_key(|r| r.id);
+            return Ok(reports);
+        }
+        let snaps = self.sync_snapshots()?;
+        let mut reports = Vec::with_capacity(self.keys.len());
+        for snap in snaps {
+            if let Some(e) = snap.error {
+                bail!("worker failed: {e}");
+            }
+            reports.extend(snap.reports);
+        }
+        reports.sort_by_key(|r| r.id);
+        Ok(reports)
+    }
+
+    /// Barrier + aggregate statistics (the threaded analogue of
+    /// [`super::TuningService::stats`]).
+    pub fn drain(&mut self) -> Result<ServiceStats> {
+        let reports = self.drain_reports()?;
+        Ok(ServiceStats::aggregate(&reports, self.cache.counters()))
+    }
+
+    /// Drain, stop the workers, checkpoint unfinished lanes' best-so-far
+    /// into the shared cache (shutdown path), and return the final stats
+    /// and per-lane reports. The cache handle from
+    /// [`TuningEngine::cache`] stays valid for saving.
+    pub fn finish(mut self) -> Result<(ServiceStats, Vec<LaneReport>)> {
+        if !self.started() {
+            for lane in &self.staged {
+                lane.checkpoint_into(&self.cache);
+            }
+            let mut reports: Vec<LaneReport> = self.staged.iter().map(Lane::report).collect();
+            reports.sort_by_key(|r| r.id);
+            let stats = ServiceStats::aggregate(&reports, self.cache.counters());
+            return Ok((stats, reports));
+        }
+        self.senders.clear(); // hang up: workers drain their queues and exit
+        let mut reports = Vec::with_capacity(self.keys.len());
+        let mut first_error: Option<String> = None;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok((lanes, error)) => {
+                    if first_error.is_none() {
+                        first_error = error;
+                    }
+                    for lane in &lanes {
+                        lane.checkpoint_into(&self.cache);
+                        reports.push(lane.report());
+                    }
+                }
+                Err(_) => {
+                    if first_error.is_none() {
+                        first_error = Some("worker thread panicked".into());
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_error {
+            bail!("tuning engine worker failed: {e}");
+        }
+        reports.sort_by_key(|r| r.id);
+        let stats = ServiceStats::aggregate(&reports, self.cache.counters());
+        Ok((stats, reports))
+    }
+}

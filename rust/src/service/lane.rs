@@ -1,0 +1,197 @@
+//! One tuner lane — the unit of work both service modes drive.
+//!
+//! A lane bundles `(TuneKey, AutoTuner, Backend)` for one kernel stream.
+//! [`Lane::step`] is the whole request path: consult the global
+//! [`RegenGovernor`], run the application call, report accounting deltas,
+//! propagate the warm-start outcome to the shared cache, and write the
+//! winner back when exploration completes. The sequential
+//! [`TuningService`](super::TuningService) calls it from one thread; the
+//! threaded [`TuningEngine`](super::TuningEngine) moves whole lanes onto
+//! worker threads and calls the *same* function — the two modes cannot
+//! drift apart behaviourally.
+
+use anyhow::Result;
+
+use super::ServiceConfig;
+use crate::backend::Backend;
+use crate::cache::{CacheEntry, CacheHit, DeviceFingerprint, SharedTuneCache, TuneKey};
+use crate::coordinator::{AutoTuner, RegenGovernor, WarmOutcome};
+use crate::tunespace::TuningParams;
+
+pub(crate) struct Lane<B: Backend> {
+    pub(crate) id: usize,
+    pub(crate) key: TuneKey,
+    pub(crate) fp: DeviceFingerprint,
+    pub(crate) backend: B,
+    pub(crate) tuner: AutoTuner,
+    /// How the registration-time cache lookup was answered.
+    pub(crate) warm: Option<CacheHit>,
+    /// Warm outcome already propagated to the cache counters.
+    warm_reported: bool,
+    /// Winner already written back to the cache.
+    committed: bool,
+}
+
+impl<B: Backend> Lane<B> {
+    /// Open a lane: consult the shared cache under the backend's device
+    /// fingerprint and warm-start the tuner from an exact hit — or, when
+    /// `cfg.near_hints` allows, from a same-no-leftover-class entry for a
+    /// near trip length ([`CacheHit::Near`]).
+    pub(crate) fn open(
+        cfg: &ServiceConfig,
+        id: usize,
+        key: TuneKey,
+        ve_filter: Option<bool>,
+        backend: B,
+        cache: &SharedTuneCache,
+    ) -> Lane<B> {
+        let fp = backend.device_fingerprint();
+        let usable = |e: &CacheEntry| ve_filter.map(|ve| e.params.s.ve == ve).unwrap_or(true);
+        let found = if cfg.near_hints {
+            cache.lookup_near(&fp, &key, usable)
+        } else {
+            cache.lookup_filtered(&fp, &key, usable).map(|e| (e, CacheHit::Exact))
+        };
+        let warm = found.as_ref().map(|(_, hit)| *hit);
+        let tuner = match found {
+            Some((entry, hit)) => {
+                log::info!(
+                    "lane {key}: {} warm start from cache ({} @ {:.3}x)",
+                    match hit {
+                        CacheHit::Exact => "exact",
+                        CacheHit::Near => "near-length hint",
+                    },
+                    entry.params,
+                    entry.speedup()
+                );
+                AutoTuner::with_warm_start(cfg.tuner, key.length, ve_filter, entry.params)
+            }
+            None => AutoTuner::new(cfg.tuner, key.length, ve_filter),
+        };
+        Lane { id, key, fp, backend, tuner, warm, warm_reported: false, committed: false }
+    }
+
+    /// One application kernel call — the request path. Identical in
+    /// sequential and threaded modes.
+    pub(crate) fn step(
+        &mut self,
+        cache: &SharedTuneCache,
+        governor: &RegenGovernor,
+    ) -> Result<f64> {
+        // Gate this lane's tuner on the *global* budget before the call;
+        // report this call's accounting deltas after it. Between the two,
+        // another lane may also pass the gate — the overshoot is at most
+        // one in-flight version per lane, the same tolerance the paper's
+        // own decision rule has at startup (§3.3).
+        self.tuner.set_regen_enabled(governor.allow());
+        let before = {
+            let s = &self.tuner.stats;
+            (s.overhead, s.app_time, s.gained)
+        };
+        let dt = self.tuner.app_call(&mut self.backend)?;
+        {
+            let s = &self.tuner.stats;
+            governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
+        }
+
+        // Warm-start outcome → cache counters (once per lane). A stale
+        // *exact* entry is invalidated so the re-explored winner replaces
+        // it; a stale near-length hint leaves its donor alone — the donor
+        // may still be perfectly valid for its own trip length.
+        if !self.warm_reported {
+            if let Some(outcome) = self.tuner.stats.warm_outcome {
+                self.warm_reported = true;
+                if outcome == WarmOutcome::Stale {
+                    cache.note_stale();
+                    if self.warm == Some(CacheHit::Exact) {
+                        cache.invalidate(&self.fp, &self.key);
+                    }
+                }
+            }
+        }
+
+        // Write-back: exploration finished — persist the winner. A "best"
+        // that loses to the reference is worthless as a warm start: skip.
+        if !self.committed && self.tuner.exploration_done() {
+            self.committed = true;
+            self.write_back(cache);
+        }
+        Ok(dt)
+    }
+
+    fn write_back(&self, cache: &SharedTuneCache) -> bool {
+        if let (Some((params, score)), Some(ref_score)) =
+            (self.tuner.best(), self.tuner.ref_score())
+        {
+            if score < ref_score {
+                let explored = self.tuner.stats.explored_count() as u32;
+                cache.insert(
+                    &self.fp,
+                    &self.key,
+                    CacheEntry::new(params, score, ref_score, explored),
+                );
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Shutdown-path write-back for a lane whose exploration has not
+    /// finished but already found something better than the reference.
+    pub(crate) fn checkpoint_into(&self, cache: &SharedTuneCache) -> bool {
+        if self.committed || self.tuner.exploration_done() {
+            return false;
+        }
+        self.write_back(cache)
+    }
+
+    pub(crate) fn report(&self) -> LaneReport {
+        let s = &self.tuner.stats;
+        LaneReport {
+            id: self.id,
+            key: self.key.clone(),
+            warm: self.warm,
+            done: self.tuner.exploration_done(),
+            best: self.tuner.best(),
+            ref_score: self.tuner.ref_score(),
+            kernel_calls: s.kernel_calls,
+            app_time: s.app_time,
+            overhead: s.overhead,
+            gained: s.gained,
+            explored: s.explored_count(),
+            generate_calls: s.generate_calls,
+            swaps: s.swaps,
+        }
+    }
+}
+
+/// Per-lane outcome summary — what a worker thread reports across the
+/// channel (and what the sequential mode derives directly), so the CLI
+/// and tests never need the lane (and its backend) itself.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub id: usize,
+    pub key: TuneKey,
+    pub warm: Option<CacheHit>,
+    pub done: bool,
+    pub best: Option<(TuningParams, f64)>,
+    pub ref_score: Option<f64>,
+    pub kernel_calls: u64,
+    pub app_time: f64,
+    pub overhead: f64,
+    pub gained: f64,
+    pub explored: usize,
+    pub generate_calls: u64,
+    pub swaps: u32,
+}
+
+impl LaneReport {
+    /// Best-vs-reference speedup (0.0 while unknown or degenerate —
+    /// never NaN).
+    pub fn speedup(&self) -> f64 {
+        match (self.best, self.ref_score) {
+            (Some((_, s)), Some(r)) => crate::util::stats::safe_ratio(r, s),
+            _ => 0.0,
+        }
+    }
+}

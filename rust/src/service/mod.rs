@@ -1,26 +1,51 @@
 //! Multi-kernel tuning service — many tuner lanes, one shared cache,
-//! one global regeneration budget.
+//! one global regeneration budget, in a sequential and a threaded mode.
 //!
 //! The single-stream [`AutoTuner`] drives exactly one kernel stream; a
 //! real deployment (the ROADMAP's serving-shaped north star) multiplexes
 //! *many* logical clients, each with their own kernel / trip-length /
-//! input-shape, over one device. [`TuningService`] owns:
+//! input-shape, over one device. Two drivers share one serving core:
 //!
-//! * N independent lanes — one `(TuneKey, AutoTuner, Backend)` triple per
-//!   kernel stream, registered with [`TuningService::register`] and driven
-//!   with interleaved [`TuningService::app_call`]s;
-//! * one shared persistent [`TuneCache`]: lanes warm-start from it on
-//!   registration and write their winners back when exploration finishes
-//!   ([`TuningService::checkpoint`] also flushes unfinished lanes' best so
-//!   short-lived processes still seed the next run);
-//! * a **global** regeneration budget: each lane keeps the paper's local
-//!   §3.3 decision, but the service additionally disables regeneration on
-//!   every lane while the *aggregate* overhead across lanes exceeds the
-//!   global allowance — N concurrent explorations must not multiply the
-//!   paper's 0.2–4.2 % envelope by N.
+//! * [`TuningService`] — the **sequential mode**: every lane driven from
+//!   the caller's thread via [`TuningService::app_call`]. This is the
+//!   paper-faithful configuration (§4.1 `taskset`s everything onto one
+//!   core so tool time serialises with application time) and what the
+//!   PR-1 tests drive.
+//! * [`TuningEngine`] — the **threaded mode**: lanes are moved onto
+//!   worker threads, fed by non-blocking [`TuningEngine::submit`] over
+//!   mpsc channels, joined with [`TuningEngine::drain`] /
+//!   [`TuningEngine::finish`].
+//!
+//! Both modes execute the identical per-call logic (`lane::Lane::step`)
+//! against the same two shared structures:
+//!
+//! * the sharded, `Clone + Send + Sync`
+//!   [`SharedTuneCache`](crate::cache::SharedTuneCache) — lanes
+//!   warm-start from it on registration (exact hit, or a near-trip-length
+//!   shape-class hint) and write winners back when exploration finishes
+//!   ([`TuningService::checkpoint`] also flushes unfinished lanes' best
+//!   so short-lived processes still seed the next run);
+//! * the lock-free [`RegenGovernor`](crate::coordinator::RegenGovernor):
+//!   each lane keeps the paper's local §3.3 decision, but regeneration is
+//!   additionally gated on the *aggregate* overhead across lanes — N
+//!   concurrent explorations must not multiply the paper's 0.2–4.2 %
+//!   envelope by N.
+//!
+//! Overhead accounting stays paper-faithful in both modes: every tuner
+//! charges tool time to its own lane's virtual clock exactly as the
+//! single-core model does, so `overhead_frac` means the same thing at
+//! `--threads 1` and `--threads 8`; threading changes wall-clock
+//! throughput (calls/sec), never the accounted fractions.
 //!
 //! `degoal-rt service` replays a mixed streamcluster + VIPS workload
-//! through this type on `SimBackend` and prints cold-vs-warm behaviour.
+//! through both modes on `SimBackend` and prints cold-vs-warm behaviour
+//! plus a sequential-vs-threaded throughput comparison.
+
+mod engine;
+mod lane;
+
+pub use engine::TuningEngine;
+pub use lane::LaneReport;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -28,8 +53,11 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::backend::Backend;
-use crate::cache::{CacheCounters, CacheEntry, DeviceFingerprint, TuneCache, TuneKey};
-use crate::coordinator::{AutoTuner, RegenDecision, TunerConfig, WarmOutcome};
+use crate::cache::{
+    CacheCounters, CacheHit, DeviceFingerprint, SharedTuneCache, TuneCache, TuneKey,
+};
+use crate::coordinator::{AutoTuner, RegenDecision, RegenGovernor, TunerConfig};
+use lane::Lane;
 
 /// Service policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -40,11 +68,19 @@ pub struct ServiceConfig {
     /// overhead, and gains. Defaults to the paper's 1 % / 10 % — i.e. the
     /// whole service stays inside the envelope one tuner was allowed.
     pub global: RegenDecision,
+    /// Answer exact-key misses with a same-no-leftover-class entry for a
+    /// near trip length as a warm-start hint (default on; counted as
+    /// `near_hits`, never as exact hits).
+    pub near_hints: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { tuner: TunerConfig::default(), global: RegenDecision::default() }
+        ServiceConfig {
+            tuner: TunerConfig::default(),
+            global: RegenDecision::default(),
+            near_hints: true,
+        }
     }
 }
 
@@ -52,25 +88,17 @@ impl Default for ServiceConfig {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LaneId(pub usize);
 
-struct Lane<B: Backend> {
-    key: TuneKey,
-    fp: DeviceFingerprint,
-    backend: B,
-    tuner: AutoTuner,
-    warm_hit: bool,
-    /// Warm outcome already propagated to the cache counters.
-    warm_reported: bool,
-    /// Winner already written back to the cache.
-    committed: bool,
-}
-
 /// Aggregate service statistics (Table-4-style counters summed over
 /// lanes, plus cache behaviour).
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     pub lanes: usize,
-    /// Lanes that found a cache entry at registration.
+    /// Lanes that found a usable cache entry at registration (exact or
+    /// near-length hint).
     pub warm_lanes: usize,
+    /// The subset of `warm_lanes` that warm-started from a near-length
+    /// shape-class hint rather than an exact entry.
+    pub near_lanes: usize,
     /// Lanes whose exploration has finished.
     pub done_lanes: usize,
     pub kernel_calls: u64,
@@ -89,96 +117,97 @@ impl ServiceStats {
     }
 
     /// Aggregate overhead fraction — the number the global budget bounds.
+    /// Guarded: degenerate accounting (zero total, non-finite inputs)
+    /// reports 0.0, never NaN.
     pub fn overhead_frac(&self) -> f64 {
-        let t = self.total_time();
-        if t > 0.0 {
-            self.overhead / t
-        } else {
-            0.0
+        crate::util::stats::safe_ratio(self.overhead, self.total_time())
+    }
+
+    /// Fold per-lane reports plus cache counters into the aggregate.
+    pub(crate) fn aggregate(reports: &[LaneReport], cache: CacheCounters) -> ServiceStats {
+        let mut st = ServiceStats { lanes: reports.len(), cache, ..Default::default() };
+        for r in reports {
+            st.warm_lanes += r.warm.is_some() as usize;
+            st.near_lanes += (r.warm == Some(CacheHit::Near)) as usize;
+            st.done_lanes += r.done as usize;
+            st.kernel_calls += r.kernel_calls;
+            st.app_time += r.app_time;
+            st.overhead += r.overhead;
+            st.gained += r.gained;
+            st.explored += r.explored;
+            st.generate_calls += r.generate_calls;
+            st.swaps += r.swaps;
         }
+        st
     }
 }
 
-/// The multi-kernel tuning service. Generic over the backend type so the
-/// same service drives simulated cores, the mock landscape, or (with the
-/// `pjrt` feature) real host execution.
+/// The sequential serving mode: a thin single-threaded driver over the
+/// same lane/cache/governor core the threaded [`TuningEngine`] uses.
+/// Generic over the backend type so the same service drives simulated
+/// cores, the mock landscape, or (with the `pjrt` feature) real host
+/// execution.
 pub struct TuningService<B: Backend> {
     cfg: ServiceConfig,
-    cache: TuneCache,
+    cache: SharedTuneCache,
+    governor: RegenGovernor,
     lanes: Vec<Lane<B>>,
     /// Lane index by (device fingerprint, tune key): the same kernel
     /// stream on two devices is two lanes.
     by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
-    /// Running (overhead, app_time, gained) sums over all lanes, updated
-    /// incrementally so the global budget check on the request path is
-    /// O(1) instead of O(lanes).
-    agg: (f64, f64, f64),
 }
 
 impl<B: Backend> TuningService<B> {
     /// A service with an empty (cold) cache.
     pub fn new(cfg: ServiceConfig) -> TuningService<B> {
-        TuningService::with_cache(cfg, TuneCache::new())
+        TuningService::with_shared_cache(cfg, SharedTuneCache::new())
     }
 
-    /// A service over an existing cache (e.g. [`TuneCache::load`] of a
-    /// previous run, or a cache shipped with the deployment).
+    /// A service over an existing single-threaded cache (e.g.
+    /// [`TuneCache::load`] of a previous run, or a cache shipped with the
+    /// deployment); it is sharded on entry.
     pub fn with_cache(cfg: ServiceConfig, cache: TuneCache) -> TuningService<B> {
+        TuningService::with_shared_cache(
+            cfg,
+            SharedTuneCache::from_cache(cache, crate::cache::DEFAULT_LOCK_SHARDS),
+        )
+    }
+
+    /// A service over a shared cache handle — e.g. one also visible to a
+    /// concurrently-running [`TuningEngine`] or to checkpointing tooling.
+    pub fn with_shared_cache(cfg: ServiceConfig, cache: SharedTuneCache) -> TuningService<B> {
         TuningService {
             cfg,
             cache,
+            governor: RegenGovernor::new(cfg.global),
             lanes: Vec::new(),
             by_key: HashMap::new(),
-            agg: (0.0, 0.0, 0.0),
         }
     }
 
-    pub fn cache(&self) -> &TuneCache {
+    /// The shared cache handle (all mutation is interior, under shard
+    /// locks — `&self` suffices even for inserts).
+    pub fn cache(&self) -> &SharedTuneCache {
         &self.cache
     }
 
-    pub fn cache_mut(&mut self) -> &mut TuneCache {
-        &mut self.cache
-    }
-
     /// Register a kernel stream. Consults the cache under the backend's
-    /// device fingerprint: a usable hit warm-starts the lane's tuner, a
-    /// miss (or an entry outside `ve_filter`'s class) starts cold.
-    /// Registering an already-known (device, key) pair returns the
-    /// existing lane (idempotent — many logical clients may share a
-    /// stream).
+    /// device fingerprint: a usable exact hit warm-starts the lane's
+    /// tuner, as does (when `near_hints` is on) a same-class entry for a
+    /// near trip length; a miss (or an entry outside `ve_filter`'s class)
+    /// starts cold. Registering an already-known (device, key) pair
+    /// returns the existing lane (idempotent — many logical clients may
+    /// share a stream).
     pub fn register(&mut self, key: TuneKey, ve_filter: Option<bool>, backend: B) -> LaneId {
         let fp = backend.device_fingerprint();
-        let map_key = (fp.clone(), key.clone());
+        let map_key = (fp, key.clone());
         if let Some(&idx) = self.by_key.get(&map_key) {
             return LaneId(idx);
         }
-        let cached = self.cache.lookup_filtered(&fp, &key, |e| {
-            ve_filter.map(|ve| e.params.s.ve == ve).unwrap_or(true)
-        });
-        let warm_hit = cached.is_some();
-        let tuner = match cached {
-            Some(entry) => {
-                log::info!(
-                    "lane {key}: warm start from cache ({} @ {:.3}x)",
-                    entry.params,
-                    entry.speedup()
-                );
-                AutoTuner::with_warm_start(self.cfg.tuner, key.length, ve_filter, entry.params)
-            }
-            None => AutoTuner::new(self.cfg.tuner, key.length, ve_filter),
-        };
         let idx = self.lanes.len();
+        let lane = Lane::open(&self.cfg, idx, key, ve_filter, backend, &self.cache);
         self.by_key.insert(map_key, idx);
-        self.lanes.push(Lane {
-            key,
-            fp,
-            backend,
-            tuner,
-            warm_hit,
-            warm_reported: false,
-            committed: false,
-        });
+        self.lanes.push(lane);
         LaneId(idx)
     }
 
@@ -195,62 +224,22 @@ impl<B: Backend> TuningService<B> {
         self.lanes.get(lane.0).map(|l| &l.key)
     }
 
-    /// One application kernel call on `lane` — the service's request
+    /// Per-lane outcome summary (the same shape the threaded engine
+    /// reports across its channels).
+    pub fn lane_report(&self, lane: LaneId) -> Option<LaneReport> {
+        self.lanes.get(lane.0).map(Lane::report)
+    }
+
+    /// One application kernel call on `lane` — the sequential request
     /// path. Runs the lane's active function, lets its tuner wake under
     /// the *global* regeneration budget, propagates warm-start outcomes
     /// to the cache counters, and writes the winner back when the lane's
     /// exploration completes.
     pub fn app_call(&mut self, lane: LaneId) -> Result<f64> {
-        let (overhead, app_time, gained) = self.agg;
-        let allow = self.cfg.global.allow(overhead, app_time, gained);
         let Some(l) = self.lanes.get_mut(lane.0) else {
             bail!("unknown lane {lane:?}");
         };
-        l.tuner.set_regen_enabled(allow);
-        let before = {
-            let s = &l.tuner.stats;
-            (s.overhead, s.app_time, s.gained)
-        };
-        let dt = l.tuner.app_call(&mut l.backend)?;
-        {
-            let s = &l.tuner.stats;
-            self.agg.0 += s.overhead - before.0;
-            self.agg.1 += s.app_time - before.1;
-            self.agg.2 += s.gained - before.2;
-        }
-
-        // Warm-start outcome → cache counters (once per lane). A stale
-        // entry is also invalidated so the re-explored winner replaces it.
-        if !l.warm_reported {
-            if let Some(outcome) = l.tuner.stats.warm_outcome {
-                l.warm_reported = true;
-                if outcome == WarmOutcome::Stale {
-                    self.cache.note_stale();
-                    self.cache.invalidate(&l.fp, &l.key);
-                }
-            }
-        }
-
-        // Write-back: exploration finished — persist the winner with its
-        // measured score and the reference score it beat. A "best" that
-        // loses to the reference is worthless as a warm start (it would
-        // be validated, rejected, and re-explored every run): skip it.
-        if !l.committed && l.tuner.exploration_done() {
-            l.committed = true;
-            if let (Some((params, score)), Some(ref_score)) =
-                (l.tuner.best(), l.tuner.ref_score())
-            {
-                if score < ref_score {
-                    let explored = l.tuner.stats.explored_count() as u32;
-                    self.cache.insert(
-                        &l.fp,
-                        &l.key,
-                        CacheEntry::new(params, score, ref_score, explored),
-                    );
-                }
-            }
-        }
-        Ok(dt)
+        l.step(&self.cache, &self.governor)
     }
 
     /// Write best-so-far entries for lanes whose exploration has not
@@ -258,25 +247,7 @@ impl<B: Backend> TuningService<B> {
     /// (service shutdown path: a partial search result still warm-starts
     /// the next run). Returns entries written.
     pub fn checkpoint(&mut self) -> usize {
-        let mut written = 0;
-        for l in &self.lanes {
-            if l.committed || l.tuner.exploration_done() {
-                continue;
-            }
-            if let (Some((params, score)), Some(ref_score)) = (l.tuner.best(), l.tuner.ref_score())
-            {
-                if score < ref_score {
-                    let explored = l.tuner.stats.explored_count() as u32;
-                    self.cache.insert(
-                        &l.fp,
-                        &l.key,
-                        CacheEntry::new(params, score, ref_score, explored),
-                    );
-                    written += 1;
-                }
-            }
-        }
-        written
+        self.lanes.iter().filter(|l| l.checkpoint_into(&self.cache)).count()
     }
 
     /// Checkpoint unfinished lanes and persist the cache.
@@ -286,32 +257,16 @@ impl<B: Backend> TuningService<B> {
     }
 
     /// Tear the service down, checkpointing unfinished lanes, and hand
-    /// the cache back (shutdown / hand-over path).
+    /// the cache back as a plain snapshot (shutdown / hand-over path).
     pub fn into_cache(mut self) -> TuneCache {
         self.checkpoint();
-        self.cache
+        self.cache.snapshot()
     }
 
     /// Aggregate statistics over all lanes plus cache counters.
     pub fn stats(&self) -> ServiceStats {
-        let mut st = ServiceStats {
-            lanes: self.lanes.len(),
-            cache: self.cache.counters,
-            ..Default::default()
-        };
-        for l in &self.lanes {
-            let s = &l.tuner.stats;
-            st.warm_lanes += l.warm_hit as usize;
-            st.done_lanes += l.tuner.exploration_done() as usize;
-            st.kernel_calls += s.kernel_calls;
-            st.app_time += s.app_time;
-            st.overhead += s.overhead;
-            st.gained += s.gained;
-            st.explored += s.explored_count();
-            st.generate_calls += s.generate_calls;
-            st.swaps += s.swaps;
-        }
-        st
+        let reports: Vec<LaneReport> = self.lanes.iter().map(Lane::report).collect();
+        ServiceStats::aggregate(&reports, self.cache.counters())
     }
 }
 
@@ -361,7 +316,7 @@ mod tests {
         let key = TuneKey::new("mock/len64", 64);
 
         let mut svc = TuningService::new(fast_cfg());
-        svc.cache_mut().insert(&fp, &key, CacheEntry::new(simd, 9e-5, 1.8e-4, 60));
+        svc.cache().insert(&fp, &key, CacheEntry::new(simd, 9e-5, 1.8e-4, 60));
         // SISD-only lane cannot use the SIMD entry: cold start, honest miss.
         let lane = svc.register(key, Some(false), MockBackend::new(64, 7));
         let st = svc.stats();
@@ -372,7 +327,47 @@ mod tests {
     }
 
     #[test]
+    fn near_length_hint_warm_starts_a_lane() {
+        use crate::cache::{CacheEntry, CacheHit, DeviceFingerprint};
+        use crate::tunespace::{Structural, TuningParams};
+        // Donor tuned for length 64 whose structure (epi 32) also runs
+        // length 96 with no leftover — the transferable class.
+        let donor = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+        let fp = DeviceFingerprint::new("mock", "mock0");
+
+        let mut svc = TuningService::new(fast_cfg());
+        svc.cache().insert(
+            &fp,
+            &TuneKey::new("mock/len96", 64),
+            CacheEntry::new(donor, 9e-5, 1.8e-4, 60),
+        );
+        let lane = svc.register(TuneKey::new("mock/len96", 96), None, MockBackend::new(96, 8));
+        let st = svc.stats();
+        assert_eq!(st.warm_lanes, 1, "near hint must warm-start the lane");
+        assert_eq!(st.near_lanes, 1);
+        assert_eq!(st.cache.near_hits, 1);
+        assert_eq!(st.cache.hits, 0, "a hint is not an exact hit");
+        assert!(svc.tuner(lane).unwrap().warm_start_pending());
+        assert_eq!(svc.lane_report(lane).unwrap().warm, Some(CacheHit::Near));
+
+        // With hints disabled the same situation is a plain miss.
+        let mut cold_cfg = fast_cfg();
+        cold_cfg.near_hints = false;
+        let mut svc2 = TuningService::new(cold_cfg);
+        svc2.cache().insert(
+            &fp,
+            &TuneKey::new("mock/len96", 64),
+            CacheEntry::new(donor, 9e-5, 1.8e-4, 60),
+        );
+        svc2.register(TuneKey::new("mock/len96", 96), None, MockBackend::new(96, 9));
+        let st2 = svc2.stats();
+        assert_eq!(st2.warm_lanes, 0);
+        assert_eq!(st2.cache.misses, 1);
+    }
+
+    #[test]
     fn lanes_explore_and_write_back() {
+        use crate::cache::DeviceFingerprint;
         let mut svc = TuningService::new(fast_cfg());
         let l64 = svc.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 4));
         let l96 = svc.register(TuneKey::new("mock/len96", 96), None, MockBackend::new(96, 5));
@@ -387,7 +382,7 @@ mod tests {
             let (p, s) = t.best().unwrap();
             let key = svc.lane_key(lane).unwrap().clone();
             let fp = DeviceFingerprint::new("mock", "mock0");
-            let e = svc.cache().peek(&fp, &key).unwrap();
+            let e = svc.cache().get(&fp, &key).unwrap();
             assert_eq!(e.params, p);
             assert_eq!(e.score, s);
             assert!(e.ref_score > e.score, "winner beats the reference");
@@ -438,5 +433,17 @@ mod tests {
                 assert_eq!(svc.cache().len(), 0);
             }
         }
+    }
+
+    #[test]
+    fn overhead_frac_guards_degenerate_stats() {
+        let st = ServiceStats::default();
+        assert_eq!(st.overhead_frac(), 0.0, "0/0 must not be NaN");
+        let nan = ServiceStats { app_time: f64::NAN, overhead: 1.0, ..Default::default() };
+        assert_eq!(nan.overhead_frac(), 0.0);
+        let inf = ServiceStats { app_time: 1.0, overhead: f64::INFINITY, ..Default::default() };
+        assert_eq!(inf.overhead_frac(), 0.0);
+        let ok = ServiceStats { app_time: 9.9, overhead: 0.1, ..Default::default() };
+        assert!((ok.overhead_frac() - 0.01).abs() < 1e-12);
     }
 }

@@ -58,6 +58,12 @@ impl Args {
         self.get_parsed(name, default)
     }
 
+    /// `--name N` clamped to at least `min` — for knobs where 0 makes no
+    /// sense (e.g. `--threads`).
+    pub fn get_usize_min(&self, name: &str, default: usize, min: usize) -> usize {
+        self.get_parsed(name, default).max(min)
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get_parsed(name, default)
     }
@@ -118,6 +124,16 @@ mod tests {
         assert_eq!(a.get_usize("n", 5), 5);
         assert_eq!(a.get_f64("x", 1.5), 1.5);
         assert_eq!(a.get_u32("d", 7), 7);
+    }
+
+    #[test]
+    fn usize_min_clamps() {
+        let a = Args::parse_from(toks("--threads 0"));
+        assert_eq!(a.get_usize_min("threads", 1, 1), 1);
+        let b = Args::parse_from(toks("--threads 4"));
+        assert_eq!(b.get_usize_min("threads", 1, 1), 4);
+        let c = Args::parse_from(toks(""));
+        assert_eq!(c.get_usize_min("threads", 2, 1), 2);
     }
 
     #[test]

@@ -33,6 +33,25 @@ pub fn filter_worst_of_best(samples: &[f64], group: usize, groups: usize) -> f64
         .fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// `num / den`, guarded for report arithmetic: returns 0.0 instead of
+/// NaN or infinity whenever `den` is not a positive finite number, `num`
+/// is non-finite, or the quotient overflows. One shared policy for every
+/// speedup / overhead-fraction ratio that gets summed and averaged
+/// downstream ([`crate::cache::CacheEntry::speedup`],
+/// `TuneStats::overhead_frac`, `ServiceStats::overhead_frac`,
+/// `LaneReport::speedup`).
+pub fn safe_ratio(num: f64, den: f64) -> f64 {
+    if !(den > 0.0 && den.is_finite() && num.is_finite()) {
+        return 0.0;
+    }
+    let r = num / den;
+    if r.is_finite() {
+        r
+    } else {
+        0.0
+    }
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;

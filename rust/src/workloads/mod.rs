@@ -10,6 +10,44 @@ pub mod vips;
 pub use streamcluster::{StreamclusterApp, StreamclusterConfig};
 pub use vips::{VipsApp, VipsConfig};
 
+use crate::backend::sim::SimBackend;
+use crate::backend::Backend as _;
+use crate::cache::TuneKey;
+use crate::simulator::{CoreConfig, KernelKind};
+
+/// Lane count of [`mixed_service_workload`] (report headers can name it
+/// without constructing six simulator backends).
+pub const MIXED_SERVICE_LANES: usize = 6;
+
+/// The mixed streamcluster + VIPS serving workload the `degoal-rt
+/// service` demo, `examples/threaded_service.rs`, and tests share: six
+/// kernel lanes on one simulated core — two shape-class clients per
+/// kernel stream. The two heavy VIPS (lintra) lanes sit at consecutive
+/// lane ids so the threaded engine's `id % threads` placement gives them
+/// their own workers at `--threads >= 4` (load balance).
+pub fn mixed_service_workload(
+    core: &'static CoreConfig,
+    seed: u64,
+) -> Vec<(TuneKey, SimBackend)> {
+    let kinds: [(KernelKind, &str); 6] = [
+        (KernelKind::Distance { dim: 32, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "a"),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "a"),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "b"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "b"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "b"),
+    ];
+    kinds
+        .iter()
+        .enumerate()
+        .map(|(i, (kind, shape))| {
+            let b = SimBackend::new(core, *kind, seed + i as u64);
+            let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
+            (key, b)
+        })
+        .collect()
+}
+
 /// Result of one application run (with or without auto-tuning).
 #[derive(Debug, Clone)]
 pub struct AppRun {
@@ -25,4 +63,23 @@ pub struct AppRun {
     /// Benchmark-specific figure of merit (clustering cost / checksum),
     /// used to verify the tuned run computes the same thing.
     pub metric: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::core_by_name;
+
+    #[test]
+    fn mixed_service_workload_shape() {
+        let w = mixed_service_workload(core_by_name("DI-I1").unwrap(), 1);
+        assert_eq!(w.len(), MIXED_SERVICE_LANES);
+        // Distinct lanes (distinct keys); the heavy lintra lanes sit at
+        // consecutive ids 2 and 3 — the `id % threads` worker-placement
+        // contract the service demo relies on at --threads >= 4.
+        let keys: std::collections::HashSet<String> = w.iter().map(|(k, _)| k.key()).collect();
+        assert_eq!(keys.len(), w.len());
+        assert!(w[2].0.kernel.starts_with("lintra"));
+        assert!(w[3].0.kernel.starts_with("lintra"));
+    }
 }

@@ -109,7 +109,7 @@ fn fingerprint_mismatch_starts_cold() {
     let mut svc = TuningService::new(fast_service_cfg());
     // Seed the cache with an entry measured on a *different* device.
     let other_fp = DeviceFingerprint::new("mock", "some-other-device");
-    svc.cache_mut().insert(&other_fp, &key, CacheEntry::new(good, 9e-5, 1.8e-4, 60));
+    svc.cache().insert(&other_fp, &key, CacheEntry::new(good, 9e-5, 1.8e-4, 60));
 
     let lane = svc.register(key, None, MockBackend::new(64, 9));
     let st = svc.stats();
@@ -121,7 +121,7 @@ fn fingerprint_mismatch_starts_cold() {
     // Same device (MockBackend's default tag) does transfer.
     let mut svc2 = TuningService::new(fast_service_cfg());
     let same_fp = MockBackend::new(64, 9).device_fingerprint();
-    svc2.cache_mut()
+    svc2.cache()
         .insert(&same_fp, &TuneKey::new("mock/len64", 64), CacheEntry::new(good, 9e-5, 1.8e-4, 60));
     let lane2 = svc2.register(TuneKey::new("mock/len64", 64), None, MockBackend::new(64, 9));
     assert_eq!(svc2.stats().warm_lanes, 1);
@@ -155,7 +155,7 @@ fn stale_cache_entry_falls_back_and_counts() {
     let fp = MockBackend::new(64, 5).device_fingerprint();
 
     let mut svc = TuningService::new(fast_service_cfg());
-    svc.cache_mut().insert(&fp, &key, CacheEntry::new(stale, 9e-5, 1.8e-4, 60));
+    svc.cache().insert(&fp, &key, CacheEntry::new(stale, 9e-5, 1.8e-4, 60));
     let lane = svc.register(key.clone(), None, MockBackend::new(64, 5));
     assert_eq!(svc.stats().warm_lanes, 1);
     drive(&mut svc, &[lane], 200_000);
@@ -166,7 +166,7 @@ fn stale_cache_entry_falls_back_and_counts() {
     let st = svc.stats();
     assert_eq!(st.cache.stale, 1, "stale hit must be counted");
     // The stale entry was replaced by the re-explored winner.
-    let e = svc.cache().peek(&fp, &key).expect("write-back after fallback");
+    let e = svc.cache().get(&fp, &key).expect("write-back after fallback");
     assert_ne!(e.params, stale);
     assert!(e.params.s.valid_for(64));
 }
@@ -183,6 +183,7 @@ fn global_budget_bounds_aggregate_overhead() {
     let cfg = ServiceConfig {
         tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
         global: RegenDecision { max_overhead_frac: frac, invest_frac: 0.0 },
+        ..Default::default()
     };
     let mut svc = TuningService::new(cfg);
     let lanes: Vec<LaneId> = (0..4)

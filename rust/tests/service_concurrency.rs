@@ -1,0 +1,209 @@
+//! Concurrency stress tests for the threaded serving stack: the
+//! [`TuningEngine`] (per-lane worker threads), the sharded
+//! [`SharedTuneCache`], and the lock-free global [`RegenGovernor`]
+//! budget.
+//!
+//! The three properties a concurrent refactor must not lose:
+//! (a) no cache write-back is ever lost under contention,
+//! (b) the *global* regeneration budget is enforced across threads,
+//! (c) threaded results match the sequential mode's winners — the mock
+//!     backend is noise-free, so outcomes are deterministic regardless
+//!     of thread interleaving.
+
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::backend::Backend;
+use degoal_rt::cache::{SharedTuneCache, TuneKey};
+use degoal_rt::coordinator::{RegenDecision, TunerConfig};
+use degoal_rt::service::{LaneId, ServiceConfig, TuningEngine, TuningService};
+
+fn fast_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn client_key(i: usize) -> TuneKey {
+    TuneKey::with_shape("mock/len64", 64, format!("client{i}"))
+}
+
+/// Register `n` mock lanes (distinct shape-class clients, one device).
+fn register_lanes(eng: &mut TuningEngine<MockBackend>, n: usize, seed0: u64) -> Vec<LaneId> {
+    (0..n)
+        .map(|i| {
+            eng.register(client_key(i), None, MockBackend::new(64, seed0 + i as u64)).unwrap()
+        })
+        .collect()
+}
+
+// ---------- (a) no lost write-backs ----------
+
+#[test]
+fn eight_lanes_four_threads_lose_no_write_backs() {
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 4);
+    let lanes = register_lanes(&mut eng, 8, 100);
+    let cache = eng.cache();
+
+    // Interleaved chunked submission: enough calls per lane to finish
+    // the ~90-version exploration plan under the shared global budget.
+    let per_lane = 100_000u32;
+    let chunk = 1_000u32;
+    for _ in 0..(per_lane / chunk) {
+        for &l in &lanes {
+            eng.submit_n(l, chunk).unwrap();
+        }
+    }
+    let (stats, reports) = eng.finish().unwrap();
+
+    assert_eq!(stats.lanes, 8);
+    assert_eq!(stats.kernel_calls, 8 * per_lane as u64, "every submitted call must run");
+    assert_eq!(stats.done_lanes, 8, "all lanes must finish exploration: {stats:?}");
+    assert_eq!(cache.len(), 8, "one write-back per lane, none lost");
+
+    let fp = MockBackend::new(64, 0).device_fingerprint();
+    let (optimum, _) = MockBackend::new(64, 0).best_possible();
+    for r in &reports {
+        let (best_p, best_s) = r.best.expect("every lane found a winner");
+        // Determinism under threading: the noise-free landscape optimum.
+        assert_eq!(best_p.s, optimum.s, "lane {} must find the optimum", r.key);
+        let e = cache.get(&fp, &r.key).expect("write-back present for every lane");
+        assert_eq!(e.params, best_p, "cached params match the lane's winner");
+        assert_eq!(e.score, best_s);
+        assert!(e.ref_score > e.score);
+    }
+}
+
+// ---------- (b) global budget enforced under contention ----------
+
+#[test]
+fn zero_global_budget_stops_all_threads() {
+    let mut cfg = fast_cfg();
+    cfg.global = RegenDecision { max_overhead_frac: 0.0, invest_frac: 0.0 };
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(cfg, 4);
+    let lanes = register_lanes(&mut eng, 8, 200);
+    for &l in &lanes {
+        eng.submit_n(l, 5_000).unwrap();
+    }
+    let (stats, _) = eng.finish().unwrap();
+    // Per-lane decisions would happily explore; the shared governor must
+    // keep every worker idle — deterministically, regardless of races.
+    assert_eq!(stats.explored, 0, "zero budget must stop all lanes: {stats:?}");
+    assert_eq!(stats.generate_calls, 0);
+    assert_eq!(stats.lanes, 8);
+}
+
+#[test]
+fn tight_global_budget_bounds_aggregate_overhead_across_threads() {
+    // Tight global cap, permissive per-lane budgets, 8 lanes on 4
+    // threads: aggregate overhead must track the global allowance plus
+    // per-lane bootstrap evaluations (not regeneration) and at most one
+    // in-flight version per lane of race overshoot — the same slack the
+    // sequential-mode test allows.
+    let frac = 0.004;
+    let mut cfg = fast_cfg();
+    cfg.global = RegenDecision { max_overhead_frac: frac, invest_frac: 0.0 };
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(cfg, 4);
+    let lanes = register_lanes(&mut eng, 8, 300);
+    let chunk = 1_000u32;
+    for _ in 0..20 {
+        for &l in &lanes {
+            eng.submit_n(l, chunk).unwrap();
+        }
+    }
+    let (st, _) = eng.finish().unwrap();
+    let budget = frac * st.app_time;
+    // Bootstrap: 18 training calls at the 180us reference; one version:
+    // generate + 18 training calls at <=280us landscape ceiling.
+    let bootstrap = 18.0 * 190e-6;
+    let version = 20e-6 + 18.0 * 290e-6;
+    let slack = st.lanes as f64 * (bootstrap + version);
+    assert!(
+        st.overhead <= budget + slack,
+        "aggregate overhead {} vs global budget {} (+slack {}): {st:?}",
+        st.overhead,
+        budget,
+        slack,
+    );
+    assert!(st.explored > 0, "budget must not be vacuous: {st:?}");
+}
+
+// ---------- (c) threaded warm results match sequential winners ----------
+
+#[test]
+fn threaded_warm_matches_sequential_mode_winners() {
+    // Sequential cold pass: the reference result.
+    let n = 4;
+    let mut seq: TuningService<MockBackend> = TuningService::new(fast_cfg());
+    let seq_lanes: Vec<LaneId> = (0..n)
+        .map(|i| seq.register(client_key(i), None, MockBackend::new(64, 400 + i as u64)))
+        .collect();
+    for i in 0..(n * 100_000) {
+        seq.app_call(seq_lanes[i % n]).unwrap();
+    }
+    let seq_stats = seq.stats();
+    assert_eq!(seq_stats.done_lanes, n, "sequential lanes must finish: {seq_stats:?}");
+    let winners: Vec<_> =
+        seq_lanes.iter().map(|&l| seq.tuner(l).unwrap().best().unwrap()).collect();
+    let cache = seq.into_cache();
+
+    // Threaded warm pass over the sequential outcome, fresh backends.
+    let shared = SharedTuneCache::from_cache(cache, 8);
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_cache(fast_cfg(), shared, 4);
+    let lanes = register_lanes(&mut eng, n, 500);
+    for &l in &lanes {
+        eng.submit_n(l, 5_000).unwrap();
+    }
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.warm_lanes, n, "every lane must warm-start: {st:?}");
+    assert_eq!(st.near_lanes, 0, "exact keys: no near hints involved");
+    assert_eq!(st.done_lanes, n, "adopted warm starts end exploration");
+    assert_eq!(
+        st.generate_calls, n as u64,
+        "one validation generate per lane, from any thread"
+    );
+    for (r, (cold_p, cold_s)) in reports.iter().zip(&winners) {
+        let (p, s) = r.best.expect("warm lane has a best");
+        assert_eq!(
+            p.full_id(),
+            cold_p.full_id(),
+            "threaded warm winner must equal the sequential winner on lane {}",
+            r.key
+        );
+        assert!(s <= cold_s * 1.02, "warm score {s} must reach sequential best {cold_s}");
+    }
+}
+
+// ---------- drain is a true barrier ----------
+
+#[test]
+fn drain_observes_all_submitted_calls() {
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 3);
+    let lanes = register_lanes(&mut eng, 6, 600);
+    for &l in &lanes {
+        eng.submit_n(l, 2_500).unwrap();
+    }
+    let st = eng.drain().unwrap();
+    assert_eq!(st.kernel_calls, 6 * 2_500, "drain must wait for every submitted call");
+    for &l in &lanes {
+        eng.submit_n(l, 2_500).unwrap();
+    }
+    let (st2, _) = eng.finish().unwrap();
+    assert_eq!(st2.kernel_calls, 6 * 5_000);
+}
+
+// ---------- misuse is an error, not UB ----------
+
+#[test]
+fn register_after_start_and_unknown_lane_fail_cleanly() {
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 2);
+    let l = eng.register(client_key(0), None, MockBackend::new(64, 700)).unwrap();
+    assert!(eng.submit(l).is_ok());
+    assert!(
+        eng.register(client_key(1), None, MockBackend::new(64, 701)).is_err(),
+        "registration after the workers started must be rejected"
+    );
+    assert!(eng.submit(LaneId(99)).is_err(), "unknown lane must be rejected");
+    let (st, _) = eng.finish().unwrap();
+    assert_eq!(st.lanes, 1);
+    assert_eq!(st.kernel_calls, 1);
+}
