@@ -10,15 +10,23 @@
 //! engine's winners match the sequential mode's (the simulator is
 //! deterministic per lane), the aggregate overhead fraction stays inside
 //! the single-tuner envelope — only the wall-clock changes. Phase 3
-//! reuses phase 2's cache to show the warm threaded start.
+//! reuses phase 2's cache to show the warm threaded start. Phase 4 runs
+//! the *skewed* workload (both heavy lanes homed on one worker) under
+//! static placement and then work-stealing placement, hot-adds a lane on
+//! the running stealing engine from an [`EngineController`] and retires
+//! it again — dynamic lanes and lane migration, no restart, no drain.
 
 use degoal_rt::backend::sim::SimBackend;
-use degoal_rt::cache::{SharedTuneCache, TuneCache};
+use degoal_rt::backend::Backend as _;
+use degoal_rt::cache::{SharedTuneCache, TuneCache, TuneKey};
 use degoal_rt::coordinator::TunerConfig;
-use degoal_rt::service::{LaneId, ServiceConfig, TuningEngine, TuningService};
-use degoal_rt::simulator::core_by_name;
+use degoal_rt::service::{
+    EngineController, EngineOptions, LaneId, ServiceConfig, TuningEngine, TuningService,
+};
+use degoal_rt::simulator::{core_by_name, KernelKind};
 use degoal_rt::util::cli::Args;
 use degoal_rt::workloads::mixed_service_workload as workload;
+use degoal_rt::workloads::skewed_service_workload;
 
 fn cfg() -> ServiceConfig {
     ServiceConfig {
@@ -107,5 +115,71 @@ fn main() -> anyhow::Result<()> {
         thr.generate_calls,
         100.0 * warm.overhead_frac(),
     );
+
+    // ---- phase 4: skewed workload — static vs stealing + hot add ----
+    let skew_calls = (calls_per_lane / 2).max(1_000);
+    // Like-for-like comparison first (identical lanes and call totals);
+    // the hot-add/retire demo runs as its own phase so the extra lane's
+    // work never skews the timing ratio.
+    let static_secs = run_skewed(threads, false, skew_calls, false)?;
+    let steal_secs = run_skewed(threads, true, skew_calls, false)?;
+    println!(
+        "skewed placement: static {:.2}s vs stealing {:.2}s ({:.2}x) over {} calls/lane",
+        static_secs,
+        steal_secs,
+        static_secs / steal_secs.max(1e-9),
+        skew_calls,
+    );
+    run_skewed(threads, true, skew_calls / 2, true)?;
     Ok(())
+}
+
+/// Drive the skewed 8-lane workload through one engine configuration;
+/// optionally hot-add + retire a lane mid-run through a controller.
+fn run_skewed(
+    threads: usize,
+    steal: bool,
+    calls_per_lane: usize,
+    hot: bool,
+) -> anyhow::Result<f64> {
+    let core = core_by_name("DI-I1").expect("known core");
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads, steal, ..Default::default() },
+    );
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 42)
+        .into_iter()
+        .map(|(k, b)| eng.register(k, Some(true), b))
+        .collect::<anyhow::Result<_>>()?;
+    let t = std::time::Instant::now();
+    for &l in &lanes {
+        eng.submit_n(l, (calls_per_lane / 2) as u32)?;
+    }
+    if hot {
+        // The control plane works while calls flow: add a lane, serve
+        // it, retire it — its best-so-far checkpoints into the cache.
+        let ctrl: EngineController<SimBackend> = eng.controller();
+        let kind = KernelKind::Distance { dim: 32, batch: 256 };
+        let b = SimBackend::new(core, kind, 942);
+        let key = TuneKey::with_shape(b.kernel_id(), kind.length(), "hot");
+        let lane = ctrl.register_lane(key, Some(true), b)?;
+        ctrl.submit_n(lane, (calls_per_lane / 2) as u32)?;
+        let _ = ctrl.retire_lane(lane)?;
+    }
+    for &l in &lanes {
+        eng.submit_n(l, (calls_per_lane - calls_per_lane / 2) as u32)?;
+    }
+    let (st, _) = eng.finish()?;
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "skewed {}: {} lanes, {} calls in {:.2}s, overhead {:.2} %, {} migrations",
+        if steal { "stealing" } else { "static " },
+        st.lanes,
+        st.kernel_calls,
+        secs,
+        100.0 * st.overhead_frac(),
+        st.steals,
+    );
+    Ok(secs)
 }

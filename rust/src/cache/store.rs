@@ -439,23 +439,42 @@ impl TuneCache {
     }
 
     pub fn to_json(&self) -> Json {
-        let mut entries = Vec::new();
+        // Deterministic entry order (sorted by device, then key): the
+        // in-memory shards are HashMaps, and hash-order serialisation
+        // would make save output differ run to run — unacceptable for
+        // the golden-file compatibility test and for diffing two cache
+        // files of the same deployment. Sorting references: no entry is
+        // cloned to serialise.
+        let mut flat: Vec<(&DeviceFingerprint, &TuneKey, &CacheEntry)> =
+            Vec::with_capacity(self.len());
         for (fp, shard) in &self.shards {
             for (key, slot) in shard {
-                let e = &slot.entry;
-                entries.push(obj(vec![
-                    ("device", jstr(&fp.backend)),
-                    ("detail", jstr(&fp.detail)),
-                    ("kernel", jstr(&key.kernel)),
-                    ("length", num(key.length as f64)),
-                    ("shape", jstr(&key.shape)),
-                    ("params", e.params.to_json()),
-                    ("score", num(e.score)),
-                    ("ref_score", num(e.ref_score)),
-                    ("explored", num(e.explored as f64)),
-                    ("updated_unix", num(e.updated_unix as f64)),
-                ]));
+                flat.push((fp, key, &slot.entry));
             }
+        }
+        flat.sort_by(|(fa, ka, _), (fb, kb, _)| {
+            (&fa.backend, &fa.detail, &ka.kernel, ka.length, &ka.shape).cmp(&(
+                &fb.backend,
+                &fb.detail,
+                &kb.kernel,
+                kb.length,
+                &kb.shape,
+            ))
+        });
+        let mut entries = Vec::with_capacity(flat.len());
+        for (fp, key, e) in flat {
+            entries.push(obj(vec![
+                ("device", jstr(&fp.backend)),
+                ("detail", jstr(&fp.detail)),
+                ("kernel", jstr(&key.kernel)),
+                ("length", num(key.length as f64)),
+                ("shape", jstr(&key.shape)),
+                ("params", e.params.to_json()),
+                ("score", num(e.score)),
+                ("ref_score", num(e.ref_score)),
+                ("explored", num(e.explored as f64)),
+                ("updated_unix", num(e.updated_unix as f64)),
+            ]));
         }
         obj(vec![
             ("version", num(TUNECACHE_FORMAT_VERSION as f64)),
@@ -670,6 +689,32 @@ mod tests {
         ] {
             assert_eq!(c2.peek(&f, &k), c.peek(&f, &k), "{f} {k}");
         }
+    }
+
+    #[test]
+    fn serialisation_is_deterministic_regardless_of_insertion_order() {
+        // Same entries, opposite insertion orders, distinct lookup
+        // histories: the serialised form must be byte-identical (the
+        // on-disk format must not leak HashMap iteration order).
+        let mut a = TuneCache::new();
+        let mut b = TuneCache::new();
+        let items = [
+            (fp("a"), key("k1"), 1e-4),
+            (fp("a"), key("k2"), 2e-4),
+            (fp("b"), TuneKey::with_shape("k3", 128, "big"), 3e-4),
+        ];
+        for (f, k, s) in &items {
+            let mut e = entry(*s);
+            e.updated_unix = 1_750_000_000;
+            a.insert(f, k, e);
+        }
+        for (f, k, s) in items.iter().rev() {
+            let mut e = entry(*s);
+            e.updated_unix = 1_750_000_000;
+            b.insert(f, k, e);
+        }
+        b.lookup(&fp("a"), &key("k1"));
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
     }
 
     #[test]

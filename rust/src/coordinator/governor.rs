@@ -52,6 +52,36 @@ impl AtomicF64 {
     }
 }
 
+/// A point-in-time copy of the governor's three accumulators, for
+/// monitoring and tests (the accumulators themselves are write-mostly
+/// atomics with no public read path besides this and
+/// [`RegenGovernor::totals`]). The three loads are individually atomic
+/// but not atomic *as a triple*: a snapshot taken while lanes are
+/// recording may mix deltas from different calls — fine for budget
+/// telemetry, which is already tolerant of one in-flight version per
+/// lane (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GovernorSnapshot {
+    /// Aggregate tool overhead (seconds) across all lanes.
+    pub overhead: f64,
+    /// Aggregate application kernel time (seconds) across all lanes.
+    pub app_time: f64,
+    /// Aggregate estimated gained time (seconds) across all lanes.
+    pub gained: f64,
+}
+
+impl GovernorSnapshot {
+    /// Aggregate overhead fraction (0.0 on degenerate inputs, never NaN).
+    pub fn overhead_frac(&self) -> f64 {
+        crate::util::stats::safe_ratio(self.overhead, self.overhead + self.app_time)
+    }
+
+    /// Overhead budget still unspent under `policy` (clamped at 0.0).
+    pub fn remaining_budget(&self, policy: &RegenDecision) -> f64 {
+        (policy.budget(self.app_time, self.gained) - self.overhead).max(0.0)
+    }
+}
+
 /// Shared regeneration governor: atomic aggregate accounting plus the
 /// [`RegenDecision`] policy applied to the totals. `Send + Sync`; wrap in
 /// an `Arc` to share across worker threads.
@@ -92,6 +122,18 @@ impl RegenGovernor {
     /// Aggregate `(overhead, app_time, gained)` seconds so far.
     pub fn totals(&self) -> (f64, f64, f64) {
         (self.overhead.get(), self.app_time.get(), self.gained.get())
+    }
+
+    /// Structured form of [`RegenGovernor::totals`] — the accumulators
+    /// were opaque to tests and monitoring before this existed, which
+    /// made budget regressions (e.g. a lane migration double-recording a
+    /// call) unobservable from outside.
+    pub fn snapshot(&self) -> GovernorSnapshot {
+        GovernorSnapshot {
+            overhead: self.overhead.get(),
+            app_time: self.app_time.get(),
+            gained: self.gained.get(),
+        }
     }
 }
 
@@ -151,6 +193,30 @@ mod tests {
         assert!(!g.allow());
         g.record(0.0, 10.0, 0.0);
         assert!(g.allow());
+    }
+
+    #[test]
+    fn snapshot_mirrors_totals_and_derives_budget() {
+        let g = RegenGovernor::new(RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.0 });
+        g.record(0.02, 10.0, 3.0);
+        let snap = g.snapshot();
+        let (o, a, gn) = g.totals();
+        assert_eq!(snap.overhead, o);
+        assert_eq!(snap.app_time, a);
+        assert_eq!(snap.gained, gn);
+        // 0.02 / (0.02 + 10.0)
+        assert!((snap.overhead_frac() - 0.02 / 10.02).abs() < 1e-12);
+        // Budget 0.1s, 0.02s spent.
+        assert!((snap.remaining_budget(&g.policy()) - 0.08).abs() < 1e-12);
+        // Overspent budget clamps to zero instead of going negative.
+        g.record(0.5, 0.0, 0.0);
+        assert_eq!(g.snapshot().remaining_budget(&g.policy()), 0.0);
+    }
+
+    #[test]
+    fn snapshot_guards_degenerate_frac() {
+        let g = RegenGovernor::new(RegenDecision::default());
+        assert_eq!(g.snapshot().overhead_frac(), 0.0, "0/0 must not be NaN");
     }
 
     #[test]

@@ -50,12 +50,20 @@
 //!   blow the paper's overhead envelope. Two drivers share the lane
 //!   logic: the sequential [`service::TuningService`] (paper-faithful
 //!   single-core accounting) and the threaded [`service::TuningEngine`]
-//!   (per-lane worker threads, non-blocking submit + drain/finish).
-//!   `degoal-rt service` replays a mixed streamcluster + VIPS workload
-//!   through both and reports cold-vs-warm behaviour; pass `--threads N`
-//!   (N > 1) to add a sequential-vs-threaded calls/sec and overhead_frac
-//!   comparison. Per-lane overhead accounting is identical in both modes,
-//!   so the paper's envelope numbers stay comparable at any thread count.
+//!   — a work-stealing scheduler over whole lanes (each worker owns a
+//!   deque; an idle worker steals a whole lane, an ownership transfer
+//!   that leaves per-lane accounting untouched), with **dynamic lane
+//!   registration**: [`service::EngineController`] handles register and
+//!   retire lanes on the running engine from any thread, no drain or
+//!   restart. `degoal-rt service` replays a mixed streamcluster + VIPS
+//!   workload through both and reports cold-vs-warm behaviour; pass
+//!   `--threads N` (N > 1) for the threaded comparison, `--steal` for
+//!   work-stealing placement (with a static-vs-steal comparison and a
+//!   hot-add/retire demo), `--skewed` for the adversarially placed
+//!   8-lane workload, `--cache-ttl SECS` / `--no-near` for cache policy.
+//!   Per-lane overhead accounting is identical in every mode, so the
+//!   paper's envelope numbers stay comparable at any thread count —
+//!   `rust/tests/engine_steal.rs` pins this bit-for-bit.
 //!
 //! The host-PJRT execution path (`runtime`, `backend::host`,
 //! `codegen::CodeCache`) is gated behind the `pjrt` cargo feature; the

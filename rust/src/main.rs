@@ -5,13 +5,21 @@
 //!   tune [--input I] [--core C] [--sisd]
 //!                                   one online auto-tuning run (simulator)
 //!   service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]
+//!           [--steal] [--skewed] [--cache-ttl SECS] [--no-near]
 //!                                   multi-kernel tuning service: mixed
-//!                                   streamcluster+vips workload (6 lanes),
-//!                                   cold vs warm via the persistent tuning
+//!                                   streamcluster+vips workload (6 lanes;
+//!                                   --skewed: 8 lanes with both heavy
+//!                                   lintra lanes homed on worker 0), cold
+//!                                   vs warm via the persistent tuning
 //!                                   cache; --threads N > 1 additionally
-//!                                   runs the threaded engine and prints a
-//!                                   sequential-vs-threaded calls/sec and
-//!                                   overhead_frac comparison
+//!                                   runs the threaded engine (static
+//!                                   placement, plus work-stealing with
+//!                                   --steal, with a static-vs-steal
+//!                                   comparison and a hot-add/retire demo
+//!                                   of dynamic lane registration);
+//!                                   --cache-ttl ages entries out,
+//!                                   --no-near disables near-length
+//!                                   warm-start hints
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
 //!                                   (needs the `pjrt` feature)
 //!   cores                           list simulated core configs
@@ -22,18 +30,21 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use degoal_rt::backend::host::HostBackend;
 use degoal_rt::backend::sim::SimBackend;
-use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneCache};
+use degoal_rt::backend::Backend as _;
+use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneCache, TuneKey};
 use degoal_rt::codegen::Manifest;
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::experiments;
 #[cfg(feature = "pjrt")]
 use degoal_rt::runtime::Runtime;
-use degoal_rt::service::{LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService};
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService,
+};
 use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
 use degoal_rt::util::table::{fnum, Table};
-use degoal_rt::workloads::mixed_service_workload;
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
+use degoal_rt::workloads::{mixed_service_workload, skewed_service_workload};
 
 fn main() {
     degoal_rt::util::logging::init();
@@ -107,38 +118,88 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let seed = args.get_u64("seed", 42);
             let threads = args.get_usize_min("threads", 1, 1);
             let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
+            let steal = args.flag("steal");
+            let skewed = args.flag("skewed");
+            let knobs = ServiceKnobs {
+                ttl: args.get_opt_u64("cache-ttl"),
+                near_hints: !args.flag("no-near"),
+                workload: if skewed { skewed_service_workload } else { mixed_service_workload },
+            };
 
             println!(
-                "== multi-kernel tuning service on {} (mixed streamcluster + vips, {} lanes) ==",
+                "== multi-kernel tuning service on {} ({}, {} lanes{}{}) ==",
                 core.name,
-                degoal_rt::workloads::MIXED_SERVICE_LANES,
+                if skewed {
+                    "skewed streamcluster + vips: heavy lanes homed on worker 0"
+                } else {
+                    "mixed streamcluster + vips"
+                },
+                if skewed {
+                    degoal_rt::workloads::SKEWED_SERVICE_LANES
+                } else {
+                    degoal_rt::workloads::MIXED_SERVICE_LANES
+                },
+                knobs.ttl.map(|t| format!(", ttl {t}s")).unwrap_or_default(),
+                if knobs.near_hints { "" } else { ", near hints off" },
             );
             let (cold, cold_lines, cache, cold_secs) =
-                run_service_phase(core, calls, seed, TuneCache::new())?;
+                run_service_phase(core, calls, seed, TuneCache::new(), &knobs)?;
             print_service_phase("cold sequential (empty cache)", &cold, &cold_lines, cold_secs);
 
             if threads > 1 {
                 // Same workload, same total calls, cold cache — the only
-                // variable is the threaded engine.
+                // variable is the threaded engine's placement policy.
                 let (tcold, tcold_lines, _, tcold_secs) =
-                    run_engine_phase(core, calls, seed, threads, TuneCache::new())?;
+                    run_engine_phase(core, calls, seed, threads, false, TuneCache::new(), &knobs)?;
                 print_service_phase(
-                    &format!("cold threaded (--threads {threads}, empty cache)"),
+                    &format!("cold threaded (--threads {threads}, static placement, empty cache)"),
                     &tcold,
                     &tcold_lines,
                     tcold_secs,
                 );
                 let seq_rate = calls as f64 / cold_secs.max(1e-9);
-                let thr_rate = calls as f64 / tcold_secs.max(1e-9);
+                let static_rate = calls as f64 / tcold_secs.max(1e-9);
                 println!(
                     "\n  throughput: sequential {:.0} calls/s vs threaded {:.0} calls/s \
                      ({:.2}x); overhead_frac {:.2} % (seq) vs {:.2} % (threaded)",
                     seq_rate,
-                    thr_rate,
-                    thr_rate / seq_rate.max(1e-9),
+                    static_rate,
+                    static_rate / seq_rate.max(1e-9),
                     100.0 * cold.overhead_frac(),
                     100.0 * tcold.overhead_frac(),
                 );
+
+                if steal {
+                    let (scold, scold_lines, _, scold_secs) = run_engine_phase(
+                        core,
+                        calls,
+                        seed,
+                        threads,
+                        true,
+                        TuneCache::new(),
+                        &knobs,
+                    )?;
+                    print_service_phase(
+                        &format!("cold threaded (--threads {threads}, work-stealing, empty cache)"),
+                        &scold,
+                        &scold_lines,
+                        scold_secs,
+                    );
+                    let steal_rate = calls as f64 / scold_secs.max(1e-9);
+                    println!(
+                        "\n  placement: static {:.0} calls/s vs stealing {:.0} calls/s \
+                         ({:.2}x, {} lane migrations); overhead_frac {:.2} % vs {:.2} % \
+                         (virtual-time accounting is placement-invariant)",
+                        static_rate,
+                        steal_rate,
+                        steal_rate / static_rate.max(1e-9),
+                        scold.steals,
+                        100.0 * tcold.overhead_frac(),
+                        100.0 * scold.overhead_frac(),
+                    );
+                }
+
+                run_hot_add_demo(core, calls / 4, seed + 50, threads, steal, &knobs)?;
             }
 
             // Merge into whatever is already on disk — the demo must not
@@ -155,12 +216,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 
             let reloaded = TuneCache::load(&cache_path)?;
             let (warm, warm_lines, _, warm_secs) = if threads > 1 {
-                run_engine_phase(core, calls, seed + 100, threads, reloaded)?
+                run_engine_phase(core, calls, seed + 100, threads, steal, reloaded, &knobs)?
             } else {
-                run_service_phase(core, calls, seed + 100, reloaded)?
+                run_service_phase(core, calls, seed + 100, reloaded, &knobs)?
             };
             let warm_label = if threads > 1 {
-                format!("warm threaded (--threads {threads}, cache reloaded from disk)")
+                format!(
+                    "warm threaded (--threads {threads}, {}, cache reloaded from disk)",
+                    if steal { "work-stealing" } else { "static placement" }
+                )
             } else {
                 "warm sequential (cache reloaded from disk)".to_string()
             };
@@ -289,9 +353,24 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 /// modes replay identical per-lane call sequences.
 const SERVICE_CHUNK: usize = 64;
 
-fn service_cfg() -> ServiceConfig {
+/// A lane workload: `(key, backend)` pairs over one simulated core.
+type WorkloadFn = fn(&'static CoreConfig, u64) -> Vec<(TuneKey, SimBackend)>;
+
+/// The `service` subcommand's policy knobs, shared by every phase.
+struct ServiceKnobs {
+    /// `--cache-ttl SECS`: age entries out of the tuning cache.
+    ttl: Option<u64>,
+    /// `--no-near` clears this: answer exact misses with near-length
+    /// shape-class warm-start hints.
+    near_hints: bool,
+    /// `--skewed` selects the adversarially placed 8-lane workload.
+    workload: WorkloadFn,
+}
+
+fn service_cfg(knobs: &ServiceKnobs) -> ServiceConfig {
     ServiceConfig {
         tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        near_hints: knobs.near_hints,
         ..Default::default()
     }
 }
@@ -318,7 +397,7 @@ fn lane_lines(reports: &[LaneReport]) -> Vec<String> {
         .collect()
 }
 
-/// One pass of the mixed workload through the *sequential* service mode.
+/// One pass of the workload through the *sequential* service mode.
 /// Returns aggregate stats, per-lane report lines, the (checkpointed)
 /// cache, and the wall-clock seconds of the drive loop.
 fn run_service_phase(
@@ -326,10 +405,13 @@ fn run_service_phase(
     calls: usize,
     seed: u64,
     cache: TuneCache,
+    knobs: &ServiceKnobs,
 ) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache, f64)> {
-    let mut svc: TuningService<SimBackend> = TuningService::with_cache(service_cfg(), cache);
+    let mut svc: TuningService<SimBackend> =
+        TuningService::with_cache(service_cfg(knobs), cache);
+    svc.cache().set_ttl(knobs.ttl);
     let mut lanes: Vec<LaneId> = Vec::new();
-    for (key, b) in mixed_service_workload(core, seed) {
+    for (key, b) in (knobs.workload)(core, seed) {
         lanes.push(svc.register(key, Some(true), b));
     }
     let started = std::time::Instant::now();
@@ -353,20 +435,27 @@ fn run_service_phase(
     Ok((stats, lane_lines(&reports), svc.into_cache(), secs))
 }
 
-/// One pass of the mixed workload through the *threaded* engine: same
-/// lanes, same chunked round-robin submission order, `threads` workers.
+/// One pass of the workload through the *threaded* engine: same lanes,
+/// same chunked round-robin submission order, `threads` workers, static
+/// or work-stealing placement.
 fn run_engine_phase(
     core: &'static CoreConfig,
     calls: usize,
     seed: u64,
     threads: usize,
+    steal: bool,
     cache: TuneCache,
+    knobs: &ServiceKnobs,
 ) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache, f64)> {
     let shared = SharedTuneCache::from_cache(cache, degoal_rt::cache::DEFAULT_LOCK_SHARDS);
-    let mut eng: TuningEngine<SimBackend> =
-        TuningEngine::with_cache(service_cfg(), shared, threads);
+    shared.set_ttl(knobs.ttl);
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        service_cfg(knobs),
+        shared,
+        EngineOptions { threads, steal, ..Default::default() },
+    );
     let mut lanes: Vec<LaneId> = Vec::new();
-    for (key, b) in mixed_service_workload(core, seed) {
+    for (key, b) in (knobs.workload)(core, seed) {
         lanes.push(eng.register(key, Some(true), b)?);
     }
     let cache_handle = eng.cache();
@@ -387,6 +476,67 @@ fn run_engine_phase(
     Ok((stats, lane_lines(&reports), cache_handle.snapshot(), secs))
 }
 
+/// Dynamic-lane demo: drive the workload on a running engine, hot-add
+/// two distance lanes from a controller mid-run (no drain), gracefully
+/// retire one of them, and finish. Shows that a serving engine never
+/// needs a restart to change the kernel set it tunes.
+fn run_hot_add_demo(
+    core: &'static CoreConfig,
+    calls: usize,
+    seed: u64,
+    threads: usize,
+    steal: bool,
+    knobs: &ServiceKnobs,
+) -> Result<()> {
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        service_cfg(knobs),
+        SharedTuneCache::new(),
+        EngineOptions { threads, steal, ..Default::default() },
+    );
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in (knobs.workload)(core, seed) {
+        lanes.push(eng.register(key, Some(true), b)?);
+    }
+    let per_lane = (calls / lanes.len().max(1)).max(1);
+    let started = std::time::Instant::now();
+    for &l in &lanes {
+        eng.submit_n(l, (per_lane / 2) as u32)?;
+    }
+
+    // Mid-run, from a control handle: add two lanes, serve them, retire
+    // one. The call channels keep flowing the whole time.
+    let ctrl = eng.controller();
+    let kind = KernelKind::Distance { dim: 32, batch: 256 };
+    let mut hot = Vec::new();
+    for i in 0..2u64 {
+        let b = SimBackend::new(core, kind, seed + 900 + i);
+        let key = TuneKey::with_shape(b.kernel_id(), kind.length(), format!("hot{i}"));
+        let lane = ctrl.register_lane(key, Some(true), b)?;
+        ctrl.submit_n(lane, (per_lane / 2) as u32)?;
+        hot.push(lane);
+    }
+    let _ = ctrl.retire_lane(hot[0])?;
+    for &l in &lanes {
+        eng.submit_n(l, (per_lane - per_lane / 2) as u32)?;
+    }
+    let (st, reports) = eng.finish()?;
+    let secs = started.elapsed().as_secs_f64();
+    println!(
+        "  hot-add demo ({} base lanes + 2 added live, 1 retired live{}): {} calls in \
+         {:.2}s, overhead {:.2} %, {} lane migrations",
+        lanes.len(),
+        if steal { ", work-stealing" } else { ", static placement" },
+        st.kernel_calls,
+        secs,
+        100.0 * st.overhead_frac(),
+        st.steals,
+    );
+    for line in lane_lines(&reports[lanes.len()..]) {
+        println!("{line}");
+    }
+    Ok(())
+}
+
 fn print_service_phase(
     label: &str,
     st: &degoal_rt::service::ServiceStats,
@@ -395,7 +545,7 @@ fn print_service_phase(
 ) {
     println!(
         "  {label}: lanes={} (warm {}, near {}) calls={} in {:.2}s wall ({:.0} calls/s) \
-         app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} swaps={} \
+         app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} swaps={} steals={} \
          cache[h/n/m/s]={}/{}/{}/{}",
         st.lanes,
         st.warm_lanes,
@@ -409,6 +559,7 @@ fn print_service_phase(
         st.explored,
         st.generate_calls,
         st.swaps,
+        st.steals,
         st.cache.hits,
         st.cache.near_hits,
         st.cache.misses,

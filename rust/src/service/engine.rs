@@ -1,36 +1,53 @@
-//! The multi-threaded tuning engine: per-lane worker threads fed by
-//! request channels over one [`SharedTuneCache`] and one
-//! [`RegenGovernor`].
+//! The multi-threaded tuning engine: a work-stealing scheduler over
+//! whole tuner lanes, with dynamic lane registration on a running
+//! engine, one [`SharedTuneCache`] and one [`RegenGovernor`].
 //!
-//! Threading model:
+//! Threading model (PR 3 — replaces the static `lane id % threads`
+//! channel-per-worker ownership of PR 2):
 //!
-//! * Each **lane** (kernel stream) is owned by exactly one **worker
-//!   thread** (`lane id % threads`), so a lane's tuner and backend are
-//!   never shared — no locks on the per-call hot path.
-//! * [`TuningEngine::submit`] is a **non-blocking** mpsc send; workers
-//!   drain their queues independently. Per-channel FIFO order means one
-//!   lane's calls execute in submission order (a kernel stream is a
-//!   sequential program); calls on *different* lanes run concurrently.
-//! * The **cache** is the sharded [`SharedTuneCache`]; the **global
-//!   regeneration budget** is the lock-free [`RegenGovernor`]. Both are
-//!   consulted from every worker, which is exactly how N concurrent
-//!   explorations stay inside the single-tuner overhead envelope.
-//! * [`TuningEngine::drain`] is the join/barrier: a `Sync` marker is
-//!   enqueued behind all outstanding calls on every worker and the
-//!   aggregate [`ServiceStats`](super::ServiceStats) is assembled from
-//!   the *per-worker snapshots* it returns. [`TuningEngine::finish`]
-//!   additionally joins the threads, checkpoints unfinished lanes into
-//!   the cache, and returns the final stats + per-lane reports.
+//! * Each **worker thread** owns a deque of runnable lanes. A lane
+//!   (tuner + backend) is parked in a shared slot table while idle;
+//!   submitting calls queues it onto its **home
+//!   worker**'s deque; the worker takes the lane out of the slot, runs
+//!   one *quantum* of its backlog off-lock, and parks or requeues it.
+//! * **Stealing** ([`EngineOptions::steal`]): a worker whose own deque is
+//!   empty pops the oldest lane from the most loaded victim's deque. A
+//!   lane is `Send` but never `Sync`-shared, so a steal is an
+//!   **ownership transfer** — the lane's home becomes the thief and all
+//!   follow-up backlog drains there. Exactly one worker ever holds a
+//!   lane, so the per-lane hot path stays lock-free and the per-lane
+//!   virtual-time overhead accounting is untouched by migration:
+//!   `overhead_frac` means the same thing wherever the lane runs.
+//!   With stealing off the engine reproduces PR 2's static placement
+//!   (`id % threads` homes, no migration).
+//! * **Dynamic lanes**: registration and retirement go through the
+//!   shared scheduler directly — a control path beside the call path —
+//!   so [`EngineController::register_lane`] / [`retire_lane`] work on a
+//!   *running* engine with no drain, from any thread.
+//!   [`TuningEngine::controller`] hands out `Clone + Send` handles.
+//!   Retirement is graceful: the lane's outstanding backlog drains
+//!   first, then its best-so-far is checkpointed into the cache, its
+//!   final [`LaneReport`] is recorded, its backend is dropped, and its
+//!   `(device, key)` becomes free for re-registration (which then
+//!   warm-starts from the checkpoint).
+//! * [`TuningEngine::drain`] is the barrier: it waits until the backlog
+//!   is empty **and** no lane is mid-quantum on any worker — the second
+//!   condition is what makes the barrier sound under stealing, where a
+//!   lane can be in flight on a thief while every deque is empty.
+//!   [`TuningEngine::finish`] additionally joins the workers,
+//!   checkpoints unfinished lanes into the cache, and returns the final
+//!   stats + per-lane reports (retired lanes included).
 //!
-//! Time accounting stays paper-faithful *per lane*: each tuner still
-//! charges its own overhead against its own virtual clock (the paper's
-//! single-core `taskset` model), and the governor bounds the *sum* —
-//! wall-clock parallelism changes throughput, never the accounted
-//! overhead fractions.
+//! Time accounting stays paper-faithful *per lane*: each tuner charges
+//! its own overhead against its own virtual clock (the paper's
+//! single-core `taskset` model) and the governor bounds the *sum* —
+//! wall-clock parallelism and lane migration change throughput, never
+//! the accounted overhead fractions.
+//!
+//! [`retire_lane`]: EngineController::retire_lane
 
-use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
@@ -41,281 +58,627 @@ use crate::backend::Backend;
 use crate::cache::{DeviceFingerprint, SharedTuneCache, TuneKey};
 use crate::coordinator::RegenGovernor;
 
-enum Cmd {
-    /// Run `n` consecutive application calls on one lane. Batching
-    /// amortises channel overhead when per-call work is tiny.
-    Call { lane: usize, n: u32 },
-    /// Barrier: enqueueing this behind outstanding `Call`s and waiting
-    /// for the reply proves the worker has drained everything submitted
-    /// before it.
-    Sync(Sender<WorkerSnapshot>),
+/// Placement and stealing knobs of the threaded engine.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Worker threads (min 1).
+    pub threads: usize,
+    /// Allow idle workers to steal whole lanes from loaded workers'
+    /// deques. Off = PR 2's static `id % threads` placement.
+    pub steal: bool,
+    /// Calls a worker claims from a lane's backlog per scheduling turn
+    /// (min 1). Smaller quanta interleave lanes more finely and create
+    /// more steal opportunities; larger quanta amortise scheduler locking.
+    pub quantum: u32,
 }
 
-struct WorkerSnapshot {
-    reports: Vec<LaneReport>,
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { threads: 1, steal: false, quantum: 256 }
+    }
+}
+
+/// One lane's slot in the shared scheduler table. Slots are append-only
+/// (a [`LaneId`] stays valid forever); retirement empties the slot and
+/// leaves the final report behind.
+struct Slot<B: Backend> {
+    key: TuneKey,
+    fp: DeviceFingerprint,
+    /// `Some` while parked or queued; `None` while a worker runs it (the
+    /// ownership transfer) and after retirement.
+    lane: Option<Lane<B>>,
+    /// Calls submitted but not yet executed.
+    pending: u64,
+    /// The lane id currently sits in some worker's deque.
+    queued: bool,
+    /// Worker whose deque the lane queues to — changes on steal.
+    home: usize,
+    /// Graceful retirement requested; finalised when the backlog drains.
+    retiring: bool,
+    /// Final report of a retired lane.
+    retired: Option<LaneReport>,
+    /// Ownership transfers so far (mirrors into [`LaneReport::steals`]).
+    steals: u32,
+}
+
+struct Sched<B: Backend> {
+    slots: Vec<Slot<B>>,
+    /// Live lanes by `(device fingerprint, tune key)`; retirement frees
+    /// the key for re-registration.
+    by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
+    /// One runnable-lane deque per worker.
+    deques: Vec<VecDeque<usize>>,
+    /// Total submitted-but-unexecuted calls across all lanes.
+    backlog: u64,
+    /// Lanes currently mid-quantum on a worker.
+    active: usize,
+    /// Total lane migrations.
+    steals: u64,
+    shutdown: bool,
+    /// Abandoned (dropped without `finish`): workers claim and discard
+    /// remaining quanta instead of executing them, so dropping an engine
+    /// with a deep backlog never stalls the owner's unwind path.
+    discard: bool,
+    /// First failure; once set, workers discard instead of executing so
+    /// the barrier stays reachable (fail fast, drain clean).
     error: Option<String>,
 }
 
-fn worker_loop<B: Backend>(
-    mut lanes: HashMap<usize, Lane<B>>,
-    rx: Receiver<Cmd>,
+struct Shared<B: Backend> {
+    sched: Mutex<Sched<B>>,
+    /// Workers sleep here when they can reach no runnable lane.
+    work: Condvar,
+    /// Barrier waiters sleep here until backlog == 0 && active == 0.
+    idle: Condvar,
+    cfg: ServiceConfig,
+    opts: EngineOptions,
     cache: SharedTuneCache,
-    governor: Arc<RegenGovernor>,
-) -> (Vec<Lane<B>>, Option<String>) {
-    let mut error: Option<String> = None;
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Call { lane, n } => {
-                if error.is_some() {
-                    continue; // fail fast, but keep draining the queue
-                }
-                match lanes.get_mut(&lane) {
-                    Some(l) => {
-                        for _ in 0..n {
-                            if let Err(e) = l.step(&cache, &governor) {
-                                error = Some(format!("lane {}: {e:#}", l.key));
-                                break;
-                            }
-                        }
-                    }
-                    None => error = Some(format!("lane {lane} not owned by this worker")),
-                }
-            }
-            Cmd::Sync(reply) => {
-                let mut reports: Vec<LaneReport> = lanes.values().map(Lane::report).collect();
-                reports.sort_by_key(|r| r.id);
-                let _ = reply.send(WorkerSnapshot { reports, error: error.clone() });
-            }
-        }
-    }
-    (lanes.into_values().collect(), error)
+    governor: RegenGovernor,
 }
 
-/// The concurrent serving engine. Construct, [`register`] kernel streams,
-/// then [`submit`] calls; the first submit spawns the workers. The
-/// sequential [`TuningService`](super::TuningService) is the
+/// Pop the next runnable lane for worker `w`: own deque first (FIFO so a
+/// loaded worker round-robins its lanes), then — when stealing is on —
+/// the *oldest* lane of the most loaded victim. The steal updates the
+/// lane's home: ownership transfers to the thief.
+fn next_lane<B: Backend>(sched: &mut Sched<B>, w: usize, steal: bool) -> Option<usize> {
+    if let Some(id) = sched.deques[w].pop_front() {
+        return Some(id);
+    }
+    if !steal {
+        return None;
+    }
+    let victim = sched
+        .deques
+        .iter()
+        .enumerate()
+        .filter(|(v, d)| *v != w && !d.is_empty())
+        .max_by_key(|(_, d)| d.len())
+        .map(|(v, _)| v)?;
+    let id = sched.deques[victim].pop_front()?;
+    sched.slots[id].home = w;
+    sched.slots[id].steals += 1;
+    sched.steals += 1;
+    Some(id)
+}
+
+/// Retirement endpoint (caller holds the scheduler lock, lane parked
+/// with an empty backlog): checkpoint best-so-far into the cache, record
+/// the final report, free the backend, release the key.
+fn finalize_retire<B: Backend>(sched: &mut Sched<B>, id: usize, cache: &SharedTuneCache) {
+    let Some(lane) = sched.slots[id].lane.take() else {
+        return;
+    };
+    lane.checkpoint_into(cache);
+    let mut report = lane.report();
+    report.steals = sched.slots[id].steals;
+    drop(lane); // the backend is freed here — retirement releases its resources
+    let map_key = (sched.slots[id].fp.clone(), sched.slots[id].key.clone());
+    // A replacement lane may have re-registered this key while the
+    // retirement was draining — only remove the mapping if it is still
+    // ours, never the replacement's.
+    if sched.by_key.get(&map_key) == Some(&id) {
+        sched.by_key.remove(&map_key);
+    }
+    sched.slots[id].retired = Some(report);
+    sched.slots[id].retiring = false;
+}
+
+/// Restores scheduler bookkeeping if a lane's step panics mid-quantum:
+/// the lane is lost, its remaining backlog is discarded, and the barrier
+/// condition stays reachable — a panicking worker degrades into an
+/// engine error instead of a drain that never returns.
+struct RunGuard<'a, B: Backend> {
+    shared: &'a Shared<B>,
+    id: usize,
+    armed: bool,
+}
+
+impl<B: Backend> Drop for RunGuard<'_, B> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut sched) = self.shared.sched.lock() {
+            sched.active -= 1;
+            let dropped = {
+                let slot = &mut sched.slots[self.id];
+                let d = slot.pending;
+                slot.pending = 0;
+                d
+            };
+            sched.backlog -= dropped;
+            if sched.error.is_none() {
+                sched.error = Some(format!("worker panicked while running lane {}", self.id));
+            }
+        }
+        self.shared.idle.notify_all();
+        self.shared.work.notify_all();
+    }
+}
+
+fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
+    let mut sched = shared.sched.lock().expect("engine scheduler lock");
+    loop {
+        let Some(id) = next_lane(&mut sched, w, shared.opts.steal) else {
+            if sched.shutdown {
+                return;
+            }
+            sched = shared.work.wait(sched).expect("engine scheduler lock");
+            continue;
+        };
+
+        // Claim one quantum of the lane's backlog, take the lane out of
+        // its slot, and run off-lock. After a failure anywhere, quanta
+        // are claimed but discarded so the backlog still drains.
+        let poisoned = sched.error.is_some() || sched.discard;
+        let quantum = shared.opts.quantum as u64;
+        let slot = &mut sched.slots[id];
+        slot.queued = false;
+        let n = slot.pending.min(quantum);
+        slot.pending -= n;
+        let mut lane = slot.lane.take().expect("queued lane must be parked");
+        sched.backlog -= n;
+        sched.active += 1;
+        drop(sched);
+
+        let mut guard = RunGuard { shared, id, armed: true };
+        let mut failed: Option<String> = None;
+        if !poisoned {
+            for _ in 0..n {
+                if let Err(e) = lane.step(&shared.cache, &shared.governor) {
+                    failed = Some(format!("lane {}: {e:#}", lane.key));
+                    break;
+                }
+            }
+        }
+        guard.armed = false;
+
+        sched = shared.sched.lock().expect("engine scheduler lock");
+        sched.active -= 1;
+        sched.slots[id].lane = Some(lane);
+        if failed.is_some() && sched.error.is_none() {
+            sched.error = failed;
+            shared.idle.notify_all();
+        }
+        let (requeue, retire) = {
+            let slot = &sched.slots[id];
+            (slot.pending > 0, slot.retiring && slot.pending == 0)
+        };
+        if requeue {
+            let home = sched.slots[id].home;
+            sched.slots[id].queued = true;
+            sched.deques[home].push_back(id);
+            shared.work.notify_all();
+        } else if retire {
+            finalize_retire(&mut sched, id, &shared.cache);
+        }
+        if sched.backlog == 0 && sched.active == 0 {
+            shared.idle.notify_all();
+        }
+    }
+}
+
+impl<B: Backend + 'static> Shared<B> {
+    fn lock(&self) -> MutexGuard<'_, Sched<B>> {
+        self.sched.lock().expect("engine scheduler lock")
+    }
+
+    fn register(&self, key: TuneKey, ve_filter: Option<bool>, backend: B) -> Result<LaneId> {
+        let mut sched = self.lock();
+        if sched.shutdown {
+            bail!("register_lane on a finished engine");
+        }
+        let fp = backend.device_fingerprint();
+        let map_key = (fp.clone(), key.clone());
+        if let Some(&idx) = sched.by_key.get(&map_key) {
+            // Idempotent only towards a *live* lane. A lane whose
+            // deferred retirement is still draining is on its way out:
+            // fall through and open a fresh lane whose mapping replaces
+            // the doomed one's (the retirement finaliser checks before
+            // removing). The fresh lane warm-starts from whatever the
+            // old one has already written back — its final checkpoint
+            // may land after this open and only helps the *next* run.
+            if !sched.slots[idx].retiring {
+                return Ok(LaneId(idx));
+            }
+        }
+        let id = sched.slots.len();
+        let lane = Lane::open(&self.cfg, id, key.clone(), ve_filter, backend, &self.cache);
+        let home = id % sched.deques.len();
+        sched.slots.push(Slot {
+            key,
+            fp,
+            lane: Some(lane),
+            pending: 0,
+            queued: false,
+            home,
+            retiring: false,
+            retired: None,
+            steals: 0,
+        });
+        sched.by_key.insert(map_key, id);
+        Ok(LaneId(id))
+    }
+
+    fn submit(&self, lane: LaneId, n: u32) -> Result<()> {
+        let mut sched = self.lock();
+        if sched.shutdown {
+            bail!("submit on a finished engine");
+        }
+        let Some(slot) = sched.slots.get_mut(lane.0) else {
+            bail!("unknown lane {lane:?}");
+        };
+        if slot.retired.is_some() || slot.retiring {
+            bail!("lane {} is retired", slot.key);
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        slot.pending += n as u64;
+        // A parked lane queues to its home worker; a queued lane is
+        // already in a deque; a running lane requeues itself when its
+        // worker parks it and sees the fresh backlog.
+        let enqueue = slot.lane.is_some() && !slot.queued;
+        if enqueue {
+            slot.queued = true;
+        }
+        let (id, home) = (lane.0, slot.home);
+        sched.backlog += n as u64;
+        if enqueue {
+            sched.deques[home].push_back(id);
+            // notify_all, not notify_one: under static placement only the
+            // home worker may run this lane, and the condvar cannot
+            // target a specific sleeper.
+            self.work.notify_all();
+        }
+        Ok(())
+    }
+
+    fn retire(&self, lane: LaneId) -> Result<Option<LaneReport>> {
+        let mut sched = self.lock();
+        if sched.shutdown {
+            bail!("retire_lane on a finished engine");
+        }
+        let Some(slot) = sched.slots.get(lane.0) else {
+            bail!("unknown lane {lane:?}");
+        };
+        if slot.retired.is_some() || slot.retiring {
+            bail!("lane {} is already retired", slot.key);
+        }
+        if slot.lane.is_some() && slot.pending == 0 {
+            // Parked and idle (a queued lane always has backlog):
+            // finalise immediately.
+            finalize_retire(&mut sched, lane.0, &self.cache);
+            return Ok(sched.slots[lane.0].retired.clone());
+        }
+        // Busy: drain its backlog first; the worker that parks it with an
+        // empty backlog finalises.
+        sched.slots[lane.0].retiring = true;
+        Ok(None)
+    }
+
+    /// Block until the barrier condition holds (or a worker failed).
+    fn wait_idle(&self) -> Result<MutexGuard<'_, Sched<B>>> {
+        let mut sched = self.lock();
+        while sched.error.is_none() && (sched.backlog > 0 || sched.active > 0) {
+            sched = self.idle.wait(sched).expect("engine scheduler lock");
+        }
+        if let Some(e) = &sched.error {
+            bail!("tuning engine worker failed: {e}");
+        }
+        Ok(sched)
+    }
+
+    /// Per-lane reports, live and retired, ordered by lane id. A slot
+    /// whose lane was lost to a worker panic has neither — the engine
+    /// error covers it.
+    fn reports_locked(sched: &Sched<B>) -> Vec<LaneReport> {
+        let mut out = Vec::with_capacity(sched.slots.len());
+        for slot in &sched.slots {
+            if let Some(r) = &slot.retired {
+                out.push(r.clone());
+            } else if let Some(lane) = &slot.lane {
+                let mut r = lane.report();
+                r.steals = slot.steals;
+                out.push(r);
+            }
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Stop accepting work. `discard` abandons the outstanding backlog
+    /// (claim-and-skip — the drop-without-finish path); without it the
+    /// workers execute everything still queued (the `finish` path).
+    fn begin_shutdown(&self, discard: bool) {
+        if let Ok(mut sched) = self.sched.lock() {
+            sched.shutdown = true;
+            sched.discard |= discard;
+        }
+        self.work.notify_all();
+        self.idle.notify_all();
+    }
+}
+
+/// A `Clone + Send + Sync` control handle to a running
+/// [`TuningEngine`] — the dynamic-lane control plane. Registration,
+/// submission, and retirement go through the shared scheduler directly
+/// (never queueing behind outstanding calls), so a deployment can grow
+/// and shrink the served kernel set from a management thread while the
+/// workers keep serving. After [`TuningEngine::finish`] every operation
+/// fails cleanly.
+pub struct EngineController<B: Backend + 'static> {
+    shared: Arc<Shared<B>>,
+}
+
+impl<B: Backend + 'static> Clone for EngineController<B> {
+    fn clone(&self) -> Self {
+        EngineController { shared: self.shared.clone() }
+    }
+}
+
+impl<B: Backend + 'static> EngineController<B> {
+    /// Register a kernel stream on the running engine (idempotent per
+    /// `(device, key)` among live lanes; a retired key may be
+    /// re-registered and then warm-starts from its retirement
+    /// checkpoint).
+    pub fn register_lane(
+        &self,
+        key: TuneKey,
+        ve_filter: Option<bool>,
+        backend: B,
+    ) -> Result<LaneId> {
+        self.shared.register(key, ve_filter, backend)
+    }
+
+    /// Gracefully retire a lane: no new submissions are accepted, the
+    /// outstanding backlog drains, then the lane's best-so-far is
+    /// checkpointed and its backend dropped. Returns the final report if
+    /// the lane was already idle, `None` when retirement is deferred to
+    /// the draining worker (fetch it later via
+    /// [`TuningEngine::drain_reports`] or [`TuningEngine::finish`]).
+    pub fn retire_lane(&self, lane: LaneId) -> Result<Option<LaneReport>> {
+        self.shared.retire(lane)
+    }
+
+    /// Non-blocking: enqueue one call on `lane`.
+    pub fn submit(&self, lane: LaneId) -> Result<()> {
+        self.shared.submit(lane, 1)
+    }
+
+    /// Non-blocking: enqueue `n` consecutive calls on `lane`.
+    pub fn submit_n(&self, lane: LaneId, n: u32) -> Result<()> {
+        self.shared.submit(lane, n)
+    }
+
+    /// The shared regeneration governor (aggregate budget telemetry).
+    pub fn governor(&self) -> &RegenGovernor {
+        &self.shared.governor
+    }
+}
+
+/// The concurrent serving engine. Construct (workers spawn immediately
+/// and sleep), [`register`] kernel streams, then [`submit`] calls —
+/// registration and submission both work at any point in the engine's
+/// life, including from other threads via [`TuningEngine::controller`].
+/// The sequential [`TuningService`](super::TuningService) is the
 /// single-threaded mode over the same per-lane step logic.
 ///
 /// [`register`]: TuningEngine::register
 /// [`submit`]: TuningEngine::submit
 pub struct TuningEngine<B: Backend + 'static> {
-    cfg: ServiceConfig,
-    cache: SharedTuneCache,
-    governor: Arc<RegenGovernor>,
-    threads: usize,
-    /// Lanes staged between `register` and the worker spawn.
-    staged: Vec<Lane<B>>,
-    by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
-    keys: Vec<TuneKey>,
-    senders: Vec<Sender<Cmd>>,
-    handles: Vec<JoinHandle<(Vec<Lane<B>>, Option<String>)>>,
+    shared: Arc<Shared<B>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl<B: Backend + 'static> TuningEngine<B> {
-    /// An engine over an empty (cold) shared cache.
+    /// An engine over an empty (cold) shared cache, static placement.
     pub fn new(cfg: ServiceConfig, threads: usize) -> TuningEngine<B> {
         TuningEngine::with_cache(cfg, SharedTuneCache::new(), threads)
     }
 
+    /// Static placement over an existing cache (PR 2 behaviour).
     pub fn with_cache(
         cfg: ServiceConfig,
         cache: SharedTuneCache,
         threads: usize,
     ) -> TuningEngine<B> {
-        TuningEngine {
+        TuningEngine::with_options(cfg, cache, EngineOptions { threads, ..Default::default() })
+    }
+
+    /// Full control over placement: thread count, stealing, quantum.
+    pub fn with_options(
+        cfg: ServiceConfig,
+        cache: SharedTuneCache,
+        opts: EngineOptions,
+    ) -> TuningEngine<B> {
+        let opts = EngineOptions {
+            threads: opts.threads.max(1),
+            steal: opts.steal,
+            quantum: opts.quantum.max(1),
+        };
+        let shared = Arc::new(Shared {
+            sched: Mutex::new(Sched {
+                slots: Vec::new(),
+                by_key: HashMap::new(),
+                deques: (0..opts.threads).map(|_| VecDeque::new()).collect(),
+                backlog: 0,
+                active: 0,
+                steals: 0,
+                shutdown: false,
+                discard: false,
+                error: None,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
             cfg,
+            opts,
             cache,
-            governor: Arc::new(RegenGovernor::new(cfg.global)),
-            threads: threads.max(1),
-            staged: Vec::new(),
-            by_key: HashMap::new(),
-            keys: Vec::new(),
-            senders: Vec::new(),
-            handles: Vec::new(),
-        }
+            governor: RegenGovernor::new(cfg.global),
+        });
+        let handles = (0..opts.threads)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared, w))
+            })
+            .collect();
+        TuningEngine { shared, handles }
+    }
+
+    /// A `Clone + Send` control handle for driving registration,
+    /// submission, and retirement from other threads.
+    pub fn controller(&self) -> EngineController<B> {
+        EngineController { shared: self.shared.clone() }
     }
 
     pub fn n_threads(&self) -> usize {
-        self.threads
+        self.shared.opts.threads
     }
 
+    pub fn steal_enabled(&self) -> bool {
+        self.shared.opts.steal
+    }
+
+    /// Total lane migrations so far (0 under static placement).
+    pub fn steals(&self) -> u64 {
+        self.shared.lock().steals
+    }
+
+    /// Lanes ever registered (lane ids are never reused; retired lanes
+    /// keep their id and final report).
     pub fn n_lanes(&self) -> usize {
-        self.keys.len()
+        self.shared.lock().slots.len()
+    }
+
+    /// Lanes currently serving (registered minus retired).
+    pub fn n_live_lanes(&self) -> usize {
+        self.shared.lock().slots.iter().filter(|s| s.retired.is_none()).count()
     }
 
     /// A handle to the shared cache (clones see the same store — keep
     /// one to save after [`TuningEngine::finish`]).
     pub fn cache(&self) -> SharedTuneCache {
-        self.cache.clone()
+        self.shared.cache.clone()
     }
 
-    pub fn lane_key(&self, lane: LaneId) -> Option<&TuneKey> {
-        self.keys.get(lane.0)
+    /// The shared regeneration governor (aggregate budget telemetry —
+    /// [`RegenGovernor::snapshot`] pairs with per-lane reports to verify
+    /// the budget invariant from outside).
+    pub fn governor(&self) -> &RegenGovernor {
+        &self.shared.governor
     }
 
-    fn started(&self) -> bool {
-        !self.senders.is_empty()
+    pub fn lane_key(&self, lane: LaneId) -> Option<TuneKey> {
+        self.shared.lock().slots.get(lane.0).map(|s| s.key.clone())
     }
 
-    /// Register a kernel stream (idempotent per `(device, key)`, like the
-    /// sequential service). Must happen before the first
-    /// [`TuningEngine::submit`] — lanes are moved onto worker threads
-    /// when the workers spawn.
+    /// Register a kernel stream — before or after calls start flowing
+    /// (idempotent per `(device, key)`, like the sequential service).
     pub fn register(
         &mut self,
         key: TuneKey,
         ve_filter: Option<bool>,
         backend: B,
     ) -> Result<LaneId> {
-        if self.started() {
-            bail!("register after the workers started; register all lanes first");
-        }
-        let fp = backend.device_fingerprint();
-        let map_key = (fp, key.clone());
-        if let Some(&idx) = self.by_key.get(&map_key) {
-            return Ok(LaneId(idx));
-        }
-        let id = self.staged.len();
-        let lane = Lane::open(&self.cfg, id, key.clone(), ve_filter, backend, &self.cache);
-        self.by_key.insert(map_key, id);
-        self.keys.push(key);
-        self.staged.push(lane);
-        Ok(LaneId(id))
+        self.shared.register(key, ve_filter, backend)
     }
 
-    fn start(&mut self) {
-        let threads = self.threads.min(self.staged.len()).max(1);
-        let mut per_worker: Vec<HashMap<usize, Lane<B>>> =
-            (0..threads).map(|_| HashMap::new()).collect();
-        for lane in self.staged.drain(..) {
-            per_worker[lane.id % threads].insert(lane.id, lane);
-        }
-        for lanes in per_worker {
-            let (tx, rx) = mpsc::channel();
-            let cache = self.cache.clone();
-            let governor = self.governor.clone();
-            self.senders.push(tx);
-            self.handles
-                .push(std::thread::spawn(move || worker_loop(lanes, rx, cache, governor)));
-        }
+    /// Gracefully retire a lane (see [`EngineController::retire_lane`]).
+    pub fn retire_lane(&mut self, lane: LaneId) -> Result<Option<LaneReport>> {
+        self.shared.retire(lane)
     }
 
-    /// Non-blocking: enqueue one application call on `lane`. Spawns the
-    /// workers on first use.
+    /// Non-blocking: enqueue one application call on `lane`.
     pub fn submit(&mut self, lane: LaneId) -> Result<()> {
-        self.submit_n(lane, 1)
+        self.shared.submit(lane, 1)
     }
 
     /// Non-blocking: enqueue `n` consecutive calls on `lane` (batching
-    /// amortises channel overhead; a kernel stream's calls are ordered
-    /// within its worker queue either way).
+    /// amortises scheduler locking; a lane's calls execute in submission
+    /// order regardless — a kernel stream is a sequential program).
     pub fn submit_n(&mut self, lane: LaneId, n: u32) -> Result<()> {
-        if lane.0 >= self.keys.len() {
-            bail!("unknown lane {lane:?}");
-        }
-        if n == 0 {
-            return Ok(());
-        }
-        if !self.started() {
-            self.start();
-        }
-        let worker = lane.0 % self.senders.len();
-        if self.senders[worker].send(Cmd::Call { lane: lane.0, n }).is_err() {
-            bail!("worker {worker} hung up (earlier failure?)");
-        }
-        Ok(())
+        self.shared.submit(lane, n)
     }
 
-    fn sync_snapshots(&self) -> Result<Vec<WorkerSnapshot>> {
-        let mut out = Vec::with_capacity(self.senders.len());
-        // One barrier channel per worker; waiting for each reply proves
-        // the worker drained everything submitted before the marker.
-        let mut waits = Vec::with_capacity(self.senders.len());
-        for (w, s) in self.senders.iter().enumerate() {
-            let (tx, rx) = mpsc::channel();
-            if s.send(Cmd::Sync(tx)).is_err() {
-                bail!("worker {w} hung up (earlier failure?)");
-            }
-            waits.push((w, rx));
-        }
-        for (w, rx) in waits {
-            match rx.recv() {
-                Ok(snap) => out.push(snap),
-                Err(_) => bail!("worker {w} died before the barrier"),
-            }
-        }
-        Ok(out)
-    }
-
-    /// Block until every submitted call has executed, then return the
-    /// per-lane reports (ordered by lane id). Fails if any worker hit an
-    /// error.
+    /// Block until every submitted call has executed — including quanta
+    /// in flight on stealing workers — then return the per-lane reports
+    /// (ordered by lane id, retired lanes included). Fails if any worker
+    /// hit an error.
     pub fn drain_reports(&mut self) -> Result<Vec<LaneReport>> {
-        if !self.started() {
-            // Nothing submitted yet: report the staged lanes directly.
-            let mut reports: Vec<LaneReport> = self.staged.iter().map(Lane::report).collect();
-            reports.sort_by_key(|r| r.id);
-            return Ok(reports);
-        }
-        let snaps = self.sync_snapshots()?;
-        let mut reports = Vec::with_capacity(self.keys.len());
-        for snap in snaps {
-            if let Some(e) = snap.error {
-                bail!("worker failed: {e}");
-            }
-            reports.extend(snap.reports);
-        }
-        reports.sort_by_key(|r| r.id);
-        Ok(reports)
+        let sched = self.shared.wait_idle()?;
+        Ok(Shared::reports_locked(&sched))
     }
 
     /// Barrier + aggregate statistics (the threaded analogue of
     /// [`super::TuningService::stats`]).
     pub fn drain(&mut self) -> Result<ServiceStats> {
         let reports = self.drain_reports()?;
-        Ok(ServiceStats::aggregate(&reports, self.cache.counters()))
+        Ok(ServiceStats::aggregate(&reports, self.shared.cache.counters()))
     }
 
-    /// Drain, stop the workers, checkpoint unfinished lanes' best-so-far
-    /// into the shared cache (shutdown path), and return the final stats
-    /// and per-lane reports. The cache handle from
-    /// [`TuningEngine::cache`] stays valid for saving.
+    /// Stop accepting work, let the workers drain every outstanding
+    /// call, join them, checkpoint unfinished lanes' best-so-far into
+    /// the shared cache (shutdown path), and return the final stats and
+    /// per-lane reports. The cache handle from [`TuningEngine::cache`]
+    /// stays valid for saving.
     pub fn finish(mut self) -> Result<(ServiceStats, Vec<LaneReport>)> {
-        if !self.started() {
-            for lane in &self.staged {
-                lane.checkpoint_into(&self.cache);
-            }
-            let mut reports: Vec<LaneReport> = self.staged.iter().map(Lane::report).collect();
-            reports.sort_by_key(|r| r.id);
-            let stats = ServiceStats::aggregate(&reports, self.cache.counters());
-            return Ok((stats, reports));
-        }
-        self.senders.clear(); // hang up: workers drain their queues and exit
-        let mut reports = Vec::with_capacity(self.keys.len());
+        self.shared.begin_shutdown(false);
         let mut first_error: Option<String> = None;
         for h in self.handles.drain(..) {
-            match h.join() {
-                Ok((lanes, error)) => {
-                    if first_error.is_none() {
-                        first_error = error;
-                    }
-                    for lane in &lanes {
-                        lane.checkpoint_into(&self.cache);
-                        reports.push(lane.report());
-                    }
-                }
-                Err(_) => {
-                    if first_error.is_none() {
-                        first_error = Some("worker thread panicked".into());
-                    }
-                }
+            if h.join().is_err() && first_error.is_none() {
+                first_error = Some("worker thread panicked".into());
             }
         }
+        let sched = self.shared.lock();
+        // Checkpoint parked live lanes *before* surfacing any error:
+        // one lane's failure must not cost the healthy lanes'
+        // exploration progress — the next run warm-starts from it.
+        // (Retired lanes checkpointed at retirement; a lane lost to a
+        // worker panic has nothing left to checkpoint.)
+        for slot in &sched.slots {
+            if let Some(lane) = &slot.lane {
+                lane.checkpoint_into(&self.shared.cache);
+            }
+        }
+        let first_error = first_error.or_else(|| sched.error.clone());
         if let Some(e) = first_error {
             bail!("tuning engine worker failed: {e}");
         }
-        reports.sort_by_key(|r| r.id);
-        let stats = ServiceStats::aggregate(&reports, self.cache.counters());
+        let reports = Shared::reports_locked(&sched);
+        let stats = ServiceStats::aggregate(&reports, self.shared.cache.counters());
         Ok((stats, reports))
+    }
+}
+
+impl<B: Backend + 'static> Drop for TuningEngine<B> {
+    fn drop(&mut self) {
+        // Idempotent with `finish` (which drains `handles`): an engine
+        // dropped without finishing must neither leave workers sleeping
+        // on the condvar forever nor stall the owner's unwind path by
+        // executing an abandoned backlog — workers claim-and-discard.
+        self.shared.begin_shutdown(true);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }

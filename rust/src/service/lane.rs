@@ -161,6 +161,7 @@ impl<B: Backend> Lane<B> {
             explored: s.explored_count(),
             generate_calls: s.generate_calls,
             swaps: s.swaps,
+            steals: 0,
         }
     }
 }
@@ -183,6 +184,12 @@ pub struct LaneReport {
     pub explored: usize,
     pub generate_calls: u64,
     pub swaps: u32,
+    /// Times the lane's ownership was transferred to an idle worker by
+    /// the work-stealing engine (0 in sequential mode and under static
+    /// placement). Scheduler-level: the engine fills it in — the lane
+    /// itself never observes its own migrations, which is the point of
+    /// the virtual-time accounting invariant.
+    pub steals: u32,
 }
 
 impl LaneReport {

@@ -11,10 +11,15 @@
 //!   paper-faithful configuration (§4.1 `taskset`s everything onto one
 //!   core so tool time serialises with application time) and what the
 //!   PR-1 tests drive.
-//! * [`TuningEngine`] — the **threaded mode**: lanes are moved onto
-//!   worker threads, fed by non-blocking [`TuningEngine::submit`] over
-//!   mpsc channels, joined with [`TuningEngine::drain`] /
-//!   [`TuningEngine::finish`].
+//! * [`TuningEngine`] — the **threaded mode**: a work-stealing
+//!   scheduler over whole lanes. Each worker owns a deque of runnable
+//!   lanes; an idle worker steals a whole lane (an ownership transfer —
+//!   lanes are `Send`, never shared), so a skewed workload balances
+//!   itself instead of idling behind static placement. Lanes can be
+//!   registered and retired on the *running* engine through
+//!   [`EngineController`] handles (no drain, any thread). Calls flow via
+//!   non-blocking [`TuningEngine::submit`]; [`TuningEngine::drain`] /
+//!   [`TuningEngine::finish`] are the barriers.
 //!
 //! Both modes execute the identical per-call logic (`lane::Lane::step`)
 //! against the same two shared structures:
@@ -44,7 +49,7 @@
 mod engine;
 mod lane;
 
-pub use engine::TuningEngine;
+pub use engine::{EngineController, EngineOptions, TuningEngine};
 pub use lane::LaneReport;
 
 use std::collections::HashMap;
@@ -108,6 +113,9 @@ pub struct ServiceStats {
     pub explored: usize,
     pub generate_calls: u64,
     pub swaps: u32,
+    /// Total lane migrations by the work-stealing engine (0 in
+    /// sequential mode and under static placement).
+    pub steals: u64,
     pub cache: CacheCounters,
 }
 
@@ -137,6 +145,7 @@ impl ServiceStats {
             st.explored += r.explored;
             st.generate_calls += r.generate_calls;
             st.swaps += r.swaps;
+            st.steals += r.steals as u64;
         }
         st
     }
@@ -189,6 +198,13 @@ impl<B: Backend> TuningService<B> {
     /// locks — `&self` suffices even for inserts).
     pub fn cache(&self) -> &SharedTuneCache {
         &self.cache
+    }
+
+    /// The regeneration governor (aggregate budget telemetry; its
+    /// [`RegenGovernor::snapshot`] pairs with [`TuningService::stats`]
+    /// to verify the budget invariant from outside).
+    pub fn governor(&self) -> &RegenGovernor {
+        &self.governor
     }
 
     /// Register a kernel stream. Consults the cache under the backend's

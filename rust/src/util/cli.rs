@@ -68,6 +68,13 @@ impl Args {
         self.get_parsed(name, default)
     }
 
+    /// `--name N` as `Some(N)`, absent (or unparsable) as `None` — for
+    /// knobs that are *off* rather than defaulted when omitted (e.g.
+    /// `--cache-ttl`).
+    pub fn get_opt_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
     pub fn get_u32(&self, name: &str, default: u32) -> u32 {
         self.get_parsed(name, default)
     }
@@ -124,6 +131,15 @@ mod tests {
         assert_eq!(a.get_usize("n", 5), 5);
         assert_eq!(a.get_f64("x", 1.5), 1.5);
         assert_eq!(a.get_u32("d", 7), 7);
+    }
+
+    #[test]
+    fn opt_u64_is_none_when_absent() {
+        let a = Args::parse_from(toks("--cache-ttl 3600"));
+        assert_eq!(a.get_opt_u64("cache-ttl"), Some(3600));
+        assert_eq!(a.get_opt_u64("other"), None);
+        let b = Args::parse_from(toks("--cache-ttl nope"));
+        assert_eq!(b.get_opt_u64("cache-ttl"), None);
     }
 
     #[test]

@@ -48,6 +48,42 @@ pub fn mixed_service_workload(
         .collect()
 }
 
+/// Lane count of [`skewed_service_workload`].
+pub const SKEWED_SERVICE_LANES: usize = 8;
+
+/// An adversarially *placed* serving workload for the threaded engine:
+/// eight kernel lanes where both heavy VIPS (lintra) lanes sit at lane
+/// ids congruent to 0 mod 4 (ids 0 and 4). Static `id % threads`
+/// ownership at `--threads 4` therefore stacks both heavy lanes on
+/// worker 0 while the six light distance lanes leave the other workers
+/// mostly idle — the workload the work-stealing placement is measured
+/// against (`degoal-rt service --skewed --threads 4 [--steal]`, and the
+/// deterministic parity suite in `rust/tests/engine_steal.rs`).
+pub fn skewed_service_workload(
+    core: &'static CoreConfig,
+    seed: u64,
+) -> Vec<(TuneKey, SimBackend)> {
+    let kinds: [(KernelKind, &str); 8] = [
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "a"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "b"),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "b"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "b"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "c"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "c"),
+    ];
+    kinds
+        .iter()
+        .enumerate()
+        .map(|(i, (kind, shape))| {
+            let b = SimBackend::new(core, *kind, seed + i as u64);
+            let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
+            (key, b)
+        })
+        .collect()
+}
+
 /// Result of one application run (with or without auto-tuning).
 #[derive(Debug, Clone)]
 pub struct AppRun {
@@ -69,6 +105,22 @@ pub struct AppRun {
 mod tests {
     use super::*;
     use crate::simulator::core_by_name;
+
+    #[test]
+    fn skewed_service_workload_clusters_heavy_lanes_on_worker_zero() {
+        let w = skewed_service_workload(core_by_name("DI-I1").unwrap(), 1);
+        assert_eq!(w.len(), SKEWED_SERVICE_LANES);
+        let keys: std::collections::HashSet<String> = w.iter().map(|(k, _)| k.key()).collect();
+        assert_eq!(keys.len(), w.len(), "distinct lanes");
+        // Both heavy lintra lanes live at ids ≡ 0 (mod 4): static
+        // `id % 4` placement stacks them on one worker — the skew the
+        // stealing engine must be observable against.
+        assert!(w[0].0.kernel.starts_with("lintra"));
+        assert!(w[4].0.kernel.starts_with("lintra"));
+        for i in [1, 2, 3, 5, 6, 7] {
+            assert!(w[i].0.kernel.starts_with("distance"), "lane {i} must be light");
+        }
+    }
 
     #[test]
     fn mixed_service_workload_shape() {

@@ -1,0 +1,88 @@
+//! Golden-file compatibility test for the tuning cache's on-disk format.
+//!
+//! `tests/data/tunecache_v1.json` is a committed format-v1 fixture.
+//! [`TuneCache::load`] → [`TuneCache::save`] must reproduce it
+//! byte-for-byte: the serialiser orders entries deterministically and
+//! the writer is whitespace-free, so any silent drift in field names,
+//! number formatting, entry ordering, or versioning — the format PR 1
+//! promised deployments could ship warm caches in — fails loudly here.
+//! CI runs this suite in both debug and release profiles.
+
+use degoal_rt::cache::{DeviceFingerprint, TuneCache, TuneKey};
+use degoal_rt::tunespace::{Structural, TuningParams};
+
+fn fixture_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/tunecache_v1.json")
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("degoal_golden_{}_{name}.json", std::process::id()))
+}
+
+#[test]
+fn golden_v1_file_round_trips_byte_for_byte() {
+    let original = std::fs::read_to_string(fixture_path()).expect("committed fixture");
+    let cache = TuneCache::load(fixture_path()).unwrap();
+    assert_eq!(cache.len(), 3, "fixture entries must all load");
+
+    let out = tmp("roundtrip");
+    cache.save(&out).unwrap();
+    let resaved = std::fs::read_to_string(&out).unwrap();
+    std::fs::remove_file(&out).ok();
+    assert_eq!(
+        resaved, original,
+        "load -> save must reproduce the committed v1 file byte-for-byte; \
+         if this fails the on-disk format drifted — bump TUNECACHE_FORMAT_VERSION \
+         and add a new golden file instead of silently rewriting v1"
+    );
+}
+
+#[test]
+fn golden_v1_semantics_survive_the_load() {
+    let cache = TuneCache::load(fixture_path()).unwrap();
+    assert_eq!(cache.shard_cap(), 64);
+
+    // The mock/len64 entry: SIMD·v2·h2·c2 (full id 1106) at 2x speedup.
+    let fp = DeviceFingerprint::new("mock", "mock0");
+    let e = cache.peek(&fp, &TuneKey::new("mock/len64", 64)).expect("mock/len64 entry");
+    assert_eq!(e.params, TuningParams::from_full_id(1106));
+    assert_eq!(e.params.s, Structural::new(true, 2, 2, 2));
+    assert_eq!(e.score, 0.000125);
+    assert_eq!(e.ref_score, 0.00025);
+    assert_eq!(e.explored, 61);
+    assert_eq!(e.updated_unix, 1_750_000_000);
+    assert!((e.speedup() - 2.0).abs() < 1e-12);
+
+    // A shaped key on the same device.
+    let b = cache
+        .peek(&fp, &TuneKey::with_shape("mock/len96", 96, "big"))
+        .expect("shaped entry");
+    assert_eq!(b.params, TuningParams::from_full_id(1122));
+
+    // A second device: simulated-core fingerprint with detail pinned.
+    let sim = DeviceFingerprint::new("sim:DI-I1", "io-w2-v1-1.4GHz-l2:128kB");
+    let c = cache
+        .peek(&sim, &TuneKey::with_shape("distance/d64/b256", 64, "a"))
+        .expect("sim entry");
+    assert_eq!(c.params, TuningParams::from_full_id(14));
+    assert!(!c.params.s.ve, "fixture pins a SISD winner for the sim device");
+}
+
+#[test]
+fn golden_fixture_is_stable_under_repeated_cycles() {
+    // Two full load -> save cycles agree with each other *and* with the
+    // fixture: no ratcheting drift (e.g. timestamp refresh or cap
+    // widening) hiding inside a single round trip.
+    let c1 = TuneCache::load(fixture_path()).unwrap();
+    let p1 = tmp("cycle1");
+    c1.save(&p1).unwrap();
+    let c2 = TuneCache::load(&p1).unwrap();
+    let p2 = tmp("cycle2");
+    c2.save(&p2).unwrap();
+    let s1 = std::fs::read_to_string(&p1).unwrap();
+    let s2 = std::fs::read_to_string(&p2).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(s1, s2);
+    assert_eq!(s2, std::fs::read_to_string(fixture_path()).unwrap());
+}

@@ -1,0 +1,424 @@
+//! Determinism and lifecycle tests for the work-stealing engine.
+//!
+//! The contract pinned here, beyond what `service_concurrency.rs`
+//! already proves for the threaded stack:
+//!
+//! * **Parity under migration** — on the skewed 8-lane workload (both
+//!   heavy lintra lanes homed on worker 0), the stealing engine produces
+//!   *bitwise* the same per-lane winners and accounting as the
+//!   sequential `TuningService`: a steal is an ownership transfer, so a
+//!   lane's virtual-time `overhead_frac` must not change by a single ULP
+//!   when the lane migrates. (The governor is primed to always allow, so
+//!   per-lane behaviour is independent of cross-lane interleaving — the
+//!   only thing the scheduler may influence.)
+//! * **Hot registration / retirement** — lanes registered and retired
+//!   from a separate thread while four workers serve calls lose no
+//!   write-backs, stay inside the global budget's one-in-flight-version
+//!   tolerance, and checkpoint cleanly at finish.
+//! * **Drain is a true barrier under stealing** — a lane mid-quantum on
+//!   a thief is invisible to every deque; the barrier must wait for it
+//!   anyway (regression test for the steal-in-progress race).
+
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::Backend;
+use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneKey};
+use degoal_rt::coordinator::{RegenDecision, TunerConfig};
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, ServiceStats, TuningEngine, TuningService,
+};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::util::rng::Rng;
+use degoal_rt::workloads::{skewed_service_workload, SKEWED_SERVICE_LANES};
+
+/// Pre-recorded app time that makes the global governor allow every
+/// wake: with the budget gate constant, a lane's behaviour depends only
+/// on its own call sequence, so sequential and threaded runs are
+/// comparable bit for bit.
+const GOVERNOR_PRIME: f64 = 1e6;
+
+const PARITY_CALLS_PER_LANE: u32 = 2_500;
+
+fn sim_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn fast_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn client_key(i: usize) -> TuneKey {
+    TuneKey::with_shape("mock/len64", 64, format!("client{i}"))
+}
+
+// ---------- parity: stealing changes placement, never results ----------
+
+/// The sequential reference run over the skewed workload: same lanes,
+/// same per-lane call totals as the engine passes.
+fn sequential_reference() -> Vec<LaneReport> {
+    let core = core_by_name("DI-I1").unwrap();
+    let mut svc: TuningService<SimBackend> = TuningService::new(sim_cfg());
+    svc.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| svc.register(k, Some(true), b))
+        .collect();
+    for &l in &lanes {
+        for _ in 0..PARITY_CALLS_PER_LANE {
+            svc.app_call(l).unwrap();
+        }
+    }
+    lanes.iter().map(|&l| svc.lane_report(l).unwrap()).collect()
+}
+
+/// One engine pass over the skewed workload with a seeded-RNG submission
+/// schedule: chunks arrive in a scrambled lane order (adversarial for
+/// the scheduler) while per-lane totals stay fixed.
+fn engine_pass(steal: bool, seed: u64) -> (ServiceStats, Vec<LaneReport>) {
+    let core = core_by_name("DI-I1").unwrap();
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        sim_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal, quantum: 64 },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| eng.register(k, Some(true), b).unwrap())
+        .collect();
+    let mut rng = Rng::new(seed);
+    let chunk = 125u32;
+    for _ in 0..(PARITY_CALLS_PER_LANE / chunk) {
+        let mut order: Vec<usize> = (0..lanes.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        for idx in order {
+            eng.submit_n(lanes[idx], chunk).unwrap();
+        }
+    }
+    eng.finish().unwrap()
+}
+
+fn assert_lane_parity(reports: &[LaneReport], seq: &[LaneReport]) {
+    assert_eq!(reports.len(), seq.len());
+    let mut explored_total = 0;
+    for (r, s) in reports.iter().zip(seq) {
+        assert_eq!(r.key, s.key);
+        assert_eq!(r.kernel_calls, s.kernel_calls, "lane {}", r.key);
+        assert_eq!(r.explored, s.explored, "lane {}", r.key);
+        assert_eq!(r.generate_calls, s.generate_calls, "lane {}", r.key);
+        assert_eq!(r.swaps, s.swaps, "lane {}", r.key);
+        assert_eq!(r.done, s.done, "lane {}", r.key);
+        assert_eq!(r.best, s.best, "winner must not depend on placement: lane {}", r.key);
+        // The virtual-time accounting invariant, at full strength:
+        // migration must not change a lane's accounting by one ULP.
+        assert_eq!(r.overhead, s.overhead, "lane {}", r.key);
+        assert_eq!(r.app_time, s.app_time, "lane {}", r.key);
+        assert_eq!(r.gained, s.gained, "lane {}", r.key);
+        explored_total += r.explored;
+    }
+    assert!(explored_total > 0, "parity must not be vacuous: nothing explored");
+}
+
+#[test]
+fn steal_engine_matches_sequential_lane_for_lane() {
+    let seq = sequential_reference();
+    let (st, reports) = engine_pass(true, 0xfeed);
+    assert_eq!(st.lanes, SKEWED_SERVICE_LANES);
+    assert_lane_parity(&reports, &seq);
+    // The skew is the point: both heavy lanes share worker 0's home, so
+    // idle workers must actually migrate lanes during the run.
+    assert!(st.steals > 0, "skewed workload must make stealing observable: {st:?}");
+}
+
+#[test]
+fn static_engine_matches_sequential_and_never_steals() {
+    let seq = sequential_reference();
+    let (st, reports) = engine_pass(false, 0xbeef);
+    assert_lane_parity(&reports, &seq);
+    assert_eq!(st.steals, 0, "static placement must never migrate a lane");
+    for r in &reports {
+        assert_eq!(r.steals, 0, "lane {}", r.key);
+    }
+}
+
+// ---------- hot registration / retirement under load ----------
+
+#[test]
+fn hot_registration_and_retirement_lose_nothing() {
+    let per_lane = 100_000u32;
+    let chunk = 5_000u32;
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 256 },
+    );
+    let initial: Vec<LaneId> = (0..4)
+        .map(|i| eng.register(client_key(i), None, MockBackend::new(64, 800 + i as u64)).unwrap())
+        .collect();
+    let cache = eng.cache();
+
+    // Control plane on its own thread: register four more lanes while
+    // the workers serve, submit their full load, and gracefully retire
+    // the first two — all with no drain.
+    let ctrl = eng.controller();
+    let joiner = std::thread::spawn(move || -> anyhow::Result<Vec<LaneId>> {
+        let mut late = Vec::new();
+        for i in 4..8 {
+            let lane = ctrl.register_lane(client_key(i), None, MockBackend::new(64, 800 + i as u64))?;
+            late.push(lane);
+            for _ in 0..(per_lane / chunk) {
+                ctrl.submit_n(lane, chunk)?;
+            }
+            if i < 6 {
+                // Graceful: the submitted backlog drains before the lane
+                // checkpoints and its backend is dropped.
+                let _ = ctrl.retire_lane(lane)?;
+            }
+        }
+        Ok(late)
+    });
+    for _ in 0..(per_lane / chunk) {
+        for &l in &initial {
+            eng.submit_n(l, chunk).unwrap();
+        }
+    }
+    let late = joiner.join().expect("controller thread").unwrap();
+    assert_eq!(late.len(), 4);
+
+    eng.drain().unwrap();
+    assert_eq!(eng.n_lanes(), 8);
+    assert_eq!(eng.n_live_lanes(), 6, "two lanes were retired");
+
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.lanes, 8);
+    assert_eq!(
+        st.kernel_calls,
+        8 * per_lane as u64,
+        "every submitted call must run, including retired lanes' backlogs: {st:?}"
+    );
+    assert_eq!(st.done_lanes, 8, "all lanes must finish exploration: {st:?}");
+    assert_eq!(cache.len(), 8, "one write-back per lane, none lost to hot add/retire");
+
+    let fp = MockBackend::new(64, 0).device_fingerprint();
+    let (optimum, _) = MockBackend::new(64, 0).best_possible();
+    for r in &reports {
+        let (best_p, _) = r.best.expect("every lane found a winner");
+        assert_eq!(best_p.s, optimum.s, "lane {} must find the optimum", r.key);
+        assert!(cache.get(&fp, &r.key).is_some(), "write-back present for {}", r.key);
+    }
+    // The retired lanes' final reports carry their whole history.
+    for &lane in &late[..2] {
+        let r = reports.iter().find(|r| r.id == lane.0).expect("retired lane report");
+        assert_eq!(r.kernel_calls, per_lane as u64, "retired lane {} drained fully", r.key);
+        assert!(r.done, "retired lane {} finished exploring before retirement", r.key);
+    }
+}
+
+#[test]
+fn hot_added_lanes_respect_tight_global_budget() {
+    // Same tolerance as the static-placement budget test in
+    // service_concurrency.rs: the global allowance plus per-lane
+    // bootstrap plus at most one in-flight version per lane — hot-added
+    // lanes and migration must not widen it.
+    let frac = 0.004;
+    let mut cfg = fast_cfg();
+    cfg.global = RegenDecision { max_overhead_frac: frac, invest_frac: 0.0 };
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        cfg,
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 256 },
+    );
+    let initial: Vec<LaneId> = (0..4)
+        .map(|i| eng.register(client_key(i), None, MockBackend::new(64, 900 + i as u64)).unwrap())
+        .collect();
+    let ctrl = eng.controller();
+    let joiner = std::thread::spawn(move || -> anyhow::Result<()> {
+        for i in 4..8 {
+            let lane = ctrl.register_lane(client_key(i), None, MockBackend::new(64, 900 + i as u64))?;
+            for _ in 0..20 {
+                ctrl.submit_n(lane, 1_000)?;
+            }
+        }
+        Ok(())
+    });
+    for _ in 0..20 {
+        for &l in &initial {
+            eng.submit_n(l, 1_000).unwrap();
+        }
+    }
+    joiner.join().expect("controller thread").unwrap();
+
+    // Governor telemetry must agree with the per-lane sums (a migrating
+    // lane must neither drop nor double-record a call's deltas).
+    let st = eng.drain().unwrap();
+    let snap = eng.governor().snapshot();
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1e-12);
+    assert!(close(snap.overhead, st.overhead), "{snap:?} vs {st:?}");
+    assert!(close(snap.app_time, st.app_time), "{snap:?} vs {st:?}");
+    assert!(close(snap.gained, st.gained), "{snap:?} vs {st:?}");
+
+    let budget = frac * st.app_time;
+    let bootstrap = 18.0 * 190e-6;
+    let version = 20e-6 + 18.0 * 290e-6;
+    let slack = st.lanes as f64 * (bootstrap + version);
+    assert!(
+        st.overhead <= budget + slack,
+        "aggregate overhead {} vs global budget {} (+slack {}): {st:?}",
+        st.overhead,
+        budget,
+        slack,
+    );
+    assert!(st.explored > 0, "budget must not be vacuous: {st:?}");
+    eng.finish().unwrap();
+}
+
+// ---------- drain barrier vs steal-in-progress ----------
+
+#[test]
+fn drain_waits_for_quanta_in_flight_on_thieves() {
+    // Tiny quantum + scrambled chunk sizes: lanes bounce between deques
+    // and are constantly mid-quantum on stealing workers when drain is
+    // called. If the barrier only checked the deques (and not lanes in
+    // flight), these counts would come up short.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 3, steal: true, quantum: 7 },
+    );
+    let lanes: Vec<LaneId> = (0..6)
+        .map(|i| eng.register(client_key(i), None, MockBackend::new(64, 600 + i as u64)).unwrap())
+        .collect();
+    let mut rng = Rng::new(7);
+    let mut submitted = vec![0u64; lanes.len()];
+    for round in 0..30 {
+        for (i, &l) in lanes.iter().enumerate() {
+            let n = 50 + rng.below(150) as u32;
+            eng.submit_n(l, n).unwrap();
+            submitted[i] += n as u64;
+        }
+        let reports = eng.drain_reports().unwrap();
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(
+                r.kernel_calls, submitted[i],
+                "round {round}: drain returned before lane {} finished its quantum",
+                r.key
+            );
+        }
+    }
+    eng.finish().unwrap();
+}
+
+// ---------- retire -> re-register round-trips through the cache ----------
+
+#[test]
+fn retired_lane_checkpoint_warm_starts_its_replacement() {
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 2, steal: true, quantum: 256 },
+    );
+    let first = eng.register(client_key(0), None, MockBackend::new(64, 500)).unwrap();
+    eng.submit_n(first, 100_000).unwrap();
+    eng.drain().unwrap();
+
+    // Parked and idle: retirement finalises immediately.
+    let report = eng.retire_lane(first).unwrap().expect("idle lane retires synchronously");
+    assert!(report.done);
+    assert_eq!(report.kernel_calls, 100_000);
+    assert!(eng.submit(first).is_err(), "a retired lane must reject new calls");
+    assert!(eng.retire_lane(first).is_err(), "double retirement must fail cleanly");
+    assert_eq!(eng.cache().len(), 1, "the winner was written back");
+
+    // The same (device, key) registers again as a *new* lane and
+    // warm-starts from the retired lane's cache entry.
+    let second = eng.register(client_key(0), None, MockBackend::new(64, 501)).unwrap();
+    assert_ne!(first, second, "a retired id is never reused");
+    eng.submit_n(second, 5_000).unwrap();
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.lanes, 2, "retired + replacement");
+    assert_eq!(st.warm_lanes, 1);
+    let r = reports.iter().find(|r| r.id == second.0).unwrap();
+    assert_eq!(r.warm, Some(CacheHit::Exact));
+    assert_eq!(r.generate_calls, 1, "warm start pays exactly one generate");
+    assert_eq!(
+        r.best.map(|(p, _)| p.full_id()),
+        report.best.map(|(p, _)| p.full_id()),
+        "the replacement adopts the retired lane's winner"
+    );
+}
+
+#[test]
+fn reregistering_a_key_mid_retirement_opens_a_fresh_lane() {
+    // Retiring a *busy* lane defers finalisation until its backlog
+    // drains. Re-registering the same (device, key) in that window must
+    // open a fresh lane (the hot-swap path), not hand back the doomed
+    // id — and the deferred finaliser must not strip the replacement's
+    // key mapping when it finally runs.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 2, steal: true, quantum: 64 },
+    );
+    let first = eng.register(client_key(0), None, MockBackend::new(64, 510)).unwrap();
+    eng.submit_n(first, 50_000).unwrap();
+    let deferred = eng.retire_lane(first).unwrap();
+
+    let second = eng.register(client_key(0), None, MockBackend::new(64, 511)).unwrap();
+    if deferred.is_none() {
+        // Retirement was still draining: the replacement is a new lane.
+        assert_ne!(first, second, "a retiring lane must not satisfy idempotent registration");
+    }
+    eng.submit_n(second, 20_000).unwrap();
+    eng.drain().unwrap();
+
+    // After the deferred finaliser ran, the key must still resolve to
+    // the replacement (idempotency towards the live lane).
+    let third = eng.register(client_key(0), None, MockBackend::new(64, 512)).unwrap();
+    assert_eq!(second, third, "the replacement lane owns the key after finalisation");
+    assert!(eng.submit(first).is_err(), "the retired lane stays retired");
+
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.kernel_calls, 70_000, "both lanes' backlogs ran in full");
+    let r = reports.iter().find(|r| r.id == first.0).expect("retired lane report");
+    assert_eq!(r.kernel_calls, 50_000, "deferred retirement drained before finalising");
+}
+
+// ---------- controller lifecycle ----------
+
+#[test]
+fn controller_outlives_a_finished_engine_and_fails_cleanly() {
+    fn assert_send<T: Send>() {}
+    assert_send::<degoal_rt::service::EngineController<MockBackend>>();
+
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 2);
+    let lane = eng.register(client_key(0), None, MockBackend::new(64, 400)).unwrap();
+    let ctrl = eng.controller();
+    ctrl.submit(lane).unwrap();
+    eng.finish().unwrap();
+
+    assert!(ctrl.submit(lane).is_err(), "submit after finish must fail");
+    assert!(
+        ctrl.register_lane(client_key(1), None, MockBackend::new(64, 401)).is_err(),
+        "register after finish must fail"
+    );
+    assert!(ctrl.retire_lane(lane).is_err(), "retire after finish must fail");
+}
+
+#[test]
+fn dropping_an_unfinished_engine_does_not_hang() {
+    // Workers are spawned eagerly and sleep on a condvar; Drop must wake
+    // and join them even when `finish` was never called.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 3);
+    let lane = eng.register(client_key(0), None, MockBackend::new(64, 300)).unwrap();
+    eng.submit_n(lane, 1_000).unwrap();
+    drop(eng); // must drain + join, not deadlock
+}
