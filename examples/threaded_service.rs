@@ -108,12 +108,14 @@ fn main() -> anyhow::Result<()> {
     }
     let (warm, _) = warm_eng.finish()?;
     println!(
-        "warm threaded restart: {} of {} lanes warm, {} generate calls (vs {} cold), overhead {:.2} %",
+        "warm threaded restart: {} of {} lanes warm, {} generate calls (vs {} cold), \
+         overhead {:.2} %, {}",
         warm.warm_lanes,
         warm.lanes,
         warm.generate_calls,
         thr.generate_calls,
         100.0 * warm.overhead_frac(),
+        warm.cache.stats(),
     );
 
     // ---- phase 4: skewed workload — static vs stealing + hot add ----

@@ -1,0 +1,124 @@
+//! Cross-device transfer priors: one device's tuning outcomes seed a
+//! *sibling* device's exploration order.
+//!
+//!     cargo run --release --example transfer_priors
+//!
+//! A cache entry never transfers across device fingerprints as a warm
+//! start — a DI-I2 winner's *score* is meaningless on DI-I1. But its
+//! *location in the tuning space* is the strongest available hint about
+//! where the sibling's winner lives. With
+//! [`ServiceConfig::transfer_priors`], a lane whose exact and near
+//! lookups miss asks the cache for the same kernel stream on any other
+//! device and — on a hit (`transfer_hits`) — explores the *identical*
+//! candidate set permuted around the donor's winner. Coverage and the
+//! final winner are unchanged; only time-to-best collapses.
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::cache::TuneCache;
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::service::{LaneId, LaneReport, ServiceConfig, TuningService};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::workloads::hetero_service_workload;
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Drive every lane until its exploration finishes (bounded), returning
+/// the per-lane reports and the checkpointed cache.
+fn tune_to_completion(
+    svc: &mut TuningService<SimBackend>,
+    lanes: &[LaneId],
+) -> anyhow::Result<Vec<LaneReport>> {
+    for _ in 0..200_000 {
+        let mut all_done = true;
+        for &l in lanes {
+            if !svc.tuner(l).unwrap().exploration_done() {
+                svc.app_call(l)?;
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    Ok(lanes.iter().filter_map(|&l| svc.lane_report(l)).collect())
+}
+
+fn mean_best_at(reports: &[LaneReport]) -> f64 {
+    let at: Vec<u64> = reports.iter().filter_map(|r| r.best_at_generate).collect();
+    at.iter().sum::<u64>() as f64 / at.len().max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    degoal_rt::util::logging::init();
+    let donor_core = core_by_name("DI-I2").unwrap();
+    let target_core = core_by_name("DI-I1").unwrap();
+
+    // ---- 1: the donor device tunes its streams cold ----
+    let (donor_lanes, target_lanes) = hetero_service_workload(donor_core, target_core, 42);
+    let mut donor_svc: TuningService<SimBackend> = TuningService::new(cfg());
+    let ids: Vec<LaneId> =
+        donor_lanes.into_iter().map(|(k, b)| donor_svc.register(k, Some(true), b)).collect();
+    let donor_reports = tune_to_completion(&mut donor_svc, &ids)?;
+    let donor_cache: TuneCache = donor_svc.into_cache();
+    println!(
+        "donor {}: {} streams tuned, {} winners cached, {}",
+        donor_core.name,
+        donor_reports.len(),
+        donor_cache.len(),
+        donor_cache.counters.stats(),
+    );
+
+    // ---- 2: the target device, cold (baseline order) ----
+    let mut cold_svc: TuningService<SimBackend> = TuningService::new(cfg());
+    let ids: Vec<LaneId> =
+        target_lanes.into_iter().map(|(k, b)| cold_svc.register(k, Some(true), b)).collect();
+    let cold_reports = tune_to_completion(&mut cold_svc, &ids)?;
+
+    // ---- 3: the target device over the donor's cache, priors on ----
+    let mut seeded_cfg = cfg();
+    seeded_cfg.transfer_priors = true;
+    let mut seeded_svc: TuningService<SimBackend> =
+        TuningService::with_cache(seeded_cfg, donor_cache);
+    let (_, target_again) = hetero_service_workload(donor_core, target_core, 42);
+    let ids: Vec<LaneId> =
+        target_again.into_iter().map(|(k, b)| seeded_svc.register(k, Some(true), b)).collect();
+    let seeded_reports = tune_to_completion(&mut seeded_svc, &ids)?;
+    let seeded_stats = seeded_svc.stats();
+
+    println!(
+        "target {}: {} of {} lanes seeded by a sibling donor, {}",
+        target_core.name,
+        seeded_stats.transfer_lanes,
+        seeded_stats.lanes,
+        seeded_stats.cache.stats(),
+    );
+    for (c, s) in cold_reports.iter().zip(&seeded_reports) {
+        println!(
+            "  {}: best found at generate {:>3} cold vs {:>3} with prior \
+             (explored {} vs {}, winner {})",
+            c.key,
+            c.best_at_generate.unwrap_or(0),
+            s.best_at_generate.unwrap_or(0),
+            c.explored,
+            s.explored,
+            if c.best.map(|(p, _)| p.full_id()) == s.best.map(|(p, _)| p.full_id()) {
+                "identical"
+            } else {
+                "differs (device landscapes disagree)"
+            },
+        );
+    }
+    let (cold_at, seeded_at) = (mean_best_at(&cold_reports), mean_best_at(&seeded_reports));
+    println!(
+        "time-to-best: {:.1} generate calls cold vs {:.1} with transfer priors ({:.1}x earlier)",
+        cold_at,
+        seeded_at,
+        cold_at / seeded_at.max(1e-9),
+    );
+    Ok(())
+}

@@ -45,7 +45,8 @@ fn main() -> anyhow::Result<()> {
 
     // Persist the outcome, keyed by device + kernel.
     let mut cache = TuneCache::new();
-    cache.insert(&fp, &key, CacheEntry::new(best, score, ref_score, cold.stats.explored_count() as u32));
+    let explored = cold.stats.explored_count() as u32;
+    cache.insert(&fp, &key, CacheEntry::new(best, score, ref_score, explored));
     cache.save(&cache_path)?;
 
     // ---- run 2: warm — a fresh process lifetime ----
@@ -70,10 +71,11 @@ fn main() -> anyhow::Result<()> {
         warm.stats.warm_outcome.unwrap(),
     );
     println!(
-        "saved {}x of the regeneration work ({} -> {} generate calls); cache: {}",
+        "saved {}x of the regeneration work ({} -> {} generate calls); {}; cache: {}",
         cold.stats.generate_calls / warm.stats.generate_calls.max(1),
         cold.stats.generate_calls,
         warm.stats.generate_calls,
+        cache.counters.stats(),
         cache_path.display(),
     );
     std::fs::remove_file(&cache_path).ok();

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::backend::{Backend, KernelVersion};
 use crate::coordinator::{EvalMode, Evaluator};
-use crate::tunespace::{Space, Structural, TuningParams};
+use crate::tunespace::{SearchStrategy, StaticGrid, TuningParams};
 
 #[derive(Debug, Clone)]
 pub struct StaticSearchResult {
@@ -26,6 +26,10 @@ pub struct StaticSearchResult {
 
 /// Exhaustively evaluate the tuning space on `backend`.
 ///
+/// Candidate supply is the [`StaticGrid`] strategy — the same
+/// [`SearchStrategy`] seam the online tuner drives, so there is exactly
+/// one exploration code path in the repo.
+///
 /// * `ve_filter`: restrict to SISD/SIMD like the online fair-comparison.
 /// * `no_leftover_only`: the paper's Streamcluster restriction.
 /// * `structural_only`: evaluate phase-1 defaults only (Figure 1 sweeps
@@ -37,30 +41,17 @@ pub fn static_search<B: Backend>(
     no_leftover_only: bool,
     structural_only: bool,
 ) -> Result<StaticSearchResult> {
-    let space = Space::new(length);
-    let structs: Vec<Structural> = if no_leftover_only {
-        space.no_leftover_structural()
-    } else {
-        space.valid_structural()
-    }
-    .into_iter()
-    .filter(|s| ve_filter.map(|ve| s.ve == ve).unwrap_or(true))
-    .collect();
-
+    let mut grid = StaticGrid::new(length, ve_filter, no_leftover_only, structural_only);
     let mut explored = Vec::new();
     let mut search_cost = 0.0;
-    for s in structs {
-        let candidates: Vec<TuningParams> = if structural_only {
-            vec![TuningParams::phase1_default(s)]
-        } else {
-            Space::phase2_grid(s)
-        };
-        for p in candidates {
-            search_cost += backend.generate(p)?;
-            let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(p), EvalMode::TrainingFiltered)?;
-            search_cost += ev.cost;
-            explored.push((p, ev.score));
-        }
+    // The offline search takes no feedback: every candidate is evaluated
+    // on training data and the minimum wins at the end.
+    while let Some(p) = grid.next(None) {
+        search_cost += backend.generate(p)?;
+        let ev =
+            Evaluator::evaluate(backend, &KernelVersion::Variant(p), EvalMode::TrainingFiltered)?;
+        search_cost += ev.cost;
+        explored.push((p, ev.score));
     }
     anyhow::ensure!(!explored.is_empty(), "empty search space for length {length}");
     let (best, best_score) = explored

@@ -22,9 +22,13 @@
 //!   the TTL), a shape-class fallback lookup ([`TuneCache::lookup_near`]:
 //!   an exact-key miss may still return a same-no-leftover-class winner
 //!   tuned for a *near* trip length as a warm-start hint, counted in
-//!   `near_hits`), JSON-on-disk persistence (versioned format,
-//!   `DEGOAL_TUNECACHE` / `results/tunecache.json`), and import/export so
-//!   a cache can be shipped with a deployment.
+//!   `near_hits`), a cross-device transfer lookup
+//!   ([`TuneCache::lookup_transfer`]: a *sibling device's* entry for the
+//!   exact same key, counted in `transfer_hits` — it seeds the
+//!   exploration *order*, never the winner, because scores do not
+//!   transfer across fingerprints), JSON-on-disk persistence (versioned
+//!   format, `DEGOAL_TUNECACHE` / `results/tunecache.json`), and
+//!   import/export so a cache can be shipped with a deployment.
 //! * [`SharedTuneCache`] — the concurrent view: `N` lock shards, each a
 //!   [`TuneCache`], behind one `Clone + Send + Sync` handle; entries are
 //!   placed by hashing ([`DeviceFingerprint`], [`TuneKey`]). Storage and
@@ -38,4 +42,6 @@ mod store;
 
 pub use fingerprint::{DeviceFingerprint, TuneKey};
 pub use shared::{SharedTuneCache, DEFAULT_LOCK_SHARDS};
-pub use store::{CacheCounters, CacheEntry, CacheHit, TuneCache, TUNECACHE_FORMAT_VERSION};
+pub use store::{
+    CacheCounters, CacheEntry, CacheHit, CacheStats, TuneCache, TUNECACHE_FORMAT_VERSION,
+};

@@ -213,6 +213,47 @@ impl SharedTuneCache {
         }
     }
 
+    /// Cross-device transfer lookup: a sibling device's entry for the
+    /// exact same key, to seed exploration order (see
+    /// [`TuneCache::lookup_transfer`]). The scan visits every lock shard
+    /// (the donor device's entry hashes elsewhere), one lock at a time;
+    /// it only runs on the exact-miss slow path, immediately before a
+    /// full exploration. Donor preference is `store::better_transfer_donor`
+    /// — the same rule the plain cache applies, so sequential and
+    /// threaded modes pick identical donors. Counts a `transfer_hit` on
+    /// the requester's home shard; never a miss (the exact lookup
+    /// already counted it).
+    pub fn lookup_transfer(
+        &self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(DeviceFingerprint, CacheEntry)> {
+        let mut best: Option<(usize, DeviceFingerprint, CacheEntry)> = None;
+        for (idx, shard) in self.inner.shards.iter().enumerate() {
+            let mut guard = shard.lock().expect("tunecache shard lock");
+            if let Some((donor_fp, e)) = guard.best_transfer(fp, key, &usable) {
+                let better = match &best {
+                    Some((_, bf, be)) => {
+                        super::store::better_transfer_donor((&donor_fp, &e), (bf, be))
+                    }
+                    None => true,
+                };
+                if better {
+                    best = Some((idx, donor_fp, e));
+                }
+            }
+        }
+        let (idx, donor_fp, e) = best?;
+        // Promote only the winning donor's recency, then account the
+        // transfer on the requester's home shard (where its exact miss
+        // was counted).
+        self.inner.shards[idx].lock().expect("tunecache shard lock").touch(&donor_fp, key);
+        let home = self.shard_index(fp, key);
+        self.inner.shards[home].lock().expect("tunecache shard lock").counters.transfer_hits += 1;
+        Some((donor_fp, e))
+    }
+
     /// Counter-free read (tools, tests). Returns an owned clone — a
     /// reference cannot outlive the shard lock.
     pub fn get(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
@@ -431,6 +472,32 @@ mod tests {
         let counters = c.counters();
         assert_eq!(counters.near_hits, 1);
         assert_eq!(counters.hits, 0);
+    }
+
+    #[test]
+    fn transfer_lookup_crosses_lock_shards() {
+        // The donor device's entry hashes to a different lock shard than
+        // the requesting (fp, key); the scan must find it regardless, and
+        // count the transfer on the requester's home shard.
+        let c = SharedTuneCache::with_shards(8, 64);
+        let donor_s = Structural::new(true, 2, 2, 2); // epi 32: valid for 64
+        c.insert(
+            &fp("donor"),
+            &key("k", 64),
+            CacheEntry::new(TuningParams::phase1_default(donor_s), 1e-4, 2e-4, 9),
+        );
+        let (donor_fp, e) =
+            c.lookup_transfer(&fp("target"), &key("k", 64), |_| true).expect("transfer hit");
+        assert_eq!(donor_fp, fp("donor"));
+        assert_eq!(e.params.s, donor_s);
+        let counters = c.counters();
+        assert_eq!(counters.transfer_hits, 1);
+        assert_eq!(counters.hits, 0);
+        assert_eq!(counters.misses, 0, "the transfer scan itself counts no miss");
+        // Same device finds nothing; usable filter applies.
+        assert!(c.lookup_transfer(&fp("donor"), &key("k", 64), |_| true).is_none());
+        assert!(c.lookup_transfer(&fp("target"), &key("k", 64), |e| !e.params.s.ve).is_none());
+        assert_eq!(c.counters().transfer_hits, 1);
     }
 
     #[test]

@@ -50,7 +50,7 @@ impl CacheEntry {
     }
 }
 
-/// How a [`TuneCache::lookup_near`] request was satisfied.
+/// How a cache consultation was satisfied.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CacheHit {
     /// The exact `(DeviceFingerprint, TuneKey)` entry.
@@ -59,6 +59,11 @@ pub enum CacheHit {
     /// whose winning structure also divides the requested length evenly
     /// (same no-leftover class) — a warm-start hint, not a proven winner.
     Near,
+    /// A *sibling device's* entry for the exact same [`TuneKey`]
+    /// ([`TuneCache::lookup_transfer`]). Scores do not transfer across
+    /// devices, so this is never adopted as a warm start: it seeds the
+    /// exploration *order* (a cross-device transfer prior), nothing else.
+    Transfer,
 }
 
 /// Aggregate cache-behaviour counters (process lifetime, not persisted).
@@ -82,6 +87,12 @@ pub struct CacheCounters {
     /// near trip length ([`TuneCache::lookup_near`]) — warm-start hints,
     /// counted separately from exact `hits`.
     pub near_hits: u64,
+    /// Exact-key misses answered by a *sibling device's* entry for the
+    /// same key ([`TuneCache::lookup_transfer`]) — cross-device transfer
+    /// priors, counted separately from both `hits` and `near_hits`
+    /// (and never as a `miss`: the transfer scan only runs after the
+    /// exact miss was already counted).
+    pub transfer_hits: u64,
 }
 
 impl CacheCounters {
@@ -95,6 +106,43 @@ impl CacheCounters {
         self.imported += other.imported;
         self.expired += other.expired;
         self.near_hits += other.near_hits;
+        self.transfer_hits += other.transfer_hits;
+    }
+
+    /// Snapshot the lookup-behaviour counters for display.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            near_hits: self.near_hits,
+            stale: self.stale,
+            expired: self.expired,
+            transfer_hits: self.transfer_hits,
+        }
+    }
+}
+
+/// A point-in-time snapshot of the cache-behaviour counters with one
+/// canonical rendering — the CLI and the examples all print cache
+/// counters through this `Display` instead of each formatting its own
+/// ad-hoc subset.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub near_hits: u64,
+    pub stale: u64,
+    pub expired: u64,
+    pub transfer_hits: u64,
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cache[hit={} near={} transfer={} miss={} stale={} expired={}]",
+            self.hits, self.near_hits, self.transfer_hits, self.misses, self.stale, self.expired
+        )
     }
 }
 
@@ -115,6 +163,23 @@ pub(crate) fn nearer_donor(request: &TuneKey, cand: &TuneKey, incumbent: &TuneKe
     let cd = request.length.abs_diff(cand.length);
     let id = request.length.abs_diff(incumbent.length);
     cd < id || (cd == id && cand.length < incumbent.length)
+}
+
+/// The cross-device donor preference, in one place so the plain
+/// ([`TuneCache::best_transfer`]) and cross-shard
+/// ([`super::SharedTuneCache::lookup_transfer`]) selections cannot drift:
+/// does `cand` beat `incumbent` as a transfer-prior donor? The entry with
+/// the larger tuning-time speedup wins (its winner moved furthest from
+/// the reference — the strongest ordering signal); ties break to the
+/// lexicographically smaller fingerprint so the choice is deterministic
+/// (HashMap iteration order is not).
+pub(crate) fn better_transfer_donor(
+    cand: (&DeviceFingerprint, &CacheEntry),
+    incumbent: (&DeviceFingerprint, &CacheEntry),
+) -> bool {
+    let cs = cand.1.speedup();
+    let is = incumbent.1.speedup();
+    cs > is || (cs == is && cand.0.key() < incumbent.0.key())
 }
 
 #[derive(Debug, Clone)]
@@ -376,6 +441,62 @@ impl TuneCache {
         }
         self.counters.misses += 1;
         None
+    }
+
+    /// Counter-neutral sibling-device scan: among entries for the *exact
+    /// same* [`TuneKey`] on a *different* device, return the preferred
+    /// transfer-prior donor ([`better_transfer_donor`]: largest speedup,
+    /// deterministic tie-break). Pure scan — no LRU side effects; expired
+    /// and unusable donors are skipped, as are entries whose winner
+    /// cannot generate code for the key's length (a corrupt import must
+    /// not seed the exploration order).
+    pub(crate) fn best_transfer(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(DeviceFingerprint, CacheEntry)> {
+        let now = now_unix();
+        let mut best: Option<(DeviceFingerprint, CacheEntry)> = None;
+        for (donor_fp, shard) in self.shards.iter() {
+            if donor_fp == fp {
+                continue;
+            }
+            let Some(slot) = shard.get(key) else {
+                continue;
+            };
+            let e = &slot.entry;
+            if self.is_expired(e, now) || !e.params.s.valid_for(key.length) || !usable(e) {
+                continue;
+            }
+            let better = match &best {
+                Some((bf, be)) => better_transfer_donor((donor_fp, e), (bf, be)),
+                None => true,
+            };
+            if better {
+                best = Some((donor_fp.clone(), e.clone()));
+            }
+        }
+        best
+    }
+
+    /// Cross-device transfer lookup: an entry for the exact same
+    /// [`TuneKey`] on a *sibling device*, to seed this device's
+    /// exploration order (never its winner — scores do not transfer
+    /// across devices). Counts a `transfer_hit` on success and nothing on
+    /// failure: the caller only reaches this path after an exact lookup
+    /// already counted its miss. The donor entry's LRU recency is
+    /// refreshed — donating keeps an entry alive.
+    pub fn lookup_transfer(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        usable: impl Fn(&CacheEntry) -> bool,
+    ) -> Option<(DeviceFingerprint, CacheEntry)> {
+        let (donor_fp, entry) = self.best_transfer(fp, key, usable)?;
+        self.touch(&donor_fp, key);
+        self.counters.transfer_hits += 1;
+        Some((donor_fp, entry))
     }
 
     /// Counter-free read (tools, tests).
@@ -952,5 +1073,91 @@ mod tests {
         let (e, hit) = c.lookup_near(&fp("a"), &TuneKey::new("k", 112), |_| true).unwrap();
         assert_eq!(hit, CacheHit::Near);
         assert_eq!(e.score, 2e-4, "128 is nearer to 112 than 64 is");
+    }
+
+    /// A donor entry whose winner (epi 32) is comfortably valid for trip
+    /// length 64 — the transfer scan rejects winners that cannot
+    /// generate code for the requested length.
+    fn transferable(score: f64) -> CacheEntry {
+        CacheEntry::new(
+            TuningParams::phase1_default(Structural::new(true, 2, 2, 2)),
+            score,
+            2.0 * score,
+            42,
+        )
+    }
+
+    #[test]
+    fn transfer_lookup_finds_sibling_device_entries_only() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("donor"), &key("k"), transferable(1e-4));
+        // Same device: never a transfer donor (that would be an exact
+        // hit's job). Different key: no donor either.
+        assert!(c.lookup_transfer(&fp("donor"), &key("k"), |_| true).is_none());
+        assert!(c.lookup_transfer(&fp("target"), &key("other"), |_| true).is_none());
+        assert_eq!(c.counters.transfer_hits, 0);
+        assert_eq!(c.counters.misses, 0, "transfer scans never count misses");
+
+        let (donor_fp, e) = c
+            .lookup_transfer(&fp("target"), &key("k"), |_| true)
+            .expect("sibling entry must transfer");
+        assert_eq!(donor_fp, fp("donor"));
+        assert_eq!(e.score, 1e-4);
+        assert_eq!(c.counters.transfer_hits, 1);
+        assert_eq!(c.counters.hits, 0, "a transfer prior is not an exact hit");
+    }
+
+    #[test]
+    fn transfer_lookup_rejects_winners_invalid_for_the_length() {
+        let mut c = TuneCache::new();
+        // Structural(true, 2, 2, 8): epi = 8*2*8 = 128 > 64 — this winner
+        // cannot generate code for the key's length; a corrupt import
+        // must not seed the exploration order.
+        let invalid = CacheEntry::new(
+            TuningParams::phase1_default(Structural::new(true, 2, 2, 8)),
+            1e-4,
+            2e-4,
+            42,
+        );
+        assert!(!invalid.params.s.valid_for(64));
+        c.insert(&fp("donor"), &key("k"), invalid);
+        assert!(c.lookup_transfer(&fp("target"), &key("k"), |_| true).is_none());
+    }
+
+    #[test]
+    fn transfer_lookup_prefers_the_strongest_donor_deterministically() {
+        let mut c = TuneCache::new();
+        // Speedups: both entries use ref = 2*score, so equal speedup —
+        // the lexicographically smaller fingerprint must win the tie.
+        c.insert(&fp("zeta"), &key("k"), transferable(1e-4));
+        c.insert(&fp("alpha"), &key("k"), transferable(1e-4));
+        let (donor_fp, _) = c.lookup_transfer(&fp("target"), &key("k"), |_| true).unwrap();
+        assert_eq!(donor_fp, fp("alpha"), "deterministic tie-break");
+
+        // A donor with a larger speedup beats a smaller fingerprint.
+        let mut strong = transferable(1e-4);
+        strong.ref_score = 10e-4; // 10x speedup
+        c.insert(&fp("zeta"), &key("k"), strong);
+        let (donor_fp, e) = c.lookup_transfer(&fp("target"), &key("k"), |_| true).unwrap();
+        assert_eq!(donor_fp, fp("zeta"));
+        assert!((e.speedup() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_lookup_respects_usable_filter_and_ttl() {
+        let mut c = TuneCache::new().with_ttl(Some(3600));
+        c.insert(&fp("donor"), &key("k"), transferable(1e-4)); // SIMD entry
+        assert!(
+            c.lookup_transfer(&fp("target"), &key("k"), |e| !e.params.s.ve).is_none(),
+            "out-of-class donors must not seed a SISD-only run"
+        );
+        let mut old = transferable(1e-4);
+        old.updated_unix = 1_000;
+        c.insert(&fp("old"), &key("k2"), old);
+        assert!(
+            c.lookup_transfer(&fp("target"), &key("k2"), |_| true).is_none(),
+            "expired donors must not transfer"
+        );
+        assert_eq!(c.counters.transfer_hits, 0);
     }
 }

@@ -7,6 +7,16 @@
 //! one new version, replacing the active function if it scores better.
 //! All tool time (codegen + evaluation) is charged to `overhead`, exactly
 //! as in the paper's single-core `taskset` measurements.
+//!
+//! The tuner is split along the strategy seam: *candidate supply* is a
+//! pluggable [`SearchStrategy`] (the paper's [`TwoPhaseGrid`] by default,
+//! a donor-permuted [`PriorSeeded`] under a cross-device transfer prior),
+//! while *evaluate-and-decide* — generate, score, swap, account — lives
+//! here and is identical for every strategy. [`AutoTuner::tune_step`] is
+//! the gated path (wake period, §3.3 budget); [`AutoTuner::tune_idle`]
+//! advances the same exploration ungated, for callers that own the gating
+//! themselves (the engine's idle-time speculation, gated on the global
+//! [`RegenGovernor`](super::RegenGovernor) budget).
 
 use anyhow::Result;
 
@@ -15,7 +25,7 @@ use super::evaluator::{EvalMode, Evaluator};
 use super::stats::{ExploredVersion, TuneStats, WarmOutcome};
 use crate::backend::{Backend, EvalData, KernelVersion};
 use crate::simulator::RefKind;
-use crate::tunespace::{ExplorationPlan, Phase, TuningParams};
+use crate::tunespace::{Phase, PriorSeeded, SearchStrategy, TuningParams, TwoPhaseGrid};
 
 /// Tuner policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -60,7 +70,9 @@ pub enum StepEvent {
 
 pub struct AutoTuner {
     cfg: TunerConfig,
-    plan: ExplorationPlan,
+    /// Candidate supply — swappable; `Send` is a supertrait so the boxed
+    /// strategy moves with its lane onto worker threads.
+    strategy: Box<dyn SearchStrategy>,
     active: KernelVersion,
     /// Score of the active function under the *current* evaluation mode.
     active_score: Option<f64>,
@@ -75,6 +87,9 @@ pub struct AutoTuner {
     last_phase: Phase,
     /// Cached winner awaiting validation (persistent-cache warm start).
     warm: Option<TuningParams>,
+    /// Donor winner the exploration order was seeded with (cross-device
+    /// transfer prior) — reporting only; the strategy owns the ordering.
+    transfer_prior: Option<TuningParams>,
     /// External regeneration gate — a [`crate::service::TuningService`]
     /// clears it when the *global* budget across lanes is exhausted.
     regen_enabled: bool,
@@ -86,11 +101,16 @@ impl AutoTuner {
     /// `ve_filter`: restrict exploration to SISD (false) / SIMD (true) for
     /// the paper's fair-comparison runs, or None for the real scenario.
     pub fn new(cfg: TunerConfig, length: u32, ve_filter: Option<bool>) -> AutoTuner {
-        let plan = ExplorationPlan::new(length, ve_filter);
-        let last_phase = plan.phase();
+        AutoTuner::with_strategy(cfg, Box::new(TwoPhaseGrid::new(length, ve_filter)))
+    }
+
+    /// A tuner over an explicit search strategy — the seam every
+    /// construction path goes through.
+    pub fn with_strategy(cfg: TunerConfig, strategy: Box<dyn SearchStrategy>) -> AutoTuner {
+        let last_phase = strategy.phase();
         AutoTuner {
             cfg,
-            plan,
+            strategy,
             active: KernelVersion::Reference(cfg.initial_ref),
             active_score: None,
             ref_score: None,
@@ -99,6 +119,7 @@ impl AutoTuner {
             next_wake: 0.0,
             last_phase,
             warm: None,
+            transfer_prior: None,
             regen_enabled: true,
             stats: TuneStats::default(),
         }
@@ -127,6 +148,32 @@ impl AutoTuner {
         tuner
     }
 
+    /// A tuner seeded with a *cross-device transfer prior*: a sibling
+    /// device's cached winner for the same kernel stream. Scores do not
+    /// transfer across devices, so — unlike a same-device warm start —
+    /// nothing is adopted and nothing is skipped: the full exploration
+    /// runs, merely *permuted* so candidates near the donor's winner are
+    /// tried first ([`PriorSeeded`]). When the devices agree, the best
+    /// version is reached in a fraction of the generate calls; when they
+    /// disagree, coverage and the final winner are unchanged.
+    ///
+    /// A prior outside `ve_filter`'s class is ignored (plain cold start).
+    pub fn with_transfer_prior(
+        cfg: TunerConfig,
+        length: u32,
+        ve_filter: Option<bool>,
+        prior: TuningParams,
+    ) -> AutoTuner {
+        let in_class = ve_filter.map(|ve| prior.s.ve == ve).unwrap_or(true);
+        if !in_class {
+            return AutoTuner::new(cfg, length, ve_filter);
+        }
+        let mut tuner =
+            AutoTuner::with_strategy(cfg, Box::new(PriorSeeded::new(length, ve_filter, prior)));
+        tuner.transfer_prior = Some(prior);
+        tuner
+    }
+
     pub fn active(&self) -> &KernelVersion {
         &self.active
     }
@@ -143,6 +190,12 @@ impl AutoTuner {
     /// True while a cache warm start is pending validation.
     pub fn warm_start_pending(&self) -> bool {
         self.warm.is_some()
+    }
+
+    /// The donor winner this tuner's exploration order was seeded with
+    /// (cross-device transfer prior), if any.
+    pub fn transfer_prior(&self) -> Option<TuningParams> {
+        self.transfer_prior
     }
 
     /// External regeneration gate (default on). While off, the tuner
@@ -180,8 +233,10 @@ impl AutoTuner {
         Ok(dt)
     }
 
-    /// One wake-up of the tuning thread. Public so experiment harnesses
-    /// can drive the tuner without an application loop.
+    /// One wake-up of the tuning thread — the *gated* exploration path:
+    /// wake period, external gate, and the local §3.3 budget all apply.
+    /// Public so experiment harnesses can drive the tuner without an
+    /// application loop.
     pub fn tune_step<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
         if self.now() < self.next_wake {
             return Ok(StepEvent::Idle);
@@ -190,12 +245,8 @@ impl AutoTuner {
 
         // Bootstrap: evaluate the reference function (Fig. 2: "evaluate
         // reference function" precedes the main loop).
-        if self.ref_score.is_none() {
-            let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
-            self.stats.overhead += ev.cost;
-            self.ref_score = Some(ev.score);
-            self.active_score = Some(ev.score);
-            return Ok(StepEvent::MeasuredReference { score: ev.score });
+        if let Some(ev) = self.measure_reference(backend)? {
+            return Ok(ev);
         }
 
         if self.exploration_done() {
@@ -211,12 +262,45 @@ impl AutoTuner {
             return Ok(StepEvent::Idle);
         }
 
-        // Warm start: validate the cached winner before (instead of)
-        // walking the exploration plan.
+        self.advance(backend)
+    }
+
+    /// One *ungated* exploration advance: same bootstrap / warm-validate /
+    /// explore sequence as [`AutoTuner::tune_step`], but without the wake
+    /// period, the external gate, or the local §3.3 decision. Tool time
+    /// is still charged to this tuner's virtual clock exactly as the
+    /// gated path charges it — the caller owns the budget policy. Used by
+    /// the engine's idle-time speculation, which gates on the *global*
+    /// [`RegenGovernor`](super::RegenGovernor) before each call.
+    pub fn tune_idle<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
+        if let Some(ev) = self.measure_reference(backend)? {
+            return Ok(ev);
+        }
+        if self.exploration_done() {
+            return Ok(StepEvent::Idle);
+        }
+        self.advance(backend)
+    }
+
+    /// Measure the initial reference if not yet done (returns the event),
+    /// charging the evaluation to overhead.
+    fn measure_reference<B: Backend>(&mut self, backend: &mut B) -> Result<Option<StepEvent>> {
+        if self.ref_score.is_some() {
+            return Ok(None);
+        }
+        let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
+        self.stats.overhead += ev.cost;
+        self.ref_score = Some(ev.score);
+        self.active_score = Some(ev.score);
+        Ok(Some(StepEvent::MeasuredReference { score: ev.score }))
+    }
+
+    /// One exploration advance past all gates: validate a pending warm
+    /// candidate, else draw the next candidate from the strategy.
+    fn advance<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
         if let Some(p) = self.warm.take() {
             return self.warm_validate(backend, p);
         }
-
         self.explore_next(backend)
     }
 
@@ -259,6 +343,7 @@ impl AutoTuner {
             // write-back pair (score, ref_score) shares one mode.
             self.best = Some((p, ev.score));
             self.best_is_real = true;
+            self.stats.best_at_generate = Some(self.stats.generate_calls);
             self.active = KernelVersion::Variant(p);
             self.active_score = Some(ev.score);
             self.ref_score = Some(ref_ev.score);
@@ -284,42 +369,38 @@ impl AutoTuner {
         Ok(StepEvent::Explored { params: p, score: ev.score, swapped })
     }
 
-    /// Generate + evaluate the next candidate, bypassing the wake/budget
-    /// gates (the gated path is `tune_step`).
+    /// Candidate supply + evaluate/decide, bypassing the wake/budget
+    /// gates (the gated path is `tune_step`): draw the next candidate
+    /// from the strategy and hand it to [`AutoTuner::evaluate_candidate`];
+    /// an exhausted strategy finishes the exploration.
     fn explore_next<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
         let best_params = self.best.map(|(p, _)| p);
-        let Some(cand) = self.plan.next(best_params) else {
-            // Exploration exhausted. The score that outlives this run
-            // (cache write-back) must be real-data comparable (§3.4): if
-            // the overall best was only ever measured on training data,
-            // re-score it on real data once.
-            if let Some((bp, _)) = self.best {
-                if !self.best_is_real {
-                    let ev = Evaluator::evaluate(
-                        backend,
-                        &KernelVersion::Variant(bp),
-                        EvalMode::RealAveraged(self.cfg.real_samples),
-                    )?;
-                    self.stats.overhead += ev.cost;
-                    self.best = Some((bp, ev.score));
-                    self.best_is_real = true;
-                }
-            }
-            self.stats.exploration_done_at = Some(self.now());
-            return Ok(StepEvent::ExplorationDone);
+        let Some(cand) = self.strategy.next(best_params) else {
+            return self.finish_exploration(backend);
         };
 
         // Phase transition: re-score the active function under the new
         // evaluation mode so comparisons stay apples-to-apples (§3.4:
         // real data is mandatory in phase 2).
-        if self.plan.phase() != self.last_phase {
-            self.last_phase = self.plan.phase();
+        if self.strategy.phase() != self.last_phase {
+            self.last_phase = self.strategy.phase();
             let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
             self.stats.overhead += ev.cost;
             self.active_score = Some(ev.score);
         }
 
-        // Generate (machine code) + evaluate the candidate.
+        self.evaluate_candidate(backend, cand)
+    }
+
+    /// The evaluate-and-decide half of one exploration step: generate the
+    /// machine code, score it under the current evaluation mode, update
+    /// best, and swap the active function if it improved ("simply
+    /// comparing the calculated run-times", §3.4).
+    fn evaluate_candidate<B: Backend>(
+        &mut self,
+        backend: &mut B,
+        cand: TuningParams,
+    ) -> Result<StepEvent> {
         let gen_cost = backend.generate(cand)?;
         self.stats.generate_calls += 1;
         self.stats.overhead += gen_cost;
@@ -329,10 +410,9 @@ impl AutoTuner {
         if self.best.map(|(_, s)| ev.score < s).unwrap_or(true) {
             self.best = Some((cand, ev.score));
             self.best_is_real = matches!(self.eval_mode(), EvalMode::RealAveraged(_));
+            self.stats.best_at_generate = Some(self.stats.generate_calls);
         }
 
-        // Replacement decision: "simply comparing the calculated
-        // run-times" (§3.4).
         let swapped = ev.score < self.active_score.unwrap_or(f64::INFINITY);
         if swapped {
             self.active = KernelVersion::Variant(cand);
@@ -349,8 +429,30 @@ impl AutoTuner {
         Ok(StepEvent::Explored { params: cand, score: ev.score, swapped })
     }
 
+    /// Strategy exhausted: make the surviving best real-data comparable
+    /// and mark the exploration finished. The score that outlives this
+    /// run (cache write-back) must be real-data comparable (§3.4): if the
+    /// overall best was only ever measured on training data, re-score it
+    /// on real data once.
+    fn finish_exploration<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
+        if let Some((bp, _)) = self.best {
+            if !self.best_is_real {
+                let ev = Evaluator::evaluate(
+                    backend,
+                    &KernelVersion::Variant(bp),
+                    EvalMode::RealAveraged(self.cfg.real_samples),
+                )?;
+                self.stats.overhead += ev.cost;
+                self.best = Some((bp, ev.score));
+                self.best_is_real = true;
+            }
+        }
+        self.stats.exploration_done_at = Some(self.now());
+        Ok(StepEvent::ExplorationDone)
+    }
+
     fn eval_mode(&self) -> EvalMode {
-        if self.cfg.training_phase1 && self.plan.phase() == Phase::One {
+        if self.cfg.training_phase1 && self.strategy.phase() == Phase::One {
             EvalMode::TrainingFiltered
         } else {
             EvalMode::RealAveraged(self.cfg.real_samples)
@@ -360,13 +462,11 @@ impl AutoTuner {
     /// Drive the tuner to exploration completion regardless of budget —
     /// used by the static-search baseline and by tests. Returns the best
     /// (params, score).
-    pub fn run_exhaustive<B: Backend>(&mut self, backend: &mut B) -> Result<Option<(TuningParams, f64)>> {
-        if self.ref_score.is_none() {
-            let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
-            self.stats.overhead += ev.cost;
-            self.ref_score = Some(ev.score);
-            self.active_score = Some(ev.score);
-        }
+    pub fn run_exhaustive<B: Backend>(
+        &mut self,
+        backend: &mut B,
+    ) -> Result<Option<(TuningParams, f64)>> {
+        self.measure_reference(backend)?;
         while !self.exploration_done() {
             self.explore_next(backend)?;
         }
@@ -588,5 +688,60 @@ mod tests {
         let mut tuner = AutoTuner::new(cfg, 64, None);
         drive(&mut tuner, &mut b, 5_000);
         assert!(tuner.stats.explored_count() <= 1);
+    }
+
+    #[test]
+    fn transfer_prior_reaches_the_best_in_fewer_generates() {
+        // Cold reference run.
+        let mut b = MockBackend::new(64, 30);
+        let mut cold = AutoTuner::new(fast_cfg(), 64, None);
+        drive(&mut cold, &mut b, 60_000);
+        assert!(cold.exploration_done());
+        let (cold_best, _) = cold.best().unwrap();
+        let cold_at = cold.stats.best_at_generate.expect("cold run found a best");
+
+        // "Sibling device": identical landscape, donor = the cold winner.
+        let mut b2 = MockBackend::new(64, 31);
+        let mut seeded = AutoTuner::with_transfer_prior(fast_cfg(), 64, None, cold_best);
+        assert_eq!(seeded.transfer_prior(), Some(cold_best));
+        assert!(!seeded.warm_start_pending(), "a prior is not a warm start");
+        drive(&mut seeded, &mut b2, 60_000);
+        assert!(seeded.exploration_done());
+
+        // Same coverage, same winner — only the order changed.
+        assert_eq!(seeded.stats.explored_count(), cold.stats.explored_count());
+        assert_eq!(seeded.best().unwrap().0.full_id(), cold_best.full_id());
+        let seeded_at = seeded.stats.best_at_generate.unwrap();
+        assert!(
+            seeded_at < cold_at,
+            "prior must reach the best earlier: seeded {seeded_at} vs cold {cold_at}"
+        );
+    }
+
+    #[test]
+    fn transfer_prior_outside_ve_filter_is_ignored() {
+        let simd = TuningParams::phase1_default(crate::tunespace::Structural::new(true, 2, 2, 4));
+        let tuner = AutoTuner::with_transfer_prior(fast_cfg(), 64, Some(false), simd);
+        assert_eq!(tuner.transfer_prior(), None);
+    }
+
+    #[test]
+    fn tune_idle_advances_exploration_without_app_calls() {
+        let mut b = MockBackend::new(64, 32);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        // No app calls at all: the gated path would never wake (budget is
+        // a fraction of app time), but the ungated path explores.
+        let mut steps = 0usize;
+        while !tuner.exploration_done() {
+            tuner.tune_idle(&mut b).unwrap();
+            steps += 1;
+            assert!(steps < 10_000, "tune_idle must terminate");
+        }
+        let (expect, _) = b.best_possible();
+        assert_eq!(tuner.best().unwrap().0.s, expect.s);
+        assert_eq!(tuner.stats.kernel_calls, 0, "no application calls were made");
+        assert!(tuner.stats.overhead > 0.0, "speculation still pays virtual overhead");
+        // Once done, further idle ticks are no-ops.
+        assert_eq!(tuner.tune_idle(&mut b).unwrap(), StepEvent::Idle);
     }
 }

@@ -49,6 +49,12 @@ pub struct TuneStats {
     /// `Backend::generate` invocations this tuner issued — the number the
     /// warm-start path exists to minimise.
     pub generate_calls: u64,
+    /// `generate_calls` count at which the *current* best configuration
+    /// was evaluated — the time-to-best metric the cross-device transfer
+    /// prior exists to minimise. `None` until a first best exists; once
+    /// exploration is done it names the generate call that found the
+    /// winner.
+    pub best_at_generate: Option<u64>,
     /// Warm-start outcome, once known (`None` for cold tuners and before
     /// the warm candidate was validated).
     pub warm_outcome: Option<WarmOutcome>,

@@ -161,7 +161,7 @@ pub fn run_cell(
     let mut tuner = AutoTuner::new(tuner_cfg, length, Some(ve));
     let oat_run = bench.run_app(&mut b, RunMode::Tuned(&mut tuner), quick)?;
     let oat_best = tuner.best().map(|(p, _)| p);
-    let plan_size = crate::tunespace::ExplorationPlan::new(length, Some(ve)).plan_size();
+    let plan_size = crate::tunespace::TwoPhaseGrid::new(length, Some(ve)).plan_size();
     let stats = tuner.stats.clone();
 
     // BS-AT: exhaustive offline search, then a run with the winner.

@@ -27,22 +27,36 @@
 //! layer so regeneration work amortises across *runs* and *kernels*, not
 //! just across calls of one process:
 //!
+//! * [`tunespace::strategy`] — pluggable exploration planning: the
+//!   [`tunespace::SearchStrategy`] trait separates *candidate supply*
+//!   from the tuner's evaluate-and-decide loop. The paper's two-phase
+//!   walk ([`tunespace::TwoPhaseGrid`]) is the default; a cross-device
+//!   transfer prior ([`tunespace::PriorSeeded`]) replays the identical
+//!   candidate set permuted around a sibling device's cached winner; the
+//!   offline baseline enumerates exhaustively
+//!   ([`tunespace::StaticGrid`]). One exploration code path serves the
+//!   online tuner, `run_exhaustive`, and `baselines::static_search`.
 //! * [`cache`] — a persistent, versioned tuning cache. Outcomes are keyed
 //!   by ([`cache::DeviceFingerprint`], [`cache::TuneKey`]) and stored as
 //!   JSON on disk (`results/tunecache.json` by default, `DEGOAL_TUNECACHE`
 //!   override), with LRU-bounded in-memory shards, optional age-based TTL
-//!   eviction, hit/miss/stale counters, and a shape-class fallback lookup
-//!   (an exact-key miss may return a same-no-leftover-class winner tuned
-//!   for a near trip length as a warm-start hint). A cache file can be
-//!   exported and shipped with a deployment to warm-start cold processes
-//!   ("autotune cache with the binary").
+//!   eviction, hit/miss/stale/transfer counters, a shape-class fallback
+//!   lookup (an exact-key miss may return a same-no-leftover-class winner
+//!   tuned for a near trip length as a warm-start hint), and a
+//!   cross-device transfer lookup (a sibling device's entry for the same
+//!   key seeds exploration *order*, never the winner). A cache file can
+//!   be exported and shipped with a deployment to warm-start cold
+//!   processes ("autotune cache with the binary").
 //!   [`cache::SharedTuneCache`] is the concurrent view: lock shards
 //!   hashed by (device, key) behind one `Clone + Send + Sync` handle,
 //!   persistence-compatible with the plain cache.
 //! * [`coordinator::AutoTuner`] warm start — a tuner constructed from a
 //!   cached entry pays one `generate` + one short validation instead of
 //!   the full two-phase exploration; a stale artifact (generate failure)
-//!   falls back to full exploration.
+//!   falls back to full exploration. A *transfer prior*
+//!   ([`coordinator::AutoTuner::with_transfer_prior`]) instead keeps the
+//!   full exploration but reorders it around the donor's winner —
+//!   scores never transfer across device fingerprints.
 //! * [`service`] — a multi-kernel tuning service: N independent tuner
 //!   lanes (one per [`cache::TuneKey`]) over one shared cache, with a
 //!   *global* regeneration budget (the lock-free
@@ -55,14 +69,20 @@
 //!   that leaves per-lane accounting untouched), with **dynamic lane
 //!   registration**: [`service::EngineController`] handles register and
 //!   retire lanes on the running engine from any thread, no drain or
-//!   restart. `degoal-rt service` replays a mixed streamcluster + VIPS
-//!   workload through both and reports cold-vs-warm behaviour; pass
-//!   `--threads N` (N > 1) for the threaded comparison, `--steal` for
-//!   work-stealing placement (with a static-vs-steal comparison and a
-//!   hot-add/retire demo), `--skewed` for the adversarially placed
-//!   8-lane workload, `--cache-ttl SECS` / `--no-near` for cache policy.
-//!   Per-lane overhead accounting is identical in every mode, so the
-//!   paper's envelope numbers stay comparable at any thread count —
+//!   restart — and **idle-time speculation**
+//!   ([`service::EngineOptions::idle_tune`]): a worker whose steal
+//!   attempt misses spends the idle quantum advancing exploration for a
+//!   parked lane whose governor budget allows it. `degoal-rt service`
+//!   replays a mixed streamcluster + VIPS workload through both and
+//!   reports cold-vs-warm behaviour; pass `--threads N` (N > 1) for the
+//!   threaded comparison, `--steal` for work-stealing placement (with a
+//!   static-vs-steal comparison and a hot-add/retire demo), `--skewed`
+//!   for the adversarially placed 8-lane workload, `--cache-ttl SECS` /
+//!   `--no-near` for cache policy, `--idle-tune` for idle-time
+//!   speculation, and `--transfer` for the heterogeneous two-device
+//!   transfer-prior demo (cold-vs-transfer time-to-best). Per-lane
+//!   overhead accounting is identical in every mode, so the paper's
+//!   envelope numbers stay comparable at any thread count —
 //!   `rust/tests/engine_steal.rs` pins this bit-for-bit.
 //!
 //! The host-PJRT execution path (`runtime`, `backend::host`,

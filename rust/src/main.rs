@@ -6,6 +6,7 @@
 //!                                   one online auto-tuning run (simulator)
 //!   service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]
 //!           [--steal] [--skewed] [--cache-ttl SECS] [--no-near]
+//!           [--idle-tune] [--transfer] [--donor-core C]
 //!                                   multi-kernel tuning service: mixed
 //!                                   streamcluster+vips workload (6 lanes;
 //!                                   --skewed: 8 lanes with both heavy
@@ -19,7 +20,14 @@
 //!                                   of dynamic lane registration);
 //!                                   --cache-ttl ages entries out,
 //!                                   --no-near disables near-length
-//!                                   warm-start hints
+//!                                   warm-start hints, --idle-tune lets
+//!                                   idle workers speculatively explore
+//!                                   for parked lanes (budget-gated),
+//!                                   --transfer runs the heterogeneous
+//!                                   two-device demo: cross-device
+//!                                   transfer priors from --donor-core's
+//!                                   cache entries, with a cold-vs-
+//!                                   transfer time-to-best comparison
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
 //!                                   (needs the `pjrt` feature)
 //!   cores                           list simulated core configs
@@ -44,7 +52,9 @@ use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
 use degoal_rt::util::table::{fnum, Table};
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
-use degoal_rt::workloads::{mixed_service_workload, skewed_service_workload};
+use degoal_rt::workloads::{
+    hetero_service_workload, mixed_service_workload, skewed_service_workload,
+};
 
 fn main() {
     degoal_rt::util::logging::init();
@@ -123,6 +133,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let knobs = ServiceKnobs {
                 ttl: args.get_opt_u64("cache-ttl"),
                 near_hints: !args.flag("no-near"),
+                idle_tune: args.flag("idle-tune"),
                 workload: if skewed { skewed_service_workload } else { mixed_service_workload },
             };
 
@@ -200,6 +211,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 }
 
                 run_hot_add_demo(core, calls / 4, seed + 50, threads, steal, &knobs)?;
+            }
+
+            if args.flag("transfer") {
+                let donor_core = core_by_name(args.get_or("donor-core", "DI-I2"))
+                    .ok_or_else(|| anyhow::anyhow!("unknown donor core"))?;
+                run_transfer_demo(donor_core, core, calls, seed + 500, &knobs)?;
             }
 
             // Merge into whatever is already on disk — the demo must not
@@ -338,7 +355,33 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "degoal-rt — online auto-tuning of machine code in short-running kernels\n\
-                 usage: degoal-rt <experiment [id|all] [--quick] | tune | service | host-tune | cores | artifacts-check>\n\
+                 usage: degoal-rt <subcommand> [flags]\n\
+                 \n\
+                 subcommands:\n\
+                 \x20 experiment <id>|all [--quick] [--strict]\n\
+                 \x20     regenerate a paper table/figure\n\
+                 \x20 tune [--input I] [--core C] [--sisd] [--seed S]\n\
+                 \x20     one online auto-tuning run on the simulator\n\
+                 \x20 service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]\n\
+                 \x20         [--steal] [--skewed] [--cache-ttl SECS] [--no-near]\n\
+                 \x20         [--idle-tune] [--transfer] [--donor-core C]\n\
+                 \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
+                 \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
+                 \x20     enables work-stealing placement (static-vs-steal comparison +\n\
+                 \x20     hot-add/retire demo); --skewed uses the 8-lane workload with both\n\
+                 \x20     heavy lanes homed on worker 0; --cache-ttl SECS ages cache entries\n\
+                 \x20     out; --no-near disables near-length warm-start hints; --idle-tune\n\
+                 \x20     lets idle workers speculatively explore for parked lanes (gated on\n\
+                 \x20     the global regeneration budget); --transfer runs the heterogeneous\n\
+                 \x20     two-device demo (donor --donor-core, default DI-I2): cross-device\n\
+                 \x20     transfer priors with a cold-vs-transfer time-to-best comparison\n\
+                 \x20 host-tune [--dim D] [--calls N]\n\
+                 \x20     online auto-tuning on the host PJRT (needs the `pjrt` feature)\n\
+                 \x20 cores\n\
+                 \x20     list simulated core configs\n\
+                 \x20 artifacts-check\n\
+                 \x20     validate artifacts/manifest.json\n\
+                 \n\
                  experiments: {:?}",
                 experiments::ALL
             );
@@ -363,6 +406,9 @@ struct ServiceKnobs {
     /// `--no-near` clears this: answer exact misses with near-length
     /// shape-class warm-start hints.
     near_hints: bool,
+    /// `--idle-tune`: idle engine workers speculatively advance
+    /// exploration for parked lanes (budget-gated).
+    idle_tune: bool,
     /// `--skewed` selects the adversarially placed 8-lane workload.
     workload: WorkloadFn,
 }
@@ -383,10 +429,15 @@ fn lane_lines(reports: &[LaneReport]) -> Vec<String> {
             let warm = match r.warm {
                 Some(CacheHit::Exact) => " warm=exact",
                 Some(CacheHit::Near) => " warm=near",
+                Some(CacheHit::Transfer) => " prior=transfer",
                 None => "",
             };
+            let best_at = r
+                .best_at_generate
+                .map(|g| format!(" best@gen={g}"))
+                .unwrap_or_default();
             format!(
-                "    {}: best={best} speedup={:.2}x explored={} gen={} done={}{warm}",
+                "    {}: best={best} speedup={:.2}x explored={} gen={} done={}{warm}{best_at}",
                 r.key,
                 r.speedup(),
                 r.explored,
@@ -452,7 +503,7 @@ fn run_engine_phase(
     let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
         service_cfg(knobs),
         shared,
-        EngineOptions { threads, steal, ..Default::default() },
+        EngineOptions { threads, steal, idle_tune: knobs.idle_tune, ..Default::default() },
     );
     let mut lanes: Vec<LaneId> = Vec::new();
     for (key, b) in (knobs.workload)(core, seed) {
@@ -491,7 +542,7 @@ fn run_hot_add_demo(
     let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
         service_cfg(knobs),
         SharedTuneCache::new(),
-        EngineOptions { threads, steal, ..Default::default() },
+        EngineOptions { threads, steal, idle_tune: knobs.idle_tune, ..Default::default() },
     );
     let mut lanes: Vec<LaneId> = Vec::new();
     for (key, b) in (knobs.workload)(core, seed) {
@@ -537,6 +588,136 @@ fn run_hot_add_demo(
     Ok(())
 }
 
+/// One pass of a fixed lane list through the *sequential* service mode
+/// (the transfer demo's building block: unlike `run_service_phase`, the
+/// caller controls the lanes and the config). Returns stats, per-lane
+/// reports, and the checkpointed cache.
+fn drive_lanes(
+    cfg: ServiceConfig,
+    cache: TuneCache,
+    ttl: Option<u64>,
+    lanes_in: Vec<(TuneKey, SimBackend)>,
+    calls_per_lane: usize,
+) -> Result<(degoal_rt::service::ServiceStats, Vec<LaneReport>, TuneCache, f64)> {
+    let mut svc: TuningService<SimBackend> = TuningService::with_cache(cfg, cache);
+    svc.cache().set_ttl(ttl);
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in lanes_in {
+        lanes.push(svc.register(key, Some(true), b));
+    }
+    let started = std::time::Instant::now();
+    let mut remaining: Vec<usize> = vec![calls_per_lane; lanes.len()];
+    let mut left = calls_per_lane * lanes.len();
+    while left > 0 {
+        for (i, &l) in lanes.iter().enumerate() {
+            let n = SERVICE_CHUNK.min(remaining[i]);
+            for _ in 0..n {
+                svc.app_call(l)?;
+            }
+            remaining[i] -= n;
+            left -= n;
+        }
+    }
+    let secs = started.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    let reports: Vec<LaneReport> = lanes.iter().filter_map(|&l| svc.lane_report(l)).collect();
+    Ok((stats, reports, svc.into_cache(), secs))
+}
+
+/// Mean generate calls needed to find the lanes' eventual best versions
+/// — the time-to-best metric the transfer prior improves.
+fn mean_best_at_generate(reports: &[LaneReport]) -> f64 {
+    let found: Vec<u64> = reports.iter().filter_map(|r| r.best_at_generate).collect();
+    if found.is_empty() {
+        return 0.0;
+    }
+    found.iter().sum::<u64>() as f64 / found.len() as f64
+}
+
+/// The `--transfer` demo: the heterogeneous two-device workload. The
+/// donor device tunes cold and writes its winners back; the target
+/// device — same kernel streams, different fingerprint — then explores
+/// cold vs. transfer-seeded over the donor's cache. Both target runs
+/// explore the identical candidate set; only the order differs, so the
+/// comparison isolates time-to-best.
+fn run_transfer_demo(
+    donor_core: &'static CoreConfig,
+    target_core: &'static CoreConfig,
+    calls: usize,
+    seed: u64,
+    knobs: &ServiceKnobs,
+) -> Result<()> {
+    let donor_core = if donor_core.name == target_core.name {
+        // Identical cores share a fingerprint — that would be a warm
+        // start, not a transfer. Fall back to a sibling.
+        core_by_name(if target_core.name == "DI-I1" { "DI-I2" } else { "DI-I1" }).unwrap()
+    } else {
+        donor_core
+    };
+    let (donor_lanes, target_lanes) = hetero_service_workload(donor_core, target_core, seed);
+    let n_lanes = donor_lanes.len();
+    let per_lane = (calls / n_lanes.max(1)).max(1);
+    println!(
+        "\n== cross-device transfer priors: donor {} -> target {} ({} kernel streams) ==",
+        donor_core.name, target_core.name, n_lanes,
+    );
+
+    // Phase T1: tune the donor device cold; its write-backs become the
+    // sibling-device donor entries.
+    let cfg = service_cfg(knobs);
+    let (dstats, _, donor_cache, _) =
+        drive_lanes(cfg, TuneCache::new(), knobs.ttl, donor_lanes, per_lane)?;
+    println!(
+        "  donor cold: {} lanes done={} generate={} {}",
+        dstats.lanes,
+        dstats.done_lanes,
+        dstats.generate_calls,
+        dstats.cache.stats(),
+    );
+
+    // Phase T2: target device cold (no donors) — the baseline order.
+    let (cold, cold_reports, _, cold_secs) = drive_lanes(
+        cfg,
+        TuneCache::new(),
+        knobs.ttl,
+        hetero_service_workload(donor_core, target_core, seed).1,
+        per_lane,
+    )?;
+    print_service_phase(
+        "target cold (paper exploration order)",
+        &cold,
+        &lane_lines(&cold_reports),
+        cold_secs,
+    );
+
+    // Phase T3: target device with transfer priors over the donor cache.
+    let mut transfer_cfg = cfg;
+    transfer_cfg.transfer_priors = true;
+    let (seeded, seeded_reports, _, seeded_secs) =
+        drive_lanes(transfer_cfg, donor_cache, knobs.ttl, target_lanes, per_lane)?;
+    print_service_phase(
+        "target --transfer (donor-seeded exploration order)",
+        &seeded,
+        &lane_lines(&seeded_reports),
+        seeded_secs,
+    );
+
+    let cold_at = mean_best_at_generate(&cold_reports);
+    let seeded_at = mean_best_at_generate(&seeded_reports);
+    println!(
+        "\n  time-to-best: cold {:.1} generate calls vs transfer {:.1} ({:.1}x earlier); \
+         transfer_hits={} transfer_lanes={} (same explored set: {} vs {})",
+        cold_at,
+        seeded_at,
+        cold_at / seeded_at.max(1e-9),
+        seeded.cache.transfer_hits,
+        seeded.transfer_lanes,
+        cold.explored,
+        seeded.explored,
+    );
+    Ok(())
+}
+
 fn print_service_phase(
     label: &str,
     st: &degoal_rt::service::ServiceStats,
@@ -544,12 +725,13 @@ fn print_service_phase(
     secs: f64,
 ) {
     println!(
-        "  {label}: lanes={} (warm {}, near {}) calls={} in {:.2}s wall ({:.0} calls/s) \
-         app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} swaps={} steals={} \
-         cache[h/n/m/s]={}/{}/{}/{}",
+        "  {label}: lanes={} (warm {}, near {}, transfer {}) calls={} in {:.2}s wall \
+         ({:.0} calls/s) app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} \
+         swaps={} steals={} idle_steps={} {}",
         st.lanes,
         st.warm_lanes,
         st.near_lanes,
+        st.transfer_lanes,
         st.kernel_calls,
         secs,
         st.kernel_calls as f64 / secs.max(1e-9),
@@ -560,10 +742,8 @@ fn print_service_phase(
         st.generate_calls,
         st.swaps,
         st.steals,
-        st.cache.hits,
-        st.cache.near_hits,
-        st.cache.misses,
-        st.cache.stale,
+        st.idle_steps,
+        st.cache.stats(),
     );
     for l in lines {
         println!("{l}");

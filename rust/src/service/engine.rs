@@ -20,6 +20,16 @@
 //!   `overhead_frac` means the same thing wherever the lane runs.
 //!   With stealing off the engine reproduces PR 2's static placement
 //!   (`id % threads` homes, no migration).
+//! * **Idle-time speculation** ([`EngineOptions::idle_tune`]): a worker
+//!   whose steal attempt misses — no runnable lane anywhere — spends the
+//!   idle quantum *speculatively advancing exploration* for a parked
+//!   lane whose [`RegenGovernor`] budget allows it, instead of sleeping.
+//!   The tool time is charged to the tuned lane's own virtual clock
+//!   exactly as app-call-driven tuning charges it (the accounting is
+//!   migration- and speculation-invariant); targets rotate round-robin
+//!   so every unfinished lane gets idle cycles; barrier waiters suspend
+//!   new bursts so `drain` cannot starve. Off (the default) the engine
+//!   is byte-identical to PR 3.
 //! * **Dynamic lanes**: registration and retirement go through the
 //!   shared scheduler directly — a control path beside the call path —
 //!   so [`EngineController::register_lane`] / [`retire_lane`] work on a
@@ -70,11 +80,20 @@ pub struct EngineOptions {
     /// (min 1). Smaller quanta interleave lanes more finely and create
     /// more steal opportunities; larger quanta amortise scheduler locking.
     pub quantum: u32,
+    /// Let a worker whose steal attempt missed (no runnable lane
+    /// anywhere) spend the idle quantum *speculatively advancing
+    /// exploration* for a parked lane whose [`RegenGovernor`] budget
+    /// allows it ([`super::LaneReport::idle_steps`]). Off (the default)
+    /// the engine's behaviour is byte-identical to PR 3: idle workers
+    /// sleep. Tool time spent speculating is charged to the tuned lane's
+    /// own virtual clock exactly as app-call-driven tuning is, so the
+    /// per-lane accounting invariant survives.
+    pub idle_tune: bool,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { threads: 1, steal: false, quantum: 256 }
+        EngineOptions { threads: 1, steal: false, quantum: 256, idle_tune: false }
     }
 }
 
@@ -99,6 +118,9 @@ struct Slot<B: Backend> {
     retired: Option<LaneReport>,
     /// Ownership transfers so far (mirrors into [`LaneReport::steals`]).
     steals: u32,
+    /// Speculative exploration advances idle workers performed for this
+    /// lane (mirrors into [`LaneReport::idle_steps`]).
+    idle_steps: u64,
 }
 
 struct Sched<B: Backend> {
@@ -114,6 +136,16 @@ struct Sched<B: Backend> {
     active: usize,
     /// Total lane migrations.
     steals: u64,
+    /// Total speculative exploration advances across all lanes.
+    idle_steps: u64,
+    /// Round-robin cursor over slots for picking the next speculation
+    /// target — deterministic and fair across lanes.
+    idle_rr: usize,
+    /// Threads blocked in [`Shared::wait_idle`]. While any barrier waiter
+    /// is present, workers do not *start* new speculation bursts — a
+    /// drain must win against an engine that would otherwise always have
+    /// one lane mid-speculation.
+    drain_waiters: usize,
     shutdown: bool,
     /// Abandoned (dropped without `finish`): workers claim and discard
     /// remaining quanta instead of executing them, so dropping an engine
@@ -161,6 +193,25 @@ fn next_lane<B: Backend>(sched: &mut Sched<B>, w: usize, steal: bool) -> Option<
     Some(id)
 }
 
+/// Pick the next speculation target for an idle worker: round-robin over
+/// parked, live, backlog-free lanes whose exploration is unfinished. The
+/// cursor makes the choice deterministic and fair — every explorable lane
+/// gets idle time, not just the lowest id.
+fn next_idle_lane<B: Backend>(sched: &mut Sched<B>) -> Option<usize> {
+    let n = sched.slots.len();
+    for off in 0..n {
+        let id = (sched.idle_rr + off) % n;
+        let slot = &sched.slots[id];
+        let explorable =
+            slot.lane.as_ref().map(|l| !l.tuner.exploration_done()).unwrap_or(false);
+        if explorable && !slot.queued && slot.pending == 0 && !slot.retiring {
+            sched.idle_rr = (id + 1) % n;
+            return Some(id);
+        }
+    }
+    None
+}
+
 /// Retirement endpoint (caller holds the scheduler lock, lane parked
 /// with an empty backlog): checkpoint best-so-far into the cache, record
 /// the final report, free the backend, release the key.
@@ -171,6 +222,7 @@ fn finalize_retire<B: Backend>(sched: &mut Sched<B>, id: usize, cache: &SharedTu
     lane.checkpoint_into(cache);
     let mut report = lane.report();
     report.steals = sched.slots[id].steals;
+    report.idle_steps = sched.slots[id].idle_steps;
     drop(lane); // the backend is freed here — retirement releases its resources
     let map_key = (sched.slots[id].fp.clone(), sched.slots[id].key.clone());
     // A replacement lane may have re-registered this key while the
@@ -216,12 +268,99 @@ impl<B: Backend> Drop for RunGuard<'_, B> {
     }
 }
 
+/// One speculation burst: take the parked lane out, run up to a quantum
+/// of governor-gated [`Lane::idle_step`]s off-lock, park it back, and
+/// re-run the standard parking epilogue (requeue backlog that arrived
+/// meanwhile, finalise a retirement requested meanwhile, wake barrier
+/// waiters). Returns the re-acquired lock, how many steps advanced, and
+/// whether the lane was requeued with fresh backlog — the caller must
+/// re-check the deques in that case instead of sleeping (with one
+/// worker, the requeue's notify finds no sleeper and would be lost).
+fn idle_burst<'a, B: Backend>(
+    shared: &'a Shared<B>,
+    mut sched: MutexGuard<'a, Sched<B>>,
+    id: usize,
+) -> (MutexGuard<'a, Sched<B>>, u64, bool) {
+    let mut lane = sched.slots[id].lane.take().expect("idle lane must be parked");
+    sched.active += 1;
+    drop(sched);
+
+    let mut guard = RunGuard { shared, id, armed: true };
+    let mut advanced = 0u64;
+    let mut failed: Option<String> = None;
+    for _ in 0..shared.opts.quantum {
+        match lane.idle_step(&shared.cache, &shared.governor) {
+            Ok(true) => advanced += 1,
+            Ok(false) => break,
+            Err(e) => {
+                failed = Some(format!("lane {}: {e:#}", lane.key));
+                break;
+            }
+        }
+    }
+    guard.armed = false;
+
+    let mut sched = shared.sched.lock().expect("engine scheduler lock");
+    sched.active -= 1;
+    sched.slots[id].lane = Some(lane);
+    sched.slots[id].idle_steps += advanced;
+    sched.idle_steps += advanced;
+    if failed.is_some() && sched.error.is_none() {
+        sched.error = failed;
+        shared.idle.notify_all();
+    }
+    // Calls may have been submitted while the lane was out (it was
+    // invisible to `submit`'s enqueue check): requeue exactly as the
+    // request path does; a retirement requested meanwhile finalises here.
+    let (requeue, retire) = {
+        let slot = &sched.slots[id];
+        (slot.pending > 0, slot.retiring && slot.pending == 0)
+    };
+    if requeue {
+        let home = sched.slots[id].home;
+        sched.slots[id].queued = true;
+        sched.deques[home].push_back(id);
+        shared.work.notify_all();
+    } else if retire {
+        finalize_retire(&mut sched, id, &shared.cache);
+    }
+    if sched.backlog == 0 && sched.active == 0 {
+        shared.idle.notify_all();
+    }
+    (sched, advanced, requeue)
+}
+
 fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
     let mut sched = shared.sched.lock().expect("engine scheduler lock");
     loop {
         let Some(id) = next_lane(&mut sched, w, shared.opts.steal) else {
             if sched.shutdown {
                 return;
+            }
+            // Steal miss: with `idle_tune`, spend the idle quantum
+            // speculatively exploring for a parked lane — unless a
+            // barrier waiter needs the engine to quiesce, a failure
+            // poisoned the run, or the global budget is spent.
+            if shared.opts.idle_tune
+                && sched.drain_waiters == 0
+                && !sched.discard
+                && sched.error.is_none()
+                && shared.governor.allow()
+            {
+                if let Some(id) = next_idle_lane(&mut sched) {
+                    let (s, advanced, requeued) = idle_burst(shared, sched, id);
+                    sched = s;
+                    if advanced > 0 || requeued {
+                        // Progress was made, or backlog arrived for the
+                        // lane while it was out — re-check the deques
+                        // (the requeue's notify may have found no
+                        // sleeper to wake).
+                        continue;
+                    }
+                    // Nothing advanced (budget raced to empty, or the
+                    // lane finished): fall through to the condvar so the
+                    // worker does not spin.
+                }
             }
             sched = shared.work.wait(sched).expect("engine scheduler lock");
             continue;
@@ -315,8 +454,15 @@ impl<B: Backend + 'static> Shared<B> {
             retiring: false,
             retired: None,
             steals: 0,
+            idle_steps: 0,
         });
         sched.by_key.insert(map_key, id);
+        if self.opts.idle_tune {
+            // Idle workers may be asleep with nothing to do: wake them so
+            // the fresh lane gets speculative exploration before (or
+            // without) any traffic.
+            self.work.notify_all();
+        }
         Ok(LaneId(id))
     }
 
@@ -378,10 +524,22 @@ impl<B: Backend + 'static> Shared<B> {
     }
 
     /// Block until the barrier condition holds (or a worker failed).
+    /// While any barrier waiter is registered, workers start no new
+    /// speculation bursts ([`EngineOptions::idle_tune`]) — otherwise an
+    /// idle-tuning engine could always have one lane mid-burst and the
+    /// barrier would starve. Bursts already in flight are bounded by one
+    /// quantum and are waited out like any mid-quantum lane.
     fn wait_idle(&self) -> Result<MutexGuard<'_, Sched<B>>> {
         let mut sched = self.lock();
+        sched.drain_waiters += 1;
         while sched.error.is_none() && (sched.backlog > 0 || sched.active > 0) {
             sched = self.idle.wait(sched).expect("engine scheduler lock");
+        }
+        sched.drain_waiters -= 1;
+        if self.opts.idle_tune && sched.drain_waiters == 0 {
+            // Barrier satisfied: let idle workers resume speculation
+            // (they sleep on `work`, and nothing else would wake them).
+            self.work.notify_all();
         }
         if let Some(e) = &sched.error {
             bail!("tuning engine worker failed: {e}");
@@ -400,6 +558,7 @@ impl<B: Backend + 'static> Shared<B> {
             } else if let Some(lane) = &slot.lane {
                 let mut r = lane.report();
                 r.steals = slot.steals;
+                r.idle_steps = slot.idle_steps;
                 out.push(r);
             }
         }
@@ -516,6 +675,7 @@ impl<B: Backend + 'static> TuningEngine<B> {
             threads: opts.threads.max(1),
             steal: opts.steal,
             quantum: opts.quantum.max(1),
+            idle_tune: opts.idle_tune,
         };
         let shared = Arc::new(Shared {
             sched: Mutex::new(Sched {
@@ -525,6 +685,9 @@ impl<B: Backend + 'static> TuningEngine<B> {
                 backlog: 0,
                 active: 0,
                 steals: 0,
+                idle_steps: 0,
+                idle_rr: 0,
+                drain_waiters: 0,
                 shutdown: false,
                 discard: false,
                 error: None,
@@ -559,9 +722,19 @@ impl<B: Backend + 'static> TuningEngine<B> {
         self.shared.opts.steal
     }
 
+    pub fn idle_tune_enabled(&self) -> bool {
+        self.shared.opts.idle_tune
+    }
+
     /// Total lane migrations so far (0 under static placement).
     pub fn steals(&self) -> u64 {
         self.shared.lock().steals
+    }
+
+    /// Total speculative exploration advances idle workers have performed
+    /// so far (0 with [`EngineOptions::idle_tune`] off).
+    pub fn idle_steps(&self) -> u64 {
+        self.shared.lock().idle_steps
     }
 
     /// Lanes ever registered (lane ids are never reused; retired lanes

@@ -8,7 +8,10 @@
 //! [`TuningService`](super::TuningService) calls it from one thread; the
 //! threaded [`TuningEngine`](super::TuningEngine) moves whole lanes onto
 //! worker threads and calls the *same* function — the two modes cannot
-//! drift apart behaviourally.
+//! drift apart behaviourally. [`Lane::idle_step`] is the speculative
+//! sibling: one governor-gated exploration advance with no application
+//! call, for workers whose steal attempt missed
+//! ([`EngineOptions::idle_tune`](super::EngineOptions)).
 
 use anyhow::Result;
 
@@ -36,7 +39,12 @@ impl<B: Backend> Lane<B> {
     /// Open a lane: consult the shared cache under the backend's device
     /// fingerprint and warm-start the tuner from an exact hit — or, when
     /// `cfg.near_hints` allows, from a same-no-leftover-class entry for a
-    /// near trip length ([`CacheHit::Near`]).
+    /// near trip length ([`CacheHit::Near`]). When both miss and
+    /// `cfg.transfer_priors` is on, a *sibling device's* entry for the
+    /// same key ([`CacheHit::Transfer`]) seeds the exploration order
+    /// instead: nothing is adopted or skipped — scores do not transfer
+    /// across devices — but candidates near the donor's winner are tried
+    /// first, so time-to-best collapses when the devices agree.
     pub(crate) fn open(
         cfg: &ServiceConfig,
         id: usize,
@@ -52,7 +60,7 @@ impl<B: Backend> Lane<B> {
         } else {
             cache.lookup_filtered(&fp, &key, usable).map(|e| (e, CacheHit::Exact))
         };
-        let warm = found.as_ref().map(|(_, hit)| *hit);
+        let mut warm = found.as_ref().map(|(_, hit)| *hit);
         let tuner = match found {
             Some((entry, hit)) => {
                 log::info!(
@@ -60,13 +68,30 @@ impl<B: Backend> Lane<B> {
                     match hit {
                         CacheHit::Exact => "exact",
                         CacheHit::Near => "near-length hint",
+                        CacheHit::Transfer => unreachable!("lookups never return Transfer"),
                     },
                     entry.params,
                     entry.speedup()
                 );
                 AutoTuner::with_warm_start(cfg.tuner, key.length, ve_filter, entry.params)
             }
-            None => AutoTuner::new(cfg.tuner, key.length, ve_filter),
+            None => match cfg
+                .transfer_priors
+                .then(|| cache.lookup_transfer(&fp, &key, usable))
+                .flatten()
+            {
+                Some((donor_fp, entry)) => {
+                    log::info!(
+                        "lane {key}: transfer prior from sibling device {donor_fp} \
+                         ({} @ {:.3}x) — seeding exploration order",
+                        entry.params,
+                        entry.speedup()
+                    );
+                    warm = Some(CacheHit::Transfer);
+                    AutoTuner::with_transfer_prior(cfg.tuner, key.length, ve_filter, entry.params)
+                }
+                None => AutoTuner::new(cfg.tuner, key.length, ve_filter),
+            },
         };
         Lane { id, key, fp, backend, tuner, warm, warm_reported: false, committed: false }
     }
@@ -93,11 +118,47 @@ impl<B: Backend> Lane<B> {
             let s = &self.tuner.stats;
             governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
         }
+        self.propagate_outcomes(cache);
+        Ok(dt)
+    }
 
-        // Warm-start outcome → cache counters (once per lane). A stale
-        // *exact* entry is invalidated so the re-explored winner replaces
-        // it; a stale near-length hint leaves its donor alone — the donor
-        // may still be perfectly valid for its own trip length.
+    /// One *speculative* exploration advance — no application call, no
+    /// wake period: an idle worker donates its wall-clock to this lane's
+    /// tuning. Gated on the global [`RegenGovernor`] budget only (idle
+    /// wall-clock is free, but the tool time is still charged to the
+    /// lane's own virtual clock, so `overhead_frac` keeps meaning what
+    /// the paper's accounting means). Returns `true` when exploration
+    /// actually advanced, `false` when there was nothing to do (budget
+    /// exhausted or exploration finished) — the caller stops its idle
+    /// burst on `false`.
+    pub(crate) fn idle_step(
+        &mut self,
+        cache: &SharedTuneCache,
+        governor: &RegenGovernor,
+    ) -> Result<bool> {
+        if self.tuner.exploration_done() || !governor.allow() {
+            return Ok(false);
+        }
+        let before = {
+            let s = &self.tuner.stats;
+            (s.overhead, s.app_time, s.gained)
+        };
+        let event = self.tuner.tune_idle(&mut self.backend)?;
+        {
+            let s = &self.tuner.stats;
+            governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
+        }
+        self.propagate_outcomes(cache);
+        Ok(event != crate::coordinator::StepEvent::Idle)
+    }
+
+    /// Post-advance bookkeeping shared by the request and speculative
+    /// paths: propagate the warm-start outcome to the cache counters
+    /// (once per lane; a stale *exact* entry is invalidated so the
+    /// re-explored winner replaces it — a stale near-length hint leaves
+    /// its donor alone), and write the winner back when exploration
+    /// completes.
+    fn propagate_outcomes(&mut self, cache: &SharedTuneCache) {
         if !self.warm_reported {
             if let Some(outcome) = self.tuner.stats.warm_outcome {
                 self.warm_reported = true;
@@ -116,7 +177,6 @@ impl<B: Backend> Lane<B> {
             self.committed = true;
             self.write_back(cache);
         }
-        Ok(dt)
     }
 
     fn write_back(&self, cache: &SharedTuneCache) -> bool {
@@ -160,8 +220,10 @@ impl<B: Backend> Lane<B> {
             gained: s.gained,
             explored: s.explored_count(),
             generate_calls: s.generate_calls,
+            best_at_generate: s.best_at_generate,
             swaps: s.swaps,
             steals: 0,
+            idle_steps: 0,
         }
     }
 }
@@ -183,6 +245,9 @@ pub struct LaneReport {
     pub gained: f64,
     pub explored: usize,
     pub generate_calls: u64,
+    /// `generate_calls` count at which the lane's current best was found
+    /// — the time-to-best metric the cross-device transfer prior improves.
+    pub best_at_generate: Option<u64>,
     pub swaps: u32,
     /// Times the lane's ownership was transferred to an idle worker by
     /// the work-stealing engine (0 in sequential mode and under static
@@ -190,6 +255,11 @@ pub struct LaneReport {
     /// itself never observes its own migrations, which is the point of
     /// the virtual-time accounting invariant.
     pub steals: u32,
+    /// Speculative exploration advances idle workers performed for this
+    /// lane ([`EngineOptions::idle_tune`](super::EngineOptions)); 0 in
+    /// sequential mode and with idle tuning off. Scheduler-level, like
+    /// `steals`.
+    pub idle_steps: u64,
 }
 
 impl LaneReport {

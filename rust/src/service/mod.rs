@@ -27,7 +27,10 @@
 //! * the sharded, `Clone + Send + Sync`
 //!   [`SharedTuneCache`](crate::cache::SharedTuneCache) — lanes
 //!   warm-start from it on registration (exact hit, or a near-trip-length
-//!   shape-class hint) and write winners back when exploration finishes
+//!   shape-class hint; with [`ServiceConfig::transfer_priors`], a
+//!   remaining miss may still seed the lane's exploration *order* from a
+//!   sibling device's winner — a cross-device transfer prior) and write
+//!   winners back when exploration finishes
 //!   ([`TuningService::checkpoint`] also flushes unfinished lanes' best
 //!   so short-lived processes still seed the next run);
 //! * the lock-free [`RegenGovernor`](crate::coordinator::RegenGovernor):
@@ -77,6 +80,12 @@ pub struct ServiceConfig {
     /// near trip length as a warm-start hint (default on; counted as
     /// `near_hits`, never as exact hits).
     pub near_hints: bool,
+    /// Answer remaining misses with a *sibling device's* entry for the
+    /// same key as a cross-device transfer prior (default off; counted
+    /// as `transfer_hits`): the donor's winner seeds the lane's
+    /// exploration *order* — nothing is adopted or skipped, because
+    /// scores do not transfer across device fingerprints.
+    pub transfer_priors: bool,
 }
 
 impl Default for ServiceConfig {
@@ -85,6 +94,7 @@ impl Default for ServiceConfig {
             tuner: TunerConfig::default(),
             global: RegenDecision::default(),
             near_hints: true,
+            transfer_priors: false,
         }
     }
 }
@@ -104,6 +114,10 @@ pub struct ServiceStats {
     /// The subset of `warm_lanes` that warm-started from a near-length
     /// shape-class hint rather than an exact entry.
     pub near_lanes: usize,
+    /// Lanes whose exploration order was seeded with a sibling device's
+    /// winner (cross-device transfer prior). NOT counted in `warm_lanes`:
+    /// a transfer-seeded lane still runs its full exploration.
+    pub transfer_lanes: usize,
     /// Lanes whose exploration has finished.
     pub done_lanes: usize,
     pub kernel_calls: u64,
@@ -116,6 +130,10 @@ pub struct ServiceStats {
     /// Total lane migrations by the work-stealing engine (0 in
     /// sequential mode and under static placement).
     pub steals: u64,
+    /// Total speculative exploration advances performed by idle workers
+    /// ([`EngineOptions::idle_tune`]; 0 in sequential mode and with idle
+    /// tuning off).
+    pub idle_steps: u64,
     pub cache: CacheCounters,
 }
 
@@ -135,8 +153,12 @@ impl ServiceStats {
     pub(crate) fn aggregate(reports: &[LaneReport], cache: CacheCounters) -> ServiceStats {
         let mut st = ServiceStats { lanes: reports.len(), cache, ..Default::default() };
         for r in reports {
-            st.warm_lanes += r.warm.is_some() as usize;
+            // A transfer prior is not a warm start: the lane explores in
+            // full, merely in a donor-seeded order.
+            st.warm_lanes +=
+                matches!(r.warm, Some(CacheHit::Exact) | Some(CacheHit::Near)) as usize;
             st.near_lanes += (r.warm == Some(CacheHit::Near)) as usize;
+            st.transfer_lanes += (r.warm == Some(CacheHit::Transfer)) as usize;
             st.done_lanes += r.done as usize;
             st.kernel_calls += r.kernel_calls;
             st.app_time += r.app_time;
@@ -146,6 +168,7 @@ impl ServiceStats {
             st.generate_calls += r.generate_calls;
             st.swaps += r.swaps;
             st.steals += r.steals as u64;
+            st.idle_steps += r.idle_steps;
         }
         st
     }
@@ -379,6 +402,43 @@ mod tests {
         let st2 = svc2.stats();
         assert_eq!(st2.warm_lanes, 0);
         assert_eq!(st2.cache.misses, 1);
+    }
+
+    #[test]
+    fn transfer_prior_seeds_a_sibling_device_lane() {
+        use crate::cache::{CacheEntry, CacheHit, DeviceFingerprint};
+        use crate::tunespace::{Structural, TuningParams};
+        let donor_winner = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+        let donor_fp = DeviceFingerprint::new("mock", "sibling");
+        let key = TuneKey::new("mock/len64", 64);
+
+        let mut cfg = fast_cfg();
+        cfg.transfer_priors = true;
+        let mut svc = TuningService::new(cfg);
+        svc.cache().insert(&donor_fp, &key, CacheEntry::new(donor_winner, 9e-5, 1.8e-4, 60));
+        // MockBackend's own fingerprint is ("mock", "mock0") — a sibling
+        // of the donor, not the donor itself.
+        let lane = svc.register(key, None, MockBackend::new(64, 40));
+        let st = svc.stats();
+        assert_eq!(st.warm_lanes, 0, "a transfer prior is not a warm start");
+        assert_eq!(st.transfer_lanes, 1);
+        assert_eq!(st.cache.transfer_hits, 1);
+        assert_eq!(st.cache.misses, 1, "the exact lookup still counted its miss");
+        let t = svc.tuner(lane).unwrap();
+        assert!(!t.warm_start_pending());
+        assert_eq!(t.transfer_prior(), Some(donor_winner));
+        assert_eq!(svc.lane_report(lane).unwrap().warm, Some(CacheHit::Transfer));
+
+        // With the knob off (the default), the same situation is a plain
+        // cold start.
+        let mut svc2 = TuningService::new(fast_cfg());
+        let key2 = TuneKey::new("mock/len64", 64);
+        svc2.cache().insert(&donor_fp, &key2, CacheEntry::new(donor_winner, 9e-5, 1.8e-4, 60));
+        let lane2 = svc2.register(key2, None, MockBackend::new(64, 41));
+        let st2 = svc2.stats();
+        assert_eq!(st2.transfer_lanes, 0);
+        assert_eq!(st2.cache.transfer_hits, 0);
+        assert_eq!(svc2.tuner(lane2).unwrap().transfer_prior(), None);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The tuning space of paper §3.2: seven auto-tuned parameters, their
-//! ranges, validity holes, and the two-phase exploration ordering.
+//! ranges, validity holes, and the exploration strategies over them.
 //!
 //! The *structural* sub-space (VE, vectLen, hotUF, coldUF) changes the
 //! generated machine code and therefore maps 1:1 to HLO artifacts (see
@@ -7,11 +7,19 @@
 //! shared across the language boundary and checked by integration tests).
 //! The phase-2 parameters (pldStride, IS, SM) are code-generation options
 //! that do not change the HLO structure.
+//!
+//! Exploration planning is pluggable ([`strategy::SearchStrategy`]): the
+//! paper's two-phase walk ([`TwoPhaseGrid`]) is the default, a
+//! cross-device transfer prior permutes it around a sibling device's
+//! winner ([`PriorSeeded`]), and the offline baseline enumerates
+//! exhaustively ([`StaticGrid`]).
 
 pub mod params;
 pub mod phases;
 pub mod space;
+pub mod strategy;
 
 pub use params::{Structural, TuningParams};
-pub use phases::{ExplorationPlan, Phase};
+pub use phases::{Phase, TwoPhaseGrid};
 pub use space::Space;
+pub use strategy::{PriorSeeded, SearchStrategy, StaticGrid};

@@ -1,0 +1,250 @@
+//! Pluggable search strategies — the exploration-planning seam.
+//!
+//! PRs 0–3 hard-wired the paper's two-phase grid walk (§3.3) into the
+//! auto-tuner, so every serving improvement that wanted to *influence
+//! exploration order* (cross-device transfer priors, idle-time
+//! regeneration) had to route around the tuner. Dynamic autotuners treat
+//! the search strategy as a swappable component (Kernel Tuning Toolkit,
+//! arXiv:1910.08498), and the choice and seeding of that strategy is
+//! itself the dominant lever on time-to-good-version (arXiv:2509.26300)
+//! — exactly what matters in the hundreds-of-milliseconds regime.
+//!
+//! [`SearchStrategy`] is that seam: a candidate *supplier* with feedback.
+//! The [`AutoTuner`](crate::coordinator::AutoTuner) owns the other half —
+//! generate, evaluate, decide — and drives any strategy through the same
+//! code path:
+//!
+//! * [`TwoPhaseGrid`] — the paper-faithful default (§3.3).
+//! * [`PriorSeeded`] — the same candidate *set*, stably permuted around a
+//!   sibling device's cached winner (cross-device transfer prior): the
+//!   donor's structure is tried first in phase 1 and its code-generation
+//!   combination first in phase 2, so time-to-best collapses when the
+//!   devices agree. Priors only permute — they never add or drop a
+//!   candidate, so exploration coverage is provably unchanged.
+//! * [`StaticGrid`] — the exhaustive offline enumeration behind
+//!   [`baselines::static_search`](crate::baselines::static_search) and
+//!   Figure 1, on the same trait so there is exactly one exploration
+//!   code path in the repo.
+
+use super::params::{Structural, TuningParams};
+use super::phases::{Phase, TwoPhaseGrid};
+use super::space::Space;
+
+/// A source of exploration candidates with best-so-far feedback.
+///
+/// `Send` is a supertrait: strategies live inside tuner lanes, and lanes
+/// move whole onto worker threads (and between them, under stealing).
+pub trait SearchStrategy: Send {
+    /// The next candidate to generate and evaluate, or `None` when the
+    /// strategy is exhausted. `best` is the best-performing configuration
+    /// found so far — feedback strategies (the two-phase grid builds
+    /// phase 2 from the phase-1 winner) need it; enumerations ignore it.
+    fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams>;
+
+    /// Which exploration phase the strategy is in — drives the §3.4
+    /// evaluation-mode switch (training data in phase 1, real data in
+    /// phase 2).
+    fn phase(&self) -> Phase;
+
+    /// Candidates still to come (upper bound).
+    fn remaining(&self) -> usize;
+}
+
+impl SearchStrategy for TwoPhaseGrid {
+    fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        TwoPhaseGrid::next(self, best)
+    }
+
+    fn phase(&self) -> Phase {
+        TwoPhaseGrid::phase(self)
+    }
+
+    fn remaining(&self) -> usize {
+        TwoPhaseGrid::remaining(self)
+    }
+}
+
+/// The two-phase grid permuted around a donor device's winner — the
+/// cross-device transfer prior. Candidates near the donor's winning
+/// configuration are explored first; the emitted *set* is exactly the
+/// unseeded [`TwoPhaseGrid`]'s (priors may only permute, never add or
+/// drop), so coverage and the final winner are unchanged — only
+/// time-to-best improves when the sibling device agrees.
+#[derive(Debug, Clone)]
+pub struct PriorSeeded {
+    inner: TwoPhaseGrid,
+    prior: TuningParams,
+}
+
+impl PriorSeeded {
+    /// A seeded plan over the same space [`TwoPhaseGrid::new`] covers.
+    /// The prior may be any point of the 7-dimensional space — it is an
+    /// ordering hint, not a candidate, so it need not be valid for
+    /// `length`.
+    pub fn new(length: u32, ve_filter: Option<bool>, prior: TuningParams) -> PriorSeeded {
+        PriorSeeded { inner: TwoPhaseGrid::seeded(length, ve_filter, prior), prior }
+    }
+
+    /// The donor winner this strategy was seeded with.
+    pub fn prior(&self) -> TuningParams {
+        self.prior
+    }
+
+    pub fn plan_size(&self) -> usize {
+        self.inner.plan_size()
+    }
+}
+
+impl SearchStrategy for PriorSeeded {
+    fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        self.inner.next(best)
+    }
+
+    fn phase(&self) -> Phase {
+        self.inner.phase()
+    }
+
+    fn remaining(&self) -> usize {
+        self.inner.remaining()
+    }
+}
+
+/// Exhaustive enumeration of the (restricted) tuning space — the offline
+/// BS-AT search of Table 3 and the Figure 1 sweep, as a strategy.
+/// Ignores feedback; `phase()` stays [`Phase::One`] while candidates
+/// remain (the offline search evaluates everything on training data).
+#[derive(Debug, Clone)]
+pub struct StaticGrid {
+    candidates: Vec<TuningParams>,
+    idx: usize,
+}
+
+impl StaticGrid {
+    /// * `ve_filter`: restrict to SISD/SIMD like the online
+    ///   fair-comparison runs.
+    /// * `no_leftover_only`: the paper's Streamcluster restriction.
+    /// * `structural_only`: phase-1 defaults only (Figure 1 sweeps
+    ///   structure); otherwise the full structural x phase-2 product.
+    pub fn new(
+        length: u32,
+        ve_filter: Option<bool>,
+        no_leftover_only: bool,
+        structural_only: bool,
+    ) -> StaticGrid {
+        let space = Space::new(length);
+        let structs: Vec<Structural> = if no_leftover_only {
+            space.no_leftover_structural()
+        } else {
+            space.valid_structural()
+        }
+        .into_iter()
+        .filter(|s| ve_filter.map(|ve| s.ve == ve).unwrap_or(true))
+        .collect();
+
+        let mut candidates = Vec::new();
+        for s in structs {
+            if structural_only {
+                candidates.push(TuningParams::phase1_default(s));
+            } else {
+                candidates.extend(Space::phase2_grid(s));
+            }
+        }
+        StaticGrid { candidates, idx: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.candidates.is_empty()
+    }
+}
+
+impl SearchStrategy for StaticGrid {
+    fn next(&mut self, _best: Option<TuningParams>) -> Option<TuningParams> {
+        let p = self.candidates.get(self.idx).copied();
+        self.idx += p.is_some() as usize;
+        p
+    }
+
+    fn phase(&self) -> Phase {
+        if self.idx < self.candidates.len() {
+            Phase::One
+        } else {
+            Phase::Done
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.candidates.len() - self.idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn drain(strat: &mut dyn SearchStrategy) -> Vec<TuningParams> {
+        let mut out = Vec::new();
+        let mut best: Option<TuningParams> = None;
+        while let Some(p) = strat.next(best) {
+            if best.is_none() {
+                best = Some(p);
+            }
+            out.push(p);
+        }
+        out
+    }
+
+    #[test]
+    fn strategies_are_object_safe_and_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Box<dyn SearchStrategy>>();
+        let mut boxed: Box<dyn SearchStrategy> = Box::new(TwoPhaseGrid::new(64, None));
+        assert!(boxed.next(None).is_some());
+    }
+
+    #[test]
+    fn prior_seeded_emits_the_donor_first() {
+        let donor = TuningParams::new(Structural::new(true, 2, 2, 4), 32, true, true);
+        let mut s = PriorSeeded::new(64, None, donor);
+        assert_eq!(s.prior(), donor);
+        let first = SearchStrategy::next(&mut s, None).unwrap();
+        assert_eq!(first.s, donor.s);
+    }
+
+    #[test]
+    fn static_grid_matches_the_space_enumeration() {
+        let sp = Space::new(96);
+        let mut full = StaticGrid::new(96, None, false, false);
+        let seq = drain(&mut full);
+        assert_eq!(seq.len(), sp.explorable_versions());
+        let ids: HashSet<u32> = seq.iter().map(|p| p.full_id()).collect();
+        assert_eq!(ids.len(), seq.len(), "no duplicates");
+        assert_eq!(full.remaining(), 0);
+        assert_eq!(SearchStrategy::phase(&full), Phase::Done);
+
+        let mut structural = StaticGrid::new(96, Some(true), true, true);
+        assert_eq!(structural.len(), sp.no_leftover_structural().iter().filter(|s| s.ve).count());
+        assert_eq!(SearchStrategy::phase(&structural), Phase::One);
+        let seq = drain(&mut structural);
+        assert!(seq.iter().all(|p| p.s.ve && p.s.no_leftover(96)));
+    }
+
+    #[test]
+    fn static_grid_ignores_feedback() {
+        let mut a = StaticGrid::new(64, None, false, true);
+        let mut b = StaticGrid::new(64, None, false, true);
+        let donor = TuningParams::phase1_default(Structural::new(true, 2, 2, 4));
+        loop {
+            let x = a.next(None);
+            let y = b.next(Some(donor));
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+    }
+}

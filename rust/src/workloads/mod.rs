@@ -84,6 +84,48 @@ pub fn skewed_service_workload(
         .collect()
 }
 
+/// Kernel streams per device in [`hetero_service_workload`] (the full
+/// workload is twice this: each stream exists on both devices).
+pub const HETERO_STREAMS_PER_DEVICE: usize = 3;
+
+/// A heterogeneous *two-device* serving workload for the cross-device
+/// transfer-prior path: the same three kernel streams (two distance
+/// specialisations + one lintra) exist once on the `donor` core and once
+/// on the `target` core — same [`TuneKey`]s, different
+/// [`DeviceFingerprint`](crate::cache::DeviceFingerprint)s, so cached
+/// outcomes never transfer as warm starts. Tune the donor half first and
+/// its write-backs become sibling-device donors for the target half:
+/// with [`ServiceConfig::transfer_priors`](crate::service::ServiceConfig)
+/// the target lanes replay the identical exploration *set* in a
+/// donor-seeded order and reach their best version in a fraction of the
+/// generate calls (`degoal-rt service --transfer`).
+///
+/// Returns `(donor_lanes, target_lanes)`.
+#[allow(clippy::type_complexity)]
+pub fn hetero_service_workload(
+    donor: &'static CoreConfig,
+    target: &'static CoreConfig,
+    seed: u64,
+) -> (Vec<(TuneKey, SimBackend)>, Vec<(TuneKey, SimBackend)>) {
+    let kinds: [(KernelKind, &str); HETERO_STREAMS_PER_DEVICE] = [
+        (KernelKind::Distance { dim: 32, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "a"),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "a"),
+    ];
+    let on = |core: &'static CoreConfig, seed: u64| -> Vec<(TuneKey, SimBackend)> {
+        kinds
+            .iter()
+            .enumerate()
+            .map(|(i, (kind, shape))| {
+                let b = SimBackend::new(core, *kind, seed + i as u64);
+                let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
+                (key, b)
+            })
+            .collect()
+    };
+    (on(donor, seed), on(target, seed + 100))
+}
+
 /// Result of one application run (with or without auto-tuning).
 #[derive(Debug, Clone)]
 pub struct AppRun {
@@ -119,6 +161,24 @@ mod tests {
         assert!(w[4].0.kernel.starts_with("lintra"));
         for i in [1, 2, 3, 5, 6, 7] {
             assert!(w[i].0.kernel.starts_with("distance"), "lane {i} must be light");
+        }
+    }
+
+    #[test]
+    fn hetero_service_workload_pairs_keys_across_devices() {
+        use crate::backend::Backend as _;
+        let donor = core_by_name("DI-I1").unwrap();
+        let target = core_by_name("DI-I2").unwrap();
+        let (d, t) = hetero_service_workload(donor, target, 1);
+        assert_eq!(d.len(), HETERO_STREAMS_PER_DEVICE);
+        assert_eq!(t.len(), HETERO_STREAMS_PER_DEVICE);
+        for ((dk, db), (tk, tb)) in d.iter().zip(&t) {
+            assert_eq!(dk.key(), tk.key(), "same kernel stream on both devices");
+            assert_ne!(
+                db.device_fingerprint(),
+                tb.device_fingerprint(),
+                "distinct devices — outcomes must not transfer as warm starts"
+            );
         }
     }
 

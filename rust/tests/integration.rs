@@ -9,7 +9,7 @@ use degoal_rt::backend::sim::SimBackend;
 use degoal_rt::backend::{Backend, EvalData, KernelVersion};
 use degoal_rt::coordinator::{AutoTuner, RegenDecision, TunerConfig};
 use degoal_rt::simulator::{core_by_name, KernelKind, RefKind, ALL_SIM_CORES};
-use degoal_rt::tunespace::{ExplorationPlan, Space, Structural, TuningParams};
+use degoal_rt::tunespace::{Space, Structural, TuningParams, TwoPhaseGrid};
 use degoal_rt::util::rng::Rng;
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
 use degoal_rt::workloads::vips::{VipsApp, VipsConfig};
@@ -29,7 +29,11 @@ fn online_tuning_beats_reference_across_all_cores() {
         let r_ref = app.run(&mut b, RunMode::Reference(RefKind::SimdGeneric)).unwrap();
         let mut b = SimBackend::new(core, kind, 4);
         let mut tuner = AutoTuner::new(
-            TunerConfig { initial_ref: RefKind::SimdGeneric, wake_period: 2e-3, ..Default::default() },
+            TunerConfig {
+                initial_ref: RefKind::SimdGeneric,
+                wake_period: 2e-3,
+                ..Default::default()
+            },
             cfg.dim,
             Some(true),
         );
@@ -57,7 +61,11 @@ fn vips_never_catastrophic() {
         let r_ref = app.run(&mut b, RunMode::Reference(RefKind::SimdGeneric)).unwrap();
         let mut b = SimBackend::new(c, kind, 6);
         let mut tuner = AutoTuner::new(
-            TunerConfig { initial_ref: RefKind::SimdGeneric, wake_period: 2e-3, ..Default::default() },
+            TunerConfig {
+                initial_ref: RefKind::SimdGeneric,
+                wake_period: 2e-3,
+                ..Default::default()
+            },
             cfg.row_len(),
             Some(true),
         );
@@ -194,7 +202,7 @@ fn prop_active_function_monotonically_improves() {
 fn prop_plan_size_formula() {
     for length in [1u32, 7, 16, 32, 57, 64, 96, 128, 1000, 4800, 7986] {
         for ve in [None, Some(false), Some(true)] {
-            let plan = ExplorationPlan::new(length, ve);
+            let plan = TwoPhaseGrid::new(length, ve);
             let n_struct = match ve {
                 None => Space::new(length).valid_structural().len(),
                 Some(v) => Space::new(length).valid_structural_ve(v).len(),

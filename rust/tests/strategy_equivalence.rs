@@ -1,0 +1,165 @@
+//! Strategy-equivalence contract for the pluggable search layer.
+//!
+//! The refactor that made exploration planning swappable
+//! (`tunespace::strategy`) is only safe if the swap cannot change *what*
+//! gets explored — a transfer prior may permute the walk, never add or
+//! drop a candidate. Pinned here, property-style:
+//!
+//! * **Set equality** — over lengths x VE filters x arbitrary donors,
+//!   `PriorSeeded` emits exactly the same set of versions as the
+//!   paper-faithful `TwoPhaseGrid`, at the same length (a permutation).
+//! * **Winner parity** — driving a full `AutoTuner` with any strategy
+//!   lands on the same winner the pre-refactor tuner found (the mock
+//!   landscape's known optimum), with the same exploration count.
+//! * **Baseline parity** — `baselines::static_search` (now a
+//!   `StaticGrid` consumer) still enumerates the exact restricted space.
+
+use std::collections::HashSet;
+
+use degoal_rt::backend::mock::{default_landscape, MockBackend};
+use degoal_rt::coordinator::{AutoTuner, TunerConfig};
+use degoal_rt::tunespace::{
+    params, PriorSeeded, SearchStrategy, Space, TuningParams, TwoPhaseGrid,
+};
+use degoal_rt::util::rng::Rng;
+
+/// Drain a strategy with honest feedback: `best` is the running
+/// score-argmin under the mock landscape, updated with the same strict-<
+/// rule the tuner uses. (The landscape's per-class optimum is unique, so
+/// the phase-1 winner — and with it the phase-2 candidate set — does not
+/// depend on the visiting order.)
+fn drain(strat: &mut dyn SearchStrategy) -> Vec<TuningParams> {
+    let mut out: Vec<TuningParams> = Vec::new();
+    let mut best: Option<(TuningParams, f64)> = None;
+    loop {
+        let bp = best.map(|(p, _)| p);
+        let Some(c) = strat.next(bp) else {
+            break;
+        };
+        let t = default_landscape(&c);
+        if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+            best = Some((c, t));
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn id_set(seq: &[TuningParams]) -> HashSet<u32> {
+    seq.iter().map(|p| p.full_id()).collect()
+}
+
+#[test]
+fn prior_seeded_emits_exactly_the_two_phase_set_for_arbitrary_donors() {
+    let mut rng = Rng::new(0x5eed);
+    let n_ids = params::n_code_variants();
+    for length in [32u32, 64, 96, 128] {
+        for ve in [None, Some(false), Some(true)] {
+            let base = drain(&mut TwoPhaseGrid::new(length, ve));
+            let base_ids = id_set(&base);
+            assert_eq!(base_ids.len(), base.len(), "two-phase plan must not repeat");
+            // Arbitrary donors, sampled across the whole 7-dim space —
+            // including donors invalid for this length and outside the
+            // VE class being explored (a donor is an ordering hint, not
+            // a candidate).
+            for _ in 0..12 {
+                let donor = TuningParams::from_full_id(rng.below(n_ids) as u32);
+                let seeded = drain(&mut PriorSeeded::new(length, ve, donor));
+                assert_eq!(
+                    seeded.len(),
+                    base.len(),
+                    "permutation only: length {length} ve {ve:?} donor {donor}"
+                );
+                assert_eq!(
+                    id_set(&seeded),
+                    base_ids,
+                    "same set: length {length} ve {ve:?} donor {donor}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_strategy_lands_on_the_pre_refactor_winner() {
+    // The pre-refactor tuner (PR 0-3) found the mock landscape's optimum
+    // on these seeded runs — the strategy seam must not change that,
+    // whatever donor seeds the order.
+    let mut rng = Rng::new(0x77);
+    for seed in [1u64, 2, 3] {
+        let mut b = MockBackend::new(64, seed);
+        let (expect, _) = b.best_possible();
+        let mut cold = AutoTuner::new(TunerConfig::default(), 64, None);
+        cold.run_exhaustive(&mut b).unwrap();
+        assert_eq!(cold.best().unwrap().0.full_id(), expect.full_id(), "seed {seed}");
+        let plan_explored = cold.stats.explored_count();
+
+        for _ in 0..6 {
+            let donor = TuningParams::from_full_id(rng.below(params::n_code_variants()) as u32);
+            let mut b2 = MockBackend::new(64, seed + 100);
+            let mut seeded =
+                AutoTuner::with_transfer_prior(TunerConfig::default(), 64, None, donor);
+            seeded.run_exhaustive(&mut b2).unwrap();
+            assert_eq!(
+                seeded.best().unwrap().0.full_id(),
+                expect.full_id(),
+                "donor {donor} must not change the winner"
+            );
+            assert_eq!(
+                seeded.stats.explored_count(),
+                plan_explored,
+                "donor {donor} must not change the exploration count"
+            );
+        }
+    }
+}
+
+#[test]
+fn static_search_still_enumerates_the_exact_restricted_space() {
+    use degoal_rt::baselines::static_search;
+    let mut b = MockBackend::new(96, 7);
+    let full = static_search(&mut b, 96, None, false, false).unwrap();
+    assert_eq!(full.explored.len(), Space::new(96).explorable_versions());
+    let ids: HashSet<u32> = full.explored.iter().map(|(p, _)| p.full_id()).collect();
+    assert_eq!(ids.len(), full.explored.len(), "no duplicates");
+
+    // The known optimum survives the strategy-backed rewrite.
+    let (expect, t) = b.best_possible();
+    assert_eq!(full.best.full_id(), expect.full_id());
+    assert!((full.best_score - t).abs() < 1e-12);
+
+    // Restrictions still restrict.
+    let mut b2 = MockBackend::new(96, 8);
+    let nol = static_search(&mut b2, 96, Some(true), true, true).unwrap();
+    let expect_n = Space::new(96)
+        .no_leftover_structural()
+        .into_iter()
+        .filter(|s| s.ve)
+        .count();
+    assert_eq!(nol.explored.len(), expect_n);
+    assert!(nol.explored.iter().all(|(p, _)| p.s.ve && p.s.no_leftover(96)));
+}
+
+#[test]
+fn transfer_prior_cuts_time_to_best_without_changing_coverage() {
+    // Donor = the landscape optimum (what a finished sibling device
+    // caches). The seeded run must find the same winner with the same
+    // coverage, strictly earlier in generate calls.
+    let mut b = MockBackend::new(64, 40);
+    let mut cold = AutoTuner::new(TunerConfig::default(), 64, None);
+    cold.run_exhaustive(&mut b).unwrap();
+    let (winner, _) = cold.best().unwrap();
+    let cold_at = cold.stats.best_at_generate.unwrap();
+
+    let mut b2 = MockBackend::new(64, 41);
+    let mut seeded = AutoTuner::with_transfer_prior(TunerConfig::default(), 64, None, winner);
+    seeded.run_exhaustive(&mut b2).unwrap();
+    let seeded_at = seeded.stats.best_at_generate.unwrap();
+
+    assert_eq!(seeded.best().unwrap().0.full_id(), winner.full_id());
+    assert_eq!(seeded.stats.explored_count(), cold.stats.explored_count());
+    assert!(
+        seeded_at < cold_at,
+        "donor-seeded order must reach the best strictly earlier: {seeded_at} vs {cold_at}"
+    );
+}

@@ -1,0 +1,291 @@
+//! End-to-end tests for the two carried follow-ups built on the
+//! strategy seam: cross-device transfer priors (PR-1 follow-up) and
+//! idle-time speculative tuning (PR-3 follow-up).
+//!
+//! The acceptance contract:
+//!
+//! * with transfer priors, the heterogeneous two-device workload reaches
+//!   its best version in *strictly fewer* generate calls than cold
+//!   exploration, with `transfer_hits > 0` — and identical coverage
+//!   (priors only permute);
+//! * with `idle_tune`, an engine completes exploration for parked lanes
+//!   using idle worker time alone, with the speculative tool time
+//!   charged per lane and recorded in the governor exactly once; with
+//!   the global budget at zero, speculation never starts.
+
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::backend::Backend as _;
+use degoal_rt::cache::{CacheHit, DeviceFingerprint, SharedTuneCache, TuneCache, TuneKey};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService,
+};
+
+/// Pre-recorded app time that makes the global governor allow every
+/// speculative step (speculation adds overhead but no app time, so an
+/// unprimed governor would stop it almost immediately).
+const GOVERNOR_PRIME: f64 = 1e6;
+
+fn fast_cfg() -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// A mock backend posing as one core of a two-device board.
+fn device_backend(tag: &str, length: u32, seed: u64) -> MockBackend {
+    let mut b = MockBackend::new(length, seed);
+    b.device_tag = tag.into();
+    b
+}
+
+fn stream_key(i: usize) -> TuneKey {
+    TuneKey::with_shape("mock/len64", 64, format!("stream{i}"))
+}
+
+/// Tune `n` kernel streams to completion on one mock device; returns the
+/// service's checkpointed cache and the per-lane reports.
+fn tune_device(
+    cfg: ServiceConfig,
+    cache: TuneCache,
+    tag: &str,
+    n: usize,
+    seed: u64,
+) -> (TuneCache, Vec<LaneReport>) {
+    let mut svc: TuningService<MockBackend> = TuningService::with_cache(cfg, cache);
+    let lanes: Vec<LaneId> = (0..n)
+        .map(|i| svc.register(stream_key(i), None, device_backend(tag, 64, seed + i as u64)))
+        .collect();
+    for _ in 0..60_000 {
+        for &l in &lanes {
+            svc.app_call(l).unwrap();
+        }
+        if lanes.iter().all(|&l| svc.tuner(l).unwrap().exploration_done()) {
+            break;
+        }
+    }
+    let reports: Vec<LaneReport> = lanes.iter().filter_map(|&l| svc.lane_report(l)).collect();
+    assert!(reports.iter().all(|r| r.done), "all lanes must finish exploring");
+    (svc.into_cache(), reports)
+}
+
+fn mean_best_at(reports: &[LaneReport]) -> f64 {
+    let at: Vec<u64> = reports.iter().filter_map(|r| r.best_at_generate).collect();
+    assert_eq!(at.len(), reports.len(), "every lane must have found a best");
+    at.iter().sum::<u64>() as f64 / at.len() as f64
+}
+
+// ---------- cross-device transfer priors ----------
+
+#[test]
+fn heterogeneous_workload_reaches_best_in_strictly_fewer_generates() {
+    let n = 3;
+
+    // Device B (the donor) tunes cold and writes its winners back.
+    let (donor_cache, _) = tune_device(fast_cfg(), TuneCache::new(), "coreB", n, 100);
+    assert_eq!(donor_cache.len(), n, "donor winners written back");
+
+    // Device A cold: the baseline exploration order.
+    let (_, cold_reports) = tune_device(fast_cfg(), TuneCache::new(), "coreA", n, 200);
+
+    // Device A again, transfer priors on, over the donor's cache. Same
+    // streams, sibling fingerprint — exact and near lookups miss, the
+    // transfer lookup hits.
+    let mut cfg = fast_cfg();
+    cfg.transfer_priors = true;
+    let (seeded_cache, seeded_reports) = tune_device(cfg, donor_cache, "coreA", n, 200);
+
+    // transfer_hits > 0 and every target lane was seeded.
+    assert_eq!(seeded_cache.counters.transfer_hits as usize, n);
+    assert!(seeded_reports.iter().all(|r| r.warm == Some(CacheHit::Transfer)));
+
+    // Priors only permute: identical coverage and identical winners.
+    for (c, s) in cold_reports.iter().zip(&seeded_reports) {
+        assert_eq!(c.explored, s.explored, "stream {}", c.key);
+        assert_eq!(
+            c.best.unwrap().0.full_id(),
+            s.best.unwrap().0.full_id(),
+            "stream {}",
+            c.key
+        );
+        assert_eq!(c.generate_calls, s.generate_calls, "stream {}", c.key);
+    }
+
+    // The acceptance bar: strictly fewer generate calls to the best
+    // version — per lane, not just on average.
+    for (c, s) in cold_reports.iter().zip(&seeded_reports) {
+        assert!(
+            s.best_at_generate.unwrap() < c.best_at_generate.unwrap(),
+            "stream {}: transfer {} !< cold {}",
+            c.key,
+            s.best_at_generate.unwrap(),
+            c.best_at_generate.unwrap()
+        );
+    }
+    let (cold_at, seeded_at) = (mean_best_at(&cold_reports), mean_best_at(&seeded_reports));
+    assert!(seeded_at < cold_at, "mean time-to-best: {seeded_at} !< {cold_at}");
+
+    // And the target device's own write-backs land under its own
+    // fingerprint — the donor's entries are untouched.
+    let fp_a = DeviceFingerprint::new("mock", "coreA");
+    let fp_b = DeviceFingerprint::new("mock", "coreB");
+    for i in 0..n {
+        assert!(seeded_cache.peek(&fp_a, &stream_key(i)).is_some());
+        assert!(seeded_cache.peek(&fp_b, &stream_key(i)).is_some());
+    }
+}
+
+#[test]
+fn same_device_entries_stay_warm_starts_not_transfers() {
+    // With transfer_priors on, a same-fingerprint entry must still take
+    // the exact warm-start path (adopt + skip), not the prior path.
+    let n = 2;
+    let (cache, _) = tune_device(fast_cfg(), TuneCache::new(), "coreA", n, 300);
+    let mut cfg = fast_cfg();
+    cfg.transfer_priors = true;
+    let (cache2, reports) = tune_device(cfg, cache, "coreA", n, 301);
+    assert!(reports.iter().all(|r| r.warm == Some(CacheHit::Exact)));
+    assert!(reports.iter().all(|r| r.generate_calls == 1), "warm start pays one generate");
+    assert_eq!(cache2.counters.transfer_hits, 0);
+}
+
+#[test]
+fn out_of_class_donor_is_ignored_under_ve_filter() {
+    use degoal_rt::cache::CacheEntry;
+    use degoal_rt::tunespace::{Structural, TuningParams};
+    // SIMD donor entry on a sibling device; the target lane is
+    // SISD-only. The prior must not leak across the class boundary.
+    let donor = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+    let mut cfg = fast_cfg();
+    cfg.transfer_priors = true;
+    let mut svc: TuningService<MockBackend> = TuningService::new(cfg);
+    svc.cache().insert(
+        &DeviceFingerprint::new("mock", "coreB"),
+        &stream_key(0),
+        CacheEntry::new(donor, 9e-5, 1.8e-4, 60),
+    );
+    let lane = svc.register(stream_key(0), Some(false), device_backend("coreA", 64, 400));
+    assert_eq!(svc.tuner(lane).unwrap().transfer_prior(), None);
+    assert_eq!(svc.stats().transfer_lanes, 0);
+    assert_eq!(svc.stats().cache.transfer_hits, 0);
+}
+
+// ---------- idle-time speculative tuning ----------
+
+#[test]
+fn idle_workers_complete_exploration_without_any_traffic() {
+    let n_lanes = 3;
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 32, idle_tune: true },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = (0..n_lanes)
+        .map(|i| {
+            eng.register(stream_key(i), None, MockBackend::new(64, 700 + i as u64)).unwrap()
+        })
+        .collect();
+    let cache = eng.cache();
+
+    // Zero submissions: speculation is the only driver. Poll until every
+    // lane's exploration finished (drain suspends speculation while it
+    // waits, then lets it resume).
+    let mut rounds = 0;
+    loop {
+        let reports = eng.drain_reports().unwrap();
+        if reports.iter().all(|r| r.done) {
+            break;
+        }
+        rounds += 1;
+        assert!(rounds < 5_000, "speculation must finish exploration: {reports:?}");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+
+    // Governor must be read after finish joins the workers (speculation
+    // runs right up to the shutdown); the controller outlives the engine.
+    let ctrl = eng.controller();
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.kernel_calls, 0, "no application call ever ran");
+    assert_eq!(st.done_lanes, n_lanes);
+    assert!(st.idle_steps > 0, "exploration was driven by idle speculation");
+    assert!(st.overhead > 0.0, "speculative tool time is charged per lane");
+    assert_eq!(st.app_time, 0.0);
+
+    let fp = MockBackend::new(64, 0).device_fingerprint();
+    let (optimum, _) = MockBackend::new(64, 0).best_possible();
+    for (i, r) in reports.iter().enumerate() {
+        assert_eq!(r.best.unwrap().0.s, optimum.s, "lane {} finds the optimum", r.key);
+        assert!(r.idle_steps > 0, "round-robin must give every lane idle time: lane {i}");
+        assert!(
+            cache.get(&fp, &stream_key(i)).is_some(),
+            "speculative completion still writes the winner back"
+        );
+    }
+
+    // Accounting: every speculative step recorded exactly once.
+    let snap = ctrl.governor().snapshot();
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1e-12);
+    assert!(close(snap.overhead, st.overhead), "{snap:?} vs {st:?}");
+    assert!(close(snap.app_time - GOVERNOR_PRIME, st.app_time), "{snap:?} vs {st:?}");
+}
+
+#[test]
+fn zero_budget_blocks_all_speculation() {
+    // Unprimed governor + zero traffic: budget is 0, so allow() is
+    // always false and no speculative step may ever run.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 32, idle_tune: true },
+    );
+    let lane = eng.register(stream_key(0), None, MockBackend::new(64, 800)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.idle_steps, 0, "zero budget must block speculation: {st:?}");
+    assert_eq!(st.explored, 0);
+    assert_eq!(reports[lane.0].kernel_calls, 0);
+}
+
+#[test]
+fn idle_tune_mixes_with_traffic_and_keeps_call_counts_exact() {
+    // Two busy lanes + two parked lanes on four workers: the idle pair
+    // must advance while every submitted call still runs exactly once.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 64, idle_tune: true },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = (0..4)
+        .map(|i| {
+            eng.register(stream_key(i), None, MockBackend::new(64, 900 + i as u64)).unwrap()
+        })
+        .collect();
+    for round in 0u64..50 {
+        for &l in &lanes[..2] {
+            eng.submit_n(l, 200).unwrap();
+        }
+        let reports = eng.drain_reports().unwrap();
+        for (i, r) in reports.iter().enumerate() {
+            let expect = if i < 2 { (round + 1) * 200 } else { 0 };
+            assert_eq!(r.kernel_calls, expect, "lane {i} round {round}");
+        }
+    }
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.kernel_calls, 2 * 50 * 200);
+    // The parked lanes never ran an app call; whatever exploration they
+    // accumulated is pure speculation, charged to their own clocks.
+    for r in &reports[2..] {
+        assert_eq!(r.kernel_calls, 0);
+        assert_eq!(r.app_time, 0.0);
+        assert!(
+            r.explored <= r.idle_steps as usize,
+            "parked-lane exploration can only come from idle steps: {r:?}"
+        );
+        if r.explored > 0 {
+            assert!(r.overhead > 0.0, "speculative tool time is charged: {r:?}");
+        }
+    }
+}
