@@ -11,7 +11,9 @@ use degoal_rt::backend::mock::MockBackend;
 use degoal_rt::backend::sim::SimBackend;
 use degoal_rt::backend::{Backend as _, EvalData, KernelVersion};
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
-use degoal_rt::simulator::{core_by_name, KernelKind, Pipeline, RefKind, TraceGen};
+use degoal_rt::simulator::{
+    core_by_name, simulate_call_mode, KernelKind, Pipeline, RefKind, SimMode, TraceGen,
+};
 use degoal_rt::tunespace::{Structural, TuningParams};
 
 fn main() {
@@ -46,6 +48,28 @@ fn main() {
         std::hint::black_box(pipe_io.run(&trace).cycles);
     });
     println!("  -> {:.1} M trace-insts/s simulated", trace.len() as f64 / per / 1e6);
+
+    // --- L3.b2: steady-state fast path vs the exact full walk ---
+    let rs = simulate_call_mode(cfg_io, &kind, &p, &mut gen, SimMode::Steady);
+    let rx = simulate_call_mode(cfg_io, &kind, &p, &mut gen, SimMode::Exact);
+    println!(
+        "steady-state fast path: {} of {} insts walked ({:.1}x fold); \
+         cycles {} (fast) vs {} (exact)",
+        rs.simulated_insts,
+        rs.insts,
+        rs.insts as f64 / rs.simulated_insts.max(1) as f64,
+        rs.cycles,
+        rx.cycles,
+    );
+    let per_fast = time("simulate_call (steady fast path, cold)", 50, || {
+        let r = simulate_call_mode(cfg_io, &kind, &p, &mut gen, SimMode::Steady);
+        std::hint::black_box(r.cycles);
+    });
+    let per_exact = time("simulate_call (exact walk, cold)", 10, || {
+        let r = simulate_call_mode(cfg_io, &kind, &p, &mut gen, SimMode::Exact);
+        std::hint::black_box(r.cycles);
+    });
+    println!("  -> fast path {:.1}x faster per candidate call", per_exact / per_fast.max(1e-12));
 
     // --- L3.c: steady-state app_call overhead (memoised backend) ---
     let mut b = SimBackend::new(cfg, kind, 1);

@@ -5,6 +5,18 @@
 //! training data, and a larger, occasionally-spiking noise models real
 //! input data (interrupts, cache pollution) — the reason the paper's
 //! worst-of-best filter exists.
+//!
+//! The hot path is allocation-free and O(warm-up): one [`TraceGen`] and
+//! one [`Pipeline`] live for the backend's lifetime (reset per candidate
+//! — never reconstructed per call), kernel calls run block-wise in the
+//! steady-state fast mode (`simulator::steady`, `DEGOAL_SIM_EXACT=1` to
+//! opt out), and measurements are memoised twice: per backend, and
+//! process-wide through [`SharedSimMemo`] so N tuner lanes on the same
+//! simulated device never re-simulate a variant another lane already
+//! scored. Memoised values are pure functions of
+//! `(core, kind, version, mode)` — each measurement starts from a reset
+//! pipeline — so sharing is order-independent and cannot perturb the
+//! engine's determinism suites.
 
 use std::collections::HashMap;
 
@@ -13,7 +25,8 @@ use anyhow::{bail, Result};
 use super::{Backend, EvalData, KernelVersion, Sample};
 use crate::cache::DeviceFingerprint;
 use crate::simulator::{
-    simulate_ref_call, simulate_trace, CoreConfig, KernelKind, TraceGen,
+    run_reference_call, run_variant_call, CoreConfig, EnergyModel, ExecStats, KernelKind,
+    MemoEntry, MemoKey, Pipeline, SharedSimMemo, SimMode, TraceGen,
 };
 use crate::tunespace::TuningParams;
 use crate::util::rng::Rng;
@@ -37,6 +50,12 @@ pub struct SimBackend {
     core: &'static CoreConfig,
     kind: KernelKind,
     gen: TraceGen,
+    /// Persistent pipeline scratch: reset per candidate measurement, so
+    /// no candidate evaluation ever reallocates the simulator state.
+    pipe: Pipeline<'static>,
+    mode: SimMode,
+    /// Process-wide (or test-private) cross-lane measurement memo.
+    memo: SharedSimMemo,
     rng: Rng,
     /// Memoised warm (steady-state) per-call results: full_id -> (s, J).
     variants: HashMap<u32, (f64, f64)>,
@@ -50,10 +69,24 @@ pub struct SimBackend {
 
 impl SimBackend {
     pub fn new(core: &'static CoreConfig, kind: KernelKind, seed: u64) -> SimBackend {
+        SimBackend::with_memo(core, kind, seed, SharedSimMemo::global())
+    }
+
+    /// Like [`SimBackend::new`] but joining an explicit measurement memo
+    /// (tests use a private one to observe sharing deterministically).
+    pub fn with_memo(
+        core: &'static CoreConfig,
+        kind: KernelKind,
+        seed: u64,
+        memo: SharedSimMemo,
+    ) -> SimBackend {
         SimBackend {
             core,
             kind,
             gen: TraceGen::new(),
+            pipe: Pipeline::new(core),
+            mode: SimMode::from_env(),
+            memo,
             rng: Rng::new(seed ^ 0xdeb0a1),
             variants: HashMap::new(),
             refs: HashMap::new(),
@@ -61,6 +94,45 @@ impl SimBackend {
             generated: HashMap::new(),
             total_codegen: 0.0,
         }
+    }
+
+    /// Override the simulation mode (the constructor honours
+    /// `DEGOAL_SIM_EXACT`). Mode is part of every memo key, so mixed-mode
+    /// processes never cross results.
+    pub fn set_mode(&mut self, mode: SimMode) {
+        self.mode = mode;
+    }
+
+    pub fn sim_mode(&self) -> SimMode {
+        self.mode
+    }
+
+    /// The cross-lane measurement memo this backend shares.
+    pub fn memo(&self) -> &SharedSimMemo {
+        &self.memo
+    }
+
+    /// Two-run warm-measurement protocol on the persistent scratch: reset
+    /// to a cold machine, run one `kind`-shaped call of `v` to warm
+    /// caches and predictors, run it again and keep the second
+    /// (steady-state) run. `kind` is the real kernel shape for warm
+    /// scores and the reduced shape for training scores.
+    fn measure_warm(&mut self, kind: KernelKind, v: &KernelVersion) -> ExecStats {
+        self.pipe.reset();
+        match v {
+            KernelVersion::Variant(p) => {
+                run_variant_call(&mut self.pipe, &mut self.gen, &kind, p, self.mode);
+                run_variant_call(&mut self.pipe, &mut self.gen, &kind, p, self.mode)
+            }
+            KernelVersion::Reference(rk) => {
+                run_reference_call(&mut self.pipe, &mut self.gen, &kind, *rk, self.mode);
+                run_reference_call(&mut self.pipe, &mut self.gen, &kind, *rk, self.mode)
+            }
+        }
+    }
+
+    fn seconds_of(&self, stats: &ExecStats) -> f64 {
+        stats.cycles as f64 / (self.core.clock_ghz * 1e9)
     }
 
     /// The training input (§3.4): a small warmed data set — evaluating on
@@ -83,27 +155,31 @@ impl SimBackend {
     /// Per-call-equivalent training score and the *actual* time one
     /// training call costs (what gets charged as tool overhead).
     fn training_result(&mut self, v: &KernelVersion) -> Result<(f64, f64)> {
-        let key = match v {
+        let (key, entry) = match v {
             KernelVersion::Variant(p) => {
                 if !p.s.valid_for(self.kind.length()) {
                     bail!("variant {p} cannot generate code for {:?}", self.kind);
                 }
-                p.full_id() as u64
+                (p.full_id() as u64, MemoEntry::TrainingVariant(p.full_id()))
             }
-            KernelVersion::Reference(rk) => (1 << 40) | *rk as u64,
+            KernelVersion::Reference(rk) => {
+                ((1 << 40) | *rk as u64, MemoEntry::TrainingReference(*rk))
+            }
         };
         let (tkind, scale) = self.training_kind();
         if let Some(&s) = self.training.get(&key) {
             return Ok((s * scale, s));
         }
-        let trace = match v {
-            KernelVersion::Variant(p) => self.gen.kernel_trace(&tkind, p).to_vec(),
-            KernelVersion::Reference(rk) => self.gen.ref_trace(&tkind, *rk).to_vec(),
+        let memo_key = MemoKey { core: self.core.name, kind: tkind, mode: self.mode, entry };
+        let seconds = match self.memo.get(&memo_key) {
+            Some((s, _)) => s,
+            None => {
+                let warm = self.measure_warm(tkind, v);
+                let s = self.seconds_of(&warm);
+                self.memo.insert(memo_key, (s, 0.0));
+                s
+            }
         };
-        let mut pipe = crate::simulator::Pipeline::new(self.core);
-        let _cold = pipe.run(&trace);
-        let warm = pipe.run(&trace);
-        let seconds = warm.cycles as f64 / (self.core.clock_ghz * 1e9);
         self.training.insert(key, seconds);
         Ok((seconds * scale, seconds))
     }
@@ -120,48 +196,42 @@ impl SimBackend {
         self.total_codegen
     }
 
-    /// Steady-state (warm-cache) time+energy for a version, memoised.
+    /// Steady-state (warm-cache) time+energy for a version, memoised per
+    /// backend and process-wide.
     fn warm_result(&mut self, v: &KernelVersion) -> Result<(f64, f64)> {
-        match v {
+        let entry = match v {
             KernelVersion::Variant(p) => {
                 if !p.s.valid_for(self.kind.length()) {
                     bail!("variant {p} cannot generate code for {:?}", self.kind);
                 }
-                let id = p.full_id();
-                if let Some(&r) = self.variants.get(&id) {
+                if let Some(&r) = self.variants.get(&p.full_id()) {
                     return Ok(r);
                 }
-                // Warm measurement: run the trace twice through one
-                // pipeline (persistent caches), keep the second.
-                let trace = self.gen.kernel_trace(&self.kind, p).to_vec();
-                let mut pipe = crate::simulator::Pipeline::new(self.core);
-                let _cold = pipe.run(&trace);
-                let warm = pipe.run(&trace);
-                let seconds = warm.cycles as f64 / (self.core.clock_ghz * 1e9);
-                let energy =
-                    crate::simulator::EnergyModel::new(self.core).energy_j(&warm, seconds);
-                self.variants.insert(id, (seconds, energy));
-                Ok((seconds, energy))
+                MemoEntry::WarmVariant(p.full_id())
             }
             KernelVersion::Reference(rk) => {
-                let key = *rk as u8;
-                if let Some(&r) = self.refs.get(&key) {
+                if let Some(&r) = self.refs.get(&(*rk as u8)) {
                     return Ok(r);
                 }
-                let r = simulate_ref_call(self.core, &self.kind, *rk, &mut self.gen);
-                // Second (warm) run.
-                let trace = self.gen.ref_trace(&self.kind, *rk).to_vec();
-                let mut pipe = crate::simulator::Pipeline::new(self.core);
-                let _ = pipe.run(&trace);
-                let warm = pipe.run(&trace);
-                let seconds = warm.cycles as f64 / (self.core.clock_ghz * 1e9);
-                let energy =
-                    crate::simulator::EnergyModel::new(self.core).energy_j(&warm, seconds);
-                let _ = r;
-                self.refs.insert(key, (seconds, energy));
-                Ok((seconds, energy))
+                MemoEntry::WarmReference(*rk)
             }
-        }
+        };
+        let memo_key = MemoKey { core: self.core.name, kind: self.kind, mode: self.mode, entry };
+        let r = match self.memo.get(&memo_key) {
+            Some(r) => r,
+            None => {
+                let warm = self.measure_warm(self.kind, v);
+                let seconds = self.seconds_of(&warm);
+                let energy = EnergyModel::new(self.core).energy_j(&warm, seconds);
+                self.memo.insert(memo_key, (seconds, energy));
+                (seconds, energy)
+            }
+        };
+        match v {
+            KernelVersion::Variant(p) => self.variants.insert(p.full_id(), r),
+            KernelVersion::Reference(rk) => self.refs.insert(*rk as u8, r),
+        };
+        Ok(r)
     }
 
     fn noisy(&mut self, base: f64, data: EvalData) -> f64 {
@@ -185,11 +255,16 @@ impl SimBackend {
     /// Noise-free cold-start (first-call) time: used by the workload
     /// drivers for the very first application call.
     pub fn cold_seconds(&mut self, v: &KernelVersion) -> Result<f64> {
-        let trace = match v {
-            KernelVersion::Variant(p) => self.gen.kernel_trace(&self.kind, p).to_vec(),
-            KernelVersion::Reference(rk) => self.gen.ref_trace(&self.kind, *rk).to_vec(),
+        self.pipe.reset();
+        let stats = match v {
+            KernelVersion::Variant(p) => {
+                run_variant_call(&mut self.pipe, &mut self.gen, &self.kind, p, self.mode)
+            }
+            KernelVersion::Reference(rk) => {
+                run_reference_call(&mut self.pipe, &mut self.gen, &self.kind, *rk, self.mode)
+            }
         };
-        Ok(simulate_trace(self.core, &trace).seconds)
+        Ok(self.seconds_of(&stats))
     }
 }
 
@@ -324,5 +399,39 @@ mod tests {
         let r = b.exact(&KernelVersion::Reference(RefKind::SimdSpecialized)).unwrap().0;
         let v = b.exact(&var(true, 2, 2, 2)).unwrap().0;
         assert!(v < r, "tuned {v} !< ref {r}");
+    }
+
+    #[test]
+    fn memo_shares_measurements_across_backends() {
+        use crate::simulator::SharedSimMemo;
+        let memo = SharedSimMemo::new();
+        let core = core_by_name("DI-I1").unwrap();
+        let kind = KernelKind::Distance { dim: 64, batch: 64 };
+        let v = var(true, 2, 2, 1);
+        let mut b1 = SimBackend::with_memo(core, kind, 1, memo.clone());
+        let r1 = b1.exact(&v).unwrap();
+        let misses = memo.misses();
+        assert!(misses >= 1, "first evaluation must miss the memo");
+        let mut b2 = SimBackend::with_memo(core, kind, 2, memo.clone());
+        let r2 = b2.exact(&v).unwrap();
+        assert_eq!(r1, r2, "shared memo must hand out identical measurements");
+        assert!(memo.hits() >= 1, "second backend must reuse the first's simulation");
+        assert_eq!(memo.misses(), misses, "no re-simulation of a memoised version");
+    }
+
+    #[test]
+    fn steady_and_exact_modes_agree() {
+        use crate::simulator::{SharedSimMemo, SimMode};
+        let core = core_by_name("DI-I1").unwrap();
+        let kind = KernelKind::Distance { dim: 64, batch: 256 };
+        let v = var(true, 1, 2, 1);
+        let mut fast = SimBackend::with_memo(core, kind, 1, SharedSimMemo::new());
+        fast.set_mode(SimMode::Steady);
+        let mut exact = SimBackend::with_memo(core, kind, 1, SharedSimMemo::new());
+        exact.set_mode(SimMode::Exact);
+        let (fs, fe) = fast.exact(&v).unwrap();
+        let (es, ee) = exact.exact(&v).unwrap();
+        assert!((fs - es).abs() / es < 0.02, "seconds: fast {fs} vs exact {es}");
+        assert!((fe - ee).abs() / ee < 0.08, "energy: fast {fe} vs exact {ee}");
     }
 }

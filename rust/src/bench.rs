@@ -1,0 +1,267 @@
+//! Deterministic simulator benchmark grid — the BENCH trajectory.
+//!
+//! `degoal-rt bench` times a fixed grid of `simulate_call`s (cores ×
+//! kernels × tuning params) and writes `results/bench.json`. Two kinds of
+//! numbers come out:
+//!
+//! * **Deterministic counters** — `simulated_insts` vs
+//!   `extrapolated_insts` per cell (and the resulting fold reduction of
+//!   the steady-state fast path). These are pure functions of the model,
+//!   so CI asserts on them without wall-clock flakiness
+//!   (`rust/tests/bench_guard.rs`: every large shape class must simulate
+//!   ≥ 10× fewer instructions than exact mode, and the grid's total
+//!   simulated instructions must stay under a committed ceiling).
+//! * **Wall-clock calls/sec** — informational throughput per cell,
+//!   recorded in the JSON for trend lines, never asserted.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::simulator::{core_by_name, simulate_call_mode, KernelKind, SimMode, TraceGen};
+use crate::tunespace::{Structural, TuningParams};
+use crate::util::json::{num, obj, s as jstr, Json};
+
+/// One grid cell: a (core, kernel shape, tuning params) combination.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchSpec {
+    pub core: &'static str,
+    pub kind: KernelKind,
+    pub params: TuningParams,
+    /// Large shape classes carry the ≥ 10× fast-path acceptance bound
+    /// (trip counts long enough that steady state dominates).
+    pub large: bool,
+}
+
+/// The fixed benchmark grid. Cores span the design space (single/dual/
+/// triple issue, IO and OOO, both real-platform stand-ins); kernels span
+/// both benchmarks at serving shapes (the 256-point streamcluster batches
+/// and the 8-row VIPS call) plus a tall lintra strip as the large
+/// memory-bound class; params cover rolled SIMD, unrolled SIMD with
+/// prefetch + stack minimisation, and SISD.
+pub fn default_grid() -> Vec<BenchSpec> {
+    let cores = ["SI-I1", "DI-I1", "DI-O2", "TI-I3", "A8", "A9"];
+    let kinds = [
+        (KernelKind::Distance { dim: 32, batch: 256 }, true),
+        (KernelKind::Distance { dim: 128, batch: 256 }, true),
+        (KernelKind::Distance { dim: 64, batch: 64 }, false),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, false),
+        (KernelKind::Lintra { row_len: 1024, rows: 256 }, true),
+    ];
+    let rolled = TuningParams::phase1_default(Structural::new(true, 1, 1, 1));
+    let mut unrolled = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+    unrolled.pld_stride = 64;
+    unrolled.smin = true;
+    let sisd = TuningParams::phase1_default(Structural::new(false, 1, 1, 1));
+
+    let mut grid = Vec::new();
+    for core in cores {
+        for (kind, large) in kinds {
+            for params in [rolled, unrolled, sisd] {
+                grid.push(BenchSpec { core, kind, params, large });
+            }
+        }
+    }
+    grid
+}
+
+/// Measured outcome of one cell.
+#[derive(Debug, Clone)]
+pub struct BenchCell {
+    pub core: &'static str,
+    pub kernel: String,
+    pub params: String,
+    pub large: bool,
+    pub cycles: u64,
+    /// Total instructions accounted for (simulated + extrapolated).
+    pub insts: u64,
+    pub simulated_insts: u64,
+    pub extrapolated_insts: u64,
+    pub seconds: f64,
+    pub energy_j: f64,
+    /// Wall-clock throughput of repeated `simulate_call`s (0 when the
+    /// run was counters-only).
+    pub calls_per_sec: f64,
+    /// Exact-mode cycle count for the same cell, when requested.
+    pub exact_cycles: Option<u64>,
+}
+
+impl BenchCell {
+    /// Fold reduction of the fast path: instructions accounted per
+    /// instruction simulated. 1.0 when the steady state was never
+    /// reached (full walk).
+    pub fn inst_ratio(&self) -> f64 {
+        self.insts as f64 / self.simulated_insts.max(1) as f64
+    }
+}
+
+/// Aggregate of one grid run.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub cells: Vec<BenchCell>,
+    pub total_insts: u64,
+    pub total_simulated: u64,
+}
+
+impl BenchReport {
+    pub fn inst_ratio(&self) -> f64 {
+        self.total_insts as f64 / self.total_simulated.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut fields = vec![
+                    ("core", jstr(c.core)),
+                    ("kernel", jstr(&c.kernel)),
+                    ("params", jstr(&c.params)),
+                    ("large", Json::Bool(c.large)),
+                    ("cycles", num(c.cycles as f64)),
+                    ("insts", num(c.insts as f64)),
+                    ("simulated_insts", num(c.simulated_insts as f64)),
+                    ("extrapolated_insts", num(c.extrapolated_insts as f64)),
+                    ("inst_ratio", num(c.inst_ratio())),
+                    ("seconds", num(c.seconds)),
+                    ("energy_j", num(c.energy_j)),
+                    ("calls_per_sec", num(c.calls_per_sec)),
+                ];
+                if let Some(e) = c.exact_cycles {
+                    fields.push(("exact_cycles", num(e as f64)));
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("bench", jstr("simulate_call grid")),
+            ("cells", Json::Arr(cells)),
+            ("total_insts", num(self.total_insts as f64)),
+            ("total_simulated_insts", num(self.total_simulated as f64)),
+            ("inst_ratio", num(self.inst_ratio())),
+        ])
+    }
+}
+
+fn kernel_label(kind: &KernelKind) -> String {
+    match kind {
+        KernelKind::Distance { dim, batch } => format!("distance/d{dim}/b{batch}"),
+        KernelKind::Lintra { row_len, rows } => format!("lintra/r{row_len}/x{rows}"),
+    }
+}
+
+/// Run the fixed grid. `timed_reps` > 0 additionally measures wall-clock
+/// calls/sec per cell (informational); `with_exact` re-runs each cell in
+/// exact mode for a cycle-count cross-check. The counters themselves are
+/// deterministic regardless.
+pub fn run_grid(timed_reps: u32, with_exact: bool) -> BenchReport {
+    let mut gen = TraceGen::new();
+    let mut cells = Vec::new();
+    let mut total_insts = 0u64;
+    let mut total_simulated = 0u64;
+    for spec in default_grid() {
+        let core = core_by_name(spec.core).expect("grid core");
+        let r = simulate_call_mode(core, &spec.kind, &spec.params, &mut gen, SimMode::Steady);
+        let exact_cycles = if with_exact {
+            Some(simulate_call_mode(core, &spec.kind, &spec.params, &mut gen, SimMode::Exact).cycles)
+        } else {
+            None
+        };
+        let calls_per_sec = if timed_reps > 0 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..timed_reps {
+                let out =
+                    simulate_call_mode(core, &spec.kind, &spec.params, &mut gen, SimMode::Steady);
+                std::hint::black_box(out.cycles);
+            }
+            timed_reps as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+        } else {
+            0.0
+        };
+        total_insts += r.insts;
+        total_simulated += r.simulated_insts;
+        cells.push(BenchCell {
+            core: spec.core,
+            kernel: kernel_label(&spec.kind),
+            params: spec.params.to_string(),
+            large: spec.large,
+            cycles: r.cycles,
+            insts: r.insts,
+            simulated_insts: r.simulated_insts,
+            extrapolated_insts: r.extrapolated_insts,
+            seconds: r.seconds,
+            energy_j: r.energy_j,
+            calls_per_sec,
+            exact_cycles,
+        });
+    }
+    BenchReport { cells, total_insts, total_simulated }
+}
+
+/// Write the report where the BENCH trajectory expects it
+/// (`results/bench.json` by default).
+pub fn write_json(report: &BenchReport, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_fixed_and_valid() {
+        let grid = default_grid();
+        assert_eq!(grid.len(), 6 * 5 * 3);
+        assert!(grid.iter().any(|s| s.large));
+        assert!(grid.iter().any(|s| !s.large));
+        for spec in &grid {
+            assert!(core_by_name(spec.core).is_some(), "{}", spec.core);
+            assert!(
+                spec.params.s.valid_for(spec.kind.length()),
+                "{:?} invalid for {:?}",
+                spec.params,
+                spec.kind
+            );
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        // A single-cell run keeps the unit test cheap; the full grid is
+        // covered by tests/bench_guard.rs.
+        let core = core_by_name("DI-I1").unwrap();
+        let mut gen = TraceGen::new();
+        let spec = default_grid()[0];
+        let r = simulate_call_mode(core, &spec.kind, &spec.params, &mut gen, SimMode::Steady);
+        let report = BenchReport {
+            cells: vec![BenchCell {
+                core: spec.core,
+                kernel: kernel_label(&spec.kind),
+                params: spec.params.to_string(),
+                large: spec.large,
+                cycles: r.cycles,
+                insts: r.insts,
+                simulated_insts: r.simulated_insts,
+                extrapolated_insts: r.extrapolated_insts,
+                seconds: r.seconds,
+                energy_j: r.energy_j,
+                calls_per_sec: 0.0,
+                exact_cycles: None,
+            }],
+            total_insts: r.insts,
+            total_simulated: r.simulated_insts,
+        };
+        let j = report.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("core").unwrap().as_str(), Some("DI-I1"));
+        assert!(parsed.get("inst_ratio").unwrap().as_f64().unwrap() >= 1.0);
+    }
+}

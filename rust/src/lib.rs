@@ -27,6 +27,20 @@
 //! layer so regeneration work amortises across *runs* and *kernels*, not
 //! just across calls of one process:
 //!
+//! * [`simulator`] steady-state fast path — every candidate evaluation
+//!   bottoms out in the cycle model, so the simulator generates traces as
+//!   per-iteration *blocks*, runs them on a resumable pipeline, and
+//!   extrapolates once `K` consecutive iterations cost identical cycles
+//!   with identical FU and memory-hit profiles: evaluation is O(warm-up),
+//!   not O(trip count). `DEGOAL_SIM_EXACT=1` (or
+//!   [`simulator::SimMode::Exact`]) restores the full walk;
+//!   [`simulator::ExecStats`] counts `simulated_insts` vs
+//!   `extrapolated_insts` so the speedup is asserted deterministically
+//!   (`degoal-rt bench`, [`bench`], `rust/tests/bench_guard.rs`), and
+//!   `rust/tests/sim_steady.rs` pins fast-vs-exact agreement. A
+//!   process-wide [`simulator::SharedSimMemo`] shares measurements
+//!   across tuner lanes on the same simulated device (they are pure
+//!   functions of core, kernel, version, and mode).
 //! * [`tunespace::strategy`] — pluggable exploration planning: the
 //!   [`tunespace::SearchStrategy`] trait separates *candidate supply*
 //!   from the tuner's evaluate-and-decide loop. The paper's two-phase
@@ -91,6 +105,7 @@
 
 pub mod backend;
 pub mod baselines;
+pub mod bench;
 pub mod cache;
 pub mod codegen;
 pub mod coordinator;

@@ -30,6 +30,11 @@
 //!                                   transfer time-to-best comparison
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
 //!                                   (needs the `pjrt` feature)
+//!   bench [--reps N] [--quick] [--exact] [--out PATH]
+//!                                   time the fixed simulate_call grid and
+//!                                   write results/bench.json (calls/sec +
+//!                                   deterministic simulated-vs-extrapolated
+//!                                   instruction counters)
 //!   cores                           list simulated core configs
 //!   artifacts-check                 validate artifacts/manifest.json
 
@@ -293,6 +298,42 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "bench" => {
+            let reps = if args.flag("quick") { 1 } else { args.get_u32("reps", 5) };
+            let with_exact = args.flag("exact");
+            let out = args.get_path_or("out", || degoal_rt::paths::results_dir().join("bench.json"));
+            let report = degoal_rt::bench::run_grid(reps, with_exact);
+            let mut t = Table::new(
+                "simulate_call grid (steady-state fast path)",
+                &["core", "kernel", "params", "insts", "simulated", "fold", "calls/s"],
+            );
+            for c in &report.cells {
+                t.row(vec![
+                    c.core.into(),
+                    c.kernel.clone(),
+                    c.params.clone(),
+                    c.insts.to_string(),
+                    c.simulated_insts.to_string(),
+                    format!("{:.1}x", c.inst_ratio()),
+                    format!("{:.0}", c.calls_per_sec),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "  grid total: {} insts accounted, {} simulated ({:.1}x fold); \
+                 large-class cells at ≥10x are the PR-5 acceptance bound",
+                report.total_insts,
+                report.total_simulated,
+                report.inst_ratio(),
+            );
+            if with_exact {
+                let checked = report.cells.iter().filter(|c| c.exact_cycles.is_some()).count();
+                println!("  exact-mode cross-check recorded for {checked} cells");
+            }
+            degoal_rt::bench::write_json(&report, &out)?;
+            println!("  written to {}", out.display());
+            Ok(())
+        }
         "cores" => {
             let mut t = Table::new(
                 "Simulated cores (paper Tables 1-2)",
@@ -377,6 +418,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     transfer priors with a cold-vs-transfer time-to-best comparison\n\
                  \x20 host-tune [--dim D] [--calls N]\n\
                  \x20     online auto-tuning on the host PJRT (needs the `pjrt` feature)\n\
+                 \x20 bench [--reps N] [--quick] [--exact] [--out PATH]\n\
+                 \x20     time the fixed simulate_call grid (cores x kernels x params) and\n\
+                 \x20     write results/bench.json: calls/sec plus the deterministic\n\
+                 \x20     simulated-vs-extrapolated instruction counters of the steady-state\n\
+                 \x20     fast path (DEGOAL_SIM_EXACT=1 disables the fast path process-wide;\n\
+                 \x20     --exact records an exact-mode cycle cross-check per cell)\n\
                  \x20 cores\n\
                  \x20     list simulated core configs\n\
                  \x20 artifacts-check\n\

@@ -27,9 +27,11 @@
 //!   The tool time is charged to the tuned lane's own virtual clock
 //!   exactly as app-call-driven tuning charges it (the accounting is
 //!   migration- and speculation-invariant); targets rotate round-robin
-//!   so every unfinished lane gets idle cycles; barrier waiters suspend
-//!   new bursts so `drain` cannot starve. Off (the default) the engine
-//!   is byte-identical to PR 3.
+//!   with lanes that have traffic history strictly preferred over
+//!   never-called lanes (cold parked lanes may never be called again),
+//!   so every demonstrably-live lane gets idle cycles first; barrier
+//!   waiters suspend new bursts so `drain` cannot starve. Off (the
+//!   default) the engine is byte-identical to PR 3.
 //! * **Dynamic lanes**: registration and retirement go through the
 //!   shared scheduler directly — a control path beside the call path —
 //!   so [`EngineController::register_lane`] / [`retire_lane`] work on a
@@ -197,19 +199,38 @@ fn next_lane<B: Backend>(sched: &mut Sched<B>, w: usize, steal: bool) -> Option<
 /// parked, live, backlog-free lanes whose exploration is unfinished. The
 /// cursor makes the choice deterministic and fair — every explorable lane
 /// gets idle time, not just the lowest id.
+///
+/// Placement policy (ROADMAP PR-4 follow-up): lanes with traffic history
+/// (`kernel_calls > 0`) are strictly preferred — a cold parked lane may
+/// never be called again, so idle cycles go first to kernels a client
+/// demonstrably runs. Never-called lanes are the fallback, which keeps
+/// zero-traffic speculative warm-up working when nothing has traffic yet.
 fn next_idle_lane<B: Backend>(sched: &mut Sched<B>) -> Option<usize> {
     let n = sched.slots.len();
+    let mut fallback = None;
+    let mut found = None;
     for off in 0..n {
         let id = (sched.idle_rr + off) % n;
         let slot = &sched.slots[id];
         let explorable =
             slot.lane.as_ref().map(|l| !l.tuner.exploration_done()).unwrap_or(false);
-        if explorable && !slot.queued && slot.pending == 0 && !slot.retiring {
-            sched.idle_rr = (id + 1) % n;
-            return Some(id);
+        let eligible = explorable && !slot.queued && slot.pending == 0 && !slot.retiring;
+        if !eligible {
+            continue;
+        }
+        let trafficked =
+            slot.lane.as_ref().map(|l| l.tuner.stats.kernel_calls > 0).unwrap_or(false);
+        if trafficked {
+            found = Some(id);
+            break;
+        }
+        if fallback.is_none() {
+            fallback = Some(id);
         }
     }
-    None
+    let id = found.or(fallback)?;
+    sched.idle_rr = (id + 1) % n;
+    Some(id)
 }
 
 /// Retirement endpoint (caller holds the scheduler lock, lane parked

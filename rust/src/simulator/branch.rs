@@ -65,6 +65,14 @@ impl BranchPredictor {
         correct
     }
 
+    /// Back to the cold post-construction state without reallocating.
+    pub fn reset(&mut self) {
+        self.counters.fill(1);
+        self.loops.fill((0, 0, false));
+        self.predictions = 0;
+        self.mispredicts = 0;
+    }
+
     pub fn mispredict_rate(&self) -> f64 {
         if self.predictions == 0 {
             0.0

@@ -58,6 +58,13 @@ impl TagStore {
         let set = (line as usize) % self.sets;
         self.tags[set * self.assoc..(set + 1) * self.assoc].contains(&line)
     }
+
+    /// Back to the post-construction state without reallocating.
+    pub fn reset(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.stamps.fill(0);
+        self.tick = 0;
+    }
 }
 
 /// Fixed-capacity ring of completion times: MSHRs and write buffers.
@@ -125,7 +132,7 @@ impl PrefetchBuffer {
 }
 
 /// Per-trace memory statistics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MemStats {
     pub l1_hits: u64,
     pub l1_misses: u64,
@@ -133,6 +140,36 @@ pub struct MemStats {
     pub l2_misses: u64,
     pub prefetch_hits: u64,
     pub prefetches_issued: u64,
+}
+
+impl MemStats {
+    /// `self - prev`, counter-wise — the steady-state detector's
+    /// per-block delta. Built as a struct literal so adding a counter
+    /// field is a compile error here (and in [`MemStats::add_scaled`])
+    /// instead of a silently-dropped observable.
+    pub fn minus(&self, prev: &MemStats) -> MemStats {
+        MemStats {
+            l1_hits: self.l1_hits - prev.l1_hits,
+            l1_misses: self.l1_misses - prev.l1_misses,
+            l2_hits: self.l2_hits - prev.l2_hits,
+            l2_misses: self.l2_misses - prev.l2_misses,
+            prefetch_hits: self.prefetch_hits - prev.prefetch_hits,
+            prefetches_issued: self.prefetches_issued - prev.prefetches_issued,
+        }
+    }
+
+    /// `self += other * times` — the extrapolation/accumulation
+    /// primitive (see [`MemStats::minus`] re field coverage).
+    pub fn add_scaled(&mut self, other: &MemStats, times: u64) {
+        *self = MemStats {
+            l1_hits: self.l1_hits + other.l1_hits * times,
+            l1_misses: self.l1_misses + other.l1_misses * times,
+            l2_hits: self.l2_hits + other.l2_hits * times,
+            l2_misses: self.l2_misses + other.l2_misses * times,
+            prefetch_hits: self.prefetch_hits + other.prefetch_hits * times,
+            prefetches_issued: self.prefetches_issued + other.prefetches_issued * times,
+        };
+    }
 }
 
 /// The memory system of one core.
@@ -259,6 +296,19 @@ impl MemSys {
         };
         self.stats.prefetches_issued += 1;
         self.prefetch.insert(line, arrival);
+    }
+
+    /// Back to the cold post-construction state, reusing every
+    /// allocation — the per-candidate reset of the backend's persistent
+    /// pipeline scratch (`Pipeline::reset`).
+    pub fn reset(&mut self) {
+        self.l1.reset();
+        self.l2.reset();
+        self.l1_mshrs.slots.fill(0);
+        self.write_buf.slots.fill(0);
+        self.prefetch.entries.clear();
+        self.streams.clear();
+        self.stats = MemStats::default();
     }
 
     /// Stride prefetcher (degree `prefetch_degree`): per-stream stride

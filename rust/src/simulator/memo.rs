@@ -1,0 +1,212 @@
+//! Process-wide simulation memo — cross-lane result sharing.
+//!
+//! A simulated measurement is a pure function of `(core, kernel shape,
+//! kernel version, simulation mode)`: the model is deterministic and
+//! every backend measures from a freshly reset pipeline. N tuner lanes
+//! serving the same simulated device (the service / engine workloads
+//! replay several shape-class clients per kernel) therefore re-derive
+//! identical numbers. [`SharedSimMemo`] shares them: lock shards hashed
+//! by key behind one `Clone + Send + Sync` handle — the same sharding
+//! pattern as `cache::SharedTuneCache` — with a process-wide default
+//! instance ([`SharedSimMemo::global`]) that every `SimBackend` joins
+//! unless a test asks for an isolated one.
+//!
+//! Because values are order-independent (whichever lane computes first
+//! inserts the same number any other lane would), sharing cannot perturb
+//! the engine's determinism suites: sequential and threaded modes read
+//! bit-identical scores.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::steady::SimMode;
+use super::trace::{KernelKind, RefKind};
+
+/// Lock shards — a handful of worker threads rarely contend.
+pub const MEMO_SHARDS: usize = 8;
+
+/// Which measurement of a kernel version a memo entry holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoEntry {
+    /// Steady-state (warm-cache) variant measurement, by `full_id`.
+    WarmVariant(u32),
+    /// Steady-state reference measurement.
+    WarmReference(RefKind),
+    /// Training-input variant measurement (reduced warmed data set).
+    TrainingVariant(u32),
+    /// Training-input reference measurement.
+    TrainingReference(RefKind),
+}
+
+/// Full memo key. The simulated core is identified by its static config
+/// name (all configs are statics with unique names), and the mode is part
+/// of the key so exact- and steady-mode processes never mix results.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MemoKey {
+    pub core: &'static str,
+    pub kind: KernelKind,
+    pub mode: SimMode,
+    pub entry: MemoEntry,
+}
+
+/// One lock shard: plain `HashMap` under its own mutex.
+type Shard = Mutex<HashMap<MemoKey, (f64, f64)>>;
+
+struct Inner {
+    shards: Box<[Shard]>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// A `Clone + Send + Sync` handle to one sharded simulation memo.
+/// Values are `(seconds, energy_j)` pairs (energy 0 for training
+/// entries, which only score time).
+#[derive(Clone)]
+pub struct SharedSimMemo {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for SharedSimMemo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedSimMemo")
+            .field("len", &self.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+impl Default for SharedSimMemo {
+    fn default() -> Self {
+        SharedSimMemo::new()
+    }
+}
+
+impl SharedSimMemo {
+    pub fn new() -> SharedSimMemo {
+        let shards: Vec<Shard> = (0..MEMO_SHARDS).map(|_| Mutex::new(HashMap::new())).collect();
+        SharedSimMemo {
+            inner: Arc::new(Inner {
+                shards: shards.into_boxed_slice(),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The process-wide instance every `SimBackend` joins by default, so
+    /// lanes on the same simulated device never re-simulate a variant
+    /// another lane already scored.
+    pub fn global() -> SharedSimMemo {
+        static GLOBAL: OnceLock<SharedSimMemo> = OnceLock::new();
+        GLOBAL.get_or_init(SharedSimMemo::new).clone()
+    }
+
+    fn shard(&self, key: &MemoKey) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.inner.shards[(h.finish() as usize) % self.inner.shards.len()]
+    }
+
+    /// Look a measurement up, counting hit/miss.
+    pub fn get(&self, key: &MemoKey) -> Option<(f64, f64)> {
+        let found = self.shard(key).lock().expect("sim memo shard lock").get(key).copied();
+        let ctr = if found.is_some() { &self.inner.hits } else { &self.inner.misses };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        found
+    }
+
+    /// Record a measurement. Last writer wins — all writers compute the
+    /// same value for a key, so the race is benign.
+    pub fn insert(&self, key: MemoKey, value: (f64, f64)) {
+        self.shard(&key).lock().expect("sim memo shard lock").insert(key, value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("sim memo shard lock").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cross-backend lookup hits since process start.
+    pub fn hits(&self) -> u64 {
+        self.inner.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookup misses since process start.
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(id: u32) -> MemoKey {
+        MemoKey {
+            core: "DI-I1",
+            kind: KernelKind::Distance { dim: 64, batch: 64 },
+            mode: SimMode::Steady,
+            entry: MemoEntry::WarmVariant(id),
+        }
+    }
+
+    #[test]
+    fn miss_insert_hit_roundtrip() {
+        let memo = SharedSimMemo::new();
+        assert_eq!(memo.get(&key(7)), None);
+        memo.insert(key(7), (1.5e-6, 3e-9));
+        assert_eq!(memo.get(&key(7)), Some((1.5e-6, 3e-9)));
+        assert_eq!(memo.hits(), 1);
+        assert_eq!(memo.misses(), 1);
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn keys_distinguish_mode_and_entry() {
+        let memo = SharedSimMemo::new();
+        memo.insert(key(1), (1.0, 1.0));
+        let mut exact = key(1);
+        exact.mode = SimMode::Exact;
+        assert_eq!(memo.get(&exact), None, "modes must not mix");
+        let mut train = key(1);
+        train.entry = MemoEntry::TrainingVariant(1);
+        assert_eq!(memo.get(&train), None);
+    }
+
+    #[test]
+    fn clones_share_storage() {
+        let memo = SharedSimMemo::new();
+        let peer = memo.clone();
+        memo.insert(key(2), (2.0, 0.5));
+        assert_eq!(peer.get(&key(2)), Some((2.0, 0.5)));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let memo = SharedSimMemo::new();
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let m = memo.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..64 {
+                    m.insert(key(t * 1000 + i), (i as f64, 0.0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(memo.len(), 4 * 64);
+    }
+}

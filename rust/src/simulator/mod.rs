@@ -11,17 +11,42 @@
 //! The model is *approximate by design*: the goal is the paper's
 //! experimental shape (IO vs OOO gaps, parameter/pipeline correlations,
 //! crossover positions), not absolute cycle counts of the authors' testbed.
+//!
+//! ## Evaluation cost: O(warm-up), not O(trip count)
+//!
+//! Traces are generated and executed *block-wise*: one block per outer
+//! kernel iteration (point / row — see the block-structure notes in
+//! [`trace`]), over a [`Pipeline`] that is resumable across blocks. The
+//! `steady` module watches the per-block cost deltas and, once `K`
+//! consecutive windows are identical in every observable (cycles,
+//! per-class FU occupancy, memory-hit profile, branch outcomes),
+//! extrapolates the remaining iterations analytically — every counter
+//! scales linearly. [`ExecStats::simulated_insts`] vs
+//! [`ExecStats::extrapolated_insts`] make the saving observable and
+//! deterministic (`degoal-rt bench` and the CI perf guard assert on
+//! them, never on wall clock). [`SimMode::Exact`] — or the process-wide
+//! `DEGOAL_SIM_EXACT=1` escape hatch — restores the full walk;
+//! `rust/tests/sim_steady.rs` pins fast-vs-exact agreement.
+//!
+//! The `memo` module complements the per-backend memoisation with a
+//! process-wide [`SharedSimMemo`] keyed by `(core, kind, version, mode)`
+//! so concurrent tuner lanes on the same simulated device never
+//! re-simulate a variant another lane already scored.
 
 pub mod branch;
 pub mod cache;
 pub mod config;
 pub mod energy;
+pub mod memo;
 pub mod pipeline;
+pub mod steady;
 pub mod trace;
 
 pub use config::{core_by_name, equivalent_pairs, CoreConfig, CoreKind, ALL_SIM_CORES, CORE_A8, CORE_A9};
 pub use energy::EnergyModel;
+pub use memo::{MemoEntry, MemoKey, SharedSimMemo};
 pub use pipeline::{ExecStats, Pipeline};
+pub use steady::{run_reference_call, run_variant_call, SimMode};
 pub use trace::{Inst, KernelKind, OpClass, RefKind, TraceGen};
 
 use crate::tunespace::TuningParams;
@@ -30,42 +55,87 @@ use crate::tunespace::TuningParams;
 #[derive(Debug, Clone, Copy)]
 pub struct SimResult {
     pub cycles: u64,
+    /// Total instructions accounted for (simulated + extrapolated).
     pub insts: u64,
+    /// Instructions the pipeline actually walked.
+    pub simulated_insts: u64,
+    /// Instructions accounted by steady-state extrapolation.
+    pub extrapolated_insts: u64,
     /// Seconds at the core's clock.
     pub seconds: f64,
     /// Dynamic + leakage energy in joules.
     pub energy_j: f64,
 }
 
+fn result_from(core: &CoreConfig, stats: &ExecStats) -> SimResult {
+    let seconds = stats.cycles as f64 / (core.clock_ghz * 1e9);
+    let energy = EnergyModel::new(core).energy_j(stats, seconds);
+    SimResult {
+        cycles: stats.cycles,
+        insts: stats.insts,
+        simulated_insts: stats.simulated_insts,
+        extrapolated_insts: stats.extrapolated_insts,
+        seconds,
+        energy_j: energy,
+    }
+}
+
 /// Convenience front door: simulate one kernel call of `kind` with tuning
-/// parameters `params` on `core`.
+/// parameters `params` on `core`, in the environment-selected mode
+/// ([`SimMode::from_env`] — steady-state fast path unless
+/// `DEGOAL_SIM_EXACT=1`).
 pub fn simulate_call(
     core: &CoreConfig,
     kind: &KernelKind,
     params: &TuningParams,
     gen: &mut TraceGen,
 ) -> SimResult {
-    let trace = gen.kernel_trace(kind, params);
-    simulate_trace(core, trace)
+    simulate_call_mode(core, kind, params, gen, SimMode::from_env())
 }
 
-/// Simulate a reference (compiled-C analogue) kernel call.
+/// [`simulate_call`] with an explicit [`SimMode`].
+pub fn simulate_call_mode(
+    core: &CoreConfig,
+    kind: &KernelKind,
+    params: &TuningParams,
+    gen: &mut TraceGen,
+    mode: SimMode,
+) -> SimResult {
+    let mut pipe = Pipeline::new(core);
+    let stats = run_variant_call(&mut pipe, gen, kind, params, mode);
+    result_from(core, &stats)
+}
+
+/// Simulate a reference (compiled-C analogue) kernel call in the
+/// environment-selected mode.
 pub fn simulate_ref_call(
     core: &CoreConfig,
     kind: &KernelKind,
     rk: RefKind,
     gen: &mut TraceGen,
 ) -> SimResult {
-    let trace = gen.ref_trace(kind, rk);
-    simulate_trace(core, trace)
+    simulate_ref_call_mode(core, kind, rk, gen, SimMode::from_env())
 }
 
+/// [`simulate_ref_call`] with an explicit [`SimMode`].
+pub fn simulate_ref_call_mode(
+    core: &CoreConfig,
+    kind: &KernelKind,
+    rk: RefKind,
+    gen: &mut TraceGen,
+    mode: SimMode,
+) -> SimResult {
+    let mut pipe = Pipeline::new(core);
+    let stats = run_reference_call(&mut pipe, gen, kind, rk, mode);
+    result_from(core, &stats)
+}
+
+/// Exact flat-trace simulation (no block structure, no extrapolation) —
+/// kept for callers that already materialised a trace.
 pub fn simulate_trace(core: &CoreConfig, trace: &[Inst]) -> SimResult {
     let mut pipe = Pipeline::new(core);
     let stats = pipe.run(trace);
-    let seconds = stats.cycles as f64 / (core.clock_ghz * 1e9);
-    let energy = EnergyModel::new(core).energy_j(&stats, seconds);
-    SimResult { cycles: stats.cycles, insts: stats.insts, seconds, energy_j: energy }
+    result_from(core, &stats)
 }
 
 #[cfg(test)]

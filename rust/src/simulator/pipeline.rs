@@ -8,6 +8,18 @@
 //! ROB-sized window with in-order retirement; register renaming is modeled
 //! by tracking only true (RAW) dependencies through a value-ready table.
 //! Mispredicted branches stall the front end for the refill penalty.
+//!
+//! The model is *resumable across blocks*: one logical run is
+//! [`Pipeline::begin_run`], any number of [`Pipeline::feed`] calls (each a
+//! contiguous slice of the trace — the scoreboard, port occupancy, fetch
+//! and retire rings, memory system, and branch predictor all carry over),
+//! and [`Pipeline::end_run`]. [`Pipeline::run`] is the one-shot
+//! composition of the three. `simulator::steady` feeds one loop-iteration
+//! block at a time and stops feeding once the per-iteration cost has
+//! provably stabilised, extrapolating the remainder analytically
+//! ([`Pipeline::extrapolate`]) — which is why [`ExecStats`] splits `insts`
+//! into `simulated_insts` (actually walked) and `extrapolated_insts`
+//! (accounted without walking).
 
 use super::branch::BranchPredictor;
 use super::cache::{MemStats, MemSys};
@@ -34,10 +46,16 @@ pub fn op_index(op: OpClass) -> usize {
 
 /// Execution statistics of one trace (consumed by the energy model and
 /// the experiment harnesses).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecStats {
     pub cycles: u64,
+    /// Total instructions accounted for: `simulated + extrapolated`.
     pub insts: u64,
+    /// Instructions the pipeline model actually walked this run.
+    pub simulated_insts: u64,
+    /// Instructions accounted analytically by steady-state extrapolation
+    /// (0 in exact mode and whenever the steady state was never reached).
+    pub extrapolated_insts: u64,
     pub op_counts: [u64; N_OP_CLASSES],
     pub mem: MemStats,
     pub branch_mispredicts: u64,
@@ -108,6 +126,11 @@ impl PortPool {
             return c;
         }
     }
+
+    /// Empty occupancy without reallocating (per-run reset).
+    fn reset(&mut self) {
+        self.tags.fill(u64::MAX);
+    }
 }
 
 /// Function-unit pools: per-class port occupancy.
@@ -141,6 +164,14 @@ impl Ports {
             shared_ls: cfg.ls_shared,
         }
     }
+
+    fn reset(&mut self) {
+        self.int_alu.reset();
+        self.int_mul.reset();
+        self.vpu.reset();
+        self.load.reset();
+        self.store.reset();
+    }
 }
 
 pub struct Pipeline<'a> {
@@ -148,21 +179,82 @@ pub struct Pipeline<'a> {
     mem: MemSys,
     bp: BranchPredictor,
     debug_n: usize,
-    /// Absolute cycle at which the next `run` starts. Time is continuous
+    /// Absolute cycle at which the next run starts. Time is continuous
     /// across runs (the memory system's MSHR/write-buffer occupancy and
     /// prefetch arrivals are absolute times).
     clock_base: u64,
+
+    // ---- per-run state, persistent allocations (reset by begin_run) ----
+    ports: Ports,
+    /// OOO issue bandwidth: the scheduler can start at most
+    /// `backend_width` instructions per cycle, whatever the port mix
+    /// (Table 1 "back-end width").
+    ooo_issue: PortPool,
+    /// Retire-ring length: ROB size for OOO cores, 1 for IO.
+    rob: usize,
+    reg_ready: [u64; 256],
+    /// Fetch bandwidth: dispatch[i] >= dispatch[i - width] + 1.
+    fetch_ring: Vec<u64>,
+    /// In-order retire times (the OOO window admission check).
+    retire_ring: Vec<u64>,
+    /// Front-end stall due to a mispredicted branch.
+    fetch_after: u64,
+    /// In-order issue cursor.
+    last_issue: u64,
+    issued_this_cycle: u32,
+    last_retire: u64,
+    last_complete: u64,
+    /// Cycle the current run started at (== clock_base at begin_run).
+    start: u64,
+    /// Global instruction index within the current run (continues across
+    /// `feed` calls — the fetch/retire rings key off it).
+    idx: usize,
+    op_counts: [u64; N_OP_CLASSES],
+    simulated_insts: u64,
+    extrapolated_insts: u64,
+    extrapolated_cycles: u64,
 }
 
 impl<'a> Pipeline<'a> {
     pub fn new(cfg: &'a CoreConfig) -> Pipeline<'a> {
-        Pipeline {
+        let ooo = cfg.kind == CoreKind::OutOfOrder;
+        let rob = if ooo { cfg.rob.max(cfg.width) as usize } else { 1 };
+        let mut p = Pipeline {
             cfg,
             mem: MemSys::new(cfg),
             bp: BranchPredictor::new(cfg.bp_entries),
             debug_n: 0,
             clock_base: 0,
-        }
+            ports: Ports::new(cfg),
+            ooo_issue: PortPool::new(cfg.backend_width),
+            rob,
+            reg_ready: [0; 256],
+            fetch_ring: vec![0; cfg.width as usize],
+            retire_ring: vec![0; rob],
+            fetch_after: 0,
+            last_issue: 0,
+            issued_this_cycle: 0,
+            last_retire: 0,
+            last_complete: 0,
+            start: 0,
+            idx: 0,
+            op_counts: [0; N_OP_CLASSES],
+            simulated_insts: 0,
+            extrapolated_insts: 0,
+            extrapolated_cycles: 0,
+        };
+        p.begin_run();
+        p
+    }
+
+    /// Back to the cold post-construction state (cold caches, untrained
+    /// branch predictor, clock at 0), reusing every allocation — the
+    /// per-candidate reset of a backend's persistent pipeline scratch.
+    pub fn reset(&mut self) {
+        self.mem.reset();
+        self.bp.reset();
+        self.clock_base = 0;
+        self.begin_run();
     }
 
     /// Debug: like `run` but prints per-instruction timing for the first
@@ -176,45 +268,60 @@ impl<'a> Pipeline<'a> {
 
     /// Memory state persists across `run` calls within one Pipeline —
     /// useful for modeling warmed caches (training-data evaluation).
+    /// Equivalent to `begin_run` + one `feed` + `end_run`.
     pub fn run(&mut self, trace: &[Inst]) -> ExecStats {
+        self.begin_run();
+        self.feed(trace);
+        self.end_run()
+    }
+
+    /// Start a new logical run at the current clock: empty scoreboard,
+    /// free ports, fetch/retire rings at the run's start cycle. Memory
+    /// system and branch predictor state persist from previous runs.
+    pub fn begin_run(&mut self) {
+        let start = self.clock_base;
+        self.start = start;
+        self.ports.reset();
+        self.ooo_issue.reset();
+        self.reg_ready.fill(start);
+        self.fetch_ring.fill(start);
+        self.retire_ring.fill(start);
+        self.fetch_after = start;
+        self.last_issue = start;
+        self.issued_this_cycle = 0;
+        self.last_retire = start;
+        self.last_complete = start;
+        self.idx = 0;
+        self.op_counts = [0; N_OP_CLASSES];
+        self.simulated_insts = 0;
+        self.extrapolated_insts = 0;
+        self.extrapolated_cycles = 0;
+    }
+
+    /// Execute a contiguous slice of the run's trace. All pipeline state
+    /// carries over from the previous `feed` — feeding a trace in chunks
+    /// produces bit-identical results to feeding it whole.
+    pub fn feed(&mut self, trace: &[Inst]) {
         let cfg = self.cfg;
         let ooo = cfg.kind == CoreKind::OutOfOrder;
-        let width = cfg.width as u64;
-        let rob = if ooo { cfg.rob.max(cfg.width) as usize } else { 1 };
-
-        let start = self.clock_base;
-        let mut ports = Ports::new(cfg);
-        let mut reg_ready = [start; 256];
-        let mut op_counts = [0u64; N_OP_CLASSES];
-
-        // Fetch bandwidth: dispatch[i] >= dispatch[i - width] + 1.
-        let mut fetch_ring: Vec<u64> = vec![start; width as usize];
-        // Front-end stall due to a mispredicted branch.
-        let mut fetch_after: u64 = start;
-        // In-order issue cursor (IO) / in-order retire times (OOO window).
-        let mut last_issue: u64 = start;
+        let width = cfg.width as usize;
+        let rob = self.rob;
         // Issue-bandwidth cap (IO only): at most `width` instructions may
         // begin execution in the same cycle. OOO issue times are not
         // monotone; there the cap is enforced by FU ports and the
         // retirement bandwidth floor.
         let issue_cap = cfg.width;
-        let mut issued_this_cycle: u32 = 0;
-        // OOO issue bandwidth: the scheduler can start at most
-        // `backend_width` instructions per cycle, whatever the port mix
-        // (Table 1 "back-end width").
-        let mut ooo_issue = PortPool::new(cfg.backend_width);
-        let mut retire_ring: Vec<u64> = vec![start; rob];
-        let mut last_retire: u64 = start;
-        let mut last_complete: u64 = start;
 
-        for (i, inst) in trace.iter().enumerate() {
-            op_counts[op_index(inst.op)] += 1;
+        for inst in trace {
+            let i = self.idx;
+            self.idx += 1;
+            self.op_counts[op_index(inst.op)] += 1;
 
             // --- front end ---
-            let slot = i % width as usize;
-            let fetch = fetch_ring[slot].max(fetch_after);
+            let slot = i % width;
+            let fetch = self.fetch_ring[slot].max(self.fetch_after);
             // Window admission (OOO): the inst `rob` older must have retired.
-            let dispatch = if ooo { fetch.max(retire_ring[i % rob]) } else { fetch };
+            let dispatch = if ooo { fetch.max(self.retire_ring[i % rob]) } else { fetch };
 
             // --- operand readiness (true dependencies only; renaming
             //     removes WAR/WAW for OOO, and in-order issue makes them
@@ -222,33 +329,33 @@ impl<'a> Pipeline<'a> {
             let mut ready = dispatch;
             for r in [inst.src1, inst.src2, inst.src3] {
                 if r != NO_REG {
-                    ready = ready.max(reg_ready[r as usize]);
+                    ready = ready.max(self.reg_ready[r as usize]);
                 }
             }
             if !ooo {
                 // In-order issue: cannot pass older instructions.
-                ready = ready.max(last_issue);
+                ready = ready.max(self.last_issue);
                 // No register renaming: a write must wait for the previous
                 // write to the same architectural register to complete
                 // (WAW). This is exactly the stall hotUF's
                 // distinct-register unrolling exists to avoid (§3.1), and
                 // what OOO cores eliminate in hardware (Table 5 analysis).
                 if inst.dst != NO_REG {
-                    ready = ready.max(reg_ready[inst.dst as usize]);
+                    ready = ready.max(self.reg_ready[inst.dst as usize]);
                 }
             }
-            if !ooo && issued_this_cycle >= issue_cap {
-                ready = ready.max(last_issue + 1);
+            if !ooo && self.issued_this_cycle >= issue_cap {
+                ready = ready.max(self.last_issue + 1);
             }
             if ooo {
                 // Claim an issue slot (backend-width per cycle).
-                ready = ooo_issue.claim(ready, 1);
+                ready = self.ooo_issue.claim(ready, 1);
             }
 
             // --- issue to a function unit & completion ---
             let (issue, complete) = match inst.op {
                 OpClass::IAlu => {
-                    let t = ports.int_alu.claim(ready, 1);
+                    let t = self.ports.int_alu.claim(ready, 1);
                     (t, t + cfg.int_add_lat as u64)
                 }
                 OpClass::VAdd | OpClass::VMul | OpClass::VMla => {
@@ -257,7 +364,7 @@ impl<'a> Pipeline<'a> {
                         OpClass::VMul => cfg.vmul_lat,
                         _ => cfg.vmla_lat,
                     } as u64;
-                    let t = ports.vpu.claim(ready, 1);
+                    let t = self.ports.vpu.claim(ready, 1);
                     (t, t + lat)
                 }
                 OpClass::FAdd | OpClass::FMul | OpClass::FMla => {
@@ -269,35 +376,37 @@ impl<'a> Pipeline<'a> {
                         _ => cfg.vmla_lat,
                     } as u64;
                     let busy = if cfg.scalar_fp_pipelined { 1 } else { lat };
-                    let t = ports.vpu.claim(ready, busy);
+                    let t = self.ports.vpu.claim(ready, busy);
                     (t, t + lat)
                 }
                 OpClass::Load => {
                     // Load-multiple occupies the port one cycle per 16 B.
                     let busy = (inst.bytes as u64).div_ceil(16).max(1);
-                    let t = ports.load.claim(ready, busy);
+                    let t = self.ports.load.claim(ready, busy);
                     let data = self.mem.load(inst.addr, t + cfg.load_lat as u64 - 1);
                     (t, data)
                 }
                 OpClass::Store => {
                     let busy = (inst.bytes as u64).div_ceil(16).max(1);
-                    let pool: &mut PortPool =
-                        if ports.shared_ls { &mut ports.load } else { &mut ports.store };
-                    let t = pool.claim(ready, busy);
+                    let t = if self.ports.shared_ls {
+                        self.ports.load.claim(ready, busy)
+                    } else {
+                        self.ports.store.claim(ready, busy)
+                    };
                     let done = self.mem.store(inst.addr, t + cfg.store_lat as u64 - 1);
                     (t, done)
                 }
                 OpClass::Pld => {
-                    let t = ports.load.claim(ready, 1);
+                    let t = self.ports.load.claim(ready, 1);
                     self.mem.pld(inst.addr, t);
                     (t, t + 1)
                 }
                 OpClass::Branch => {
-                    let t = ports.int_alu.claim(ready, 1);
+                    let t = self.ports.int_alu.claim(ready, 1);
                     let resolve = t + 1;
                     if !self.bp.predict_and_update(inst.addr, inst.taken) {
-                        fetch_after =
-                            fetch_after.max(resolve + cfg.mispredict_penalty as u64);
+                        self.fetch_after =
+                            self.fetch_after.max(resolve + cfg.mispredict_penalty as u64);
                     }
                     (t, resolve)
                 }
@@ -310,40 +419,87 @@ impl<'a> Pipeline<'a> {
                 );
             }
             if inst.dst != NO_REG {
-                reg_ready[inst.dst as usize] = complete;
+                self.reg_ready[inst.dst as usize] = complete;
             }
-            if issue == last_issue {
-                issued_this_cycle += 1;
+            if issue == self.last_issue {
+                self.issued_this_cycle += 1;
             } else {
-                issued_this_cycle = 1;
+                self.issued_this_cycle = 1;
             }
-            last_issue = issue;
-            last_complete = last_complete.max(complete);
+            self.last_issue = issue;
+            self.last_complete = self.last_complete.max(complete);
 
             // --- retirement (in order, backend_width per cycle) ---
-            let retire_bw_slot = i % cfg.backend_width as usize;
             let bw_floor = if i >= cfg.backend_width as usize {
-                retire_ring[(i - cfg.backend_width as usize) % rob] + 1
+                self.retire_ring[(i - cfg.backend_width as usize) % rob] + 1
             } else {
                 0
             };
-            let retire = complete.max(last_retire).max(bw_floor);
-            let _ = retire_bw_slot;
-            retire_ring[i % rob] = retire;
-            last_retire = retire;
+            let retire = complete.max(self.last_retire).max(bw_floor);
+            self.retire_ring[i % rob] = retire;
+            self.last_retire = retire;
 
-            fetch_ring[slot] = fetch + 1;
+            self.fetch_ring[slot] = fetch + 1;
         }
+        self.simulated_insts += trace.len() as u64;
+    }
 
-        let end = last_retire.max(last_complete);
-        self.clock_base = end;
-        ExecStats {
-            cycles: end - start,
-            insts: trace.len() as u64,
-            op_counts,
+    /// Close the run: the run's cycle count is the frontier of simulated
+    /// time plus whatever was extrapolated, and the clock advances there
+    /// so a following run continues seamlessly.
+    pub fn end_run(&mut self) -> ExecStats {
+        let end = self.last_retire.max(self.last_complete) + self.extrapolated_cycles;
+        let stats = ExecStats {
+            cycles: end - self.start,
+            insts: self.simulated_insts + self.extrapolated_insts,
+            simulated_insts: self.simulated_insts,
+            extrapolated_insts: self.extrapolated_insts,
+            op_counts: self.op_counts,
             mem: self.mem.stats,
             branch_mispredicts: self.bp.mispredicts,
+        };
+        self.clock_base = end;
+        stats
+    }
+
+    /// Account `times` further steady-state windows analytically: every
+    /// counter the run reports (cycles, instructions, per-class op
+    /// counts, memory events, branch outcomes) scales linearly with the
+    /// per-window deltas measured by the steady-state detector. Nothing
+    /// may be `feed` after extrapolating within the same run — the
+    /// extrapolated iterations have no simulated micro-state to resume
+    /// from.
+    pub(crate) fn extrapolate(&mut self, d: &super::steady::IterDelta, times: u64) {
+        self.extrapolated_cycles += d.cycles * times;
+        self.extrapolated_insts += d.insts * times;
+        for (c, dc) in self.op_counts.iter_mut().zip(d.op_counts.iter()) {
+            *c += dc * times;
         }
+        self.mem.stats.add_scaled(&d.mem, times);
+        self.bp.predictions += d.predictions * times;
+        self.bp.mispredicts += d.mispredicts * times;
+    }
+
+    /// Frontier of *simulated* time within the current run (absolute
+    /// cycle, excluding extrapolation) — what the steady-state detector
+    /// differences per block.
+    pub fn frontier_cycles(&self) -> u64 {
+        self.last_retire.max(self.last_complete)
+    }
+
+    /// Instructions walked so far in the current run.
+    pub fn run_simulated_insts(&self) -> u64 {
+        self.simulated_insts
+    }
+
+    /// Per-class op counts so far in the current run.
+    pub fn run_op_counts(&self) -> [u64; N_OP_CLASSES] {
+        self.op_counts
+    }
+
+    /// Cumulative branch-predictor counters `(predictions, mispredicts)`.
+    pub fn bp_counters(&self) -> (u64, u64) {
+        (self.bp.predictions, self.bp.mispredicts)
     }
 
     pub fn mem_stats(&self) -> MemStats {
@@ -489,6 +645,42 @@ mod tests {
         let s = run_on("DI-I1", p(true, 1, 1, 1), KernelKind::Distance { dim: 128, batch: 64 });
         assert!(s.mem.l1_hits > 0);
         assert!(s.mem.l1_misses > 0, "streaming loads must miss");
+    }
+
+    #[test]
+    fn chunked_feed_matches_flat_run() {
+        // The resumable core: begin_run + feed-in-chunks + end_run must be
+        // bit-identical to one flat run — this is what makes block-wise
+        // steady-state simulation exact up to the extrapolation point.
+        for core in ["SI-I1", "DI-I1", "TI-O3", "A8"] {
+            let cfg = core_by_name(core).unwrap();
+            let mut gen = TraceGen::new();
+            let kind = KernelKind::Distance { dim: 64, batch: 12 };
+            let trace = gen.kernel_trace(&kind, &p(true, 2, 2, 1)).to_vec();
+            let flat = Pipeline::new(cfg).run(&trace);
+            let mut pipe = Pipeline::new(cfg);
+            pipe.begin_run();
+            for chunk in trace.chunks(37) {
+                pipe.feed(chunk);
+            }
+            let chunked = pipe.end_run();
+            assert_eq!(flat, chunked, "{core}");
+        }
+    }
+
+    #[test]
+    fn reset_reproduces_fresh_pipeline() {
+        let cfg = core_by_name("DI-O1").unwrap();
+        let mut gen = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 64, batch: 8 };
+        let trace = gen.kernel_trace(&kind, &p(true, 1, 2, 1)).to_vec();
+        let fresh = Pipeline::new(cfg).run(&trace);
+        let mut pipe = Pipeline::new(cfg);
+        pipe.run(&trace);
+        pipe.run(&trace);
+        pipe.reset();
+        let reused = pipe.run(&trace);
+        assert_eq!(fresh, reused, "reset must equal a fresh pipeline");
     }
 
     #[test]

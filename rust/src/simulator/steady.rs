@@ -1,0 +1,386 @@
+//! Steady-state periodic simulation — O(warm-up) candidate evaluation.
+//!
+//! The modeled kernels are loops: one call is `outer()` structurally
+//! identical blocks (points / rows) whose instruction streams differ only
+//! in streamed-array addresses (`trace` block structure). After the
+//! memory system, prefetcher, and branch predictor warm up, every block
+//! costs identical cycles with an identical per-class FU and memory-hit
+//! profile — simulating past that point is pure waste.
+//!
+//! [`run_variant_call`] / [`run_reference_call`] therefore feed the
+//! resumable [`Pipeline`] one block at a time and difference the
+//! observable counters per block (cycles, instructions, per-class op
+//! counts, L1/L2/prefetch events, branch outcomes). Once the last
+//! `STEADY_K` windows of some period `P <= MAX_PERIOD` are equal
+//! *position-wise* (periods > 1 absorb address patterns whose line
+//! alignment cycles, e.g. a stride that is not a multiple of the cache
+//! line), the remaining iterations are accounted analytically
+//! ([`Pipeline::extrapolate`]): every reported counter scales linearly in
+//! the number of remaining windows. A few blocks may be fed first so the
+//! remainder is a whole number of windows — extrapolation is always the
+//! *last* thing in a run, so no simulated state ever has to resume after
+//! it.
+//!
+//! Exactness: instruction counts are exact by construction (blocks are
+//! shape-identical); cycles and energy are exact whenever the block
+//! sequence truly is periodic from the detection point on, which holds
+//! for these streaming kernels up to rare line-boundary events whose
+//! period exceeds `MAX_PERIOD` (e.g. the distance kernel's result store
+//! crosses into a new cache line every 16 points). Those events are
+//! timing-neutral (they ride the write buffer) but round the memory-event
+//! and energy totals slightly — `rust/tests/sim_steady.rs` pins the
+//! tolerance. Short trips that never reach `(STEADY_K + 1) * P` stable
+//! blocks fall back to the full walk and are bit-exact trivially.
+//!
+//! [`SimMode::Exact`] (or `DEGOAL_SIM_EXACT=1`) is the escape hatch: walk
+//! every instruction of every block, the pre-PR-5 behaviour.
+
+use super::pipeline::{ExecStats, Pipeline, N_OP_CLASSES};
+use super::trace::{Inst, KernelKind, RefKind, TraceGen};
+use crate::simulator::cache::MemStats;
+use crate::tunespace::TuningParams;
+
+/// How a kernel call is simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimMode {
+    /// Walk every instruction of every iteration (the pre-steady-state
+    /// behaviour; `DEGOAL_SIM_EXACT=1`).
+    Exact,
+    /// Detect the periodic steady state and extrapolate the remainder —
+    /// evaluation cost becomes proportional to the warm-up length, not
+    /// the trip count. The default.
+    Steady,
+}
+
+impl SimMode {
+    /// `DEGOAL_SIM_EXACT=1` (any non-empty value other than `0`) forces
+    /// exact mode process-wide; the default is [`SimMode::Steady`].
+    pub fn from_env() -> SimMode {
+        match std::env::var("DEGOAL_SIM_EXACT") {
+            Ok(v) if !v.is_empty() && v != "0" => SimMode::Exact,
+            _ => SimMode::Steady,
+        }
+    }
+}
+
+/// Consecutive identical windows required before extrapolating.
+pub const STEADY_K: usize = 3;
+/// Largest per-block period the detector searches for. Periods above 1
+/// absorb line-alignment cycles (a per-iteration address stride that is
+/// not a multiple of the cache line) and short set-rotation beats of the
+/// streamed arrays against the resident ones.
+pub const MAX_PERIOD: usize = 8;
+/// Delta history ring: detection needs the last `(STEADY_K + 1) * P`
+/// block deltas for a period-`P` match.
+const RING: usize = (STEADY_K + 1) * MAX_PERIOD;
+
+/// Observable per-block cost deltas — equality of `STEADY_K` consecutive
+/// windows of these is the steady-state criterion, and one window's sums
+/// are the linear extrapolation coefficients.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub(crate) struct IterDelta {
+    pub cycles: u64,
+    pub insts: u64,
+    pub op_counts: [u64; N_OP_CLASSES],
+    pub mem: MemStats,
+    pub predictions: u64,
+    pub mispredicts: u64,
+}
+
+impl IterDelta {
+    fn accumulate(&mut self, d: &IterDelta) {
+        self.cycles += d.cycles;
+        self.insts += d.insts;
+        for (c, dc) in self.op_counts.iter_mut().zip(d.op_counts.iter()) {
+            *c += dc;
+        }
+        self.mem.add_scaled(&d.mem, 1);
+        self.predictions += d.predictions;
+        self.mispredicts += d.mispredicts;
+    }
+}
+
+/// Counter snapshot at a block boundary.
+#[derive(Debug, Clone, Copy)]
+struct Snapshot {
+    cycles: u64,
+    insts: u64,
+    op_counts: [u64; N_OP_CLASSES],
+    mem: MemStats,
+    predictions: u64,
+    mispredicts: u64,
+}
+
+impl Snapshot {
+    fn take(pipe: &Pipeline<'_>) -> Snapshot {
+        let (predictions, mispredicts) = pipe.bp_counters();
+        Snapshot {
+            cycles: pipe.frontier_cycles(),
+            insts: pipe.run_simulated_insts(),
+            op_counts: pipe.run_op_counts(),
+            mem: pipe.mem_stats(),
+            predictions,
+            mispredicts,
+        }
+    }
+
+    fn delta(&self, prev: &Snapshot) -> IterDelta {
+        let mut op_counts = [0u64; N_OP_CLASSES];
+        for (i, c) in op_counts.iter_mut().enumerate() {
+            *c = self.op_counts[i] - prev.op_counts[i];
+        }
+        IterDelta {
+            cycles: self.cycles - prev.cycles,
+            insts: self.insts - prev.insts,
+            op_counts,
+            mem: self.mem.minus(&prev.mem),
+            predictions: self.predictions - prev.predictions,
+            mispredicts: self.mispredicts - prev.mispredicts,
+        }
+    }
+}
+
+/// Which trace family a call simulates.
+#[derive(Clone, Copy)]
+enum TraceSpec<'a> {
+    Variant(&'a TuningParams),
+    Reference(RefKind),
+}
+
+fn emit_block<'g>(
+    gen: &'g mut TraceGen,
+    kind: &KernelKind,
+    spec: TraceSpec<'_>,
+    b: u32,
+) -> &'g [Inst] {
+    match spec {
+        TraceSpec::Variant(p) => gen.kernel_block(kind, p, b),
+        TraceSpec::Reference(rk) => gen.ref_block(kind, rk, b),
+    }
+}
+
+/// Simulate one auto-tuned-variant call block by block on `pipe`
+/// (continuing from its current memory/predictor/clock state) and return
+/// the run's statistics.
+pub fn run_variant_call(
+    pipe: &mut Pipeline<'_>,
+    gen: &mut TraceGen,
+    kind: &KernelKind,
+    p: &TuningParams,
+    mode: SimMode,
+) -> ExecStats {
+    run_call(pipe, gen, kind, TraceSpec::Variant(p), mode)
+}
+
+/// Simulate one reference-kernel call (see [`run_variant_call`]).
+pub fn run_reference_call(
+    pipe: &mut Pipeline<'_>,
+    gen: &mut TraceGen,
+    kind: &KernelKind,
+    rk: RefKind,
+    mode: SimMode,
+) -> ExecStats {
+    run_call(pipe, gen, kind, TraceSpec::Reference(rk), mode)
+}
+
+fn run_call(
+    pipe: &mut Pipeline<'_>,
+    gen: &mut TraceGen,
+    kind: &KernelKind,
+    spec: TraceSpec<'_>,
+    mode: SimMode,
+) -> ExecStats {
+    let outer = kind.outer();
+    pipe.begin_run();
+    match mode {
+        SimMode::Exact => {
+            for b in 0..outer {
+                pipe.feed(emit_block(gen, kind, spec, b));
+            }
+        }
+        SimMode::Steady => steady_walk(pipe, gen, kind, spec, outer),
+    }
+    pipe.end_run()
+}
+
+fn steady_walk(
+    pipe: &mut Pipeline<'_>,
+    gen: &mut TraceGen,
+    kind: &KernelKind,
+    spec: TraceSpec<'_>,
+    outer: u32,
+) {
+    let mut ring = [IterDelta::default(); RING];
+    let mut seen = 0usize;
+    let mut prev = Snapshot::take(pipe);
+    let mut b = 0u32;
+    while b < outer {
+        pipe.feed(emit_block(gen, kind, spec, b));
+        b += 1;
+        let now = Snapshot::take(pipe);
+        ring[seen % RING] = now.delta(&prev);
+        prev = now;
+        seen += 1;
+        if b == outer {
+            return;
+        }
+        let Some(period) = detect(&ring, seen) else {
+            continue;
+        };
+        // Feed a few more blocks so the remainder is a whole number of
+        // windows — extrapolation is always the run's final act, so the
+        // simulated state never has to resume after it.
+        let tail = ((outer - b) as usize) % period;
+        for _ in 0..tail {
+            pipe.feed(emit_block(gen, kind, spec, b));
+            b += 1;
+        }
+        let windows = ((outer - b) as usize / period) as u64;
+        if windows > 0 {
+            let mut window = IterDelta::default();
+            for j in 1..=period {
+                window.accumulate(&ring[(seen - j) % RING]);
+            }
+            pipe.extrapolate(&window, windows);
+        }
+        return;
+    }
+}
+
+/// The steady-state criterion: the smallest period `P <= MAX_PERIOD` for
+/// which the last `STEADY_K` windows repeat the window before them
+/// position-wise, i.e. `delta[i] == delta[i - P]` for the most recent
+/// `STEADY_K * P` deltas.
+fn detect(ring: &[IterDelta; RING], seen: usize) -> Option<usize> {
+    for p in 1..=MAX_PERIOD {
+        let need = (STEADY_K + 1) * p;
+        if seen < need {
+            continue;
+        }
+        let stable =
+            (1..=STEADY_K * p).all(|j| ring[(seen - j) % RING] == ring[(seen - j - p) % RING]);
+        if stable {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::config::core_by_name;
+    use crate::tunespace::Structural;
+
+    fn delta(cycles: u64) -> IterDelta {
+        IterDelta { cycles, insts: 10, ..Default::default() }
+    }
+
+    fn detect_seq(deltas: &[IterDelta]) -> Option<usize> {
+        let mut ring = [IterDelta::default(); RING];
+        let mut hit = None;
+        for (i, d) in deltas.iter().enumerate() {
+            ring[i % RING] = *d;
+            if hit.is_none() {
+                hit = detect(&ring, i + 1);
+            }
+        }
+        hit
+    }
+
+    #[test]
+    fn detector_fires_on_constant_deltas() {
+        let seq: Vec<IterDelta> = (0..6).map(|_| delta(100)).collect();
+        assert_eq!(detect_seq(&seq), Some(1));
+        // Needs (K + 1) identical deltas, not fewer.
+        assert_eq!(detect_seq(&seq[..STEADY_K]), None);
+        assert_eq!(detect_seq(&seq[..STEADY_K + 1]), Some(1));
+    }
+
+    #[test]
+    fn detector_finds_period_two() {
+        let seq: Vec<IterDelta> =
+            (0..12).map(|i| delta(if i % 2 == 0 { 100 } else { 140 })).collect();
+        let hit = detect_seq(&seq);
+        assert_eq!(hit, Some(2));
+    }
+
+    #[test]
+    fn detector_ignores_drifting_deltas() {
+        let seq: Vec<IterDelta> = (0..80).map(|i| delta(100 + i)).collect();
+        assert_eq!(detect_seq(&seq), None);
+        // A (prime) period above MAX_PERIOD is not (falsely) matched.
+        let above = MAX_PERIOD as u64 + 5;
+        assert!(above == 13, "test assumes MAX_PERIOD == 8");
+        let long: Vec<IterDelta> = (0..80).map(|i| delta(100 + (i % above))).collect();
+        assert_eq!(detect_seq(&long), None);
+    }
+
+    #[test]
+    fn detector_window_compares_all_observables() {
+        // Same cycles, different memory profile: not steady.
+        let mut seq: Vec<IterDelta> = (0..8).map(|_| delta(100)).collect();
+        for (i, d) in seq.iter_mut().enumerate() {
+            d.mem.l1_misses = (i % 5) as u64;
+        }
+        assert_eq!(detect_seq(&seq), None);
+    }
+
+    #[test]
+    fn short_trip_falls_back_to_full_walk() {
+        // outer <= STEADY_K + 1 can never fire the detector: the fast
+        // path is the exact walk, bit for bit.
+        let core = core_by_name("DI-I1").unwrap();
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 1));
+        for batch in [1u32, 2, 3, 4] {
+            let kind = KernelKind::Distance { dim: 64, batch };
+            let mut gen = TraceGen::new();
+            let exact =
+                run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Exact);
+            let fast =
+                run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Steady);
+            assert_eq!(exact, fast, "batch {batch}");
+            assert_eq!(fast.extrapolated_insts, 0, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn long_trip_extrapolates_most_blocks() {
+        let core = core_by_name("DI-I1").unwrap();
+        let p = TuningParams::phase1_default(Structural::new(true, 1, 1, 1));
+        let kind = KernelKind::Distance { dim: 64, batch: 256 };
+        let mut gen = TraceGen::new();
+        let exact =
+            run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Exact);
+        let fast =
+            run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Steady);
+        assert_eq!(fast.insts, exact.insts, "inst totals are exact by construction");
+        assert_eq!(fast.simulated_insts + fast.extrapolated_insts, fast.insts);
+        assert!(
+            fast.extrapolated_insts > fast.simulated_insts,
+            "most of a 256-point call must be extrapolated: {fast:?}"
+        );
+        let rel = (fast.cycles as f64 - exact.cycles as f64).abs() / exact.cycles as f64;
+        assert!(rel < 0.01, "cycles drift {rel} vs exact");
+    }
+
+    #[test]
+    fn steady_mode_is_deterministic() {
+        let core = core_by_name("TI-O3").unwrap();
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 2));
+        let kind = KernelKind::Distance { dim: 128, batch: 256 };
+        let mut gen = TraceGen::new();
+        let a = run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Steady);
+        let b = run_variant_call(&mut Pipeline::new(core), &mut gen, &kind, &p, SimMode::Steady);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mode_from_env_defaults_to_steady() {
+        // Read-only check: tests must not mutate the process environment
+        // (other threads read it concurrently).
+        if std::env::var("DEGOAL_SIM_EXACT").is_err() {
+            assert_eq!(SimMode::from_env(), SimMode::Steady);
+        }
+    }
+}

@@ -13,6 +13,18 @@
 //! `vectLen` architectural registers (1 in SISD mode). Load-multiple
 //! instructions (one inst, several registers) model the paper's
 //! observation that longer vectors save code size and issue slots.
+//!
+//! ## Block structure
+//!
+//! Every kernel call is `outer()` repetitions (points / rows) of one
+//! structurally identical *block*: the instruction stream of block `b`
+//! differs from block 0 only in the byte addresses of the streamed
+//! arrays (the per-iteration base shift) — op classes, register ids,
+//! branch site ids and taken flags are all equal. [`TraceGen::kernel_block`]
+//! / [`TraceGen::ref_block`] emit one block at a time so the pipeline can
+//! be fed incrementally (and stop feeding once the steady state is
+//! detected, see `simulator::steady`); [`TraceGen::kernel_trace`] /
+//! [`TraceGen::ref_trace`] remain the flat concatenation of all blocks.
 
 use crate::tunespace::{Structural, TuningParams};
 
@@ -47,7 +59,7 @@ pub const NO_REG: u16 = u16::MAX;
 
 /// One abstract instruction. `dst`/`src*` are virtual register ids; NO_REG
 /// marks unused slots. Memory ops carry a byte address and length.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Inst {
     pub op: OpClass,
     pub dst: u16,
@@ -87,7 +99,7 @@ impl Inst {
 }
 
 /// Which kernel a trace models, with its specialised constants.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     /// Squared euclidean distance: `batch` points of `dim` f32 vs 1 center.
     Distance { dim: u32, batch: u32 },
@@ -193,29 +205,58 @@ impl TraceGen {
         TraceGen { buf: Vec::with_capacity(1 << 18) }
     }
 
-    /// Generate the trace of one kernel call for an auto-tuned variant.
+    /// Generate the trace of one kernel call for an auto-tuned variant:
+    /// the concatenation of all `outer()` blocks.
     pub fn kernel_trace(&mut self, kind: &KernelKind, p: &TuningParams) -> &[Inst] {
         self.buf.clear();
-        match kind {
-            KernelKind::Distance { dim, batch } => self.distance(*dim, *batch, p),
-            KernelKind::Lintra { row_len, rows } => self.lintra(*row_len, *rows, p),
+        for b in 0..kind.outer() {
+            self.emit_kernel_block(kind, p, b);
         }
+        &self.buf
+    }
+
+    /// Generate only block `b` (one point / row) of a variant call. The
+    /// stream equals the corresponding slice of [`TraceGen::kernel_trace`].
+    pub fn kernel_block(&mut self, kind: &KernelKind, p: &TuningParams, b: u32) -> &[Inst] {
+        self.buf.clear();
+        self.emit_kernel_block(kind, p, b);
         &self.buf
     }
 
     /// Generate the trace of one reference-kernel call.
     pub fn ref_trace(&mut self, kind: &KernelKind, rk: RefKind) -> &[Inst] {
         self.buf.clear();
-        match kind {
-            KernelKind::Distance { dim, batch } => self.distance_ref(*dim, *batch, rk),
-            KernelKind::Lintra { row_len, rows } => self.lintra_ref(*row_len, *rows, rk),
+        for b in 0..kind.outer() {
+            self.emit_ref_block(kind, rk, b);
         }
         &self.buf
     }
 
+    /// Generate only block `b` of a reference call.
+    pub fn ref_block(&mut self, kind: &KernelKind, rk: RefKind, b: u32) -> &[Inst] {
+        self.buf.clear();
+        self.emit_ref_block(kind, rk, b);
+        &self.buf
+    }
+
+    fn emit_kernel_block(&mut self, kind: &KernelKind, p: &TuningParams, b: u32) {
+        match kind {
+            KernelKind::Distance { dim, .. } => self.distance_point(*dim, b, p),
+            KernelKind::Lintra { row_len, .. } => self.lintra_row(*row_len, b, p),
+        }
+    }
+
+    fn emit_ref_block(&mut self, kind: &KernelKind, rk: RefKind, b: u32) {
+        match kind {
+            KernelKind::Distance { dim, .. } => self.distance_ref_point(*dim, b, rk),
+            KernelKind::Lintra { row_len, .. } => self.lintra_ref_row(*row_len, b, rk),
+        }
+    }
+
     // ---- auto-tuned distance kernel (models the Fig. 3 compilette) ----
 
-    fn distance(&mut self, dim: u32, batch: u32, p: &TuningParams) {
+    /// One batch point `b` of the auto-tuned distance kernel.
+    fn distance_point(&mut self, dim: u32, b: u32, p: &TuningParams) {
         let s = p.s;
         let epi = s.elems_per_iter();
         let num_iter = dim / epi;
@@ -227,36 +268,34 @@ impl TraceGen {
         // distinct registers — this is why the register-pressure bound is
         // vectLen * hotUF (MAX_REG_PRODUCT).
         let n_accs = (s.hot_uf * s.vect_len) as u16;
-        for b in 0..batch {
-            let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
-            self.prologue(p, 2);
-            // Zero the accumulators (NEON veor).
-            for a in 0..n_accs {
-                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC + a, NO_REG, NO_REG, NO_REG));
-            }
-            for it in 0..num_iter {
-                let base = (it * epi) as u64 * 4;
-                self.distance_body(s, p, pbase + base, A_CENTER + base, w_bytes, it);
-                if num_iter > 1 {
-                    // Loop counter + backward branch (taken except last).
-                    self.buf.push(Inst::alu(R_CNT, R_CNT));
-                    self.buf.push(Inst::branch(1, it + 1 != num_iter));
-                }
-            }
-            // Leftover strip: scalar element loop.
-            for e in 0..leftover {
-                let off = ((num_iter * epi + e) as u64) * 4;
-                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
-                self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
-                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
-                self.buf.push(Inst::fp(OpClass::FMla, V_ACC, R_SCALAR0 + 2, R_SCALAR0 + 2, V_ACC));
-                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
-                self.buf.push(Inst::branch(2, e + 1 != leftover));
-            }
-            self.distance_reduce(s);
-            self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
-            self.epilogue(p, 2);
+        let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+        self.prologue(p, 2);
+        // Zero the accumulators (NEON veor).
+        for a in 0..n_accs {
+            self.buf.push(Inst::fp(OpClass::VAdd, V_ACC + a, NO_REG, NO_REG, NO_REG));
         }
+        for it in 0..num_iter {
+            let base = (it * epi) as u64 * 4;
+            self.distance_body(s, p, pbase + base, A_CENTER + base, w_bytes, it);
+            if num_iter > 1 {
+                // Loop counter + backward branch (taken except last).
+                self.buf.push(Inst::alu(R_CNT, R_CNT));
+                self.buf.push(Inst::branch(1, it + 1 != num_iter));
+            }
+        }
+        // Leftover strip: scalar element loop.
+        for e in 0..leftover {
+            let off = ((num_iter * epi + e) as u64) * 4;
+            self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+            self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+            self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+            self.buf.push(Inst::fp(OpClass::FMla, V_ACC, R_SCALAR0 + 2, R_SCALAR0 + 2, V_ACC));
+            self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+            self.buf.push(Inst::branch(2, e + 1 != leftover));
+        }
+        self.distance_reduce(s);
+        self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
+        self.epilogue(p, 2);
     }
 
     /// One main-loop body: coldUF x hotUF pattern over `width()`-element
@@ -379,95 +418,95 @@ impl TraceGen {
 
     // ---- auto-tuned lintra kernel ----
 
-    fn lintra(&mut self, row_len: u32, rows: u32, p: &TuningParams) {
+    /// One image row `r` of the auto-tuned lintra kernel.
+    fn lintra_row(&mut self, row_len: u32, r: u32, p: &TuningParams) {
         let s = p.s;
         let epi = s.elems_per_iter();
         let num_iter = row_len / epi;
         let leftover = row_len - num_iter * epi;
         let w_bytes = s.width() * 4;
 
-        for r in 0..rows {
-            let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
-            let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
-            self.prologue(p, 3);
-            for it in 0..num_iter {
-                let base = (it * epi) as u64 * 4;
-                for c in 0..s.cold_uf {
-                    // Like distance_body: IS groups loads / macs / stores
-                    // within the coldUF block (the register-reuse
-                    // boundary); the naive order interleaves per step.
-                    let mut loads = Vec::new();
-                    let mut macs = Vec::new();
-                    let mut stores = Vec::new();
-                    let mut rest = Vec::new();
-                    for h in 0..s.hot_uf {
-                        let step = c * s.hot_uf + h;
-                        let off = base + (step * w_bytes) as u64;
-                        let vp = V_BASE + (h as u16) * 3;
-                        let vm = vp + 1;
-                        let va = vp + 2;
-                        if s.ve {
-                            loads.push(Inst::load(vp, R_PTR1, ibase + off, w_bytes));
-                            loads.push(Inst::load(vm, R_TMP, A_MULVEC + off, w_bytes));
-                            loads.push(Inst::load(va, R_TMP, A_ADDVEC + off, w_bytes));
-                            for _ in 0..s.vect_len {
-                                macs.push(Inst::fp(OpClass::VMla, vp, vp, vm, va));
-                            }
-                            stores.push(Inst::store(vp, obase + off, w_bytes));
-                        } else {
-                            for e in 0..s.vect_len {
-                                let ea = off + e as u64 * 4;
-                                loads.push(Inst::load(vp, R_PTR1, ibase + ea, 4));
-                                loads.push(Inst::load(vm, R_TMP, A_MULVEC + ea, 4));
-                                loads.push(Inst::load(va, R_TMP, A_ADDVEC + ea, 4));
-                                macs.push(Inst::fp(OpClass::FMla, vp, vp, vm, va));
-                                stores.push(Inst::store(vp, obase + ea, 4));
-                            }
+        let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
+        let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+        self.prologue(p, 3);
+        for it in 0..num_iter {
+            let base = (it * epi) as u64 * 4;
+            for c in 0..s.cold_uf {
+                // Like distance_body: IS groups loads / macs / stores
+                // within the coldUF block (the register-reuse
+                // boundary); the naive order interleaves per step.
+                let mut loads = Vec::new();
+                let mut macs = Vec::new();
+                let mut stores = Vec::new();
+                let mut rest = Vec::new();
+                for h in 0..s.hot_uf {
+                    let step = c * s.hot_uf + h;
+                    let off = base + (step * w_bytes) as u64;
+                    let vp = V_BASE + (h as u16) * 3;
+                    let vm = vp + 1;
+                    let va = vp + 2;
+                    if s.ve {
+                        loads.push(Inst::load(vp, R_PTR1, ibase + off, w_bytes));
+                        loads.push(Inst::load(vm, R_TMP, A_MULVEC + off, w_bytes));
+                        loads.push(Inst::load(va, R_TMP, A_ADDVEC + off, w_bytes));
+                        for _ in 0..s.vect_len {
+                            macs.push(Inst::fp(OpClass::VMla, vp, vp, vm, va));
                         }
-                        if p.pld_stride != 0 && step == s.cold_uf * s.hot_uf - 1 && it == 0 {
-                            rest.push(Inst::pld(ibase + off + p.pld_stride as u64));
-                        }
-                        rest.push(Inst::alu(R_PTR1, R_PTR1));
-                    }
-                    if p.isched {
-                        self.buf.extend(loads);
-                        self.buf.extend(macs);
-                        self.buf.extend(stores);
-                        self.buf.extend(rest);
+                        stores.push(Inst::store(vp, obase + off, w_bytes));
                     } else {
-                        let per_h = s.hot_uf as usize;
-                        let lph = loads.len() / per_h;
-                        let mph = macs.len() / per_h;
-                        let sph = stores.len() / per_h;
-                        for h in 0..per_h {
-                            self.buf.extend(loads[h * lph..(h + 1) * lph].iter().copied());
-                            self.buf.extend(macs[h * mph..(h + 1) * mph].iter().copied());
-                            self.buf.extend(stores[h * sph..(h + 1) * sph].iter().copied());
+                        for e in 0..s.vect_len {
+                            let ea = off + e as u64 * 4;
+                            loads.push(Inst::load(vp, R_PTR1, ibase + ea, 4));
+                            loads.push(Inst::load(vm, R_TMP, A_MULVEC + ea, 4));
+                            loads.push(Inst::load(va, R_TMP, A_ADDVEC + ea, 4));
+                            macs.push(Inst::fp(OpClass::FMla, vp, vp, vm, va));
+                            stores.push(Inst::store(vp, obase + ea, 4));
                         }
-                        self.buf.extend(rest);
                     }
+                    if p.pld_stride != 0 && step == s.cold_uf * s.hot_uf - 1 && it == 0 {
+                        rest.push(Inst::pld(ibase + off + p.pld_stride as u64));
+                    }
+                    rest.push(Inst::alu(R_PTR1, R_PTR1));
                 }
-                if num_iter > 1 {
-                    self.buf.push(Inst::alu(R_CNT, R_CNT));
-                    self.buf.push(Inst::branch(3, it + 1 != num_iter));
+                if p.isched {
+                    self.buf.extend(loads);
+                    self.buf.extend(macs);
+                    self.buf.extend(stores);
+                    self.buf.extend(rest);
+                } else {
+                    let per_h = s.hot_uf as usize;
+                    let lph = loads.len() / per_h;
+                    let mph = macs.len() / per_h;
+                    let sph = stores.len() / per_h;
+                    for h in 0..per_h {
+                        self.buf.extend(loads[h * lph..(h + 1) * lph].iter().copied());
+                        self.buf.extend(macs[h * mph..(h + 1) * mph].iter().copied());
+                        self.buf.extend(stores[h * sph..(h + 1) * sph].iter().copied());
+                    }
+                    self.buf.extend(rest);
                 }
             }
-            for e in 0..leftover {
-                let off = ((num_iter * epi + e) as u64) * 4;
-                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
-                self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
-                self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
-                self.buf.push(Inst::fp(OpClass::FMla, R_SCALAR0, R_SCALAR0, R_SCALAR0 + 1, R_SCALAR0 + 2));
-                self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
-                self.buf.push(Inst::branch(4, e + 1 != leftover));
+            if num_iter > 1 {
+                self.buf.push(Inst::alu(R_CNT, R_CNT));
+                self.buf.push(Inst::branch(3, it + 1 != num_iter));
             }
-            self.epilogue(p, 3);
         }
+        for e in 0..leftover {
+            let off = ((num_iter * epi + e) as u64) * 4;
+            self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
+            self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
+            self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
+            self.buf.push(Inst::fp(OpClass::FMla, R_SCALAR0, R_SCALAR0, R_SCALAR0 + 1, R_SCALAR0 + 2));
+            self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
+            self.buf.push(Inst::branch(4, e + 1 != leftover));
+        }
+        self.epilogue(p, 3);
     }
 
     // ---- reference kernels (gcc -O3 / PARVEC analogues) ----
 
-    fn distance_ref(&mut self, dim: u32, batch: u32, rk: RefKind) {
+    /// One batch point `b` of a reference distance kernel.
+    fn distance_ref_point(&mut self, dim: u32, b: u32, rk: RefKind) {
         // gcc -O3 unrolls the scalar loop modestly (x4 here) and the
         // PARVEC NEON kernel processes one q-register per step. A generic
         // (non-specialised) dimension costs an extra bound-check ALU op
@@ -478,64 +517,63 @@ impl TraceGen {
         let step_elems = if simd { 4 } else { unroll };
         let num_iter = dim / step_elems;
         let leftover = dim % step_elems;
-        for b in 0..batch {
-            let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
-            // Compiled C: frame setup (not stack-minimised).
-            self.buf.push(Inst::store(R_TMP, A_STACK, 8));
-            self.buf.push(Inst::alu(R_PTR1, NO_REG));
-            self.buf.push(Inst::alu(R_PTR2, NO_REG));
-            self.buf.push(Inst::fp(if simd { OpClass::VAdd } else { OpClass::FAdd }, V_ACC, NO_REG, NO_REG, NO_REG));
-            for it in 0..num_iter {
-                let base = (it * step_elems) as u64 * 4;
-                if simd {
-                    self.buf.push(Inst::load(V_BASE, R_PTR1, pbase + base, 16));
-                    self.buf.push(Inst::load(V_BASE + 1, R_PTR2, A_CENTER + base, 16));
-                    self.buf.push(Inst::fp(OpClass::VAdd, V_BASE, V_BASE, V_BASE + 1, NO_REG));
-                    self.buf.push(Inst::fp(OpClass::VMla, V_ACC, V_BASE, V_BASE, V_ACC));
-                } else {
-                    if it % 16 == 0 {
-                        // gcc prefetch for the scalar loop.
-                        self.buf.push(Inst::pld(pbase + base + 256));
-                        self.buf.push(Inst::pld(A_CENTER + base + 256));
-                    }
-                    for e in 0..unroll {
-                        let off = base + e as u64 * 4;
-                        self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
-                        self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
-                        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
-                        // gcc without -ffast-math keeps mul + add separate.
-                        self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
-                        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
-                    }
-                }
-                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
-                self.buf.push(Inst::alu(R_PTR2, R_PTR2));
-                self.buf.push(Inst::alu(R_CNT, R_CNT));
-                if !rk.is_specialized() {
-                    // Run-time loop bound: compare against a register.
-                    self.buf.push(Inst::alu(R_TMP, R_CNT));
-                }
-                self.buf.push(Inst::branch(5, it + 1 != num_iter));
-            }
-            for e in 0..leftover {
-                let off = ((num_iter * step_elems + e) as u64) * 4;
-                self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
-                self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
-                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
-                self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
-                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
-            }
+        let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+        // Compiled C: frame setup (not stack-minimised).
+        self.buf.push(Inst::store(R_TMP, A_STACK, 8));
+        self.buf.push(Inst::alu(R_PTR1, NO_REG));
+        self.buf.push(Inst::alu(R_PTR2, NO_REG));
+        self.buf.push(Inst::fp(if simd { OpClass::VAdd } else { OpClass::FAdd }, V_ACC, NO_REG, NO_REG, NO_REG));
+        for it in 0..num_iter {
+            let base = (it * step_elems) as u64 * 4;
             if simd {
-                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
-                self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+                self.buf.push(Inst::load(V_BASE, R_PTR1, pbase + base, 16));
+                self.buf.push(Inst::load(V_BASE + 1, R_PTR2, A_CENTER + base, 16));
+                self.buf.push(Inst::fp(OpClass::VAdd, V_BASE, V_BASE, V_BASE + 1, NO_REG));
+                self.buf.push(Inst::fp(OpClass::VMla, V_ACC, V_BASE, V_BASE, V_ACC));
+            } else {
+                if it % 16 == 0 {
+                    // gcc prefetch for the scalar loop.
+                    self.buf.push(Inst::pld(pbase + base + 256));
+                    self.buf.push(Inst::pld(A_CENTER + base + 256));
+                }
+                for e in 0..unroll {
+                    let off = base + e as u64 * 4;
+                    self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+                    self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+                    self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                    // gcc without -ffast-math keeps mul + add separate.
+                    self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
+                    self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
+                }
             }
-            self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0, V_ACC, NO_REG, NO_REG));
-            self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
-            self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
+            self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+            self.buf.push(Inst::alu(R_PTR2, R_PTR2));
+            self.buf.push(Inst::alu(R_CNT, R_CNT));
+            if !rk.is_specialized() {
+                // Run-time loop bound: compare against a register.
+                self.buf.push(Inst::alu(R_TMP, R_CNT));
+            }
+            self.buf.push(Inst::branch(5, it + 1 != num_iter));
         }
+        for e in 0..leftover {
+            let off = ((num_iter * step_elems + e) as u64) * 4;
+            self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
+            self.buf.push(Inst::load(R_SCALAR0 + 1, R_PTR2, A_CENTER + off, 4));
+            self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 2, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+            self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0 + 2, R_SCALAR0 + 2, NO_REG));
+            self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 4, R_SCALAR0 + 4, R_SCALAR0 + 3, NO_REG));
+        }
+        if simd {
+            self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+            self.buf.push(Inst::fp(OpClass::VAdd, V_ACC, V_ACC, V_ACC, NO_REG));
+        }
+        self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0, V_ACC, NO_REG, NO_REG));
+        self.buf.push(Inst::store(R_SCALAR0, A_RESULT + b as u64 * 4, 4));
+        self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
     }
 
-    fn lintra_ref(&mut self, row_len: u32, rows: u32, rk: RefKind) {
+    /// One image row `r` of a reference lintra kernel.
+    fn lintra_ref_row(&mut self, row_len: u32, r: u32, rk: RefKind) {
         // The VIPS reference reloads the run-time constants (mul/add
         // factors) and recomputes the band index in every loop iteration —
         // the paper calls this out as the main source of the auto-tuned
@@ -544,45 +582,43 @@ impl TraceGen {
         let step_elems: u32 = if simd { 4 } else { 1 };
         let num_iter = row_len / step_elems;
         let leftover = row_len % step_elems;
-        for r in 0..rows {
-            let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
-            let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
-            self.buf.push(Inst::store(R_TMP, A_STACK, 8));
-            for it in 0..num_iter {
-                let off = (it * step_elems) as u64 * 4;
-                // Band-index computation (modulo by bands) + constant
-                // reload from memory, every iteration.
-                self.buf.push(Inst::alu(R_TMP, R_CNT));
-                self.buf.push(Inst::alu(R_TMP, R_TMP));
-                if simd {
-                    self.buf.push(Inst::load(V_BASE, R_PTR1, ibase + off, 16));
-                    self.buf.push(Inst::load(V_BASE + 1, R_TMP, A_MULVEC + off, 16));
-                    self.buf.push(Inst::load(V_BASE + 2, R_TMP, A_ADDVEC + off, 16));
-                    self.buf.push(Inst::fp(OpClass::VMla, V_BASE, V_BASE, V_BASE + 1, V_BASE + 2));
-                    self.buf.push(Inst::store(V_BASE, obase + off, 16));
-                } else {
-                    self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
-                    self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
-                    self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
-                    self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
-                    self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 3, R_SCALAR0 + 3, R_SCALAR0 + 2, NO_REG));
-                    self.buf.push(Inst::store(R_SCALAR0 + 3, obase + off, 4));
-                }
-                self.buf.push(Inst::alu(R_PTR1, R_PTR1));
-                self.buf.push(Inst::alu(R_CNT, R_CNT));
-                if !rk.is_specialized() {
-                    self.buf.push(Inst::alu(R_TMP, R_CNT));
-                }
-                self.buf.push(Inst::branch(6, it + 1 != num_iter));
-            }
-            for e in 0..leftover {
-                let off = ((num_iter * step_elems + e) as u64) * 4;
+        let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
+        let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+        self.buf.push(Inst::store(R_TMP, A_STACK, 8));
+        for it in 0..num_iter {
+            let off = (it * step_elems) as u64 * 4;
+            // Band-index computation (modulo by bands) + constant
+            // reload from memory, every iteration.
+            self.buf.push(Inst::alu(R_TMP, R_CNT));
+            self.buf.push(Inst::alu(R_TMP, R_TMP));
+            if simd {
+                self.buf.push(Inst::load(V_BASE, R_PTR1, ibase + off, 16));
+                self.buf.push(Inst::load(V_BASE + 1, R_TMP, A_MULVEC + off, 16));
+                self.buf.push(Inst::load(V_BASE + 2, R_TMP, A_ADDVEC + off, 16));
+                self.buf.push(Inst::fp(OpClass::VMla, V_BASE, V_BASE, V_BASE + 1, V_BASE + 2));
+                self.buf.push(Inst::store(V_BASE, obase + off, 16));
+            } else {
                 self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
-                self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0, R_SCALAR0, R_SCALAR0, NO_REG));
-                self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 1, R_TMP, A_MULVEC + off, 4));
+                self.buf.push(Inst::load(R_SCALAR0 + 2, R_TMP, A_ADDVEC + off, 4));
+                self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0 + 3, R_SCALAR0, R_SCALAR0 + 1, NO_REG));
+                self.buf.push(Inst::fp(OpClass::FAdd, R_SCALAR0 + 3, R_SCALAR0 + 3, R_SCALAR0 + 2, NO_REG));
+                self.buf.push(Inst::store(R_SCALAR0 + 3, obase + off, 4));
             }
-            self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
+            self.buf.push(Inst::alu(R_PTR1, R_PTR1));
+            self.buf.push(Inst::alu(R_CNT, R_CNT));
+            if !rk.is_specialized() {
+                self.buf.push(Inst::alu(R_TMP, R_CNT));
+            }
+            self.buf.push(Inst::branch(6, it + 1 != num_iter));
         }
+        for e in 0..leftover {
+            let off = ((num_iter * step_elems + e) as u64) * 4;
+            self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
+            self.buf.push(Inst::fp(OpClass::FMul, R_SCALAR0, R_SCALAR0, R_SCALAR0, NO_REG));
+            self.buf.push(Inst::store(R_SCALAR0, obase + off, 4));
+        }
+        self.buf.push(Inst::load(R_TMP, R_TMP, A_STACK, 8));
     }
 
     // ---- shared prologue/epilogue (SM option) ----
@@ -799,5 +835,58 @@ mod tests {
         let n1 = g.kernel_trace(&KernelKind::Distance { dim: 64, batch: 8 }, &p).len();
         let n2 = g.kernel_trace(&KernelKind::Distance { dim: 64, batch: 16 }, &p).len();
         assert_eq!(n2, n1 * 2);
+    }
+
+    #[test]
+    fn blocks_concatenate_to_flat_trace() {
+        // The block emitters are the flat traces' building blocks: for
+        // every kernel shape, concatenating kernel_block(b) for all b
+        // must reproduce kernel_trace bit-for-bit (same for refs).
+        let mut g = TraceGen::new();
+        let kinds = [
+            KernelKind::Distance { dim: 36, batch: 5 },
+            KernelKind::Lintra { row_len: 96, rows: 4 },
+        ];
+        for kind in kinds {
+            for p in [params(true, 2, 2, 1), params(false, 1, 1, 2)] {
+                let flat = g.kernel_trace(&kind, &p).to_vec();
+                let mut cat = Vec::new();
+                for b in 0..kind.outer() {
+                    cat.extend_from_slice(g.kernel_block(&kind, &p, b));
+                }
+                assert_eq!(flat, cat, "{kind:?} {p}");
+            }
+            for rk in RefKind::ALL {
+                let flat = g.ref_trace(&kind, rk).to_vec();
+                let mut cat = Vec::new();
+                for b in 0..kind.outer() {
+                    cat.extend_from_slice(g.ref_block(&kind, rk, b));
+                }
+                assert_eq!(flat, cat, "{kind:?} {rk:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_are_shape_identical_across_iterations() {
+        // Steady-state extrapolation relies on this: block b differs from
+        // block 0 only in memory addresses — op classes, registers,
+        // branch sites, and taken flags all match.
+        let mut g = TraceGen::new();
+        let kind = KernelKind::Distance { dim: 36, batch: 8 };
+        let p = params(true, 2, 1, 1);
+        let b0 = g.kernel_block(&kind, &p, 0).to_vec();
+        for b in 1..8 {
+            let bb = g.kernel_block(&kind, &p, b).to_vec();
+            assert_eq!(b0.len(), bb.len());
+            for (x, y) in b0.iter().zip(&bb) {
+                assert_eq!(x.op, y.op);
+                assert_eq!((x.dst, x.src1, x.src2, x.src3), (y.dst, y.src1, y.src2, y.src3));
+                assert_eq!(x.bytes, y.bytes);
+                if x.op == OpClass::Branch {
+                    assert_eq!((x.addr, x.taken), (y.addr, y.taken));
+                }
+            }
+        }
     }
 }

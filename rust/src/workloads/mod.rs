@@ -13,7 +13,7 @@ pub use vips::{VipsApp, VipsConfig};
 use crate::backend::sim::SimBackend;
 use crate::backend::Backend as _;
 use crate::cache::TuneKey;
-use crate::simulator::{CoreConfig, KernelKind};
+use crate::simulator::{CoreConfig, KernelKind, SharedSimMemo};
 
 /// Lane count of [`mixed_service_workload`] (report headers can name it
 /// without constructing six simulator backends).
@@ -25,6 +25,14 @@ pub const MIXED_SERVICE_LANES: usize = 6;
 /// kernel stream. The two heavy VIPS (lintra) lanes sit at consecutive
 /// lane ids so the threaded engine's `id % threads` placement gives them
 /// their own workers at `--threads >= 4` (load balance).
+///
+/// The lanes of one workload instance share one *private*
+/// [`SharedSimMemo`] (cross-lane measurement reuse within a service
+/// run), never the process-wide one: the CLI's phase comparisons
+/// (sequential vs threaded, static vs steal) re-build the workload per
+/// phase, and a process-global memo would let later "cold" phases skip
+/// the simulation cost the earlier phase paid — inflating their
+/// calls/sec for reasons that have nothing to do with the engine.
 pub fn mixed_service_workload(
     core: &'static CoreConfig,
     seed: u64,
@@ -37,11 +45,12 @@ pub fn mixed_service_workload(
         (KernelKind::Distance { dim: 32, batch: 256 }, "b"),
         (KernelKind::Distance { dim: 64, batch: 256 }, "b"),
     ];
+    let memo = SharedSimMemo::new();
     kinds
         .iter()
         .enumerate()
         .map(|(i, (kind, shape))| {
-            let b = SimBackend::new(core, *kind, seed + i as u64);
+            let b = SimBackend::with_memo(core, *kind, seed + i as u64, memo.clone());
             let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
             (key, b)
         })
@@ -73,11 +82,13 @@ pub fn skewed_service_workload(
         (KernelKind::Distance { dim: 32, batch: 256 }, "c"),
         (KernelKind::Distance { dim: 64, batch: 256 }, "c"),
     ];
+    // Private per-workload memo — see `mixed_service_workload`.
+    let memo = SharedSimMemo::new();
     kinds
         .iter()
         .enumerate()
         .map(|(i, (kind, shape))| {
-            let b = SimBackend::new(core, *kind, seed + i as u64);
+            let b = SimBackend::with_memo(core, *kind, seed + i as u64, memo.clone());
             let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
             (key, b)
         })
@@ -112,12 +123,17 @@ pub fn hetero_service_workload(
         (KernelKind::Distance { dim: 64, batch: 256 }, "a"),
         (KernelKind::Lintra { row_len: 4800, rows: 8 }, "a"),
     ];
+    // Private per-workload memo — see `mixed_service_workload`. One memo
+    // spans both halves: keys include the core name, so donor and target
+    // never collide, and the demo's time-to-best comparison is in
+    // generate-call counts, not wall clock.
+    let memo = SharedSimMemo::new();
     let on = |core: &'static CoreConfig, seed: u64| -> Vec<(TuneKey, SimBackend)> {
         kinds
             .iter()
             .enumerate()
             .map(|(i, (kind, shape))| {
-                let b = SimBackend::new(core, *kind, seed + i as u64);
+                let b = SimBackend::with_memo(core, *kind, seed + i as u64, memo.clone());
                 let key = TuneKey::with_shape(b.kernel_id(), kind.length(), *shape);
                 (key, b)
             })

@@ -1,0 +1,82 @@
+//! Deterministic perf-regression guard over the bench grid (PR 5).
+//!
+//! Wall-clock benchmarks flake in CI; instruction counters do not. The
+//! steady-state fast path's whole point is that `simulated_insts` is a
+//! small, deterministic fraction of the instructions accounted for — so
+//! CI pins exactly that:
+//!
+//! * every *large* shape class must simulate ≥ 10× fewer instructions
+//!   than exact mode would walk (the PR-5 acceptance bound);
+//! * the grid's total simulated instructions must stay under a committed
+//!   ceiling, so a detector regression (steady state found later, or not
+//!   at all) fails loudly instead of just getting slower.
+
+use degoal_rt::bench::run_grid;
+
+/// Committed ceiling for the grid's total walked instructions. The grid
+/// currently simulates well under half of this — the headroom absorbs
+/// detector-warmup shifts from legitimate model changes, while a broken
+/// fast path (full walks on the large classes) overshoots it several
+/// times over.
+const SIMULATED_INSTS_CEILING: u64 = 8_000_000;
+
+#[test]
+fn bench_grid_counters_are_consistent() {
+    let report = run_grid(0, false);
+    assert_eq!(report.cells.len(), 6 * 5 * 3);
+    for c in &report.cells {
+        assert!(c.cycles > 0, "{}/{}/{}", c.core, c.kernel, c.params);
+        assert!(c.simulated_insts > 0, "{}/{}/{}", c.core, c.kernel, c.params);
+        assert_eq!(
+            c.simulated_insts + c.extrapolated_insts,
+            c.insts,
+            "{}/{}/{}: counter split must add up",
+            c.core,
+            c.kernel,
+            c.params
+        );
+        assert_eq!(c.calls_per_sec, 0.0, "counters-only run must not time");
+    }
+}
+
+#[test]
+fn large_shape_classes_simulate_ten_times_fewer_insts() {
+    let report = run_grid(0, false);
+    for c in report.cells.iter().filter(|c| c.large) {
+        assert!(
+            c.inst_ratio() >= 10.0,
+            "{}/{}/{}: fast path folds only {:.1}x (simulated {} of {})",
+            c.core,
+            c.kernel,
+            c.params,
+            c.inst_ratio(),
+            c.simulated_insts,
+            c.insts
+        );
+    }
+}
+
+#[test]
+fn grid_total_simulated_insts_under_committed_ceiling() {
+    let report = run_grid(0, false);
+    assert!(
+        report.total_simulated <= SIMULATED_INSTS_CEILING,
+        "fast-path regression: grid simulates {} insts (ceiling {}, {:.1}x fold)",
+        report.total_simulated,
+        SIMULATED_INSTS_CEILING,
+        report.inst_ratio()
+    );
+}
+
+#[test]
+fn fast_path_is_deterministic_across_grid_runs() {
+    let a = run_grid(0, false);
+    let b = run_grid(0, false);
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.cycles, y.cycles, "{}/{}/{}", x.core, x.kernel, x.params);
+        assert_eq!(x.simulated_insts, y.simulated_insts);
+        assert_eq!(x.extrapolated_insts, y.extrapolated_insts);
+    }
+    assert_eq!(a.total_insts, b.total_insts);
+    assert_eq!(a.total_simulated, b.total_simulated);
+}

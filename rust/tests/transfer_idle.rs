@@ -249,6 +249,67 @@ fn zero_budget_blocks_all_speculation() {
 }
 
 #[test]
+fn idle_placement_prefers_lanes_with_traffic_history() {
+    // PR-4 follow-up (landed PR 5): a cold parked lane may never be
+    // called again, so while any *trafficked* unfinished lane exists,
+    // speculation must go to it — never-called lanes only get idle time
+    // once every trafficked lane finished exploring.
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_options(
+        fast_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 1, steal: false, quantum: 32, idle_tune: true },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = (0..3)
+        .map(|i| {
+            eng.register(stream_key(i), None, MockBackend::new(64, 600 + i as u64)).unwrap()
+        })
+        .collect();
+
+    // Only the middle lane sees traffic — far too little to finish its
+    // exploration, but enough to mark it as demonstrably live.
+    eng.submit_n(lanes[1], 50).unwrap();
+
+    // While the trafficked lane is still exploring, the never-called
+    // lanes must not receive a single idle step (each drain_reports
+    // snapshot is taken under one scheduler lock, so the pair of
+    // observations is consistent).
+    let mut rounds = 0;
+    loop {
+        let reports = eng.drain_reports().unwrap();
+        if reports[1].done {
+            break;
+        }
+        assert_eq!(
+            reports[0].idle_steps, 0,
+            "never-called lane speculated before the trafficked lane finished"
+        );
+        assert_eq!(reports[2].idle_steps, 0);
+        rounds += 1;
+        assert!(rounds < 5_000, "trafficked lane must finish via speculation: {reports:?}");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+
+    // Fallback: with no trafficked work left, idle time flows to the
+    // never-called lanes until they finish too.
+    let mut rounds = 0;
+    loop {
+        let reports = eng.drain_reports().unwrap();
+        if reports.iter().all(|r| r.done) {
+            break;
+        }
+        rounds += 1;
+        assert!(rounds < 5_000, "fallback must still explore cold lanes: {reports:?}");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.done_lanes, 3);
+    assert!(reports[0].idle_steps > 0);
+    assert!(reports[2].idle_steps > 0);
+    assert_eq!(reports[1].kernel_calls, 50);
+}
+
+#[test]
 fn idle_tune_mixes_with_traffic_and_keeps_call_counts_exact() {
     // Two busy lanes + two parked lanes on four workers: the idle pair
     // must advance while every submitted call still runs exactly once.
