@@ -127,6 +127,14 @@ pub trait Backend: Send {
     fn kernel_id(&self) -> String {
         self.name()
     }
+
+    /// Install a telemetry recorder (stamped with the owning lane and
+    /// its virtual time) for backend-side events — simulation-memo hits,
+    /// steady-state extrapolations. The default drops it: backends
+    /// without internal events to report need no storage, and the
+    /// disabled recorder makes the call a no-op either way. The lane
+    /// re-stamps before each step, so implementations just overwrite.
+    fn set_recorder(&mut self, _rec: crate::obs::Recorder) {}
 }
 
 #[cfg(test)]

@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 
 use super::{Backend, EvalData, KernelVersion, Sample};
 use crate::cache::DeviceFingerprint;
+use crate::obs::{Counter, EventKind, Recorder};
 use crate::simulator::{
     run_reference_call, run_variant_call, CoreConfig, EnergyModel, ExecStats, KernelKind,
     MemoEntry, MemoKey, Pipeline, SharedSimMemo, SimMode, TraceGen,
@@ -65,6 +66,9 @@ pub struct SimBackend {
     training: HashMap<u64, f64>,
     generated: HashMap<u32, f64>,
     total_codegen: f64,
+    /// Telemetry handle, re-stamped by the owning lane before each step
+    /// ([`Backend::set_recorder`]); disabled (a no-op) by default.
+    rec: Recorder,
 }
 
 impl SimBackend {
@@ -93,6 +97,28 @@ impl SimBackend {
             training: HashMap::new(),
             generated: HashMap::new(),
             total_codegen: 0.0,
+            rec: Recorder::disabled(),
+        }
+    }
+
+    /// Memo-consultation telemetry, shared by the training and warm
+    /// paths. Only *process-wide* memo traffic is reported — the
+    /// backend-local `variants`/`refs`/`training` maps short-circuit
+    /// before this point, and those repeats are not cross-lane sharing.
+    fn note_memo(&self, hit: bool) {
+        if hit {
+            self.rec.count(Counter::MemoHits, 1);
+            self.rec.event_here(EventKind::MemoHit);
+        } else {
+            self.rec.count(Counter::MemoMisses, 1);
+        }
+    }
+
+    /// Steady-state-detector telemetry for one fresh measurement.
+    fn note_steady(&self, warm: &ExecStats) {
+        if warm.extrapolated_insts > 0 {
+            self.rec.count(Counter::SteadyExtrapolations, 1);
+            self.rec.event_here(EventKind::SteadyExtrapolated);
         }
     }
 
@@ -172,9 +198,14 @@ impl SimBackend {
         }
         let memo_key = MemoKey { core: self.core.name, kind: tkind, mode: self.mode, entry };
         let seconds = match self.memo.get(&memo_key) {
-            Some((s, _)) => s,
+            Some((s, _)) => {
+                self.note_memo(true);
+                s
+            }
             None => {
+                self.note_memo(false);
                 let warm = self.measure_warm(tkind, v);
+                self.note_steady(&warm);
                 let s = self.seconds_of(&warm);
                 self.memo.insert(memo_key, (s, 0.0));
                 s
@@ -218,9 +249,14 @@ impl SimBackend {
         };
         let memo_key = MemoKey { core: self.core.name, kind: self.kind, mode: self.mode, entry };
         let r = match self.memo.get(&memo_key) {
-            Some(r) => r,
+            Some(r) => {
+                self.note_memo(true);
+                r
+            }
             None => {
+                self.note_memo(false);
                 let warm = self.measure_warm(self.kind, v);
+                self.note_steady(&warm);
                 let seconds = self.seconds_of(&warm);
                 let energy = EnergyModel::new(self.core).energy_j(&warm, seconds);
                 self.memo.insert(memo_key, (seconds, energy));
@@ -327,6 +363,10 @@ impl Backend for SimBackend {
             KernelKind::Distance { dim, batch } => format!("distance/d{dim}/b{batch}"),
             KernelKind::Lintra { row_len, rows } => format!("lintra/r{row_len}/x{rows}"),
         }
+    }
+
+    fn set_recorder(&mut self, rec: Recorder) {
+        self.rec = rec;
     }
 }
 

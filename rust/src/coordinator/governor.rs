@@ -82,6 +82,28 @@ impl GovernorSnapshot {
     }
 }
 
+/// Why the governor answered "no" — attribution for telemetry. The
+/// budget formula (§3.3) has exactly two regimes worth distinguishing:
+/// a lane that never earned a budget versus one that spent it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenyReason {
+    /// No budget exists yet: effectively zero application time has been
+    /// recorded (and no gains to invest) — the cold-start regime.
+    ZeroBudget,
+    /// A budget existed but the overhead spent so far has consumed it.
+    Exhausted,
+}
+
+impl DenyReason {
+    /// Stable label for traces and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            DenyReason::ZeroBudget => "zero_budget",
+            DenyReason::Exhausted => "exhausted",
+        }
+    }
+}
+
 /// Shared regeneration governor: atomic aggregate accounting plus the
 /// [`RegenDecision`] policy applied to the totals. `Send + Sync`; wrap in
 /// an `Arc` to share across worker threads.
@@ -117,6 +139,20 @@ impl RegenGovernor {
     /// May any lane regenerate right now, given the aggregate totals?
     pub fn allow(&self) -> bool {
         self.policy.allow(self.overhead.get(), self.app_time.get(), self.gained.get())
+    }
+
+    /// `None` while [`RegenGovernor::allow`] holds; otherwise *why* it
+    /// doesn't. Same race tolerance as `allow` — the answer may be one
+    /// in-flight delta stale, which telemetry accepts by design.
+    pub fn deny_reason(&self) -> Option<DenyReason> {
+        let (overhead, app_time, gained) = self.totals();
+        if self.policy.allow(overhead, app_time, gained) {
+            None
+        } else if self.policy.budget(app_time, gained) <= 0.0 {
+            Some(DenyReason::ZeroBudget)
+        } else {
+            Some(DenyReason::Exhausted)
+        }
     }
 
     /// Aggregate `(overhead, app_time, gained)` seconds so far.
@@ -217,6 +253,19 @@ mod tests {
     fn snapshot_guards_degenerate_frac() {
         let g = RegenGovernor::new(RegenDecision::default());
         assert_eq!(g.snapshot().overhead_frac(), 0.0, "0/0 must not be NaN");
+    }
+
+    #[test]
+    fn deny_reason_distinguishes_cold_start_from_exhaustion() {
+        let g = RegenGovernor::new(RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.0 });
+        // Nothing recorded: zero budget, not "spent".
+        assert_eq!(g.deny_reason(), Some(DenyReason::ZeroBudget));
+        g.record(0.0, 10.0, 0.0);
+        assert_eq!(g.deny_reason(), None, "open budget reports no denial");
+        g.record(0.2, 0.0, 0.0);
+        assert_eq!(g.deny_reason(), Some(DenyReason::Exhausted));
+        assert_eq!(DenyReason::Exhausted.name(), "exhausted");
+        assert_eq!(DenyReason::ZeroBudget.name(), "zero_budget");
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub mod stats;
 pub use autotuner::{AutoTuner, StepEvent, TunerConfig};
 pub use decision::RegenDecision;
 pub use evaluator::{EvalMode, Evaluator};
-pub use governor::{AtomicF64, GovernorSnapshot, RegenGovernor};
+pub use governor::{AtomicF64, DenyReason, GovernorSnapshot, RegenGovernor};
 pub use stats::{TuneStats, WarmOutcome};

@@ -87,10 +87,12 @@ impl TuneStats {
         self.explored.len()
     }
 
+    /// The lowest-scoring explored version. `total_cmp` gives NaN a
+    /// defined (largest-last) order: a backend that reports one NaN
+    /// measurement must not panic the whole serving stack, and NaN can
+    /// never be declared the winner while any finite score exists.
     pub fn best(&self) -> Option<&ExploredVersion> {
-        self.explored
-            .iter()
-            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+        self.explored.iter().min_by(|a, b| a.score.total_cmp(&b.score))
     }
 }
 
@@ -133,6 +135,22 @@ mod tests {
         s.explored.push(ev(1.0, 0.2));
         s.explored.push(ev(3.0, 0.3));
         assert_eq!(s.best().unwrap().score, 1.0);
+    }
+
+    #[test]
+    fn best_survives_nan_scores() {
+        // A NaN measurement (broken backend clock, 0/0 ratio) used to
+        // panic `partial_cmp(..).unwrap()`. It must lose to every finite
+        // score instead.
+        let mut s = TuneStats::default();
+        s.explored.push(ev(f64::NAN, 0.1));
+        s.explored.push(ev(2.0, 0.2));
+        s.explored.push(ev(f64::NAN, 0.3));
+        assert_eq!(s.best().unwrap().score, 2.0);
+        // All-NaN stays total (no panic) and returns something.
+        let mut all_nan = TuneStats::default();
+        all_nan.explored.push(ev(f64::NAN, 0.1));
+        assert!(all_nan.best().unwrap().score.is_nan());
     }
 
     #[test]

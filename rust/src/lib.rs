@@ -98,6 +98,19 @@
 //!   overhead accounting is identical in every mode, so the paper's
 //!   envelope numbers stay comparable at any thread count —
 //!   `rust/tests/engine_steal.rs` pins this bit-for-bit.
+//! * [`obs`] — the telemetry layer: a lock-free per-worker
+//!   [`obs::MetricsRegistry`] (sharded counters + log₂ latency
+//!   histograms with p50/p99/p999 readout) and a bounded per-worker
+//!   [`obs::EventJournal`] of structured events stamped with lane
+//!   virtual time (opens, swaps, steals, retires, governor denials,
+//!   cache/memo hits, steady-state extrapolations), recorded through a
+//!   cloneable [`obs::Recorder`] whose disabled default is a compiled
+//!   no-op — the engine parity invariants and the paper's overhead
+//!   envelope are preserved (enabled telemetry is pinned ≤ 1 % of grid
+//!   throughput by `rust/tests/obs_overhead.rs`). Exported as
+//!   percentiles on [`service::ServiceStats`], a Chrome trace timeline
+//!   (`degoal-rt service --trace` → `results/trace.json`), and a
+//!   versioned registry dump (`degoal-rt stats`).
 //!
 //! The host-PJRT execution path (`runtime`, `backend::host`,
 //! `codegen::CodeCache`) is gated behind the `pjrt` cargo feature; the
@@ -110,6 +123,7 @@ pub mod cache;
 pub mod codegen;
 pub mod coordinator;
 pub mod experiments;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod service;

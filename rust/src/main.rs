@@ -6,7 +6,7 @@
 //!                                   one online auto-tuning run (simulator)
 //!   service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]
 //!           [--steal] [--skewed] [--cache-ttl SECS] [--no-near]
-//!           [--idle-tune] [--transfer] [--donor-core C]
+//!           [--idle-tune] [--transfer] [--donor-core C] [--trace]
 //!                                   multi-kernel tuning service: mixed
 //!                                   streamcluster+vips workload (6 lanes;
 //!                                   --skewed: 8 lanes with both heavy
@@ -27,7 +27,15 @@
 //!                                   two-device demo: cross-device
 //!                                   transfer priors from --donor-core's
 //!                                   cache entries, with a cold-vs-
-//!                                   transfer time-to-best comparison
+//!                                   transfer time-to-best comparison;
+//!                                   --trace enables telemetry and writes
+//!                                   a Chrome trace-event timeline to
+//!                                   results/trace.json
+//!   stats [--core C] [--calls N] [--seed S] [--out PATH]
+//!                                   run a short telemetry-enabled service
+//!                                   workload and dump the metrics
+//!                                   registry (counters + latency
+//!                                   histograms) as versioned JSON
 //!   host-tune [--dim D] [--calls N] online auto-tuning on the host PJRT
 //!                                   (needs the `pjrt` feature)
 //!   bench [--reps N] [--quick] [--exact] [--out PATH]
@@ -48,6 +56,7 @@ use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneCache, TuneKey};
 use degoal_rt::codegen::Manifest;
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::experiments;
+use degoal_rt::obs::{Recorder, RegistrySnapshot, OBS_FORMAT_VERSION};
 #[cfg(feature = "pjrt")]
 use degoal_rt::runtime::Runtime;
 use degoal_rt::service::{
@@ -55,6 +64,7 @@ use degoal_rt::service::{
 };
 use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
+use degoal_rt::util::json::Json;
 use degoal_rt::util::table::{fnum, Table};
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
 use degoal_rt::workloads::{
@@ -139,6 +149,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 ttl: args.get_opt_u64("cache-ttl"),
                 near_hints: !args.flag("no-near"),
                 idle_tune: args.flag("idle-tune"),
+                trace: args.flag("trace"),
                 workload: if skewed { skewed_service_workload } else { mixed_service_workload },
             };
 
@@ -298,6 +309,58 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "stats" => {
+            let core = core_by_name(args.get_or("core", "DI-I1"))
+                .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
+            let calls = args.get_usize("calls", 24_000);
+            let seed = args.get_u64("seed", 42);
+            let out =
+                args.get_path_or("out", || degoal_rt::paths::results_dir().join("stats.json"));
+
+            let mut svc: TuningService<SimBackend> = TuningService::new(ServiceConfig {
+                tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+                ..Default::default()
+            });
+            // Sequential mode: one worker shard carries everything.
+            svc.set_recorder(Recorder::enabled_for(1).for_worker(0));
+            let mut lanes: Vec<LaneId> = Vec::new();
+            for (key, b) in mixed_service_workload(core, seed) {
+                lanes.push(svc.register(key, Some(true), b));
+            }
+            let mut submitted = 0usize;
+            'drive: loop {
+                for &l in &lanes {
+                    let n = SERVICE_CHUNK.min(calls - submitted);
+                    for _ in 0..n {
+                        svc.app_call(l)?;
+                    }
+                    submitted += n;
+                    if submitted >= calls {
+                        break 'drive;
+                    }
+                }
+            }
+
+            let snap = svc.recorder().snapshot().expect("recorder is enabled");
+            let doc = snap.to_json();
+            // The dump must survive its own codec: parse the rendered
+            // text back and compare snapshots before writing anything.
+            let back = RegistrySnapshot::from_json(&Json::parse(&doc.to_string())?)
+                .ok_or_else(|| anyhow::anyhow!("stats JSON failed to round-trip"))?;
+            anyhow::ensure!(back == snap, "stats JSON round-trip diverged");
+            if let Some(dir) = out.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(&out, doc.to_string())?;
+
+            println!("  telemetry over {} calls on {}: {}", calls, core.name, svc.stats());
+            println!(
+                "  registry dump (format v{OBS_FORMAT_VERSION}) round-tripped and written \
+                 to {}",
+                out.display()
+            );
+            Ok(())
+        }
         "bench" => {
             let reps = if args.flag("quick") { 1 } else { args.get_u32("reps", 5) };
             let with_exact = args.flag("exact");
@@ -405,7 +468,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     one online auto-tuning run on the simulator\n\
                  \x20 service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]\n\
                  \x20         [--steal] [--skewed] [--cache-ttl SECS] [--no-near]\n\
-                 \x20         [--idle-tune] [--transfer] [--donor-core C]\n\
+                 \x20         [--idle-tune] [--transfer] [--donor-core C] [--trace]\n\
                  \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
                  \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
                  \x20     enables work-stealing placement (static-vs-steal comparison +\n\
@@ -415,7 +478,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     lets idle workers speculatively explore for parked lanes (gated on\n\
                  \x20     the global regeneration budget); --transfer runs the heterogeneous\n\
                  \x20     two-device demo (donor --donor-core, default DI-I2): cross-device\n\
-                 \x20     transfer priors with a cold-vs-transfer time-to-best comparison\n\
+                 \x20     transfer priors with a cold-vs-transfer time-to-best comparison;\n\
+                 \x20     --trace enables telemetry (latency percentiles per phase) and\n\
+                 \x20     writes a Chrome trace-event timeline to results/trace.json\n\
+                 \x20 stats [--core C] [--calls N] [--seed S] [--out PATH]\n\
+                 \x20     run a short telemetry-enabled service workload and dump the\n\
+                 \x20     metrics registry (counters, log2 latency histograms, p50/p99/p999)\n\
+                 \x20     as versioned JSON (default results/stats.json), round-tripped\n\
+                 \x20     through the built-in codec before writing\n\
                  \x20 host-tune [--dim D] [--calls N]\n\
                  \x20     online auto-tuning on the host PJRT (needs the `pjrt` feature)\n\
                  \x20 bench [--reps N] [--quick] [--exact] [--out PATH]\n\
@@ -456,6 +526,11 @@ struct ServiceKnobs {
     /// `--idle-tune`: idle engine workers speculatively advance
     /// exploration for parked lanes (budget-gated).
     idle_tune: bool,
+    /// `--trace`: enable telemetry on every phase (latency percentiles in
+    /// the phase summaries) and write a Chrome trace-event timeline to
+    /// `results/trace.json` (each traced phase overwrites it — the file
+    /// holds the most recent phase).
+    trace: bool,
     /// `--skewed` selects the adversarially placed 8-lane workload.
     workload: WorkloadFn,
 }
@@ -508,6 +583,10 @@ fn run_service_phase(
     let mut svc: TuningService<SimBackend> =
         TuningService::with_cache(service_cfg(knobs), cache);
     svc.cache().set_ttl(knobs.ttl);
+    if knobs.trace {
+        // Sequential mode: one worker shard carries everything.
+        svc.set_recorder(Recorder::enabled_for(1).for_worker(0));
+    }
     let mut lanes: Vec<LaneId> = Vec::new();
     for (key, b) in (knobs.workload)(core, seed) {
         lanes.push(svc.register(key, Some(true), b));
@@ -528,6 +607,9 @@ fn run_service_phase(
     }
     let secs = started.elapsed().as_secs_f64();
     let stats = svc.stats();
+    if knobs.trace {
+        write_trace(svc.recorder())?;
+    }
     let reports: Vec<LaneReport> =
         lanes.iter().filter_map(|&l| svc.lane_report(l)).collect();
     Ok((stats, lane_lines(&reports), svc.into_cache(), secs))
@@ -547,10 +629,13 @@ fn run_engine_phase(
 ) -> Result<(degoal_rt::service::ServiceStats, Vec<String>, TuneCache, f64)> {
     let shared = SharedTuneCache::from_cache(cache, degoal_rt::cache::DEFAULT_LOCK_SHARDS);
     shared.set_ttl(knobs.ttl);
-    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+    let rec =
+        if knobs.trace { Recorder::enabled_for(threads) } else { Recorder::disabled() };
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_recorder(
         service_cfg(knobs),
         shared,
         EngineOptions { threads, steal, idle_tune: knobs.idle_tune, ..Default::default() },
+        rec.clone(),
     );
     let mut lanes: Vec<LaneId> = Vec::new();
     for (key, b) in (knobs.workload)(core, seed) {
@@ -571,6 +656,9 @@ fn run_engine_phase(
     }
     let (stats, reports) = eng.finish()?;
     let secs = started.elapsed().as_secs_f64();
+    if knobs.trace {
+        write_trace(&rec)?;
+    }
     Ok((stats, lane_lines(&reports), cache_handle.snapshot(), secs))
 }
 
@@ -765,6 +853,9 @@ fn run_transfer_demo(
     Ok(())
 }
 
+/// Every phase prints the same shape: its label, the wall-clock
+/// prologue, then the uniform [`ServiceStats`] `Display` line (which
+/// includes latency percentiles whenever telemetry was enabled).
 fn print_service_phase(
     label: &str,
     st: &degoal_rt::service::ServiceStats,
@@ -772,27 +863,27 @@ fn print_service_phase(
     secs: f64,
 ) {
     println!(
-        "  {label}: lanes={} (warm {}, near {}, transfer {}) calls={} in {:.2}s wall \
-         ({:.0} calls/s) app={:.3}s overhead={:.1}ms ({:.2} %) explored={} generate={} \
-         swaps={} steals={} idle_steps={} {}",
-        st.lanes,
-        st.warm_lanes,
-        st.near_lanes,
-        st.transfer_lanes,
-        st.kernel_calls,
+        "  {label}: {:.2}s wall ({:.0} calls/s) {st}",
         secs,
         st.kernel_calls as f64 / secs.max(1e-9),
-        st.app_time,
-        st.overhead * 1e3,
-        100.0 * st.overhead_frac(),
-        st.explored,
-        st.generate_calls,
-        st.swaps,
-        st.steals,
-        st.idle_steps,
-        st.cache.stats(),
     );
     for l in lines {
         println!("{l}");
     }
+}
+
+/// Dump the recorder's journal + quantum spans as a Chrome trace-event
+/// JSON document (load in chrome://tracing or Perfetto). No-op for a
+/// disabled recorder.
+fn write_trace(rec: &Recorder) -> Result<()> {
+    let Some(obs) = rec.obs() else {
+        return Ok(());
+    };
+    let out = degoal_rt::paths::results_dir().join("trace.json");
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, degoal_rt::obs::chrome_trace(obs).to_string())?;
+    println!("  trace written to {} (chrome://tracing / Perfetto)", out.display());
+    Ok(())
 }

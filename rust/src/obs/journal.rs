@@ -1,0 +1,206 @@
+//! Bounded per-worker event journal.
+//!
+//! One ring per worker (plus the control ring) keeps recording
+//! single-producer in the steady state: the owning worker appends, and
+//! only the snapshot path (or a control thread) ever contends. Each
+//! ring is a `Mutex<VecDeque>` taken with `try_lock` — a contended push
+//! *drops the event and counts it* instead of blocking a worker, and a
+//! full ring evicts its oldest entry (also counted), so the journal's
+//! cost is bounded no matter how long the service runs. Surviving
+//! events therefore always form a suffix of each worker's stream, in
+//! the order recorded — monotone in that lane-virtual-time sense the
+//! overflow test pins.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cache::CacheHit;
+use crate::coordinator::DenyReason;
+
+/// Default per-worker ring capacity (events, not bytes).
+pub const DEFAULT_JOURNAL_CAP: usize = 4096;
+
+/// What happened — the structured payload of a journal entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A lane was registered; `warm` is its warm-start outcome
+    /// (`None` = cold).
+    LaneOpened { warm: Option<CacheHit> },
+    /// The lane's tuner invoked `Backend::generate`.
+    GenerateCall,
+    /// The lane hot-swapped its active function.
+    Swap,
+    /// The engine moved a lane between workers.
+    Steal { from: u32, to: u32 },
+    /// The lane was retired and its results published.
+    Retire,
+    /// An idle worker advanced exploration speculatively.
+    IdleStep,
+    /// The global regeneration gate transitioned to "deny" for a lane.
+    GovernorDeny { reason: DenyReason },
+    /// Registration-time tuning-cache outcome (`None` = miss).
+    CacheHit { kind: Option<CacheHit> },
+    /// The steady-state detector extrapolated a candidate measurement.
+    SteadyExtrapolated,
+    /// A cross-lane simulation-memo lookup hit.
+    MemoHit,
+    /// One scheduling quantum ran on a worker: `calls` lane steps over
+    /// `dur_us` wall microseconds (the trace's span primitive).
+    Quantum { calls: u32, dur_us: u64 },
+}
+
+impl EventKind {
+    /// Stable label for traces and debugging.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::LaneOpened { .. } => "lane_opened",
+            EventKind::GenerateCall => "generate_call",
+            EventKind::Swap => "swap",
+            EventKind::Steal { .. } => "steal",
+            EventKind::Retire => "retire",
+            EventKind::IdleStep => "idle_step",
+            EventKind::GovernorDeny { .. } => "governor_deny",
+            EventKind::CacheHit { .. } => "cache_hit",
+            EventKind::SteadyExtrapolated => "steady_extrapolated",
+            EventKind::MemoHit => "memo_hit",
+            EventKind::Quantum { .. } => "quantum",
+        }
+    }
+}
+
+/// One journal entry: an [`EventKind`] stamped with where and when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Global record order (gaps where events were dropped).
+    pub seq: u64,
+    /// Wall-clock microseconds since the recorder's epoch.
+    pub wall_us: u64,
+    /// Lane id the event concerns (`u32::MAX` for non-lane events).
+    pub lane: u32,
+    /// The lane's virtual time (`app_time + overhead`) at the event.
+    pub vtime: f64,
+    pub kind: EventKind,
+}
+
+struct Ring {
+    buf: VecDeque<Event>,
+}
+
+/// Bounded multi-ring journal; see module docs for the locking story.
+pub struct EventJournal {
+    rings: Box<[Mutex<Ring>]>,
+    cap: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl EventJournal {
+    pub fn new(rings: usize, cap: usize) -> EventJournal {
+        let cap = cap.max(1);
+        EventJournal {
+            rings: (0..rings.max(1))
+                .map(|_| Mutex::new(Ring { buf: VecDeque::with_capacity(cap) }))
+                .collect(),
+            cap,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_rings(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Record an event on `worker`'s ring. Returns `false` if the event
+    /// was dropped (ring contended) or evicted another (ring full) —
+    /// callers never block either way.
+    pub fn push(&self, worker: usize, mut ev: Event) -> bool {
+        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ring = &self.rings[worker.min(self.rings.len() - 1)];
+        let Ok(mut ring) = ring.try_lock() else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        };
+        let mut clean = true;
+        if ring.buf.len() >= self.cap {
+            ring.buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            clean = false;
+        }
+        ring.buf.push_back(ev);
+        clean
+    }
+
+    /// Total events lost to overflow or contention so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy out every ring — index = worker id, events in record order.
+    pub fn snapshot(&self) -> Vec<Vec<Event>> {
+        self.rings
+            .iter()
+            .map(|r| match r.lock() {
+                Ok(ring) => ring.buf.iter().copied().collect(),
+                Err(poisoned) => poisoned.into_inner().buf.iter().copied().collect(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(lane: u32, vtime: f64) -> Event {
+        Event { seq: 0, wall_us: 0, lane, vtime, kind: EventKind::GenerateCall }
+    }
+
+    #[test]
+    fn keeps_a_suffix_and_counts_evictions() {
+        let j = EventJournal::new(1, 4);
+        for i in 0..10 {
+            j.push(0, ev(0, i as f64));
+        }
+        assert_eq!(j.dropped(), 6);
+        let rings = j.snapshot();
+        let vt: Vec<f64> = rings[0].iter().map(|e| e.vtime).collect();
+        assert_eq!(vt, vec![6.0, 7.0, 8.0, 9.0], "survivors are the newest suffix");
+    }
+
+    #[test]
+    fn rings_are_independent() {
+        let j = EventJournal::new(2, 8);
+        j.push(0, ev(0, 1.0));
+        j.push(1, ev(1, 2.0));
+        j.push(1, ev(1, 3.0));
+        let rings = j.snapshot();
+        assert_eq!(rings[0].len(), 1);
+        assert_eq!(rings[1].len(), 2);
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn seq_is_globally_unique() {
+        let j = EventJournal::new(2, 8);
+        for w in 0..2 {
+            for i in 0..3 {
+                j.push(w, ev(w as u32, i as f64));
+            }
+        }
+        let mut seqs: Vec<u64> =
+            j.snapshot().iter().flatten().map(|e| e.seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 6);
+    }
+
+    #[test]
+    fn out_of_range_worker_clamps_to_last_ring() {
+        let j = EventJournal::new(2, 8);
+        j.push(99, ev(0, 1.0));
+        let rings = j.snapshot();
+        assert_eq!(rings[1].len(), 1);
+    }
+}

@@ -1,0 +1,413 @@
+//! Lock-free metrics registry: per-worker sharded counters plus
+//! fixed-bucket log₂ latency histograms with `p50/p99/p999` readout.
+//!
+//! Layout: one [`WorkerShard`] per worker thread (plus one *control*
+//! shard for off-worker paths like lane registration and retirement from
+//! controller threads). The hot-path updates — one application call's
+//! latency, one scheduling quantum's wall time — come from exactly one
+//! thread per shard (the owning worker), so they are plain
+//! `load(Relaxed); store(Relaxed)` pairs: no `lock`-prefixed RMW, a
+//! couple of cycles each. Rare events (lane opened, steal, retire,
+//! governor deny, memo hit …) use `fetch_add` so the multi-writer
+//! control shard never loses them. Readout merges all shards.
+//!
+//! The histogram is 64 fixed log₂ buckets over *nanoseconds*: bucket `i`
+//! holds values in `[2^i, 2^(i+1))` ns, which covers 1 ns to centuries
+//! with no allocation and no configuration. Quantiles walk the merged
+//! buckets and report the bucket's upper bound — a conservative estimate
+//! whose error is bounded by the 2× bucket width, plenty for the p50 /
+//! p99 / p999 envelope the ROADMAP asks for.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{num, obj, Json};
+
+/// Number of log₂ histogram buckets (`[2^i, 2^(i+1))` ns each).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Every counter the registry tracks. The discriminant is the shard
+/// index; [`Counter::ALL`] and [`Counter::name`] drive the JSON codec,
+/// so adding a counter here is the whole change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Application kernel calls executed through `Lane::step`.
+    AppCalls,
+    /// `Backend::generate` invocations observed across lanes.
+    GenerateCalls,
+    /// Active-function replacements (hot swaps).
+    Swaps,
+    /// Lane ownership transfers by the work-stealing engine.
+    Steals,
+    /// Lanes gracefully retired.
+    Retires,
+    /// Speculative exploration advances by idle workers.
+    IdleSteps,
+    /// Times the global regeneration gate answered "no".
+    GovernorDenies,
+    /// Registration-time tuning-cache exact hits.
+    CacheHitExact,
+    /// Registration-time near-trip-length warm-start hints.
+    CacheHitNear,
+    /// Registration-time cross-device transfer priors.
+    CacheHitTransfer,
+    /// Registration-time tuning-cache misses (cold lanes).
+    CacheMiss,
+    /// Cross-lane simulation-memo hits observed by backends.
+    MemoHits,
+    /// Cross-lane simulation-memo misses observed by backends.
+    MemoMisses,
+    /// Candidate measurements the steady-state detector extrapolated.
+    SteadyExtrapolations,
+    /// Lanes opened (registrations that created a lane).
+    LanesOpened,
+    /// Journal events dropped (ring overflow or contended ring).
+    JournalDropped,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 16] = [
+        Counter::AppCalls,
+        Counter::GenerateCalls,
+        Counter::Swaps,
+        Counter::Steals,
+        Counter::Retires,
+        Counter::IdleSteps,
+        Counter::GovernorDenies,
+        Counter::CacheHitExact,
+        Counter::CacheHitNear,
+        Counter::CacheHitTransfer,
+        Counter::CacheMiss,
+        Counter::MemoHits,
+        Counter::MemoMisses,
+        Counter::SteadyExtrapolations,
+        Counter::LanesOpened,
+        Counter::JournalDropped,
+    ];
+
+    /// Stable snake_case name — the JSON key, never rename.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::AppCalls => "app_calls",
+            Counter::GenerateCalls => "generate_calls",
+            Counter::Swaps => "swaps",
+            Counter::Steals => "steals",
+            Counter::Retires => "retires",
+            Counter::IdleSteps => "idle_steps",
+            Counter::GovernorDenies => "governor_denies",
+            Counter::CacheHitExact => "cache_hit_exact",
+            Counter::CacheHitNear => "cache_hit_near",
+            Counter::CacheHitTransfer => "cache_hit_transfer",
+            Counter::CacheMiss => "cache_miss",
+            Counter::MemoHits => "memo_hits",
+            Counter::MemoMisses => "memo_misses",
+            Counter::SteadyExtrapolations => "steady_extrapolations",
+            Counter::LanesOpened => "lanes_opened",
+            Counter::JournalDropped => "journal_dropped",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Counter> {
+        Counter::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
+
+pub(crate) const N_COUNTERS: usize = Counter::ALL.len();
+
+/// Log₂ bucket index for a nanosecond value.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        (63 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket `i` in seconds (the quantile estimate).
+fn bucket_upper_s(i: usize) -> f64 {
+    2f64.powi(i as i32 + 1) * 1e-9
+}
+
+#[derive(Default)]
+struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Hist {
+    /// Single-writer bump (owning worker only): plain load+store, no RMW.
+    #[inline]
+    fn observe(&self, ns: u64) {
+        let b = &self.buckets[bucket_of(ns)];
+        b.store(b.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
+    }
+
+    fn merge_into(&self, out: &mut [u64; HIST_BUCKETS]) {
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o += b.load(Ordering::Relaxed);
+        }
+    }
+}
+
+/// One worker's slice of the registry.
+#[derive(Default)]
+struct WorkerShard {
+    counters: [AtomicU64; N_COUNTERS],
+    /// Virtual per-call kernel latency (`Lane::step` seconds) in ns.
+    call_hist: Hist,
+    /// Wall-clock scheduling-quantum duration in ns.
+    quantum_hist: Hist,
+}
+
+/// Per-worker sharded counters + latency histograms. All mutation is
+/// through shared references; hot-path updates must come from the
+/// shard's owning worker (see module docs), rare events may come from
+/// anywhere.
+pub struct MetricsRegistry {
+    shards: Box<[WorkerShard]>,
+}
+
+impl MetricsRegistry {
+    /// `shards` independent worker slices (callers add one control shard
+    /// for off-worker paths).
+    pub fn new(shards: usize) -> MetricsRegistry {
+        MetricsRegistry {
+            shards: (0..shards.max(1)).map(|_| WorkerShard::default()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard(&self, worker: usize) -> &WorkerShard {
+        &self.shards[worker.min(self.shards.len() - 1)]
+    }
+
+    /// Rare-event increment: multi-writer safe (`fetch_add`).
+    #[inline]
+    pub fn add(&self, worker: usize, c: Counter, n: u64) {
+        self.shard(worker).counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Hot-path per-call update — `AppCalls` plus the call-latency
+    /// histogram. Single-writer per shard: plain load+store.
+    #[inline]
+    pub fn observe_call(&self, worker: usize, latency_s: f64) {
+        let sh = self.shard(worker);
+        let c = &sh.counters[Counter::AppCalls as usize];
+        c.store(c.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
+        sh.call_hist.observe(secs_to_ns(latency_s));
+    }
+
+    /// Hot-path per-quantum update (owning worker only).
+    #[inline]
+    pub fn observe_quantum(&self, worker: usize, wall_s: f64) {
+        self.shard(worker).quantum_hist.observe(secs_to_ns(wall_s));
+    }
+
+    /// Merge every shard into a plain snapshot.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let mut counters = [0u64; N_COUNTERS];
+        let mut call_hist = [0u64; HIST_BUCKETS];
+        let mut quantum_hist = [0u64; HIST_BUCKETS];
+        for sh in self.shards.iter() {
+            for (o, c) in counters.iter_mut().zip(&sh.counters) {
+                *o += c.load(Ordering::Relaxed);
+            }
+            sh.call_hist.merge_into(&mut call_hist);
+            sh.quantum_hist.merge_into(&mut quantum_hist);
+        }
+        RegistrySnapshot { counters, call_hist, quantum_hist }
+    }
+}
+
+#[inline]
+fn secs_to_ns(s: f64) -> u64 {
+    if s <= 0.0 || !s.is_finite() {
+        0
+    } else {
+        (s * 1e9) as u64
+    }
+}
+
+/// Version tag written into (and checked out of) the stats JSON —
+/// the same pattern as `TUNECACHE_FORMAT_VERSION`.
+pub const OBS_FORMAT_VERSION: u32 = 1;
+
+/// A merged, point-in-time copy of the whole registry — the unit the
+/// `degoal-rt stats` subcommand serialises and diffs across runs.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RegistrySnapshot {
+    pub counters: [u64; N_COUNTERS],
+    pub call_hist: [u64; HIST_BUCKETS],
+    pub quantum_hist: [u64; HIST_BUCKETS],
+}
+
+impl RegistrySnapshot {
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Quantile of the per-call latency histogram, in seconds (0.0 when
+    /// empty). `q` in `[0, 1]`.
+    pub fn call_quantile(&self, q: f64) -> f64 {
+        quantile(&self.call_hist, q)
+    }
+
+    /// `(p50, p99, p999)` call latency in seconds.
+    pub fn call_percentiles(&self) -> (f64, f64, f64) {
+        (self.call_quantile(0.50), self.call_quantile(0.99), self.call_quantile(0.999))
+    }
+
+    /// Versioned, serde-free JSON — sparse histograms (only non-empty
+    /// buckets), counters keyed by stable name, `BTreeMap`-ordered for
+    /// deterministic output.
+    pub fn to_json(&self) -> Json {
+        let counters = obj(Counter::ALL
+            .iter()
+            .map(|c| (c.name(), num(self.counters[*c as usize] as f64)))
+            .collect());
+        obj(vec![
+            ("version", num(OBS_FORMAT_VERSION as f64)),
+            ("counters", counters),
+            ("call_latency_ns", hist_to_json(&self.call_hist)),
+            ("quantum_wall_ns", hist_to_json(&self.quantum_hist)),
+            ("call_p50_s", num(self.call_quantile(0.50))),
+            ("call_p99_s", num(self.call_quantile(0.99))),
+            ("call_p999_s", num(self.call_quantile(0.999))),
+        ])
+    }
+
+    /// Inverse of [`RegistrySnapshot::to_json`]. A version mismatch is a
+    /// `None` (callers treat it like a cold start, the cache's policy).
+    pub fn from_json(v: &Json) -> Option<RegistrySnapshot> {
+        if v.get("version")?.as_u64()? != OBS_FORMAT_VERSION as u64 {
+            return None;
+        }
+        let mut snap = RegistrySnapshot::default();
+        if let Json::Obj(m) = v.get("counters")? {
+            for (k, n) in m {
+                if let Some(c) = Counter::from_name(k) {
+                    snap.counters[c as usize] = n.as_u64()?;
+                }
+            }
+        }
+        hist_from_json(v.get("call_latency_ns")?, &mut snap.call_hist)?;
+        hist_from_json(v.get("quantum_wall_ns")?, &mut snap.quantum_hist)?;
+        Some(snap)
+    }
+}
+
+/// Quantile over log₂ buckets: the upper bound (seconds) of the bucket
+/// where the cumulative count crosses `ceil(q * total)`.
+fn quantile(hist: &[u64; HIST_BUCKETS], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (i, &n) in hist.iter().enumerate() {
+        seen += n;
+        if seen >= target {
+            return bucket_upper_s(i);
+        }
+    }
+    bucket_upper_s(HIST_BUCKETS - 1)
+}
+
+fn hist_to_json(hist: &[u64; HIST_BUCKETS]) -> Json {
+    // Sparse: one [bucket, count] pair per non-empty bucket.
+    Json::Arr(
+        hist.iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| Json::Arr(vec![num(i as f64), num(n as f64)]))
+            .collect(),
+    )
+}
+
+fn hist_from_json(v: &Json, out: &mut [u64; HIST_BUCKETS]) -> Option<()> {
+    for pair in v.as_arr()? {
+        let p = pair.as_arr()?;
+        let i = p.first()?.as_usize()?;
+        if i < HIST_BUCKETS {
+            out[i] = p.get(1)?.as_u64()?;
+        }
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counters_merge_across_shards() {
+        let reg = MetricsRegistry::new(3);
+        reg.add(0, Counter::Steals, 2);
+        reg.add(1, Counter::Steals, 3);
+        reg.add(7, Counter::Swaps, 1); // out-of-range clamps to last shard
+        let snap = reg.snapshot();
+        assert_eq!(snap.get(Counter::Steals), 5);
+        assert_eq!(snap.get(Counter::Swaps), 1);
+    }
+
+    #[test]
+    fn call_quantiles_bound_the_samples() {
+        let reg = MetricsRegistry::new(2);
+        // 99 calls at ~1 µs, one at ~1 ms: p50 stays near 1 µs, p999
+        // reaches the millisecond outlier.
+        for _ in 0..99 {
+            reg.observe_call(0, 1e-6);
+        }
+        reg.observe_call(1, 1e-3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get(Counter::AppCalls), 100);
+        let (p50, p99, p999) = snap.call_percentiles();
+        assert!(p50 >= 1e-6 && p50 < 4e-6, "p50 {p50}");
+        assert!(p99 <= p999, "p99 {p99} p999 {p999}");
+        assert!(p999 >= 1e-3 && p999 < 4e-3, "p999 {p999}");
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let snap = MetricsRegistry::new(1).snapshot();
+        assert_eq!(snap.call_quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let reg = MetricsRegistry::new(2);
+        reg.add(0, Counter::GenerateCalls, 42);
+        reg.add(1, Counter::CacheHitNear, 7);
+        reg.observe_call(0, 3.2e-6);
+        reg.observe_quantum(1, 1.5e-3);
+        let snap = reg.snapshot();
+        let text = snap.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = RegistrySnapshot::from_json(&parsed).unwrap();
+        assert_eq!(back, snap, "stats JSON must round-trip losslessly");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut j = MetricsRegistry::new(1).snapshot().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), num(999.0));
+        }
+        assert!(RegistrySnapshot::from_json(&j).is_none());
+    }
+}

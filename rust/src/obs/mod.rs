@@ -1,0 +1,248 @@
+//! Telemetry for the serving stack: where the paper's 0.2–4.2 % budget
+//! actually goes.
+//!
+//! The serving layer could state its overhead only as one end-of-run
+//! scalar (`ServiceStats::overhead_frac`). This module adds the
+//! *time-resolved* view — per-worker counters, log₂ latency histograms
+//! with p50/p99/p999 readout ([`metrics`]), and a bounded ring-buffer
+//! journal of structured events stamped with lane virtual time
+//! ([`journal`]) — exported as latency percentiles on `ServiceStats`, a
+//! Chrome trace-event timeline ([`trace`], `degoal-rt service --trace`),
+//! and a versioned JSON registry dump (`degoal-rt stats`).
+//!
+//! Everything funnels through a [`Recorder`] handle. The default
+//! ([`Recorder::disabled`]) holds no registry: every recording call is a
+//! branch on a `None` that the optimiser folds away, so the disabled
+//! configuration is a true no-op and the engine's bitwise parity
+//! invariants (sequential == static == steal) are untouched. Enabled,
+//! the hot path (one call latency, one quantum) costs two relaxed
+//! load+store pairs on a worker-private cache line — the `obs_overhead`
+//! guard pins the total at ≤ 1 % of grid throughput, inside the paper's
+//! own envelope. Telemetry only ever *reads* the tuner's accounting;
+//! it never feeds back into decisions, so enabled vs disabled runs
+//! produce identical tuning results.
+
+pub mod journal;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use journal::{Event, EventJournal, EventKind, DEFAULT_JOURNAL_CAP};
+pub use metrics::{Counter, MetricsRegistry, RegistrySnapshot, OBS_FORMAT_VERSION};
+pub use trace::chrome_trace;
+
+/// Lane id stamped on events that concern no particular lane.
+pub const NO_LANE: u32 = u32::MAX;
+
+/// The shared telemetry state one service/engine owns: registry +
+/// journal + the wall-clock epoch all event timestamps are relative to.
+pub struct Obs {
+    pub registry: MetricsRegistry,
+    pub journal: EventJournal,
+    epoch: Instant,
+}
+
+impl Obs {
+    /// State for `workers` worker threads plus one *control* shard/ring
+    /// (index `workers`) for off-worker paths — registration from the
+    /// caller thread, retirement from the controller.
+    pub fn new(workers: usize, journal_cap: usize) -> Obs {
+        let shards = workers.max(1) + 1;
+        Obs {
+            registry: MetricsRegistry::new(shards),
+            journal: EventJournal::new(shards, journal_cap),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Microseconds since this telemetry state was created.
+    pub fn wall_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Shard/ring index of the control (off-worker) slot.
+    pub fn control_shard(&self) -> usize {
+        self.registry.n_shards() - 1
+    }
+}
+
+/// Cheap, cloneable handle through which every subsystem records.
+///
+/// A `Recorder` is an `Option<Arc<Obs>>` plus the worker shard it
+/// attributes to. [`Recorder::disabled`] (also `Default`) is the `None`
+/// arm: every method starts with a branch the compiler sees as constant
+/// after inlining, so un-instrumented builds and the parity tests pay
+/// nothing. Pass recorders *by reference down the call path* rather
+/// than storing them in lanes — a lane's work must be attributed to the
+/// worker currently running it, which changes when lanes are stolen.
+#[derive(Clone)]
+pub struct Recorder {
+    inner: Option<Arc<Obs>>,
+    worker: u32,
+    /// Lane stamp for [`Recorder::event_here`] (backends record through
+    /// a handle the lane re-stamps each step; they know neither their
+    /// lane id nor its virtual clock).
+    lane: u32,
+    vtime: f64,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("enabled", &self.inner.is_some())
+            .field("worker", &self.worker)
+            .field("lane", &self.lane)
+            .finish()
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder { inner: None, worker: 0, lane: NO_LANE, vtime: 0.0 }
+    }
+}
+
+impl Recorder {
+    /// The no-op recorder (what everything gets unless telemetry is
+    /// explicitly switched on).
+    pub fn disabled() -> Recorder {
+        Recorder::default()
+    }
+
+    /// An enabled recorder over fresh state for `workers` workers, with
+    /// the default journal capacity. The returned handle attributes to
+    /// the control shard; derive worker handles with
+    /// [`Recorder::for_worker`].
+    pub fn enabled_for(workers: usize) -> Recorder {
+        Recorder::with_obs(Arc::new(Obs::new(workers, DEFAULT_JOURNAL_CAP)))
+    }
+
+    /// Wrap existing state; attributes to the control shard.
+    pub fn with_obs(obs: Arc<Obs>) -> Recorder {
+        let worker = obs.control_shard() as u32;
+        Recorder { inner: Some(obs), worker, lane: NO_LANE, vtime: 0.0 }
+    }
+
+    /// A handle attributing to worker `w`'s shard and journal ring.
+    pub fn for_worker(&self, w: usize) -> Recorder {
+        Recorder { inner: self.inner.clone(), worker: w as u32, lane: self.lane, vtime: self.vtime }
+    }
+
+    /// A handle stamped with a lane id and its current virtual time,
+    /// for [`Recorder::event_here`] — what lanes hand their backends.
+    pub fn stamped(&self, lane: u32, vtime: f64) -> Recorder {
+        Recorder { inner: self.inner.clone(), worker: self.worker, lane, vtime }
+    }
+
+    /// Is anything listening? Use to skip *preparation* work (timing a
+    /// quantum, diffing tuner stats) — the recording calls themselves
+    /// are already safe to make unconditionally.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The shared state, if enabled (snapshot/export paths).
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.inner.as_ref()
+    }
+
+    /// Merged registry snapshot (`None` when disabled).
+    pub fn snapshot(&self) -> Option<RegistrySnapshot> {
+        self.inner.as_ref().map(|o| o.registry.snapshot())
+    }
+
+    /// Rare-event counter bump (multi-writer safe from any thread).
+    #[inline]
+    pub fn count(&self, c: Counter, n: u64) {
+        if let Some(o) = &self.inner {
+            o.registry.add(self.worker as usize, c, n);
+        }
+    }
+
+    /// Hot path: one application call completed in `latency_s` seconds
+    /// of lane virtual time. Must be called from this handle's worker.
+    #[inline]
+    pub fn call(&self, latency_s: f64) {
+        if let Some(o) = &self.inner {
+            o.registry.observe_call(self.worker as usize, latency_s);
+        }
+    }
+
+    /// Hot path: one scheduling quantum took `wall_s` wall seconds.
+    /// Must be called from this handle's worker.
+    #[inline]
+    pub fn quantum(&self, wall_s: f64) {
+        if let Some(o) = &self.inner {
+            o.registry.observe_quantum(self.worker as usize, wall_s);
+        }
+    }
+
+    /// Journal a structured event, stamped with wall time now and the
+    /// lane's virtual time. Never blocks; overflow increments
+    /// [`Counter::JournalDropped`] instead.
+    #[inline]
+    pub fn event(&self, lane: u32, vtime: f64, kind: EventKind) {
+        if let Some(o) = &self.inner {
+            let ev = Event { seq: 0, wall_us: o.wall_us(), lane, vtime, kind };
+            if !o.journal.push(self.worker as usize, ev) {
+                o.registry.add(self.worker as usize, Counter::JournalDropped, 1);
+            }
+        }
+    }
+
+    /// [`Recorder::event`] using the lane/vtime stamp from
+    /// [`Recorder::stamped`] — the backend-side recording call.
+    #[inline]
+    pub fn event_here(&self, kind: EventKind) {
+        self.event(self.lane, self.vtime, kind);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert_and_cheap() {
+        let r = Recorder::disabled();
+        assert!(!r.enabled());
+        r.count(Counter::Steals, 1);
+        r.call(1e-6);
+        r.quantum(1e-3);
+        r.event(0, 0.0, EventKind::Swap);
+        assert!(r.snapshot().is_none());
+    }
+
+    #[test]
+    fn worker_handles_share_state() {
+        let base = Recorder::enabled_for(2);
+        let w0 = base.for_worker(0);
+        let w1 = base.for_worker(1);
+        w0.call(1e-6);
+        w1.call(2e-6);
+        w1.count(Counter::Steals, 1);
+        base.count(Counter::Retires, 1); // control shard
+        let snap = base.snapshot().unwrap();
+        assert_eq!(snap.get(Counter::AppCalls), 2);
+        assert_eq!(snap.get(Counter::Steals), 1);
+        assert_eq!(snap.get(Counter::Retires), 1);
+    }
+
+    #[test]
+    fn events_land_on_the_workers_ring() {
+        let base = Recorder::enabled_for(2);
+        base.for_worker(0).event(7, 1.5, EventKind::Swap);
+        base.for_worker(1).event(8, 2.5, EventKind::GenerateCall);
+        base.event(NO_LANE, 0.0, EventKind::Retire); // control ring
+        let rings = base.obs().unwrap().journal.snapshot();
+        assert_eq!(rings.len(), 3, "two workers + control");
+        assert_eq!(rings[0].len(), 1);
+        assert_eq!(rings[0][0].lane, 7);
+        assert_eq!(rings[1][0].kind, EventKind::GenerateCall);
+        assert_eq!(rings[2][0].lane, NO_LANE);
+        assert_eq!(base.snapshot().unwrap().get(Counter::JournalDropped), 0);
+    }
+}

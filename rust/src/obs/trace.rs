@@ -1,0 +1,175 @@
+//! Chrome trace-event export: turn a journal snapshot into the JSON
+//! object format `chrome://tracing` / Perfetto load directly.
+//!
+//! One track (tid) per worker ring — workers `0..N` plus the `control`
+//! track. Scheduling quanta become `ph:"X"` complete spans (a quantum's
+//! event is recorded at its *end*, so the span starts at
+//! `wall_us - dur_us`); everything else becomes a `ph:"i"`
+//! thread-scoped instant carrying the lane id, virtual time, and any
+//! event payload as args. Thread-name metadata (`ph:"M"`) labels the
+//! tracks. All of it is the serde-free [`Json`] codec — write with
+//! `to_string()`.
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::journal::{Event, EventKind};
+use super::Obs;
+
+/// The synthetic process id all tracks live under.
+const TRACE_PID: f64 = 1.0;
+
+/// Build the full `{"traceEvents": [...]}` document from `obs`'s
+/// journal. `workers` rings are labelled `worker 0..N-1`; the final
+/// ring is the engine's control thread.
+pub fn chrome_trace(obs: &Obs) -> Json {
+    let rings = obs.journal.snapshot();
+    let control = rings.len() - 1;
+    let mut events: Vec<Json> = Vec::new();
+
+    for (tid, _) in rings.iter().enumerate() {
+        let name = if tid == control {
+            "control".to_string()
+        } else {
+            format!("worker {tid}")
+        };
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(TRACE_PID)),
+            ("tid", num(tid as f64)),
+            ("args", obj(vec![("name", s(&name))])),
+        ]));
+    }
+
+    for (tid, ring) in rings.iter().enumerate() {
+        for ev in ring {
+            events.push(trace_event(tid, ev));
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("otherData", obj(vec![("dropped_events", num(obs.journal.dropped() as f64))])),
+    ])
+}
+
+fn trace_event(tid: usize, ev: &Event) -> Json {
+    let mut args: Vec<(&str, Json)> = vec![("vtime_s", num(ev.vtime)), ("seq", num(ev.seq as f64))];
+    if ev.lane != super::NO_LANE {
+        args.push(("lane", num(ev.lane as f64)));
+    }
+
+    match ev.kind {
+        EventKind::Quantum { calls, dur_us } => {
+            args.push(("calls", num(calls as f64)));
+            obj(vec![
+                ("ph", s("X")),
+                ("name", s(&format!("lane {} quantum", ev.lane))),
+                ("cat", s("quantum")),
+                ("pid", num(TRACE_PID)),
+                ("tid", num(tid as f64)),
+                ("ts", num(ev.wall_us.saturating_sub(dur_us) as f64)),
+                ("dur", num(dur_us.max(1) as f64)),
+                ("args", obj(args)),
+            ])
+        }
+        kind => {
+            match kind {
+                EventKind::Steal { from, to } => {
+                    args.push(("from", num(from as f64)));
+                    args.push(("to", num(to as f64)));
+                }
+                EventKind::GovernorDeny { reason } => {
+                    args.push(("reason", s(reason.name())));
+                }
+                EventKind::LaneOpened { warm } | EventKind::CacheHit { kind: warm } => {
+                    args.push((
+                        "warm",
+                        warm.map_or(Json::Null, |h| s(&format!("{h:?}").to_lowercase())),
+                    ));
+                }
+                _ => {}
+            }
+            obj(vec![
+                ("ph", s("i")),
+                ("name", s(kind.name())),
+                ("cat", s("event")),
+                ("pid", num(TRACE_PID)),
+                ("tid", num(tid as f64)),
+                ("ts", num(ev.wall_us as f64)),
+                ("s", s("t")),
+                ("args", obj(args)),
+            ])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EventKind, Obs, Recorder, NO_LANE};
+    use super::*;
+    use crate::coordinator::DenyReason;
+    use std::sync::Arc;
+
+    fn populated_obs() -> Arc<Obs> {
+        let obs = Arc::new(Obs::new(2, 64));
+        let base = Recorder::with_obs(obs.clone());
+        let w0 = base.for_worker(0);
+        let w1 = base.for_worker(1);
+        w0.event(3, 0.5, EventKind::Quantum { calls: 16, dur_us: 120 });
+        w0.event(3, 0.5, EventKind::Steal { from: 1, to: 0 });
+        w1.event(4, 0.9, EventKind::GovernorDeny { reason: DenyReason::Exhausted });
+        base.event(NO_LANE, 0.0, EventKind::Retire);
+        obs
+    }
+
+    #[test]
+    fn trace_has_metadata_spans_and_instants() {
+        let obs = populated_obs();
+        let doc = chrome_trace(&obs);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread_name records (2 workers + control) + 4 events.
+        assert_eq!(events.len(), 7);
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 1);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 3);
+    }
+
+    #[test]
+    fn span_start_precedes_its_end() {
+        let obs = populated_obs();
+        let doc = chrome_trace(&obs);
+        let span = doc
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .unwrap();
+        let ts = span.get("ts").unwrap().as_f64().unwrap();
+        let dur = span.get("dur").unwrap().as_f64().unwrap();
+        assert!(ts >= 0.0 && dur >= 1.0);
+        assert_eq!(span.path(&["args", "calls"]).unwrap().as_u64(), Some(16));
+    }
+
+    #[test]
+    fn trace_json_is_reparseable() {
+        let obs = populated_obs();
+        let text = chrome_trace(&obs).to_string();
+        let back = Json::parse(&text).expect("trace must be valid JSON");
+        assert!(back.get("traceEvents").is_some());
+        let deny = back
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("governor_deny"))
+            .unwrap();
+        assert_eq!(deny.path(&["args", "reason"]).unwrap().as_str(), Some("exhausted"));
+    }
+}

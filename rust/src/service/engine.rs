@@ -69,6 +69,7 @@ use super::{LaneId, ServiceConfig, ServiceStats};
 use crate::backend::Backend;
 use crate::cache::{DeviceFingerprint, SharedTuneCache, TuneKey};
 use crate::coordinator::RegenGovernor;
+use crate::obs::{Counter, EventKind, Recorder};
 
 /// Placement and stealing knobs of the threaded engine.
 #[derive(Debug, Clone, Copy)]
@@ -168,13 +169,26 @@ struct Shared<B: Backend> {
     opts: EngineOptions,
     cache: SharedTuneCache,
     governor: RegenGovernor,
+    /// Base telemetry handle (attributes to the control shard). Workers
+    /// derive per-worker handles with [`Recorder::for_worker`] so every
+    /// recording lands on the shard of the thread doing the work —
+    /// including after a steal, which is why lanes take the recorder by
+    /// reference instead of owning one. Disabled (the default) every
+    /// recording call is a no-op and the engine is byte-identical to the
+    /// un-instrumented build.
+    rec: Recorder,
 }
 
 /// Pop the next runnable lane for worker `w`: own deque first (FIFO so a
 /// loaded worker round-robins its lanes), then — when stealing is on —
 /// the *oldest* lane of the most loaded victim. The steal updates the
 /// lane's home: ownership transfers to the thief.
-fn next_lane<B: Backend>(sched: &mut Sched<B>, w: usize, steal: bool) -> Option<usize> {
+fn next_lane<B: Backend>(
+    sched: &mut Sched<B>,
+    w: usize,
+    steal: bool,
+    rec: &Recorder,
+) -> Option<usize> {
     if let Some(id) = sched.deques[w].pop_front() {
         return Some(id);
     }
@@ -192,6 +206,12 @@ fn next_lane<B: Backend>(sched: &mut Sched<B>, w: usize, steal: bool) -> Option<
     sched.slots[id].home = w;
     sched.slots[id].steals += 1;
     sched.steals += 1;
+    if rec.enabled() {
+        rec.count(Counter::Steals, 1);
+        // A queued lane is parked, so its clock is readable here.
+        let vt = sched.slots[id].lane.as_ref().map(|l| l.tuner.now()).unwrap_or(0.0);
+        rec.event(id as u32, vt, EventKind::Steal { from: victim as u32, to: w as u32 });
+    }
     Some(id)
 }
 
@@ -236,10 +256,17 @@ fn next_idle_lane<B: Backend>(sched: &mut Sched<B>) -> Option<usize> {
 /// Retirement endpoint (caller holds the scheduler lock, lane parked
 /// with an empty backlog): checkpoint best-so-far into the cache, record
 /// the final report, free the backend, release the key.
-fn finalize_retire<B: Backend>(sched: &mut Sched<B>, id: usize, cache: &SharedTuneCache) {
+fn finalize_retire<B: Backend>(
+    sched: &mut Sched<B>,
+    id: usize,
+    cache: &SharedTuneCache,
+    rec: &Recorder,
+) {
     let Some(lane) = sched.slots[id].lane.take() else {
         return;
     };
+    rec.count(Counter::Retires, 1);
+    rec.event(id as u32, lane.tuner.now(), EventKind::Retire);
     lane.checkpoint_into(cache);
     let mut report = lane.report();
     report.steals = sched.slots[id].steals;
@@ -301,6 +328,7 @@ fn idle_burst<'a, B: Backend>(
     shared: &'a Shared<B>,
     mut sched: MutexGuard<'a, Sched<B>>,
     id: usize,
+    rec: &Recorder,
 ) -> (MutexGuard<'a, Sched<B>>, u64, bool) {
     let mut lane = sched.slots[id].lane.take().expect("idle lane must be parked");
     sched.active += 1;
@@ -310,8 +338,13 @@ fn idle_burst<'a, B: Backend>(
     let mut advanced = 0u64;
     let mut failed: Option<String> = None;
     for _ in 0..shared.opts.quantum {
-        match lane.idle_step(&shared.cache, &shared.governor) {
-            Ok(true) => advanced += 1,
+        match lane.idle_step(&shared.cache, &shared.governor, rec) {
+            Ok(true) => {
+                advanced += 1;
+                if rec.enabled() {
+                    rec.event(id as u32, lane.tuner.now(), EventKind::IdleStep);
+                }
+            }
             Ok(false) => break,
             Err(e) => {
                 failed = Some(format!("lane {}: {e:#}", lane.key));
@@ -320,6 +353,9 @@ fn idle_burst<'a, B: Backend>(
         }
     }
     guard.armed = false;
+    if advanced > 0 {
+        rec.count(Counter::IdleSteps, advanced);
+    }
 
     let mut sched = shared.sched.lock().expect("engine scheduler lock");
     sched.active -= 1;
@@ -343,7 +379,7 @@ fn idle_burst<'a, B: Backend>(
         sched.deques[home].push_back(id);
         shared.work.notify_all();
     } else if retire {
-        finalize_retire(&mut sched, id, &shared.cache);
+        finalize_retire(&mut sched, id, &shared.cache, rec);
     }
     if sched.backlog == 0 && sched.active == 0 {
         shared.idle.notify_all();
@@ -352,9 +388,13 @@ fn idle_burst<'a, B: Backend>(
 }
 
 fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
+    // Every recording this thread makes lands on worker `w`'s metrics
+    // shard and journal ring — single-writer, so the hot-path histogram
+    // updates stay plain load+store.
+    let rec = shared.rec.for_worker(w);
     let mut sched = shared.sched.lock().expect("engine scheduler lock");
     loop {
-        let Some(id) = next_lane(&mut sched, w, shared.opts.steal) else {
+        let Some(id) = next_lane(&mut sched, w, shared.opts.steal, &rec) else {
             if sched.shutdown {
                 return;
             }
@@ -369,7 +409,7 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
                 && shared.governor.allow()
             {
                 if let Some(id) = next_idle_lane(&mut sched) {
-                    let (s, advanced, requeued) = idle_burst(shared, sched, id);
+                    let (s, advanced, requeued) = idle_burst(shared, sched, id, &rec);
                     sched = s;
                     if advanced > 0 || requeued {
                         // Progress was made, or backlog arrived for the
@@ -403,15 +443,25 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
 
         let mut guard = RunGuard { shared, id, armed: true };
         let mut failed: Option<String> = None;
+        let timer = (!poisoned && rec.enabled()).then(std::time::Instant::now);
         if !poisoned {
             for _ in 0..n {
-                if let Err(e) = lane.step(&shared.cache, &shared.governor) {
+                if let Err(e) = lane.step(&shared.cache, &shared.governor, &rec) {
                     failed = Some(format!("lane {}: {e:#}", lane.key));
                     break;
                 }
             }
         }
         guard.armed = false;
+        if let Some(t0) = timer {
+            let dur = t0.elapsed();
+            rec.quantum(dur.as_secs_f64());
+            rec.event(
+                id as u32,
+                lane.tuner.now(),
+                EventKind::Quantum { calls: n as u32, dur_us: dur.as_micros() as u64 },
+            );
+        }
 
         sched = shared.sched.lock().expect("engine scheduler lock");
         sched.active -= 1;
@@ -430,7 +480,7 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
             sched.deques[home].push_back(id);
             shared.work.notify_all();
         } else if retire {
-            finalize_retire(&mut sched, id, &shared.cache);
+            finalize_retire(&mut sched, id, &shared.cache, &rec);
         }
         if sched.backlog == 0 && sched.active == 0 {
             shared.idle.notify_all();
@@ -463,7 +513,8 @@ impl<B: Backend + 'static> Shared<B> {
             }
         }
         let id = sched.slots.len();
-        let lane = Lane::open(&self.cfg, id, key.clone(), ve_filter, backend, &self.cache);
+        let lane =
+            Lane::open(&self.cfg, id, key.clone(), ve_filter, backend, &self.cache, &self.rec);
         let home = id % sched.deques.len();
         sched.slots.push(Slot {
             key,
@@ -535,7 +586,7 @@ impl<B: Backend + 'static> Shared<B> {
         if slot.lane.is_some() && slot.pending == 0 {
             // Parked and idle (a queued lane always has backlog):
             // finalise immediately.
-            finalize_retire(&mut sched, lane.0, &self.cache);
+            finalize_retire(&mut sched, lane.0, &self.cache, &self.rec);
             return Ok(sched.slots[lane.0].retired.clone());
         }
         // Busy: drain its backlog first; the worker that parks it with an
@@ -687,10 +738,26 @@ impl<B: Backend + 'static> TuningEngine<B> {
     }
 
     /// Full control over placement: thread count, stealing, quantum.
+    /// Telemetry stays disabled (the zero-overhead default).
     pub fn with_options(
         cfg: ServiceConfig,
         cache: SharedTuneCache,
         opts: EngineOptions,
+    ) -> TuningEngine<B> {
+        TuningEngine::with_recorder(cfg, cache, opts, Recorder::disabled())
+    }
+
+    /// [`with_options`](TuningEngine::with_options) plus a telemetry
+    /// [`Recorder`]. Pass [`Recorder::enabled_for`]`(opts.threads)` to
+    /// collect per-worker counters, latency histograms and the event
+    /// journal; each worker derives its own shard handle, and control
+    /// paths (registration, controller-side retirement) attribute to the
+    /// extra control shard.
+    pub fn with_recorder(
+        cfg: ServiceConfig,
+        cache: SharedTuneCache,
+        opts: EngineOptions,
+        rec: Recorder,
     ) -> TuningEngine<B> {
         let opts = EngineOptions {
             threads: opts.threads.max(1),
@@ -719,6 +786,7 @@ impl<B: Backend + 'static> TuningEngine<B> {
             opts,
             cache,
             governor: RegenGovernor::new(cfg.global),
+            rec,
         });
         let handles = (0..opts.threads)
             .map(|w| {
@@ -827,7 +895,18 @@ impl<B: Backend + 'static> TuningEngine<B> {
     /// [`super::TuningService::stats`]).
     pub fn drain(&mut self) -> Result<ServiceStats> {
         let reports = self.drain_reports()?;
-        Ok(ServiceStats::aggregate(&reports, self.shared.cache.counters()))
+        let mut stats = ServiceStats::aggregate(&reports, self.shared.cache.counters());
+        if let Some(snap) = self.shared.rec.snapshot() {
+            stats.set_percentiles(&snap);
+        }
+        Ok(stats)
+    }
+
+    /// The engine's telemetry handle — disabled unless the engine was
+    /// built with [`TuningEngine::with_recorder`]. Snapshot / trace
+    /// export paths go through it.
+    pub fn recorder(&self) -> &Recorder {
+        &self.shared.rec
     }
 
     /// Stop accepting work, let the workers drain every outstanding
@@ -859,7 +938,10 @@ impl<B: Backend + 'static> TuningEngine<B> {
             bail!("tuning engine worker failed: {e}");
         }
         let reports = Shared::reports_locked(&sched);
-        let stats = ServiceStats::aggregate(&reports, self.shared.cache.counters());
+        let mut stats = ServiceStats::aggregate(&reports, self.shared.cache.counters());
+        if let Some(snap) = self.shared.rec.snapshot() {
+            stats.set_percentiles(&snap);
+        }
         Ok((stats, reports))
     }
 }

@@ -19,6 +19,7 @@ use super::ServiceConfig;
 use crate::backend::Backend;
 use crate::cache::{CacheEntry, CacheHit, DeviceFingerprint, SharedTuneCache, TuneKey};
 use crate::coordinator::{AutoTuner, RegenGovernor, WarmOutcome};
+use crate::obs::{Counter, EventKind, Recorder};
 use crate::tunespace::TuningParams;
 
 pub(crate) struct Lane<B: Backend> {
@@ -33,6 +34,10 @@ pub(crate) struct Lane<B: Backend> {
     warm_reported: bool,
     /// Winner already written back to the cache.
     committed: bool,
+    /// Last governor answer seen by this lane — journal a
+    /// `GovernorDeny` event only on the open→denied *transition*, so a
+    /// long denial streak is one event (plus a counter), not a flood.
+    gate_open: bool,
 }
 
 impl<B: Backend> Lane<B> {
@@ -52,6 +57,7 @@ impl<B: Backend> Lane<B> {
         ve_filter: Option<bool>,
         backend: B,
         cache: &SharedTuneCache,
+        rec: &Recorder,
     ) -> Lane<B> {
         let fp = backend.device_fingerprint();
         let usable = |e: &CacheEntry| ve_filter.map(|ve| e.params.s.ve == ve).unwrap_or(true);
@@ -93,7 +99,29 @@ impl<B: Backend> Lane<B> {
                 None => AutoTuner::new(cfg.tuner, key.length, ve_filter),
             },
         };
-        Lane { id, key, fp, backend, tuner, warm, warm_reported: false, committed: false }
+        rec.count(Counter::LanesOpened, 1);
+        rec.count(
+            match warm {
+                Some(CacheHit::Exact) => Counter::CacheHitExact,
+                Some(CacheHit::Near) => Counter::CacheHitNear,
+                Some(CacheHit::Transfer) => Counter::CacheHitTransfer,
+                None => Counter::CacheMiss,
+            },
+            1,
+        );
+        rec.event(id as u32, 0.0, EventKind::LaneOpened { warm });
+        rec.event(id as u32, 0.0, EventKind::CacheHit { kind: warm });
+        Lane {
+            id,
+            key,
+            fp,
+            backend,
+            tuner,
+            warm,
+            warm_reported: false,
+            committed: false,
+            gate_open: true,
+        }
     }
 
     /// One application kernel call — the request path. Identical in
@@ -102,22 +130,30 @@ impl<B: Backend> Lane<B> {
         &mut self,
         cache: &SharedTuneCache,
         governor: &RegenGovernor,
+        rec: &Recorder,
     ) -> Result<f64> {
         // Gate this lane's tuner on the *global* budget before the call;
         // report this call's accounting deltas after it. Between the two,
         // another lane may also pass the gate — the overshoot is at most
         // one in-flight version per lane, the same tolerance the paper's
         // own decision rule has at startup (§3.3).
-        self.tuner.set_regen_enabled(governor.allow());
+        let allowed = governor.allow();
+        self.tuner.set_regen_enabled(allowed);
+        if rec.enabled() {
+            self.note_gate(allowed, governor, rec);
+            self.backend.set_recorder(rec.stamped(self.id as u32, self.tuner.now()));
+        }
         let before = {
             let s = &self.tuner.stats;
-            (s.overhead, s.app_time, s.gained)
+            (s.overhead, s.app_time, s.gained, s.generate_calls, s.swaps)
         };
         let dt = self.tuner.app_call(&mut self.backend)?;
         {
             let s = &self.tuner.stats;
             governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
         }
+        rec.call(dt);
+        self.note_tuner_events(before.3, before.4, rec);
         self.propagate_outcomes(cache);
         Ok(dt)
     }
@@ -135,21 +171,64 @@ impl<B: Backend> Lane<B> {
         &mut self,
         cache: &SharedTuneCache,
         governor: &RegenGovernor,
+        rec: &Recorder,
     ) -> Result<bool> {
-        if self.tuner.exploration_done() || !governor.allow() {
+        if self.tuner.exploration_done() {
+            return Ok(false);
+        }
+        let allowed = governor.allow();
+        if rec.enabled() {
+            self.note_gate(allowed, governor, rec);
+            self.backend.set_recorder(rec.stamped(self.id as u32, self.tuner.now()));
+        }
+        if !allowed {
             return Ok(false);
         }
         let before = {
             let s = &self.tuner.stats;
-            (s.overhead, s.app_time, s.gained)
+            (s.overhead, s.app_time, s.gained, s.generate_calls, s.swaps)
         };
         let event = self.tuner.tune_idle(&mut self.backend)?;
         {
             let s = &self.tuner.stats;
             governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
         }
+        self.note_tuner_events(before.3, before.4, rec);
         self.propagate_outcomes(cache);
         Ok(event != crate::coordinator::StepEvent::Idle)
+    }
+
+    /// Governor-gate telemetry: count every denial; journal only the
+    /// open→denied transition, with the governor's attribution.
+    fn note_gate(&mut self, allowed: bool, governor: &RegenGovernor, rec: &Recorder) {
+        if !allowed {
+            rec.count(Counter::GovernorDenies, 1);
+            if self.gate_open {
+                if let Some(reason) = governor.deny_reason() {
+                    rec.event(self.id as u32, self.tuner.now(), EventKind::GovernorDeny { reason });
+                }
+            }
+        }
+        self.gate_open = allowed;
+    }
+
+    /// Derive generate/swap telemetry from the tuner's own counters —
+    /// the tuner stays observation-free; the lane diffs its stats around
+    /// each advance.
+    fn note_tuner_events(&self, gen_before: u64, swaps_before: u32, rec: &Recorder) {
+        if !rec.enabled() {
+            return;
+        }
+        let s = &self.tuner.stats;
+        let vt = self.tuner.now();
+        if s.generate_calls > gen_before {
+            rec.count(Counter::GenerateCalls, s.generate_calls - gen_before);
+            rec.event(self.id as u32, vt, EventKind::GenerateCall);
+        }
+        if s.swaps > swaps_before {
+            rec.count(Counter::Swaps, (s.swaps - swaps_before) as u64);
+            rec.event(self.id as u32, vt, EventKind::Swap);
+        }
     }
 
     /// Post-advance bookkeeping shared by the request and speculative

@@ -56,6 +56,7 @@ pub use engine::{EngineController, EngineOptions, TuningEngine};
 pub use lane::LaneReport;
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::Path;
 
 use anyhow::{bail, Result};
@@ -65,6 +66,7 @@ use crate::cache::{
     CacheCounters, CacheHit, DeviceFingerprint, SharedTuneCache, TuneCache, TuneKey,
 };
 use crate::coordinator::{AutoTuner, RegenDecision, RegenGovernor, TunerConfig};
+use crate::obs::{Recorder, RegistrySnapshot};
 use lane::Lane;
 
 /// Service policy knobs.
@@ -135,6 +137,14 @@ pub struct ServiceStats {
     /// tuning off).
     pub idle_steps: u64,
     pub cache: CacheCounters,
+    /// Per-call virtual-latency percentiles in seconds, merged across
+    /// workers from the telemetry registry's log₂ histogram (upper-bound
+    /// estimates; see [`crate::obs::RegistrySnapshot::call_quantile`]).
+    /// All 0.0 when telemetry is disabled — the [`fmt::Display`] impl
+    /// omits them then.
+    pub call_p50: f64,
+    pub call_p99: f64,
+    pub call_p999: f64,
 }
 
 impl ServiceStats {
@@ -172,6 +182,66 @@ impl ServiceStats {
         }
         st
     }
+
+    /// Fill the latency-percentile fields from a telemetry snapshot.
+    pub fn set_percentiles(&mut self, snap: &RegistrySnapshot) {
+        let (p50, p99, p999) = snap.call_percentiles();
+        self.call_p50 = p50;
+        self.call_p99 = p99;
+        self.call_p999 = p999;
+    }
+}
+
+/// Seconds rendered at latency scale: µs below a millisecond, ms below a
+/// second, plain seconds above.
+fn fmt_latency(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+impl fmt::Display for ServiceStats {
+    /// The uniform one-line phase summary every CLI phase prints — the
+    /// caller adds only its label and wall-clock prologue.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "lanes={} (warm {}, near {}, transfer {}, done {}) calls={} app={:.3}s \
+             overhead={:.1}ms ({:.2} %)",
+            self.lanes,
+            self.warm_lanes,
+            self.near_lanes,
+            self.transfer_lanes,
+            self.done_lanes,
+            self.kernel_calls,
+            self.app_time,
+            self.overhead * 1e3,
+            100.0 * self.overhead_frac(),
+        )?;
+        if self.call_p999 > 0.0 {
+            write!(
+                f,
+                " lat[p50={} p99={} p999={}]",
+                fmt_latency(self.call_p50),
+                fmt_latency(self.call_p99),
+                fmt_latency(self.call_p999),
+            )?;
+        }
+        write!(
+            f,
+            " explored={} generate={} swaps={} steals={} idle_steps={} {}",
+            self.explored,
+            self.generate_calls,
+            self.swaps,
+            self.steals,
+            self.idle_steps,
+            self.cache.stats(),
+        )
+    }
 }
 
 /// The sequential serving mode: a thin single-threaded driver over the
@@ -187,6 +257,9 @@ pub struct TuningService<B: Backend> {
     /// Lane index by (device fingerprint, tune key): the same kernel
     /// stream on two devices is two lanes.
     by_key: HashMap<(DeviceFingerprint, TuneKey), usize>,
+    /// Telemetry handle; [`Recorder::disabled`] (the default) is a
+    /// compiled no-op on every recording site.
+    rec: Recorder,
 }
 
 impl<B: Backend> TuningService<B> {
@@ -214,7 +287,21 @@ impl<B: Backend> TuningService<B> {
             governor: RegenGovernor::new(cfg.global),
             lanes: Vec::new(),
             by_key: HashMap::new(),
+            rec: Recorder::disabled(),
         }
+    }
+
+    /// Switch telemetry on (or swap the sink). The sequential service is
+    /// single-threaded, so the recorder's base (control) attribution is
+    /// used as-is for every lane.
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.rec = rec;
+    }
+
+    /// The service's telemetry handle (disabled unless
+    /// [`TuningService::set_recorder`] installed one).
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
     }
 
     /// The shared cache handle (all mutation is interior, under shard
@@ -244,7 +331,7 @@ impl<B: Backend> TuningService<B> {
             return LaneId(idx);
         }
         let idx = self.lanes.len();
-        let lane = Lane::open(&self.cfg, idx, key, ve_filter, backend, &self.cache);
+        let lane = Lane::open(&self.cfg, idx, key, ve_filter, backend, &self.cache, &self.rec);
         self.by_key.insert(map_key, idx);
         self.lanes.push(lane);
         LaneId(idx)
@@ -278,7 +365,7 @@ impl<B: Backend> TuningService<B> {
         let Some(l) = self.lanes.get_mut(lane.0) else {
             bail!("unknown lane {lane:?}");
         };
-        l.step(&self.cache, &self.governor)
+        l.step(&self.cache, &self.governor, &self.rec)
     }
 
     /// Write best-so-far entries for lanes whose exploration has not
@@ -302,10 +389,15 @@ impl<B: Backend> TuningService<B> {
         self.cache.snapshot()
     }
 
-    /// Aggregate statistics over all lanes plus cache counters.
+    /// Aggregate statistics over all lanes plus cache counters (latency
+    /// percentiles filled in when a recorder is installed).
     pub fn stats(&self) -> ServiceStats {
         let reports: Vec<LaneReport> = self.lanes.iter().map(Lane::report).collect();
-        ServiceStats::aggregate(&reports, self.cache.counters())
+        let mut st = ServiceStats::aggregate(&reports, self.cache.counters());
+        if let Some(snap) = self.rec.snapshot() {
+            st.set_percentiles(&snap);
+        }
+        st
     }
 }
 

@@ -1,0 +1,120 @@
+//! Telemetry overhead guard: enabled vs disabled on the serving stack.
+//!
+//! The whole design brief of `degoal_rt::obs` is that switching it on is
+//! effectively free — the paper's tuner already polices itself to a
+//! 0.2–4.2 % overhead envelope, so the *observability* of that envelope
+//! must cost an order of magnitude less than the thing it observes.
+//! This test drives the identical mixed service workload twice through
+//! the sequential service — recorder disabled vs enabled — with
+//! alternating order and best-of-N timing, and pins:
+//!
+//! * throughput with telemetry within 1 % of disabled (release; debug
+//!   builds get a relaxed bound — unoptimised atomics are not the
+//!   shipped configuration, the test still catches gross regressions);
+//! * *bitwise* identical tuning results — telemetry only reads the
+//!   accounting, so enabling it must not move a single ULP of virtual
+//!   time nor change any exploration decision.
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::obs::Recorder;
+use degoal_rt::service::{LaneId, ServiceConfig, ServiceStats, TuningService};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::workloads::mixed_service_workload;
+
+const CHUNK: usize = 64;
+
+fn run_once(enabled: bool, calls: usize) -> (f64, ServiceStats) {
+    let core = core_by_name("DI-I1").unwrap();
+    let cfg = ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg);
+    if enabled {
+        svc.set_recorder(Recorder::enabled_for(1).for_worker(0));
+    }
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in mixed_service_workload(core, 42) {
+        lanes.push(svc.register(key, Some(true), b));
+    }
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    'drive: loop {
+        for &l in &lanes {
+            let n = CHUNK.min(calls - submitted);
+            for _ in 0..n {
+                svc.app_call(l).unwrap();
+            }
+            submitted += n;
+            if submitted >= calls {
+                break 'drive;
+            }
+        }
+    }
+    (t0.elapsed().as_secs_f64(), svc.stats())
+}
+
+#[test]
+fn enabled_telemetry_stays_within_the_overhead_bound() {
+    let calls = if cfg!(debug_assertions) { 8_000 } else { 80_000 };
+    let limit = if cfg!(debug_assertions) { 1.35 } else { 1.01 };
+
+    // Warm-up (allocator, branch predictors, the lazy bits of the sim).
+    run_once(false, calls / 4);
+    run_once(true, calls / 4);
+
+    let mut best_off = f64::INFINITY;
+    let mut best_on = f64::INFINITY;
+    let mut stats_off: Option<ServiceStats> = None;
+    let mut stats_on: Option<ServiceStats> = None;
+    // Best-of-N with alternating order, plus a few extra rounds if the
+    // bound is still exceeded: minimum wall time is the noise-robust
+    // estimator, and scheduler drift must not penalise either config.
+    for round in 0..6 {
+        let order = if round % 2 == 0 { [false, true] } else { [true, false] };
+        for on in order {
+            let (secs, st) = run_once(on, calls);
+            if on {
+                best_on = best_on.min(secs);
+                stats_on = Some(st);
+            } else {
+                best_off = best_off.min(secs);
+                stats_off = Some(st);
+            }
+        }
+        if round >= 2 && best_on <= best_off * limit {
+            break;
+        }
+    }
+
+    let ratio = best_on / best_off;
+    assert!(
+        ratio <= limit,
+        "telemetry overhead {:.2} % exceeds the bound ({:.2} % allowed): \
+         {best_on:.4}s enabled vs {best_off:.4}s disabled over {calls} calls",
+        100.0 * (ratio - 1.0),
+        100.0 * (limit - 1.0),
+    );
+
+    // Parity: telemetry reads the accounting, never writes it. The two
+    // runs replay the same deterministic simulation, so every tuning
+    // outcome — including the f64 virtual-time sums — must be bitwise
+    // identical.
+    let (off, on) = (stats_off.unwrap(), stats_on.unwrap());
+    assert_eq!(off.kernel_calls, on.kernel_calls);
+    assert_eq!(off.explored, on.explored);
+    assert_eq!(off.generate_calls, on.generate_calls);
+    assert_eq!(off.swaps, on.swaps);
+    assert_eq!(off.done_lanes, on.done_lanes);
+    assert_eq!(
+        off.app_time.to_bits(),
+        on.app_time.to_bits(),
+        "telemetry perturbed the virtual-time accounting"
+    );
+    assert_eq!(off.overhead.to_bits(), on.overhead.to_bits());
+
+    // And the enabled run actually measured something.
+    assert!(on.call_p999 > 0.0, "enabled run must yield latency percentiles");
+    assert_eq!(off.call_p999, 0.0, "disabled run must not");
+}

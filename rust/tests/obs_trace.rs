@@ -1,0 +1,104 @@
+//! End-to-end telemetry over the threaded engine: a real work-stealing
+//! run must yield a valid Chrome trace-event document, a registry dump
+//! that round-trips through the serde-free codec, and counters that
+//! agree with the engine's own accounting.
+
+use degoal_rt::backend::mock::MockBackend;
+use degoal_rt::cache::{SharedTuneCache, TuneKey};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::obs::{chrome_trace, Counter, Recorder, RegistrySnapshot, OBS_FORMAT_VERSION};
+use degoal_rt::service::{EngineOptions, LaneId, ServiceConfig, ServiceStats, TuningEngine};
+use degoal_rt::util::json::Json;
+
+const THREADS: usize = 2;
+const LANES: usize = 4;
+/// Must stay a multiple of the submit chunk (64) — the test asserts the
+/// exact call count.
+const CALLS_PER_LANE: u32 = 6_400;
+
+fn traced_run() -> (Recorder, ServiceStats) {
+    let cfg = ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+        ..Default::default()
+    };
+    let rec = Recorder::enabled_for(THREADS);
+    let mut eng: TuningEngine<MockBackend> = TuningEngine::with_recorder(
+        cfg,
+        SharedTuneCache::new(),
+        EngineOptions { threads: THREADS, steal: true, quantum: 64, idle_tune: false },
+        rec.clone(),
+    );
+    let lanes: Vec<LaneId> = (0..LANES)
+        .map(|i| {
+            let key = TuneKey::with_shape("mock/len64", 64, format!("client{i}"));
+            eng.register(key, None, MockBackend::new(64, 10 + i as u64)).unwrap()
+        })
+        .collect();
+    for chunk in 0..(CALLS_PER_LANE / 64) {
+        for &l in &lanes {
+            eng.submit_n(l, 64).unwrap();
+        }
+        if chunk == 0 {
+            // Exercise the mid-run barrier path once with the recorder on.
+            eng.drain().unwrap();
+        }
+    }
+    let (stats, _) = eng.finish().unwrap();
+    (rec, stats)
+}
+
+#[test]
+fn engine_run_produces_consistent_counters_and_valid_exports() {
+    let (rec, stats) = traced_run();
+    let snap = rec.snapshot().unwrap();
+
+    // Counters agree with the engine's own aggregate accounting.
+    assert_eq!(snap.get(Counter::AppCalls), stats.kernel_calls);
+    assert_eq!(snap.get(Counter::AppCalls), (LANES as u64) * CALLS_PER_LANE as u64);
+    assert_eq!(snap.get(Counter::LanesOpened), LANES as u64);
+    assert_eq!(snap.get(Counter::CacheMiss), LANES as u64, "cold cache: every lane misses");
+    assert_eq!(snap.get(Counter::GenerateCalls), stats.generate_calls);
+    assert_eq!(snap.get(Counter::Swaps), stats.swaps as u64);
+    assert_eq!(snap.get(Counter::Steals), stats.steals);
+
+    // The finish() path filled the percentile fields from the registry.
+    let (p50, p99, p999) = snap.call_percentiles();
+    assert_eq!((stats.call_p50, stats.call_p99, stats.call_p999), (p50, p99, p999));
+    assert!(p50 > 0.0 && p50 <= p99 && p99 <= p999);
+
+    // Registry dump round-trips through the serde-free codec.
+    let text = snap.to_json().to_string();
+    let parsed = Json::parse(&text).expect("stats dump must be valid JSON");
+    assert_eq!(parsed.get("version").unwrap().as_u64(), Some(OBS_FORMAT_VERSION as u64));
+    let back = RegistrySnapshot::from_json(&parsed).expect("stats dump must decode");
+    assert_eq!(back, snap);
+
+    // The trace document is valid JSON in Chrome trace-event shape: one
+    // thread_name record per track (workers + control), every event
+    // carries ph/pid/tid/ts, and the quantum spans made it in.
+    let trace = chrome_trace(rec.obs().unwrap()).to_string();
+    let doc = Json::parse(&trace).expect("trace must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut names = 0;
+    let mut spans = 0;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        match ph {
+            "M" => names += 1,
+            "X" => {
+                spans += 1;
+                assert!(e.get("ts").is_some() && e.get("dur").is_some());
+            }
+            "i" => assert!(e.get("ts").is_some()),
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(names, THREADS + 1, "one thread_name per worker plus control");
+    assert!(spans > 0, "quantum spans must be traced");
+    assert_eq!(
+        doc.path(&["otherData", "dropped_events"]).unwrap().as_u64(),
+        Some(snap.get(Counter::JournalDropped))
+    );
+}
