@@ -135,6 +135,34 @@ pub trait Backend: Send {
     /// disabled recorder makes the call a no-op either way. The lane
     /// re-stamps before each step, so implementations just overwrite.
     fn set_recorder(&mut self, _rec: crate::obs::Recorder) {}
+
+    /// A detached scorer that can *pre-warm* candidate measurements on
+    /// another thread — the seam behind the parallel candidate-evaluation
+    /// pool. The returned scorer must be a pure accelerator: scoring a
+    /// candidate through it may only populate shared caches (e.g. the
+    /// cross-lane [`SharedSimMemo`](crate::simulator::SharedSimMemo))
+    /// whose values are pure functions of the candidate, never mutate
+    /// state the owning backend's own measurement path reads for
+    /// anything but a cache hit. That contract is what keeps winner
+    /// selection bit-identical whether or not prewarming ran. Backends
+    /// with no such cache return `None` (the default) and the engine
+    /// simply skips prewarming for their lanes.
+    fn speculative_scorer(&self) -> Option<Box<dyn CandidateScorer>> {
+        None
+    }
+}
+
+/// Scores tuning candidates ahead of the owning lane, off-thread.
+///
+/// Obtained from [`Backend::speculative_scorer`]; holds its own scratch
+/// state (pipelines, trace generators) so it never contends with the
+/// lane it accelerates. `Send` because idle engine workers run it.
+pub trait CandidateScorer: Send {
+    /// Score `p` under `data` and deposit the result in the shared
+    /// cache. Must be deterministic and side-effect-free apart from
+    /// cache population; errors are swallowed by design (a failed
+    /// prewarm just means the lane measures the candidate itself).
+    fn prewarm(&mut self, p: TuningParams, data: EvalData);
 }
 
 #[cfg(test)]

@@ -22,7 +22,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::{Backend, EvalData, KernelVersion, Sample};
+use super::{Backend, CandidateScorer, EvalData, KernelVersion, Sample};
 use crate::cache::DeviceFingerprint;
 use crate::obs::{Counter, EventKind, Recorder};
 use crate::simulator::{
@@ -45,6 +45,23 @@ const REAL_SPIKE_MAX: f64 = 0.12;
 fn codegen_cost_s(p: &TuningParams) -> f64 {
     let body_insts = (p.s.elems_per_iter() as f64 / p.s.width() as f64) * 6.0;
     60e-6 + 1.5e-6 * body_insts
+}
+
+/// The reduced training-input shape for a kernel and the factor scaling
+/// its score back to per-real-call-equivalent seconds (§3.4). Shared by
+/// the backend's training path and the speculative [`SimScorer`] so both
+/// hit the same memo keys.
+fn training_shape(kind: KernelKind) -> (KernelKind, f64) {
+    match kind {
+        KernelKind::Distance { dim, batch } => {
+            let small = batch.min(32);
+            (KernelKind::Distance { dim, batch: small }, batch as f64 / small as f64)
+        }
+        KernelKind::Lintra { row_len, rows } => {
+            let small = rows.min(1);
+            (KernelKind::Lintra { row_len, rows: small }, rows as f64 / small as f64)
+        }
+    }
 }
 
 pub struct SimBackend {
@@ -120,6 +137,10 @@ impl SimBackend {
             self.rec.count(Counter::SteadyExtrapolations, 1);
             self.rec.event_here(EventKind::SteadyExtrapolated);
         }
+        if warm.inner_folds > 0 {
+            self.rec.count(Counter::InnerFolds, warm.inner_folds);
+            self.rec.event_here(EventKind::InnerFold);
+        }
     }
 
     /// Override the simulation mode (the constructor honours
@@ -166,16 +187,7 @@ impl SimBackend {
     /// stable. The score is scaled to per-real-call-equivalent seconds so
     /// phase-1 comparisons and gain estimates stay in call units.
     fn training_kind(&self) -> (KernelKind, f64) {
-        match self.kind {
-            KernelKind::Distance { dim, batch } => {
-                let small = batch.min(32);
-                (KernelKind::Distance { dim, batch: small }, batch as f64 / small as f64)
-            }
-            KernelKind::Lintra { row_len, rows } => {
-                let small = rows.min(1);
-                (KernelKind::Lintra { row_len, rows: small }, rows as f64 / small as f64)
-            }
-        }
+        training_shape(self.kind)
     }
 
     /// Per-call-equivalent training score and the *actual* time one
@@ -304,6 +316,62 @@ impl SimBackend {
     }
 }
 
+/// Detached candidate scorer for [`SimBackend`] — the worker-side half of
+/// the parallel candidate-evaluation pool.
+///
+/// Owns private [`TraceGen`]/[`Pipeline`] scratch and runs the *identical*
+/// two-run warm-measurement protocol the backend itself runs, depositing
+/// results under the same [`MemoKey`]s in the shared memo. Because memo
+/// values are pure functions of `(core, kind, version, mode)` and the
+/// backend's measurement-noise stream advances per call whether or not
+/// the memo hits, prewarming can only make the lane's own evaluation a
+/// cache hit — never change what it observes.
+pub struct SimScorer {
+    core: &'static CoreConfig,
+    kind: KernelKind,
+    mode: SimMode,
+    memo: SharedSimMemo,
+    gen: TraceGen,
+    pipe: Pipeline<'static>,
+}
+
+impl SimScorer {
+    fn measure(&mut self, kind: KernelKind, p: &TuningParams) -> ExecStats {
+        // Same protocol as `SimBackend::measure_warm`: cold reset, one
+        // warming call, keep the second (steady-state) run.
+        self.pipe.reset();
+        run_variant_call(&mut self.pipe, &mut self.gen, &kind, p, self.mode);
+        run_variant_call(&mut self.pipe, &mut self.gen, &kind, p, self.mode)
+    }
+}
+
+impl CandidateScorer for SimScorer {
+    fn prewarm(&mut self, p: TuningParams, data: EvalData) {
+        if !p.s.valid_for(self.kind.length()) {
+            return;
+        }
+        let (mkind, entry, with_energy) = match data {
+            EvalData::Training => {
+                let (tkind, _) = training_shape(self.kind);
+                (tkind, MemoEntry::TrainingVariant(p.full_id()), false)
+            }
+            EvalData::Real => (self.kind, MemoEntry::WarmVariant(p.full_id()), true),
+        };
+        let key = MemoKey { core: self.core.name, kind: mkind, mode: self.mode, entry };
+        if self.memo.get(&key).is_some() {
+            return;
+        }
+        let warm = self.measure(mkind, &p);
+        let seconds = warm.cycles as f64 / (self.core.clock_ghz * 1e9);
+        let energy = if with_energy {
+            EnergyModel::new(self.core).energy_j(&warm, seconds)
+        } else {
+            0.0
+        };
+        self.memo.insert(key, (seconds, energy));
+    }
+}
+
 impl Backend for SimBackend {
     fn generate(&mut self, p: TuningParams) -> Result<f64> {
         if !p.s.valid_for(self.kind.length()) {
@@ -367,6 +435,17 @@ impl Backend for SimBackend {
 
     fn set_recorder(&mut self, rec: Recorder) {
         self.rec = rec;
+    }
+
+    fn speculative_scorer(&self) -> Option<Box<dyn CandidateScorer>> {
+        Some(Box::new(SimScorer {
+            core: self.core,
+            kind: self.kind,
+            mode: self.mode,
+            memo: self.memo.clone(),
+            gen: TraceGen::new(),
+            pipe: Pipeline::new(self.core),
+        }))
     }
 }
 
@@ -457,6 +536,34 @@ mod tests {
         assert_eq!(r1, r2, "shared memo must hand out identical measurements");
         assert!(memo.hits() >= 1, "second backend must reuse the first's simulation");
         assert_eq!(memo.misses(), misses, "no re-simulation of a memoised version");
+    }
+
+    #[test]
+    fn speculative_scorer_prewarms_identical_measurements() {
+        use crate::simulator::SharedSimMemo;
+        let memo = SharedSimMemo::new();
+        let core = core_by_name("DI-I1").unwrap();
+        let kind = KernelKind::Distance { dim: 64, batch: 64 };
+        let p = TuningParams::phase1_default(Structural::new(true, 2, 2, 1));
+        let mut warmed = SimBackend::with_memo(core, kind, 9, memo.clone());
+        let mut scorer = warmed.speculative_scorer().unwrap();
+        scorer.prewarm(p, EvalData::Real);
+        scorer.prewarm(p, EvalData::Training);
+        let misses = memo.misses();
+        let v = KernelVersion::Variant(p);
+        let (ws, we) = warmed.exact(&v).unwrap();
+        assert_eq!(memo.misses(), misses, "warm path must hit the prewarmed entry");
+        assert!(memo.hits() >= 1);
+        // A backend that measures the same variant itself (private memo,
+        // no prewarm) must observe bit-identical values.
+        let mut cold = SimBackend::with_memo(core, kind, 9, SharedSimMemo::new());
+        let (cs, ce) = cold.exact(&v).unwrap();
+        assert_eq!((ws, we), (cs, ce), "prewarm may only accelerate, never perturb");
+        // And the noisy measurement stream is untouched by prewarming:
+        // same seed, same call sequence, same samples.
+        let s_w = warmed.call(&v, EvalData::Real).unwrap().score;
+        let s_c = cold.call(&v, EvalData::Real).unwrap().score;
+        assert_eq!(s_w, s_c, "noise rng must advance identically on hit and miss");
     }
 
     #[test]

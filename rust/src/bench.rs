@@ -5,12 +5,14 @@
 //! numbers come out:
 //!
 //! * **Deterministic counters** — `simulated_insts` vs
-//!   `extrapolated_insts` per cell (and the resulting fold reduction of
-//!   the steady-state fast path). These are pure functions of the model,
-//!   so CI asserts on them without wall-clock flakiness
-//!   (`rust/tests/bench_guard.rs`: every large shape class must simulate
-//!   ≥ 10× fewer instructions than exact mode, and the grid's total
-//!   simulated instructions must stay under a committed ceiling).
+//!   `extrapolated_insts` and `inner_folds` per cell (and the resulting
+//!   fold reduction of the steady-state fast path, across blocks *and*
+//!   within them). These are pure functions of the model, so CI asserts
+//!   on them without wall-clock flakiness (`rust/tests/bench_guard.rs`:
+//!   every large shape class must simulate ≥ 10× fewer instructions than
+//!   exact mode, the tall-row lintra cells must fold inside their blocks,
+//!   and the grid's total simulated instructions must stay under a
+//!   committed ceiling).
 //! * **Wall-clock calls/sec** — informational throughput per cell,
 //!   recorded in the JSON for trend lines, never asserted.
 
@@ -77,6 +79,8 @@ pub struct BenchCell {
     pub insts: u64,
     pub simulated_insts: u64,
     pub extrapolated_insts: u64,
+    /// Inner-loop folds fired inside blocks (0 = per-block walks only).
+    pub inner_folds: u64,
     pub seconds: f64,
     pub energy_j: f64,
     /// Wall-clock throughput of repeated `simulate_call`s (0 when the
@@ -101,6 +105,9 @@ pub struct BenchReport {
     pub cells: Vec<BenchCell>,
     pub total_insts: u64,
     pub total_simulated: u64,
+    /// Inner-loop folds across the whole grid — the per-PR trajectory
+    /// point for the within-block fast path.
+    pub total_inner_folds: u64,
 }
 
 impl BenchReport {
@@ -122,6 +129,7 @@ impl BenchReport {
                     ("insts", num(c.insts as f64)),
                     ("simulated_insts", num(c.simulated_insts as f64)),
                     ("extrapolated_insts", num(c.extrapolated_insts as f64)),
+                    ("inner_folds", num(c.inner_folds as f64)),
                     ("inst_ratio", num(c.inst_ratio())),
                     ("seconds", num(c.seconds)),
                     ("energy_j", num(c.energy_j)),
@@ -138,6 +146,7 @@ impl BenchReport {
             ("cells", Json::Arr(cells)),
             ("total_insts", num(self.total_insts as f64)),
             ("total_simulated_insts", num(self.total_simulated as f64)),
+            ("total_inner_folds", num(self.total_inner_folds as f64)),
             ("inst_ratio", num(self.inst_ratio())),
         ])
     }
@@ -159,6 +168,7 @@ pub fn run_grid(timed_reps: u32, with_exact: bool) -> BenchReport {
     let mut cells = Vec::new();
     let mut total_insts = 0u64;
     let mut total_simulated = 0u64;
+    let mut total_inner_folds = 0u64;
     for spec in default_grid() {
         let core = core_by_name(spec.core).expect("grid core");
         let r = simulate_call_mode(core, &spec.kind, &spec.params, &mut gen, SimMode::Steady);
@@ -180,6 +190,7 @@ pub fn run_grid(timed_reps: u32, with_exact: bool) -> BenchReport {
         };
         total_insts += r.insts;
         total_simulated += r.simulated_insts;
+        total_inner_folds += r.inner_folds;
         cells.push(BenchCell {
             core: spec.core,
             kernel: kernel_label(&spec.kind),
@@ -189,13 +200,14 @@ pub fn run_grid(timed_reps: u32, with_exact: bool) -> BenchReport {
             insts: r.insts,
             simulated_insts: r.simulated_insts,
             extrapolated_insts: r.extrapolated_insts,
+            inner_folds: r.inner_folds,
             seconds: r.seconds,
             energy_j: r.energy_j,
             calls_per_sec,
             exact_cycles,
         });
     }
-    BenchReport { cells, total_insts, total_simulated }
+    BenchReport { cells, total_insts, total_simulated, total_inner_folds }
 }
 
 /// Write the report where the BENCH trajectory expects it
@@ -249,6 +261,7 @@ mod tests {
                 insts: r.insts,
                 simulated_insts: r.simulated_insts,
                 extrapolated_insts: r.extrapolated_insts,
+                inner_folds: r.inner_folds,
                 seconds: r.seconds,
                 energy_j: r.energy_j,
                 calls_per_sec: 0.0,
@@ -256,6 +269,7 @@ mod tests {
             }],
             total_insts: r.insts,
             total_simulated: r.simulated_insts,
+            total_inner_folds: r.inner_folds,
         };
         let j = report.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();

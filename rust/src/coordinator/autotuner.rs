@@ -18,6 +18,8 @@
 //! themselves (the engine's idle-time speculation, gated on the global
 //! [`RegenGovernor`](super::RegenGovernor) budget).
 
+use std::collections::VecDeque;
+
 use anyhow::Result;
 
 use super::decision::RegenDecision;
@@ -41,6 +43,14 @@ pub struct TunerConfig {
     /// Initial active function: the SISD reference, "because this is a
     /// realistic scenario" (§4.4).
     pub initial_ref: RefKind,
+    /// Candidates drawn from the strategy per refill
+    /// ([`SearchStrategy::next_batch`]). 1 (the default) reproduces the
+    /// one-at-a-time draw bit-exactly; larger values expose the queued
+    /// candidates through [`AutoTuner::share_pending`] so idle engine
+    /// workers can pre-warm their measurements concurrently. Winner
+    /// selection is unchanged either way: candidates are still evaluated
+    /// sequentially in draw order.
+    pub batch: usize,
 }
 
 impl Default for TunerConfig {
@@ -51,6 +61,7 @@ impl Default for TunerConfig {
             real_samples: 5,
             wake_period: 0.02,
             initial_ref: RefKind::SisdGeneric,
+            batch: 1,
         }
     }
 }
@@ -93,6 +104,13 @@ pub struct AutoTuner {
     /// External regeneration gate — a [`crate::service::TuningService`]
     /// clears it when the *global* budget across lanes is exhausted.
     regen_enabled: bool,
+    /// Candidates drawn from the strategy but not yet evaluated — the
+    /// refill buffer behind `cfg.batch`. Evaluation always pops from the
+    /// front, so the evaluated sequence equals the drawn sequence.
+    pending: VecDeque<TuningParams>,
+    /// Whether the current `pending` contents were already handed out via
+    /// [`AutoTuner::share_pending`] (hints go out once per refill).
+    pending_shared: bool,
     pub stats: TuneStats,
 }
 
@@ -121,6 +139,8 @@ impl AutoTuner {
             warm: None,
             transfer_prior: None,
             regen_enabled: true,
+            pending: VecDeque::new(),
+            pending_shared: false,
             stats: TuneStats::default(),
         }
     }
@@ -370,18 +390,33 @@ impl AutoTuner {
     }
 
     /// Candidate supply + evaluate/decide, bypassing the wake/budget
-    /// gates (the gated path is `tune_step`): draw the next candidate
-    /// from the strategy and hand it to [`AutoTuner::evaluate_candidate`];
-    /// an exhausted strategy finishes the exploration.
+    /// gates (the gated path is `tune_step`): pop the next candidate from
+    /// the pending queue — refilled `cfg.batch` at a time from the
+    /// strategy — and hand it to [`AutoTuner::evaluate_candidate`]; an
+    /// exhausted strategy finishes the exploration.
+    ///
+    /// Batching never changes the evaluated sequence: `next_batch`
+    /// guarantees draw-order equality with one-at-a-time draws, a batch
+    /// never spans a phase transition, and evaluation pops from the
+    /// front. `cfg.batch > 1` only makes upcoming candidates *visible*
+    /// (via [`AutoTuner::share_pending`]) before they are scored.
     fn explore_next<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
-        let best_params = self.best.map(|(p, _)| p);
-        let Some(cand) = self.strategy.next(best_params) else {
-            return self.finish_exploration(backend);
-        };
+        if self.pending.is_empty() {
+            let best_params = self.best.map(|(p, _)| p);
+            let batch = self.strategy.next_batch(best_params, self.cfg.batch.max(1));
+            if batch.is_empty() {
+                return self.finish_exploration(backend);
+            }
+            self.pending.extend(batch);
+            self.pending_shared = false;
+        }
+        let cand = self.pending.pop_front().expect("refilled above");
 
         // Phase transition: re-score the active function under the new
         // evaluation mode so comparisons stay apples-to-apples (§3.4:
-        // real data is mandatory in phase 2).
+        // real data is mandatory in phase 2). Batches never span a
+        // transition, so the strategy's phase is every queued
+        // candidate's phase.
         if self.strategy.phase() != self.last_phase {
             self.last_phase = self.strategy.phase();
             let ev = Evaluator::evaluate(backend, &self.active, self.eval_mode())?;
@@ -390,6 +425,30 @@ impl AutoTuner {
         }
 
         self.evaluate_candidate(backend, cand)
+    }
+
+    /// Hand out the not-yet-evaluated candidate queue for speculative
+    /// pre-warming, at most once per refill, together with the
+    /// [`EvalData`] they will be scored under. `None` when the queue is
+    /// empty (`cfg.batch` ≤ 1 keeps it so) or already shared. The hints
+    /// are advisory: the tuner still evaluates every queued candidate
+    /// itself, in order, so dropping or failing a hint costs nothing but
+    /// the missed speed-up.
+    pub fn share_pending(&mut self) -> Option<(Vec<TuningParams>, EvalData)> {
+        if self.pending_shared || self.pending.is_empty() {
+            return None;
+        }
+        self.pending_shared = true;
+        let data = match self.eval_mode() {
+            EvalMode::TrainingFiltered => EvalData::Training,
+            EvalMode::RealAveraged(_) => EvalData::Real,
+        };
+        Some((self.pending.iter().copied().collect(), data))
+    }
+
+    /// Candidates drawn but not yet evaluated.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
     }
 
     /// The evaluate-and-decide half of one exploration step: generate the
@@ -723,6 +782,68 @@ mod tests {
         let simd = TuningParams::phase1_default(crate::tunespace::Structural::new(true, 2, 2, 4));
         let tuner = AutoTuner::with_transfer_prior(fast_cfg(), 64, Some(false), simd);
         assert_eq!(tuner.transfer_prior(), None);
+    }
+
+    #[test]
+    fn batched_exploration_is_bitwise_identical_to_sequential() {
+        // cfg.batch only changes *visibility* of upcoming candidates,
+        // never the evaluated sequence or the winner — the invariant the
+        // parallel candidate-evaluation pool rests on.
+        let run = |batch: usize| {
+            let mut b = MockBackend::new(64, 40);
+            let mut cfg = fast_cfg();
+            cfg.batch = batch;
+            let mut tuner = AutoTuner::new(cfg, 64, None);
+            drive(&mut tuner, &mut b, 60_000);
+            assert!(tuner.exploration_done(), "batch {batch} must finish");
+            let (bp, bs) = tuner.best().unwrap();
+            let trail: Vec<(u32, u64, bool)> = tuner
+                .stats
+                .explored
+                .iter()
+                .map(|e| (e.params.full_id(), e.score.to_bits(), e.swapped_in))
+                .collect();
+            (bp.full_id(), bs.to_bits(), trail)
+        };
+        let base = run(1);
+        for k in [2usize, 4, 16] {
+            assert_eq!(run(k), base, "batch width {k}");
+        }
+    }
+
+    #[test]
+    fn share_pending_hands_out_the_queue_once_per_refill() {
+        let mut b = MockBackend::new(64, 41);
+        let mut cfg = fast_cfg();
+        cfg.batch = 4;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        let mut guard = 0;
+        while tuner.pending_len() == 0 {
+            tuner.tune_idle(&mut b).unwrap();
+            guard += 1;
+            assert!(guard < 100, "pending must fill within a few idle steps");
+        }
+        let (hints, data) = tuner.share_pending().expect("fresh refill must share");
+        assert_eq!(hints.len(), tuner.pending_len());
+        assert_eq!(data, EvalData::Training, "phase 1 hints carry the training mode");
+        assert!(tuner.share_pending().is_none(), "hints go out once per refill");
+        // Evaluating the queue and refilling re-arms sharing.
+        let before = tuner.stats.explored_count();
+        while tuner.share_pending().is_none() && !tuner.exploration_done() {
+            tuner.tune_idle(&mut b).unwrap();
+        }
+        assert!(tuner.stats.explored_count() > before);
+    }
+
+    #[test]
+    fn batch_one_never_exposes_pending() {
+        let mut b = MockBackend::new(64, 42);
+        let mut tuner = AutoTuner::new(fast_cfg(), 64, None);
+        while !tuner.exploration_done() {
+            tuner.tune_idle(&mut b).unwrap();
+            assert_eq!(tuner.pending_len(), 0, "batch=1 evaluates each draw immediately");
+            assert!(tuner.share_pending().is_none());
+        }
     }
 
     #[test]

@@ -32,15 +32,20 @@
 //!   per-iteration *blocks*, runs them on a resumable pipeline, and
 //!   extrapolates once `K` consecutive iterations cost identical cycles
 //!   with identical FU and memory-hit profiles: evaluation is O(warm-up),
-//!   not O(trip count). `DEGOAL_SIM_EXACT=1` (or
-//!   [`simulator::SimMode::Exact`]) restores the full walk;
-//!   [`simulator::ExecStats`] counts `simulated_insts` vs
-//!   `extrapolated_insts` so the speedup is asserted deterministically
-//!   (`degoal-rt bench`, [`bench`], `rust/tests/bench_guard.rs`), and
-//!   `rust/tests/sim_steady.rs` pins fast-vs-exact agreement. A
-//!   process-wide [`simulator::SharedSimMemo`] shares measurements
-//!   across tuner lanes on the same simulated device (they are pure
-//!   functions of core, kernel, version, and mode).
+//!   not O(trip count). The same detector also runs *within* a block on
+//!   its advisory unrolled-chunk segmentation ([`simulator::trace`]'s
+//!   `InnerSeg`) and, once periodic, [`simulator::Pipeline::fast_forward`]
+//!   time-shifts the whole machine state past the remaining chunks — so
+//!   long rows (a 4800-element Lintra row) fold inside one call too.
+//!   `DEGOAL_SIM_EXACT=1` (or [`simulator::SimMode::Exact`]) restores
+//!   the full walk; [`simulator::ExecStats`] counts `simulated_insts` vs
+//!   `extrapolated_insts` plus `inner_folds` so the speedup is asserted
+//!   deterministically (`degoal-rt bench`, [`bench`],
+//!   `rust/tests/bench_guard.rs`), and `rust/tests/sim_steady.rs` pins
+//!   fast-vs-exact agreement. A process-wide
+//!   [`simulator::SharedSimMemo`] shares measurements across tuner lanes
+//!   on the same simulated device (they are pure functions of core,
+//!   kernel, version, and mode).
 //! * [`tunespace::strategy`] — pluggable exploration planning: the
 //!   [`tunespace::SearchStrategy`] trait separates *candidate supply*
 //!   from the tuner's evaluate-and-decide loop. The paper's two-phase
@@ -50,6 +55,11 @@
 //!   offline baseline enumerates exhaustively
 //!   ([`tunespace::StaticGrid`]). One exploration code path serves the
 //!   online tuner, `run_exhaustive`, and `baselines::static_search`.
+//!   Strategies also supply candidates in batches
+//!   ([`tunespace::SearchStrategy::next_batch`], draw-order-identical to
+//!   one-at-a-time draws) so the tuner can expose its upcoming
+//!   candidates ([`coordinator::AutoTuner::share_pending`],
+//!   [`coordinator::TunerConfig::batch`]) for speculative pre-scoring.
 //! * [`cache`] — a persistent, versioned tuning cache. Outcomes are keyed
 //!   by ([`cache::DeviceFingerprint`], [`cache::TuneKey`]) and stored as
 //!   JSON on disk (`results/tunecache.json` by default, `DEGOAL_TUNECACHE`
@@ -86,7 +96,15 @@
 //!   restart — and **idle-time speculation**
 //!   ([`service::EngineOptions::idle_tune`]): a worker whose steal
 //!   attempt misses spends the idle quantum advancing exploration for a
-//!   parked lane whose governor budget allows it. `degoal-rt service`
+//!   parked lane whose governor budget allows it — and **parallel
+//!   candidate evaluation**: with a batching tuner
+//!   ([`coordinator::TunerConfig::batch`] > 1) and a backend that offers
+//!   a [`backend::CandidateScorer`]
+//!   ([`backend::Backend::speculative_scorer`]), idle workers pre-score
+//!   the queued candidates into the shared measurement memo; the tuner
+//!   still evaluates every candidate itself in draw order, so winners
+//!   are bitwise identical with the pool on or off
+//!   (`rust/tests/parallel_eval.rs` pins it). `degoal-rt service`
 //!   replays a mixed streamcluster + VIPS workload through both and
 //!   reports cold-vs-warm behaviour; pass `--threads N` (N > 1) for the
 //!   threaded comparison, `--steal` for work-stealing placement (with a

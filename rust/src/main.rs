@@ -6,7 +6,8 @@
 //!                                   one online auto-tuning run (simulator)
 //!   service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]
 //!           [--steal] [--skewed] [--cache-ttl SECS] [--no-near]
-//!           [--idle-tune] [--transfer] [--donor-core C] [--trace]
+//!           [--idle-tune] [--batch K] [--transfer] [--donor-core C]
+//!           [--trace]
 //!                                   multi-kernel tuning service: mixed
 //!                                   streamcluster+vips workload (6 lanes;
 //!                                   --skewed: 8 lanes with both heavy
@@ -23,6 +24,11 @@
 //!                                   warm-start hints, --idle-tune lets
 //!                                   idle workers speculatively explore
 //!                                   for parked lanes (budget-gated),
+//!                                   --batch K draws candidates K at a
+//!                                   time so idle workers pre-score them
+//!                                   (the parallel candidate-evaluation
+//!                                   pool; winners are identical at any
+//!                                   batch size),
 //!                                   --transfer runs the heterogeneous
 //!                                   two-device demo: cross-device
 //!                                   transfer priors from --donor-core's
@@ -62,7 +68,7 @@ use degoal_rt::runtime::Runtime;
 use degoal_rt::service::{
     EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService,
 };
-use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, ALL_SIM_CORES};
+use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, SharedSimMemo, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
 use degoal_rt::util::json::Json;
 use degoal_rt::util::table::{fnum, Table};
@@ -150,6 +156,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 near_hints: !args.flag("no-near"),
                 idle_tune: args.flag("idle-tune"),
                 trace: args.flag("trace"),
+                batch: args.get_usize_min("batch", 1, 1),
                 workload: if skewed { skewed_service_workload } else { mixed_service_workload },
             };
 
@@ -368,7 +375,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let report = degoal_rt::bench::run_grid(reps, with_exact);
             let mut t = Table::new(
                 "simulate_call grid (steady-state fast path)",
-                &["core", "kernel", "params", "insts", "simulated", "fold", "calls/s"],
+                &["core", "kernel", "params", "insts", "simulated", "fold", "ifolds", "calls/s"],
             );
             for c in &report.cells {
                 t.row(vec![
@@ -378,17 +385,24 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     c.insts.to_string(),
                     c.simulated_insts.to_string(),
                     format!("{:.1}x", c.inst_ratio()),
+                    c.inner_folds.to_string(),
                     format!("{:.0}", c.calls_per_sec),
                 ]);
             }
             println!("{}", t.render());
             println!(
-                "  grid total: {} insts accounted, {} simulated ({:.1}x fold); \
-                 large-class cells at ≥10x are the PR-5 acceptance bound",
+                "  grid total: {} insts accounted, {} simulated ({:.1}x fold, {} inner-loop \
+                 folds); large-class cells at ≥10x and tall-lintra cells at ≥5x are the \
+                 committed bounds",
                 report.total_insts,
                 report.total_simulated,
                 report.inst_ratio(),
+                report.total_inner_folds,
             );
+            // The grid drives the simulator directly, so this is 0/0
+            // unless tuner backends ran in the same process — printed so
+            // the memo counters are visible from every CLI surface.
+            println!("  process-wide {}", SharedSimMemo::global().stats());
             if with_exact {
                 let checked = report.cells.iter().filter(|c| c.exact_cycles.is_some()).count();
                 println!("  exact-mode cross-check recorded for {checked} cells");
@@ -468,7 +482,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     one online auto-tuning run on the simulator\n\
                  \x20 service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]\n\
                  \x20         [--steal] [--skewed] [--cache-ttl SECS] [--no-near]\n\
-                 \x20         [--idle-tune] [--transfer] [--donor-core C] [--trace]\n\
+                 \x20         [--idle-tune] [--batch K] [--transfer] [--donor-core C] [--trace]\n\
                  \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
                  \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
                  \x20     enables work-stealing placement (static-vs-steal comparison +\n\
@@ -476,7 +490,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     heavy lanes homed on worker 0; --cache-ttl SECS ages cache entries\n\
                  \x20     out; --no-near disables near-length warm-start hints; --idle-tune\n\
                  \x20     lets idle workers speculatively explore for parked lanes (gated on\n\
-                 \x20     the global regeneration budget); --transfer runs the heterogeneous\n\
+                 \x20     the global regeneration budget); --batch K draws exploration\n\
+                 \x20     candidates K at a time and lets idle workers pre-score them into\n\
+                 \x20     the shared sim memo (winners identical at any K); --transfer runs\n\
+                 \x20     the heterogeneous\n\
                  \x20     two-device demo (donor --donor-core, default DI-I2): cross-device\n\
                  \x20     transfer priors with a cold-vs-transfer time-to-best comparison;\n\
                  \x20     --trace enables telemetry (latency percentiles per phase) and\n\
@@ -531,13 +548,18 @@ struct ServiceKnobs {
     /// `results/trace.json` (each traced phase overwrites it — the file
     /// holds the most recent phase).
     trace: bool,
+    /// `--batch N`: tuners draw exploration candidates N at a time; with
+    /// the threaded engine this feeds the parallel candidate-evaluation
+    /// pool (idle workers pre-score the queued candidates into the
+    /// shared memo). Winners are bitwise identical at any batch size.
+    batch: usize,
     /// `--skewed` selects the adversarially placed 8-lane workload.
     workload: WorkloadFn,
 }
 
 fn service_cfg(knobs: &ServiceKnobs) -> ServiceConfig {
     ServiceConfig {
-        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        tuner: TunerConfig { wake_period: 2e-3, batch: knobs.batch, ..Default::default() },
         near_hints: knobs.near_hints,
         ..Default::default()
     }
@@ -588,7 +610,9 @@ fn run_service_phase(
         svc.set_recorder(Recorder::enabled_for(1).for_worker(0));
     }
     let mut lanes: Vec<LaneId> = Vec::new();
+    let mut memo: Option<SharedSimMemo> = None;
     for (key, b) in (knobs.workload)(core, seed) {
+        memo.get_or_insert_with(|| b.memo().clone());
         lanes.push(svc.register(key, Some(true), b));
     }
     let started = std::time::Instant::now();
@@ -612,7 +636,11 @@ fn run_service_phase(
     }
     let reports: Vec<LaneReport> =
         lanes.iter().filter_map(|&l| svc.lane_report(l)).collect();
-    Ok((stats, lane_lines(&reports), svc.into_cache(), secs))
+    let mut lines = lane_lines(&reports);
+    if let Some(m) = memo {
+        lines.push(format!("    cross-lane {}", m.stats()));
+    }
+    Ok((stats, lines, svc.into_cache(), secs))
 }
 
 /// One pass of the workload through the *threaded* engine: same lanes,
@@ -638,7 +666,9 @@ fn run_engine_phase(
         rec.clone(),
     );
     let mut lanes: Vec<LaneId> = Vec::new();
+    let mut memo: Option<SharedSimMemo> = None;
     for (key, b) in (knobs.workload)(core, seed) {
+        memo.get_or_insert_with(|| b.memo().clone());
         lanes.push(eng.register(key, Some(true), b)?);
     }
     let cache_handle = eng.cache();
@@ -654,12 +684,21 @@ fn run_engine_phase(
             }
         }
     }
+    let prewarmed = eng.prewarmed();
     let (stats, reports) = eng.finish()?;
     let secs = started.elapsed().as_secs_f64();
     if knobs.trace {
         write_trace(&rec)?;
     }
-    Ok((stats, lane_lines(&reports), cache_handle.snapshot(), secs))
+    let mut lines = lane_lines(&reports);
+    if let Some(m) = memo {
+        lines.push(format!(
+            "    cross-lane {} ({} candidates pre-scored by idle workers)",
+            m.stats(),
+            prewarmed,
+        ));
+    }
+    Ok((stats, lines, cache_handle.snapshot(), secs))
 }
 
 /// Dynamic-lane demo: drive the workload on a running engine, hot-add

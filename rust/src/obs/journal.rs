@@ -43,6 +43,8 @@ pub enum EventKind {
     CacheHit { kind: Option<CacheHit> },
     /// The steady-state detector extrapolated a candidate measurement.
     SteadyExtrapolated,
+    /// An inner-loop fold fired inside a simulated block.
+    InnerFold,
     /// A cross-lane simulation-memo lookup hit.
     MemoHit,
     /// One scheduling quantum ran on a worker: `calls` lane steps over
@@ -63,6 +65,7 @@ impl EventKind {
             EventKind::GovernorDeny { .. } => "governor_deny",
             EventKind::CacheHit { .. } => "cache_hit",
             EventKind::SteadyExtrapolated => "steady_extrapolated",
+            EventKind::InnerFold => "inner_fold",
             EventKind::MemoHit => "memo_hit",
             EventKind::Quantum { .. } => "quantum",
         }

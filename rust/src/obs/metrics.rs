@@ -59,6 +59,8 @@ pub enum Counter {
     MemoMisses,
     /// Candidate measurements the steady-state detector extrapolated.
     SteadyExtrapolations,
+    /// Inner-loop folds performed inside simulated blocks.
+    InnerFolds,
     /// Lanes opened (registrations that created a lane).
     LanesOpened,
     /// Journal events dropped (ring overflow or contended ring).
@@ -66,7 +68,7 @@ pub enum Counter {
 }
 
 impl Counter {
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 17] = [
         Counter::AppCalls,
         Counter::GenerateCalls,
         Counter::Swaps,
@@ -81,6 +83,7 @@ impl Counter {
         Counter::MemoHits,
         Counter::MemoMisses,
         Counter::SteadyExtrapolations,
+        Counter::InnerFolds,
         Counter::LanesOpened,
         Counter::JournalDropped,
     ];
@@ -102,6 +105,7 @@ impl Counter {
             Counter::MemoHits => "memo_hits",
             Counter::MemoMisses => "memo_misses",
             Counter::SteadyExtrapolations => "steady_extrapolations",
+            Counter::InnerFolds => "inner_folds",
             Counter::LanesOpened => "lanes_opened",
             Counter::JournalDropped => "journal_dropped",
         }

@@ -32,6 +32,17 @@
 //!   so every demonstrably-live lane gets idle cycles first; barrier
 //!   waiters suspend new bursts so `drain` cannot starve. Off (the
 //!   default) the engine is byte-identical to PR 3.
+//! * **Parallel candidate evaluation**: when a lane's tuner batches its
+//!   candidate draws ([`TunerConfig::batch`] > 1) and its backend offers
+//!   a [`speculative_scorer`], the worker that parks the lane also
+//!   collects a [`ScoreTask`] — the queued-but-unevaluated candidates —
+//!   and idle workers score them into the shared measurement cache
+//!   before falling back to idle tuning or sleep. Prewarming is pure
+//!   cache population (values are pure functions of the candidate), the
+//!   tuner still evaluates every candidate itself in draw order, and the
+//!   measurement-noise stream advances per call whether or not the cache
+//!   hits — so winner selection is a pure function of the candidate set,
+//!   bitwise identical with the pool raced, drained, or disabled.
 //! * **Dynamic lanes**: registration and retirement go through the
 //!   shared scheduler directly — a control path beside the call path —
 //!   so [`EngineController::register_lane`] / [`retire_lane`] work on a
@@ -57,6 +68,8 @@
 //! the accounted overhead fractions.
 //!
 //! [`retire_lane`]: EngineController::retire_lane
+//! [`TunerConfig::batch`]: crate::coordinator::TunerConfig::batch
+//! [`speculative_scorer`]: crate::backend::Backend::speculative_scorer
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -64,7 +77,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
-use super::lane::{Lane, LaneReport};
+use super::lane::{Lane, LaneReport, ScoreTask};
 use super::{LaneId, ServiceConfig, ServiceStats};
 use crate::backend::Backend;
 use crate::cache::{DeviceFingerprint, SharedTuneCache, TuneKey};
@@ -141,6 +154,14 @@ struct Sched<B: Backend> {
     steals: u64,
     /// Total speculative exploration advances across all lanes.
     idle_steps: u64,
+    /// Speculative candidate-scoring tasks awaiting an idle worker — the
+    /// parallel candidate-evaluation pool. Tasks are advisory (pure
+    /// shared-cache prewarming, see [`ScoreTask`]): they never count
+    /// toward `active`, so the drain barrier does not wait for them, and
+    /// leftover tasks at shutdown are simply dropped.
+    score_tasks: VecDeque<ScoreTask>,
+    /// Total candidate hints scored by idle workers.
+    prewarmed: u64,
     /// Round-robin cursor over slots for picking the next speculation
     /// target — deterministic and fair across lanes.
     idle_rr: usize,
@@ -356,12 +377,19 @@ fn idle_burst<'a, B: Backend>(
     if advanced > 0 {
         rec.count(Counter::IdleSteps, advanced);
     }
+    // Speculative advances queue candidates too: hand their hints to the
+    // pool so another idle worker can prewarm while this one continues.
+    let hints = if failed.is_none() { lane.score_hints() } else { None };
 
     let mut sched = shared.sched.lock().expect("engine scheduler lock");
     sched.active -= 1;
     sched.slots[id].lane = Some(lane);
     sched.slots[id].idle_steps += advanced;
     sched.idle_steps += advanced;
+    if let Some(task) = hints {
+        sched.score_tasks.push_back(task);
+        shared.work.notify_all();
+    }
     if failed.is_some() && sched.error.is_none() {
         sched.error = failed;
         shared.idle.notify_all();
@@ -397,6 +425,21 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
         let Some(id) = next_lane(&mut sched, w, shared.opts.steal, &rec) else {
             if sched.shutdown {
                 return;
+            }
+            // Steal miss, first choice: score queued candidate hints for
+            // a busy lane (the parallel candidate-evaluation pool). Pure
+            // shared-cache prewarming off-lock — not counted in `active`
+            // (the barrier need not wait for advisory work), skipped
+            // once the run is poisoned.
+            if !sched.discard && sched.error.is_none() {
+                if let Some(task) = sched.score_tasks.pop_front() {
+                    let n = task.len() as u64;
+                    drop(sched);
+                    task.run();
+                    sched = shared.sched.lock().expect("engine scheduler lock");
+                    sched.prewarmed += n;
+                    continue;
+                }
             }
             // Steal miss: with `idle_tune`, spend the idle quantum
             // speculatively exploring for a parked lane — unless a
@@ -462,10 +505,18 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
                 EventKind::Quantum { calls: n as u32, dur_us: dur.as_micros() as u64 },
             );
         }
+        // While the lane is still ours (off-lock), collect any freshly
+        // queued candidate hints so an idle worker can prewarm their
+        // measurements while this lane keeps serving.
+        let hints = if failed.is_none() && !poisoned { lane.score_hints() } else { None };
 
         sched = shared.sched.lock().expect("engine scheduler lock");
         sched.active -= 1;
         sched.slots[id].lane = Some(lane);
+        if let Some(task) = hints {
+            sched.score_tasks.push_back(task);
+            shared.work.notify_all();
+        }
         if failed.is_some() && sched.error.is_none() {
             sched.error = failed;
             shared.idle.notify_all();
@@ -774,6 +825,8 @@ impl<B: Backend + 'static> TuningEngine<B> {
                 active: 0,
                 steals: 0,
                 idle_steps: 0,
+                score_tasks: VecDeque::new(),
+                prewarmed: 0,
                 idle_rr: 0,
                 drain_waiters: 0,
                 shutdown: false,
@@ -824,6 +877,16 @@ impl<B: Backend + 'static> TuningEngine<B> {
     /// so far (0 with [`EngineOptions::idle_tune`] off).
     pub fn idle_steps(&self) -> u64 {
         self.shared.lock().idle_steps
+    }
+
+    /// Total candidate hints idle workers have pre-scored into the
+    /// shared measurement cache — the parallel candidate-evaluation pool
+    /// (0 unless the tuner batches,
+    /// [`TunerConfig::batch`](crate::coordinator::TunerConfig::batch) > 1,
+    /// and the backend offers a
+    /// [`speculative_scorer`](crate::backend::Backend::speculative_scorer)).
+    pub fn prewarmed(&self) -> u64 {
+        self.shared.lock().prewarmed
     }
 
     /// Lanes ever registered (lane ids are never reused; retired lanes

@@ -16,11 +16,39 @@
 use anyhow::Result;
 
 use super::ServiceConfig;
-use crate::backend::Backend;
+use crate::backend::{Backend, CandidateScorer, EvalData};
 use crate::cache::{CacheEntry, CacheHit, DeviceFingerprint, SharedTuneCache, TuneKey};
 use crate::coordinator::{AutoTuner, RegenGovernor, WarmOutcome};
 use crate::obs::{Counter, EventKind, Recorder};
 use crate::tunespace::TuningParams;
+
+/// A detached candidate-prewarming job: the lane's not-yet-evaluated
+/// candidate queue paired with a scorer from its backend
+/// ([`Backend::speculative_scorer`]). Engine workers run it off-lock on
+/// their own thread; the scorer only populates shared measurement caches
+/// with values that are pure functions of the candidate, so running,
+/// dropping, or re-running a task never changes what the lane observes —
+/// only how fast it observes it.
+pub(crate) struct ScoreTask {
+    scorer: Box<dyn CandidateScorer>,
+    cands: Vec<TuningParams>,
+    data: EvalData,
+}
+
+impl ScoreTask {
+    /// Candidate hints carried by this task.
+    pub(crate) fn len(&self) -> usize {
+        self.cands.len()
+    }
+
+    /// Score every hinted candidate into the shared cache. Consumes the
+    /// task (the scorer's scratch pipelines die with it).
+    pub(crate) fn run(mut self) {
+        for p in self.cands {
+            self.scorer.prewarm(p, self.data);
+        }
+    }
+}
 
 pub(crate) struct Lane<B: Backend> {
     pub(crate) id: usize,
@@ -196,6 +224,24 @@ impl<B: Backend> Lane<B> {
         self.note_tuner_events(before.3, before.4, rec);
         self.propagate_outcomes(cache);
         Ok(event != crate::coordinator::StepEvent::Idle)
+    }
+
+    /// Hand out a speculative-scoring task for the tuner's queued-but-
+    /// unevaluated candidates ([`TunerConfig::batch`] > 1), when the
+    /// backend can score detached. `None` when there is nothing pending,
+    /// the hints were already handed out, or the backend has no shared
+    /// measurement cache to prewarm. Pure acceleration: the tuner still
+    /// evaluates every queued candidate itself, in draw order, so the
+    /// winner is identical whether the task runs, races, or is dropped.
+    ///
+    /// [`TunerConfig::batch`]: crate::coordinator::TunerConfig::batch
+    pub(crate) fn score_hints(&mut self) -> Option<ScoreTask> {
+        if self.tuner.pending_len() == 0 {
+            return None;
+        }
+        let scorer = self.backend.speculative_scorer()?;
+        let (cands, data) = self.tuner.share_pending()?;
+        Some(ScoreTask { scorer, cands, data })
     }
 
     /// Governor-gate telemetry: count every denial; journal only the

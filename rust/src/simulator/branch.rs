@@ -65,6 +65,24 @@ impl BranchPredictor {
         correct
     }
 
+    /// Advance the loop-predictor run at `site` by `n` consecutive taken
+    /// branches without predicting — the time-shifted-resume hook for
+    /// inner-loop folding ([`Pipeline::fast_forward`]): the folded
+    /// iterations' branches were all taken, so the run counter and the
+    /// bimodal counter end up exactly where an exact walk would leave
+    /// them, and the loop exit that follows the fold still trains the
+    /// learned trip count correctly. Prediction/mispredict *totals* are
+    /// scaled separately from the folded window's delta; this only moves
+    /// predictor state.
+    ///
+    /// [`Pipeline::fast_forward`]: super::Pipeline::fast_forward
+    pub fn advance_run(&mut self, site: u64, n: u64) {
+        let idx = (site & self.mask) as usize;
+        let lidx = (site as usize) % self.loops.len();
+        self.loops[lidx].1 = self.loops[lidx].1.saturating_add(n.min(u32::MAX as u64) as u32);
+        self.counters[idx] = (self.counters[idx] as u64 + n).min(3) as u8;
+    }
+
     /// Back to the cold post-construction state without reallocating.
     pub fn reset(&mut self) {
         self.counters.fill(1);

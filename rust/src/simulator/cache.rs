@@ -298,6 +298,35 @@ impl MemSys {
         self.prefetch.insert(line, arrival);
     }
 
+    /// Time-shifted resume for inner-loop folding: translate every piece
+    /// of transient occupancy state forward by `cycles` (and streamed
+    /// addresses by `byte_shift`), as if the folded periodic iterations
+    /// had been simulated. MSHR and write-buffer completion times move
+    /// with the clock; in-flight prefetches keep their *relative* lead
+    /// over the demand stream (line advances with the stream, arrival
+    /// with the clock); stride-detector anchors advance so the next
+    /// demand load continues the learned stride. The L1/L2 tag stores
+    /// are deliberately *not* shifted — resident arrays (e.g. the
+    /// distance kernel's center) must stay resident, and the streaming
+    /// lines' transition error at the resume point is bounded by one
+    /// miss per stream, inside the fast-vs-exact cycle tolerance.
+    pub fn shift(&mut self, cycles: u64, byte_shift: u64) {
+        let line_shift = byte_shift / self.line_bytes;
+        for s in &mut self.l1_mshrs.slots {
+            *s += cycles;
+        }
+        for s in &mut self.write_buf.slots {
+            *s += cycles;
+        }
+        for (line, arrival) in &mut self.prefetch.entries {
+            *line += line_shift;
+            *arrival += cycles;
+        }
+        for (_, last_line, _) in &mut self.streams {
+            *last_line += line_shift;
+        }
+    }
+
     /// Back to the cold post-construction state, reusing every
     /// allocation — the per-candidate reset of the backend's persistent
     /// pipeline scratch (`Pipeline::reset`).

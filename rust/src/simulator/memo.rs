@@ -146,6 +146,32 @@ impl SharedSimMemo {
     pub fn misses(&self) -> u64 {
         self.inner.misses.load(Ordering::Relaxed)
     }
+
+    /// Point-in-time counter snapshot for display.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats { entries: self.len(), hits: self.hits(), misses: self.misses() }
+    }
+}
+
+/// A point-in-time snapshot of the memo counters with one canonical
+/// rendering — the CLI prints memo counters through this `Display`
+/// instead of formatting ad-hoc subsets, mirroring
+/// [`cache::CacheStats`](crate::cache::CacheStats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl std::fmt::Display for MemoStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "sim-memo[entries={} hit={} miss={}]",
+            self.entries, self.hits, self.misses
+        )
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,23 @@
 //! `DEGOAL_SIM_EXACT=1` escape hatch — restores the full walk;
 //! `rust/tests/sim_steady.rs` pins fast-vs-exact agreement.
 //!
+//! ## Inner-loop folding: O(warm-up) *within* a block
+//!
+//! Large rows make single blocks themselves long (a 4800-element Lintra
+//! row is thousands of instructions). [`TraceGen`] annotates each block
+//! with an advisory [`trace::InnerSeg`] describing its uniform unrolled
+//! chunks; `steady::feed_block` runs the same K-consecutive-windows delta
+//! detector *per chunk* and, once periodic, calls
+//! [`Pipeline::fast_forward`] — a time-shifted resume that scales every
+//! counter linearly and translates all absolute-cycle pipeline state
+//! (fetch/retire rings, port scoreboards, prefetcher streams, predictor
+//! run counters) forward by the folded cycles, so the instructions after
+//! the fold see the machine exactly as a full walk would have left it.
+//! The segmentation is advisory only: the detector verifies uniformity
+//! from runtime deltas, so a wrong or missing `InnerSeg` degrades to the
+//! exact walk, never to a wrong answer. [`SimResult::inner_folds`] counts
+//! folds per call.
+//!
 //! The `memo` module complements the per-backend memoisation with a
 //! process-wide [`SharedSimMemo`] keyed by `(core, kind, version, mode)`
 //! so concurrent tuner lanes on the same simulated device never
@@ -44,7 +61,7 @@ pub mod trace;
 
 pub use config::{core_by_name, equivalent_pairs, CoreConfig, CoreKind, ALL_SIM_CORES, CORE_A8, CORE_A9};
 pub use energy::EnergyModel;
-pub use memo::{MemoEntry, MemoKey, SharedSimMemo};
+pub use memo::{MemoEntry, MemoKey, MemoStats, SharedSimMemo};
 pub use pipeline::{ExecStats, Pipeline};
 pub use steady::{run_reference_call, run_variant_call, SimMode};
 pub use trace::{Inst, KernelKind, OpClass, RefKind, TraceGen};
@@ -61,6 +78,8 @@ pub struct SimResult {
     pub simulated_insts: u64,
     /// Instructions accounted by steady-state extrapolation.
     pub extrapolated_insts: u64,
+    /// Inner-loop folds performed inside blocks (0 in exact mode).
+    pub inner_folds: u64,
     /// Seconds at the core's clock.
     pub seconds: f64,
     /// Dynamic + leakage energy in joules.
@@ -75,6 +94,7 @@ fn result_from(core: &CoreConfig, stats: &ExecStats) -> SimResult {
         insts: stats.insts,
         simulated_insts: stats.simulated_insts,
         extrapolated_insts: stats.extrapolated_insts,
+        inner_folds: stats.inner_folds,
         seconds,
         energy_j: energy,
     }

@@ -59,6 +59,10 @@ pub struct ExecStats {
     pub op_counts: [u64; N_OP_CLASSES],
     pub mem: MemStats,
     pub branch_mispredicts: u64,
+    /// Inner-loop fold events: times the steady-state detector
+    /// fast-forwarded *within* a block ([`Pipeline::fast_forward`]).
+    /// 0 in exact mode.
+    pub inner_folds: u64,
 }
 
 impl ExecStats {
@@ -131,6 +135,21 @@ impl PortPool {
     fn reset(&mut self) {
         self.tags.fill(u64::MAX);
     }
+
+    /// Translate every occupied cycle forward by `cycles` (time-shifted
+    /// resume). Adding a constant to each tag moves slot `c % RING` to
+    /// `(c + cycles) % RING` — a pure rotation of the ring — so the
+    /// occupancy pattern survives bit-for-bit at its new absolute times.
+    fn shift(&mut self, cycles: u64) {
+        let k = (cycles % PORT_RING as u64) as usize;
+        self.tags.rotate_right(k);
+        self.counts.rotate_right(k);
+        for t in &mut self.tags {
+            if *t != u64::MAX {
+                *t += cycles;
+            }
+        }
+    }
 }
 
 /// Function-unit pools: per-class port occupancy.
@@ -171,6 +190,14 @@ impl Ports {
         self.vpu.reset();
         self.load.reset();
         self.store.reset();
+    }
+
+    fn shift(&mut self, cycles: u64) {
+        self.int_alu.shift(cycles);
+        self.int_mul.shift(cycles);
+        self.vpu.shift(cycles);
+        self.load.shift(cycles);
+        self.store.shift(cycles);
     }
 }
 
@@ -213,6 +240,7 @@ pub struct Pipeline<'a> {
     simulated_insts: u64,
     extrapolated_insts: u64,
     extrapolated_cycles: u64,
+    inner_folds: u64,
 }
 
 impl<'a> Pipeline<'a> {
@@ -242,6 +270,7 @@ impl<'a> Pipeline<'a> {
             simulated_insts: 0,
             extrapolated_insts: 0,
             extrapolated_cycles: 0,
+            inner_folds: 0,
         };
         p.begin_run();
         p
@@ -296,6 +325,7 @@ impl<'a> Pipeline<'a> {
         self.simulated_insts = 0;
         self.extrapolated_insts = 0;
         self.extrapolated_cycles = 0;
+        self.inner_folds = 0;
     }
 
     /// Execute a contiguous slice of the run's trace. All pipeline state
@@ -457,6 +487,7 @@ impl<'a> Pipeline<'a> {
             op_counts: self.op_counts,
             mem: self.mem.stats,
             branch_mispredicts: self.bp.mispredicts,
+            inner_folds: self.inner_folds,
         };
         self.clock_base = end;
         stats
@@ -480,6 +511,69 @@ impl<'a> Pipeline<'a> {
         self.bp.mispredicts += d.mispredicts * times;
     }
 
+    /// Time-shifted resume (inner-loop folding): account `times` further
+    /// steady-state windows analytically — like [`Pipeline::extrapolate`]
+    /// — but *keep feeding afterwards*. Every piece of absolute-cycle
+    /// micro-state is translated forward by the folded time
+    /// (`d.cycles * times`): operand-ready times, fetch/retire rings, the
+    /// front-end stall horizon, the issue cursors, the FU-port and
+    /// issue-bandwidth occupancy rings ([`PortPool::shift`] — a pure ring
+    /// rotation), and the memory system's transient occupancy
+    /// ([`MemSys::shift`], with streamed addresses advanced by
+    /// `byte_shift` bytes per window). The folded windows' taken loop
+    /// branch advances the branch predictor's run state
+    /// ([`BranchPredictor::advance_run`], via
+    /// [`Pipeline::bp_advance_run`]) so the eventual loop exit still
+    /// predicts and trains exactly as in a full walk.
+    ///
+    /// Unlike `extrapolate`, the folded cycles land in the simulated
+    /// frontier itself (not `extrapolated_cycles`): `end_run` sees them
+    /// through `last_retire`/`last_complete`, and a subsequent `feed`
+    /// resumes from the shifted state as if the folded iterations had
+    /// been walked.
+    pub(crate) fn fast_forward(&mut self, d: &super::steady::IterDelta, times: u64, byte_shift: u64) {
+        if times == 0 {
+            return;
+        }
+        let cycles = d.cycles * times;
+        // Linear counter scaling — identical accounting to `extrapolate`.
+        self.extrapolated_insts += d.insts * times;
+        for (c, dc) in self.op_counts.iter_mut().zip(d.op_counts.iter()) {
+            *c += dc * times;
+        }
+        self.mem.stats.add_scaled(&d.mem, times);
+        self.bp.predictions += d.predictions * times;
+        self.bp.mispredicts += d.mispredicts * times;
+        // Time-shifted resume of the micro-state.
+        for r in &mut self.reg_ready {
+            *r += cycles;
+        }
+        for f in &mut self.fetch_ring {
+            *f += cycles;
+        }
+        for r in &mut self.retire_ring {
+            *r += cycles;
+        }
+        self.fetch_after += cycles;
+        self.last_issue += cycles;
+        self.last_retire += cycles;
+        self.last_complete += cycles;
+        self.ports.shift(cycles);
+        self.ooo_issue.shift(cycles);
+        self.mem.shift(cycles, byte_shift.saturating_mul(times));
+        // Keep the instruction index in step with the accounted stream so
+        // the fetch/retire rings and the retirement-bandwidth floor index
+        // as they would after a full walk.
+        self.idx += (d.insts * times) as usize;
+        self.inner_folds += 1;
+    }
+
+    /// Advance the branch predictor's loop-run state for `n` folded taken
+    /// branches at `site` (see [`BranchPredictor::advance_run`]).
+    pub(crate) fn bp_advance_run(&mut self, site: u64, n: u64) {
+        self.bp.advance_run(site, n);
+    }
+
     /// Frontier of *simulated* time within the current run (absolute
     /// cycle, excluding extrapolation) — what the steady-state detector
     /// differences per block.
@@ -490,6 +584,21 @@ impl<'a> Pipeline<'a> {
     /// Instructions walked so far in the current run.
     pub fn run_simulated_insts(&self) -> u64 {
         self.simulated_insts
+    }
+
+    /// Instructions *accounted* so far in the current run: walked plus
+    /// analytically folded. This is what the per-block steady-state
+    /// detector differences — with inner-loop folding, a block's walked
+    /// count depends on where detection fired, but its accounted count is
+    /// the full block every time, so per-block deltas stay uniform and
+    /// outer extrapolation composes with inner folding.
+    pub fn run_accounted_insts(&self) -> u64 {
+        self.simulated_insts + self.extrapolated_insts
+    }
+
+    /// Inner-loop fold events so far in the current run.
+    pub fn run_inner_folds(&self) -> u64 {
+        self.inner_folds
     }
 
     /// Per-class op counts so far in the current run.

@@ -21,6 +21,23 @@
 //! *last* thing in a run, so no simulated state ever has to resume after
 //! it.
 //!
+//! ## Inner-loop folding
+//!
+//! The same discipline applies *within* a block: a long inner loop (e.g.
+//! one 4800-element lintra row) is `chunks` shape-identical chunks
+//! ([`TraceGen::inner`] reports the segmentation, [`feed_block`] verifies
+//! it from runtime per-chunk deltas with the same `STEADY_K`-consecutive-
+//! windows criterion). Once the chunk stream is periodic, the remainder
+//! of the block is accounted analytically and — unlike end-of-run
+//! extrapolation — the pipeline is *resumed time-shifted*
+//! ([`Pipeline::fast_forward`]): rings, scoreboards, port occupancy,
+//! prefetcher streams, and the branch predictor's loop runs are
+//! translated to where a full walk would have left them, and the block's
+//! exact tail (final iteration, leftover strip, reduction, epilogue) is
+//! then walked normally. Per-block deltas difference *accounted*
+//! (walked + folded) counters, so outer extrapolation composes with
+//! inner folding.
+//!
 //! Exactness: instruction counts are exact by construction (blocks are
 //! shape-identical); cycles and energy are exact whenever the block
 //! sequence truly is periodic from the detection point on, which holds
@@ -29,14 +46,17 @@
 //! crosses into a new cache line every 16 points). Those events are
 //! timing-neutral (they ride the write buffer) but round the memory-event
 //! and energy totals slightly — `rust/tests/sim_steady.rs` pins the
-//! tolerance. Short trips that never reach `(STEADY_K + 1) * P` stable
-//! blocks fall back to the full walk and are bit-exact trivially.
+//! tolerance. The time-shifted resume adds a bounded per-fold transition
+//! error (the L1/L2 tag stores are not shifted), inside the same pinned
+//! envelope. Short trips that never reach `(STEADY_K + 1) * P` stable
+//! blocks — or short rows whose chunk count never reaches it — fall back
+//! to the full walk and are bit-exact trivially.
 //!
 //! [`SimMode::Exact`] (or `DEGOAL_SIM_EXACT=1`) is the escape hatch: walk
 //! every instruction of every block, the pre-PR-5 behaviour.
 
 use super::pipeline::{ExecStats, Pipeline, N_OP_CLASSES};
-use super::trace::{Inst, KernelKind, RefKind, TraceGen};
+use super::trace::{InnerSeg, Inst, KernelKind, OpClass, RefKind, TraceGen};
 use crate::simulator::cache::MemStats;
 use crate::tunespace::TuningParams;
 
@@ -116,7 +136,9 @@ impl Snapshot {
         let (predictions, mispredicts) = pipe.bp_counters();
         Snapshot {
             cycles: pipe.frontier_cycles(),
-            insts: pipe.run_simulated_insts(),
+            // Accounted (walked + inner-folded) so per-block deltas stay
+            // uniform when inner-loop folding fires inside blocks.
+            insts: pipe.run_accounted_insts(),
             op_counts: pipe.run_op_counts(),
             mem: pipe.mem_stats(),
             predictions,
@@ -147,15 +169,16 @@ enum TraceSpec<'a> {
     Reference(RefKind),
 }
 
-fn emit_block<'g>(
-    gen: &'g mut TraceGen,
-    kind: &KernelKind,
-    spec: TraceSpec<'_>,
-    b: u32,
-) -> &'g [Inst] {
+/// Fill `gen`'s buffer with block `b` (and its [`InnerSeg`], queried via
+/// [`TraceGen::inner`] / [`TraceGen::insts`] afterwards).
+fn emit_block(gen: &mut TraceGen, kind: &KernelKind, spec: TraceSpec<'_>, b: u32) {
     match spec {
-        TraceSpec::Variant(p) => gen.kernel_block(kind, p, b),
-        TraceSpec::Reference(rk) => gen.ref_block(kind, rk, b),
+        TraceSpec::Variant(p) => {
+            gen.kernel_block(kind, p, b);
+        }
+        TraceSpec::Reference(rk) => {
+            gen.ref_block(kind, rk, b);
+        }
     }
 }
 
@@ -195,12 +218,80 @@ fn run_call(
     match mode {
         SimMode::Exact => {
             for b in 0..outer {
-                pipe.feed(emit_block(gen, kind, spec, b));
+                emit_block(gen, kind, spec, b);
+                pipe.feed(gen.insts());
             }
         }
         SimMode::Steady => steady_walk(pipe, gen, kind, spec, outer),
     }
     pipe.end_run()
+}
+
+/// Feed one block, folding its inner loop once the per-chunk deltas turn
+/// periodic. The advisory segmentation from [`TraceGen::inner`] names the
+/// candidate chunks; nothing is folded until `STEADY_K` consecutive
+/// windows of runtime chunk deltas repeat, so a wrong or missing
+/// segmentation degrades to the exact walk. After a fold the pipeline is
+/// resumed time-shifted ([`Pipeline::fast_forward`]) and the block's
+/// non-uniform tail is walked exactly.
+fn feed_block(pipe: &mut Pipeline<'_>, block: &[Inst], inner: Option<InnerSeg>) {
+    let seg = match inner {
+        // Folding needs a detection prefix of (STEADY_K + 1) chunks plus
+        // at least one chunk to fold; shorter rows take the exact walk
+        // (bitwise fallback).
+        Some(seg) if seg.chunks as usize > STEADY_K + 1 && seg.chunk_len > 0 => seg,
+        _ => {
+            pipe.feed(block);
+            return;
+        }
+    };
+    let seg_end = seg.start + seg.chunk_len * seg.chunks as usize;
+    pipe.feed(&block[..seg.start]);
+    let mut ring = [IterDelta::default(); RING];
+    let mut seen = 0usize;
+    let mut prev = Snapshot::take(pipe);
+    let mut c = 0u32;
+    while c < seg.chunks {
+        let at = seg.start + seg.chunk_len * c as usize;
+        pipe.feed(&block[at..at + seg.chunk_len]);
+        c += 1;
+        let now = Snapshot::take(pipe);
+        ring[seen % RING] = now.delta(&prev);
+        prev = now;
+        seen += 1;
+        if c == seg.chunks {
+            break;
+        }
+        let Some(period) = detect(&ring, seen) else {
+            continue;
+        };
+        // Walk a few more chunks so the fold covers a whole number of
+        // windows, then fast-forward over the rest.
+        let tail = ((seg.chunks - c) as usize) % period;
+        for _ in 0..tail {
+            let at = seg.start + seg.chunk_len * c as usize;
+            pipe.feed(&block[at..at + seg.chunk_len]);
+            c += 1;
+        }
+        let windows = ((seg.chunks - c) as usize / period) as u64;
+        if windows > 0 {
+            let mut window = IterDelta::default();
+            for j in 1..=period {
+                window.accumulate(&ring[(seen - j) % RING]);
+            }
+            // The folded iterations' taken loop branches advance the
+            // predictor's run state so the exit branch that follows the
+            // fold predicts and trains exactly as in a full walk. Chunks
+            // are shape-identical, so one chunk names every site.
+            let chunk = &block[seg.start..seg.start + seg.chunk_len];
+            for inst in chunk.iter().filter(|i| i.op == OpClass::Branch && i.taken) {
+                pipe.bp_advance_run(inst.addr, windows * period as u64);
+            }
+            pipe.fast_forward(&window, windows, seg.chunk_bytes * period as u64);
+        }
+        break;
+    }
+    pipe.feed(&block[seg_end..]);
 }
 
 fn steady_walk(
@@ -215,7 +306,8 @@ fn steady_walk(
     let mut prev = Snapshot::take(pipe);
     let mut b = 0u32;
     while b < outer {
-        pipe.feed(emit_block(gen, kind, spec, b));
+        emit_block(gen, kind, spec, b);
+        feed_block(pipe, gen.insts(), gen.inner());
         b += 1;
         let now = Snapshot::take(pipe);
         ring[seen % RING] = now.delta(&prev);
@@ -232,7 +324,8 @@ fn steady_walk(
         // simulated state never has to resume after it.
         let tail = ((outer - b) as usize) % period;
         for _ in 0..tail {
-            pipe.feed(emit_block(gen, kind, spec, b));
+            emit_block(gen, kind, spec, b);
+            feed_block(pipe, gen.insts(), gen.inner());
             b += 1;
         }
         let windows = ((outer - b) as usize / period) as u64;

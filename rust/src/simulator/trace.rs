@@ -194,15 +194,57 @@ const A_ADDVEC: u64 = 0x5000_4100;
 const A_OUT: u64 = 0x6000_5140;
 const A_STACK: u64 = 0x7000_6180;
 
+/// The uniform inner-loop region of one emitted block: `chunks`
+/// repetitions of `chunk_len` instructions starting `start` instructions
+/// into the block, each chunk advancing the streamed arrays by
+/// `chunk_bytes` bytes. A chunk is the smallest shape-identical repeating
+/// unit of the block's inner loop — one loop iteration for most shapes,
+/// a 16-iteration prefetch group for the SISD references — and the
+/// region deliberately excludes any non-uniform head (iteration 0's
+/// prefetch hints) and the final iteration (whose exit branch is
+/// not-taken), which are walked exactly.
+///
+/// This is *advisory*: the inner-loop steady-state detector
+/// (`simulator::steady`) verifies periodicity from runtime per-chunk
+/// deltas before folding anything, so a conservative or absent
+/// segmentation costs speed, never correctness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InnerSeg {
+    /// Instruction index of chunk 0, relative to the block's first inst.
+    pub start: usize,
+    /// Instructions per chunk.
+    pub chunk_len: usize,
+    /// Number of uniform chunks from `start`.
+    pub chunks: u32,
+    /// Streamed-array advance per chunk, in bytes (the address shift a
+    /// time-shifted resume applies per folded chunk).
+    pub chunk_bytes: u64,
+}
+
 /// Trace generator with a reusable buffer (no allocation on the hot path).
 #[derive(Debug, Default)]
 pub struct TraceGen {
     buf: Vec<Inst>,
+    /// Inner-loop segmentation of the most recently emitted block
+    /// (`None` when the block has no uniform inner region worth folding).
+    inner: Option<InnerSeg>,
 }
 
 impl TraceGen {
     pub fn new() -> TraceGen {
-        TraceGen { buf: Vec::with_capacity(1 << 18) }
+        TraceGen { buf: Vec::with_capacity(1 << 18), inner: None }
+    }
+
+    /// Inner-loop segmentation of the last block emitted by any of the
+    /// `*_block`/`*_trace` methods (for `*_trace`, the final block).
+    pub fn inner(&self) -> Option<InnerSeg> {
+        self.inner
+    }
+
+    /// The instruction buffer as last filled — for the `*_block` methods,
+    /// exactly the emitted block (what [`TraceGen::inner`] describes).
+    pub fn insts(&self) -> &[Inst] {
+        &self.buf
     }
 
     /// Generate the trace of one kernel call for an auto-tuned variant:
@@ -269,12 +311,24 @@ impl TraceGen {
         // vectLen * hotUF (MAX_REG_PRODUCT).
         let n_accs = (s.hot_uf * s.vect_len) as u16;
         let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+        let block_start = self.buf.len();
+        self.inner = None;
         self.prologue(p, 2);
         // Zero the accumulators (NEON veor).
         for a in 0..n_accs {
             self.buf.push(Inst::fp(OpClass::VAdd, V_ACC + a, NO_REG, NO_REG, NO_REG));
         }
+        let mut seg_start = 0;
+        let mut chunk_len = 0;
         for it in 0..num_iter {
+            // Iterations 1..num_iter-1 are shape-identical (iteration 0
+            // may carry pld hints, the last iteration's branch exits):
+            // record them as the foldable inner segment.
+            if it == 1 {
+                seg_start = self.buf.len();
+            } else if it == 2 {
+                chunk_len = self.buf.len() - seg_start;
+            }
             let base = (it * epi) as u64 * 4;
             self.distance_body(s, p, pbase + base, A_CENTER + base, w_bytes, it);
             if num_iter > 1 {
@@ -282,6 +336,14 @@ impl TraceGen {
                 self.buf.push(Inst::alu(R_CNT, R_CNT));
                 self.buf.push(Inst::branch(1, it + 1 != num_iter));
             }
+        }
+        if num_iter >= 3 {
+            self.inner = Some(InnerSeg {
+                start: seg_start - block_start,
+                chunk_len,
+                chunks: num_iter - 2,
+                chunk_bytes: epi as u64 * 4,
+            });
         }
         // Leftover strip: scalar element loop.
         for e in 0..leftover {
@@ -428,8 +490,19 @@ impl TraceGen {
 
         let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
         let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+        let block_start = self.buf.len();
+        self.inner = None;
         self.prologue(p, 3);
+        let mut seg_start = 0;
+        let mut chunk_len = 0;
         for it in 0..num_iter {
+            // Same segmentation as distance_point: iterations
+            // 1..num_iter-1 are the uniform foldable region.
+            if it == 1 {
+                seg_start = self.buf.len();
+            } else if it == 2 {
+                chunk_len = self.buf.len() - seg_start;
+            }
             let base = (it * epi) as u64 * 4;
             for c in 0..s.cold_uf {
                 // Like distance_body: IS groups loads / macs / stores
@@ -491,6 +564,14 @@ impl TraceGen {
                 self.buf.push(Inst::branch(3, it + 1 != num_iter));
             }
         }
+        if num_iter >= 3 {
+            self.inner = Some(InnerSeg {
+                start: seg_start - block_start,
+                chunk_len,
+                chunks: num_iter - 2,
+                chunk_bytes: epi as u64 * 4,
+            });
+        }
         for e in 0..leftover {
             let off = ((num_iter * epi + e) as u64) * 4;
             self.buf.push(Inst::load(R_SCALAR0, R_PTR1, ibase + off, 4));
@@ -518,12 +599,25 @@ impl TraceGen {
         let num_iter = dim / step_elems;
         let leftover = dim % step_elems;
         let pbase = A_POINTS + (b as u64) * (dim as u64) * 4;
+        let block_start = self.buf.len();
+        self.inner = None;
         // Compiled C: frame setup (not stack-minimised).
         self.buf.push(Inst::store(R_TMP, A_STACK, 8));
         self.buf.push(Inst::alu(R_PTR1, NO_REG));
         self.buf.push(Inst::alu(R_PTR2, NO_REG));
         self.buf.push(Inst::fp(if simd { OpClass::VAdd } else { OpClass::FAdd }, V_ACC, NO_REG, NO_REG, NO_REG));
+        // Foldable chunk: one iteration for SIMD, one 16-iteration
+        // prefetch group for SISD (the pld pair at `it % 16 == 0` makes
+        // the stream uniform only at group granularity).
+        let group = if simd { 1 } else { 16 };
+        let mut seg_start = 0;
+        let mut chunk_len = 0;
         for it in 0..num_iter {
+            if it == 0 {
+                seg_start = self.buf.len();
+            } else if it == group {
+                chunk_len = self.buf.len() - seg_start;
+            }
             let base = (it * step_elems) as u64 * 4;
             if simd {
                 self.buf.push(Inst::load(V_BASE, R_PTR1, pbase + base, 16));
@@ -555,6 +649,18 @@ impl TraceGen {
             }
             self.buf.push(Inst::branch(5, it + 1 != num_iter));
         }
+        // The final iteration's branch is not-taken, so only groups that
+        // cannot contain it are foldable.
+        let full = num_iter / group;
+        let foldable = if num_iter % group != 0 { full } else { full.saturating_sub(1) };
+        if foldable >= 1 && num_iter > group {
+            self.inner = Some(InnerSeg {
+                start: seg_start - block_start,
+                chunk_len,
+                chunks: foldable,
+                chunk_bytes: (group * step_elems) as u64 * 4,
+            });
+        }
         for e in 0..leftover {
             let off = ((num_iter * step_elems + e) as u64) * 4;
             self.buf.push(Inst::load(R_SCALAR0, R_PTR1, pbase + off, 4));
@@ -584,8 +690,17 @@ impl TraceGen {
         let leftover = row_len % step_elems;
         let ibase = A_POINTS + (r as u64) * (row_len as u64) * 4;
         let obase = A_OUT + (r as u64) * (row_len as u64) * 4;
+        let block_start = self.buf.len();
+        self.inner = None;
         self.buf.push(Inst::store(R_TMP, A_STACK, 8));
+        let mut seg_start = 0;
+        let mut chunk_len = 0;
         for it in 0..num_iter {
+            if it == 0 {
+                seg_start = self.buf.len();
+            } else if it == 1 {
+                chunk_len = self.buf.len() - seg_start;
+            }
             let off = (it * step_elems) as u64 * 4;
             // Band-index computation (modulo by bands) + constant
             // reload from memory, every iteration.
@@ -611,6 +726,16 @@ impl TraceGen {
                 self.buf.push(Inst::alu(R_TMP, R_CNT));
             }
             self.buf.push(Inst::branch(6, it + 1 != num_iter));
+        }
+        // All iterations share one shape; the last one exits, so it is
+        // walked exactly rather than folded.
+        if num_iter >= 2 {
+            self.inner = Some(InnerSeg {
+                start: seg_start - block_start,
+                chunk_len,
+                chunks: num_iter - 1,
+                chunk_bytes: step_elems as u64 * 4,
+            });
         }
         for e in 0..leftover {
             let off = ((num_iter * step_elems + e) as u64) * 4;

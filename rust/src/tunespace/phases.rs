@@ -186,6 +186,30 @@ impl TwoPhaseGrid {
         }
     }
 
+    /// Up to `k` next candidates, never spanning the phase-1 → phase-2
+    /// transition: phase 2 is built from `best`, which is only current
+    /// once every previously drawn candidate has been evaluated, so the
+    /// transition draw must be the sole member of its batch. Batching
+    /// inside a phase is exact — within a phase [`TwoPhaseGrid::next`]
+    /// never reads `best` — so any k-batched drain emits the identical
+    /// sequence a one-at-a-time drain would.
+    pub fn next_batch(&mut self, best: Option<TuningParams>, k: usize) -> Vec<TuningParams> {
+        let in_phase = match self.phase {
+            Phase::One => self.phase1.len() - self.idx1,
+            Phase::Two => self.phase2.len() - self.idx2,
+            Phase::Done => return Vec::new(),
+        };
+        let take = if in_phase == 0 { 1 } else { k.max(1).min(in_phase) };
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            match self.next(best) {
+                Some(p) => out.push(p),
+                None => break,
+            }
+        }
+        out
+    }
+
     /// Remaining candidates (upper bound).
     pub fn remaining(&self) -> usize {
         match self.phase {

@@ -41,6 +41,35 @@ pub trait SearchStrategy: Send {
     /// phase 2 from the phase-1 winner) need it; enumerations ignore it.
     fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams>;
 
+    /// Up to `k` next candidates in draw order — the batched form of
+    /// [`SearchStrategy::next`] behind the parallel candidate-evaluation
+    /// pool. The returned sequence MUST equal what `k` successive `next`
+    /// calls would emit given the same `best`; winner selection downstream
+    /// depends on that (it is a pure function of the candidate sequence,
+    /// not of evaluation arrival order).
+    ///
+    /// The default delegates to `next` but stops after any draw that
+    /// changes [`SearchStrategy::phase`]: past a phase boundary `best`
+    /// may be stale (it is only current once every previously drawn
+    /// candidate has been evaluated). Strategies whose transition *draw*
+    /// itself consumes `best` — [`TwoPhaseGrid`] builds phase 2 from it —
+    /// must override so the transition draw is the sole member of its
+    /// batch.
+    fn next_batch(&mut self, best: Option<TuningParams>, k: usize) -> Vec<TuningParams> {
+        let mut out = Vec::new();
+        let phase0 = self.phase();
+        while out.len() < k.max(1) {
+            match self.next(best) {
+                Some(p) => out.push(p),
+                None => break,
+            }
+            if self.phase() != phase0 {
+                break;
+            }
+        }
+        out
+    }
+
     /// Which exploration phase the strategy is in — drives the §3.4
     /// evaluation-mode switch (training data in phase 1, real data in
     /// phase 2).
@@ -53,6 +82,10 @@ pub trait SearchStrategy: Send {
 impl SearchStrategy for TwoPhaseGrid {
     fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
         TwoPhaseGrid::next(self, best)
+    }
+
+    fn next_batch(&mut self, best: Option<TuningParams>, k: usize) -> Vec<TuningParams> {
+        TwoPhaseGrid::next_batch(self, best, k)
     }
 
     fn phase(&self) -> Phase {
@@ -98,6 +131,10 @@ impl PriorSeeded {
 impl SearchStrategy for PriorSeeded {
     fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
         self.inner.next(best)
+    }
+
+    fn next_batch(&mut self, best: Option<TuningParams>, k: usize) -> Vec<TuningParams> {
+        self.inner.next_batch(best, k)
     }
 
     fn phase(&self) -> Phase {
@@ -231,6 +268,42 @@ mod tests {
         assert_eq!(SearchStrategy::phase(&structural), Phase::One);
         let seq = drain(&mut structural);
         assert!(seq.iter().all(|p| p.s.ve && p.s.no_leftover(96)));
+    }
+
+    #[test]
+    fn batched_drain_equals_sequential_drain() {
+        // next_batch must emit the identical sequence a one-at-a-time
+        // drain does, for any batch width — the invariant the parallel
+        // candidate-evaluation pool's determinism rests on. Feedback rule
+        // mirrors `drain`: the first candidate stays best forever.
+        let sequential = drain(&mut TwoPhaseGrid::new(96, None));
+        for k in [1usize, 2, 3, 7, 64] {
+            let mut plan = TwoPhaseGrid::new(96, None);
+            let mut best: Option<TuningParams> = None;
+            let mut batched = Vec::new();
+            loop {
+                let batch = SearchStrategy::next_batch(&mut plan, best, k);
+                if batch.is_empty() {
+                    break;
+                }
+                for p in batch {
+                    if best.is_none() {
+                        best = Some(p);
+                    }
+                    batched.push(p);
+                }
+            }
+            assert_eq!(batched, sequential, "batch width {k}");
+        }
+    }
+
+    #[test]
+    fn default_next_batch_respects_width() {
+        let mut s = StaticGrid::new(64, None, false, true);
+        let total = s.len();
+        let b = s.next_batch(None, 4);
+        assert_eq!(b.len(), 4.min(total));
+        assert_eq!(s.remaining(), total - b.len());
     }
 
     #[test]

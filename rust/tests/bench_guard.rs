@@ -7,18 +7,29 @@
 //!
 //! * every *large* shape class must simulate ≥ 10× fewer instructions
 //!   than exact mode would walk (the PR-5 acceptance bound);
+//! * the tall-row lintra cells (4800-element rows, only 8 of them — too
+//!   few blocks for per-block extrapolation to pay) must fold *inside*
+//!   their blocks: `inner_folds ≥ 1` and an overall instruction fold
+//!   ≥ 5× per cell (the inner-loop-folding acceptance bound);
 //! * the grid's total simulated instructions must stay under a committed
 //!   ceiling, so a detector regression (steady state found later, or not
 //!   at all) fails loudly instead of just getting slower.
 
 use degoal_rt::bench::run_grid;
 
-/// Committed ceiling for the grid's total walked instructions. The grid
-/// currently simulates well under half of this — the headroom absorbs
+/// Committed ceiling for the grid's total walked instructions. Halved
+/// from the PR-5 value (8M): inner-loop folding removed the tall-row
+/// lintra full walks that dominated the old total. The headroom absorbs
 /// detector-warmup shifts from legitimate model changes, while a broken
 /// fast path (full walks on the large classes) overshoots it several
 /// times over.
-const SIMULATED_INSTS_CEILING: u64 = 8_000_000;
+const SIMULATED_INSTS_CEILING: u64 = 4_000_000;
+
+/// Per-cell instruction-fold floor for the tall-row lintra cells — the
+/// inner-loop-folding acceptance bound. PR 5's per-block detector could
+/// fold at most ~2× here (8 blocks, detector warm-up eats half); folding
+/// within the 4800-element rows must push every cell past this.
+const TALL_LINTRA_MIN_FOLD: f64 = 5.0;
 
 #[test]
 fn bench_grid_counters_are_consistent() {
@@ -57,6 +68,34 @@ fn large_shape_classes_simulate_ten_times_fewer_insts() {
 }
 
 #[test]
+fn tall_lintra_rows_fold_inside_their_blocks() {
+    let report = run_grid(0, false);
+    let tall: Vec<_> =
+        report.cells.iter().filter(|c| c.kernel == "lintra/r4800/x8").collect();
+    assert!(!tall.is_empty(), "grid must carry the tall-row lintra class");
+    for c in tall {
+        assert!(
+            c.inner_folds >= 1,
+            "{}/{}/{}: no inner-loop fold fired",
+            c.core,
+            c.kernel,
+            c.params
+        );
+        assert!(
+            c.inst_ratio() >= TALL_LINTRA_MIN_FOLD,
+            "{}/{}/{}: folds only {:.1}x (simulated {} of {}, {} inner folds)",
+            c.core,
+            c.kernel,
+            c.params,
+            c.inst_ratio(),
+            c.simulated_insts,
+            c.insts,
+            c.inner_folds
+        );
+    }
+}
+
+#[test]
 fn grid_total_simulated_insts_under_committed_ceiling() {
     let report = run_grid(0, false);
     assert!(
@@ -76,7 +115,9 @@ fn fast_path_is_deterministic_across_grid_runs() {
         assert_eq!(x.cycles, y.cycles, "{}/{}/{}", x.core, x.kernel, x.params);
         assert_eq!(x.simulated_insts, y.simulated_insts);
         assert_eq!(x.extrapolated_insts, y.extrapolated_insts);
+        assert_eq!(x.inner_folds, y.inner_folds);
     }
     assert_eq!(a.total_insts, b.total_insts);
     assert_eq!(a.total_simulated, b.total_simulated);
+    assert_eq!(a.total_inner_folds, b.total_inner_folds);
 }

@@ -1,0 +1,219 @@
+//! Parallel candidate evaluation must never change tuning outcomes.
+//!
+//! PR 7 adds a speculative pre-scoring pool: with a batching tuner
+//! ([`TunerConfig::batch`] > 1) the engine hands a lane's queued
+//! candidates to idle workers, which score them into the shared
+//! measurement memo through the backend's
+//! [`speculative_scorer`](degoal_rt::backend::Backend::speculative_scorer).
+//! The pool is a pure accelerator — the tuner still evaluates every
+//! candidate itself, in draw order, so the only effect prewarming may
+//! have is turning a lane's own measurement into a memo hit whose value
+//! is bit-identical to what the miss would have computed. Three layers
+//! pin that:
+//!
+//! * prewarming a backend's memo directly (any candidate set, both eval
+//!   kinds, valid or not) leaves a lane's full report bitwise unchanged;
+//! * batching itself (`batch` 1 vs 4) is draw-order-identical on the
+//!   sequential service, lane for lane;
+//! * the threaded engine with the pool live (idle workers consuming
+//!   score tasks — the non-vacuousness counter proves they did) matches
+//!   the sequential reference winner for winner and ULP for ULP on the
+//!   skewed and heterogeneous two-device workloads.
+//!
+//! Everything asserted here is exact equality, never tolerance: the
+//! pool's correctness argument is that it cannot perturb results at all.
+//!
+//! [`TunerConfig::batch`]: degoal_rt::coordinator::TunerConfig
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::backend::{Backend, CandidateScorer, EvalData};
+use degoal_rt::cache::{SharedTuneCache, TuneKey};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, ServiceStats, TuningEngine, TuningService,
+};
+use degoal_rt::simulator::{core_by_name, KernelKind, SharedSimMemo};
+use degoal_rt::tunespace::{Structural, TuningParams};
+use degoal_rt::workloads::{
+    hetero_service_workload, skewed_service_workload, SKEWED_SERVICE_LANES,
+};
+
+/// Pre-recorded app time that makes the global governor allow every
+/// wake, so exploration is a pure function of each lane's call sequence
+/// (same trick as `engine_steal.rs`).
+const GOVERNOR_PRIME: f64 = 1e6;
+
+const PARITY_CALLS_PER_LANE: u32 = 2_500;
+
+fn cfg(batch: usize) -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, batch, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Full-strength report comparison: winner, schedule, and virtual-time
+/// accounting must all be bit-equal.
+fn assert_report_eq(a: &LaneReport, b: &LaneReport, what: &str) {
+    assert_eq!(a.key, b.key, "{what}");
+    assert_eq!(a.kernel_calls, b.kernel_calls, "{what}: lane {}", a.key);
+    assert_eq!(a.explored, b.explored, "{what}: lane {}", a.key);
+    assert_eq!(a.generate_calls, b.generate_calls, "{what}: lane {}", a.key);
+    assert_eq!(a.swaps, b.swaps, "{what}: lane {}", a.key);
+    assert_eq!(a.done, b.done, "{what}: lane {}", a.key);
+    assert_eq!(a.best, b.best, "{what}: winner changed on lane {}", a.key);
+    assert_eq!(a.best_at_generate, b.best_at_generate, "{what}: lane {}", a.key);
+    assert_eq!(a.overhead, b.overhead, "{what}: lane {}", a.key);
+    assert_eq!(a.app_time, b.app_time, "{what}: lane {}", a.key);
+    assert_eq!(a.gained, b.gained, "{what}: lane {}", a.key);
+}
+
+// ---------- layer 1: prewarming is invisible to a lane ----------
+
+fn p(ve: bool, v: u32, h: u32, c: u32) -> TuningParams {
+    TuningParams::phase1_default(Structural::new(ve, v, h, c))
+}
+
+/// One sequential lane over `kind`, optionally with a candidate set
+/// pre-scored into its memo before the first call.
+fn lane_outcome(kind: KernelKind, calls: u32, batch: usize, prewarm: bool) -> LaneReport {
+    let core = core_by_name("DI-I1").unwrap();
+    let backend = SimBackend::with_memo(core, kind, 7, SharedSimMemo::new());
+    if prewarm {
+        let mut scorer = backend.speculative_scorer().expect("sim backends offer a scorer");
+        // Structural corners plus a combo that is invalid for the kernel
+        // length — prewarm must skip it, not poison the memo.
+        for params in
+            [p(true, 1, 1, 1), p(true, 2, 2, 1), p(true, 4, 1, 2), p(false, 1, 1, 1), p(true, 4, 4, 4)]
+        {
+            scorer.prewarm(params, EvalData::Training);
+            scorer.prewarm(params, EvalData::Real);
+        }
+    }
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg(batch));
+    svc.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let key = TuneKey::with_shape(backend.kernel_id(), kind.length(), "a");
+    let lane = svc.register(key, Some(true), backend);
+    for _ in 0..calls {
+        svc.app_call(lane).unwrap();
+    }
+    svc.lane_report(lane).unwrap()
+}
+
+#[test]
+fn prewarming_any_candidate_set_is_invisible_in_the_report() {
+    for (kind, calls) in [
+        (KernelKind::Distance { dim: 64, batch: 256 }, 4_000u32),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, 2_500),
+    ] {
+        let cold = lane_outcome(kind, calls, 1, false);
+        assert!(cold.explored > 0, "{kind:?}: nothing explored — test is vacuous");
+        for batch in [1usize, 4] {
+            let warm = lane_outcome(kind, calls, batch, true);
+            assert_report_eq(&warm, &cold, "prewarmed memo");
+        }
+    }
+}
+
+// ---------- layer 2: batching alone is draw-order identical ----------
+
+fn sequential_reference(batch: usize) -> Vec<LaneReport> {
+    let core = core_by_name("DI-I1").unwrap();
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg(batch));
+    svc.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| svc.register(k, Some(true), b))
+        .collect();
+    for &l in &lanes {
+        for _ in 0..PARITY_CALLS_PER_LANE {
+            svc.app_call(l).unwrap();
+        }
+    }
+    lanes.iter().map(|&l| svc.lane_report(l).unwrap()).collect()
+}
+
+#[test]
+fn sequential_batching_matches_one_at_a_time_lane_for_lane() {
+    let one = sequential_reference(1);
+    let four = sequential_reference(4);
+    assert_eq!(one.len(), four.len());
+    let mut explored = 0;
+    for (a, b) in four.iter().zip(&one) {
+        assert_report_eq(a, b, "batch 4 vs 1");
+        explored += a.explored;
+    }
+    assert!(explored > 0, "parity must not be vacuous: nothing explored");
+}
+
+// ---------- layer 3: the live pool matches sequential bitwise ----------
+
+/// One engine pass with the pool live: batching tuners, four workers,
+/// stealing on. Returns the pool's non-vacuousness counter alongside the
+/// run results. The score-task queue is advisory (the drain barrier does
+/// not wait for it), so after the drain we give the now-idle workers a
+/// bounded moment to empty it before reading the counter.
+fn engine_pass(lanes_spec: Vec<(TuneKey, SimBackend)>, threads: usize) -> (u64, ServiceStats, Vec<LaneReport>) {
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        cfg(4),
+        SharedTuneCache::new(),
+        EngineOptions { threads, steal: true, quantum: 64, ..Default::default() },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> =
+        lanes_spec.into_iter().map(|(k, b)| eng.register(k, Some(true), b).unwrap()).collect();
+    for &l in &lanes {
+        eng.submit_n(l, PARITY_CALLS_PER_LANE).unwrap();
+    }
+    eng.drain().unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while eng.prewarmed() == 0 && std::time::Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    let prewarmed = eng.prewarmed();
+    let (st, reports) = eng.finish().unwrap();
+    (prewarmed, st, reports)
+}
+
+#[test]
+fn pool_matches_sequential_bitwise_on_the_skewed_workload() {
+    let seq = sequential_reference(4);
+    let core = core_by_name("DI-I1").unwrap();
+    let (prewarmed, st, reports) = engine_pass(skewed_service_workload(core, 11), 4);
+    assert_eq!(st.lanes, SKEWED_SERVICE_LANES);
+    assert!(prewarmed > 0, "the pool never scored a hint — the parity is vacuous: {st:?}");
+    assert_eq!(reports.len(), seq.len());
+    for (r, s) in reports.iter().zip(&seq) {
+        assert_report_eq(r, s, "pool vs sequential");
+    }
+}
+
+#[test]
+fn pool_matches_sequential_bitwise_on_the_hetero_workload() {
+    // Two simulated devices, three kernel streams each: pool prewarming
+    // on one device's lanes must never leak into the other's outcomes
+    // (memo keys carry the core name).
+    let donor = core_by_name("DI-I1").unwrap();
+    let target = core_by_name("DI-I2").unwrap();
+
+    let (d, t) = hetero_service_workload(donor, target, 23);
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg(4));
+    svc.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> =
+        d.into_iter().chain(t).map(|(k, b)| svc.register(k, Some(true), b)).collect();
+    for &l in &lanes {
+        for _ in 0..PARITY_CALLS_PER_LANE {
+            svc.app_call(l).unwrap();
+        }
+    }
+    let seq: Vec<LaneReport> = lanes.iter().map(|&l| svc.lane_report(l).unwrap()).collect();
+
+    let (dd, tt) = hetero_service_workload(donor, target, 23);
+    let (prewarmed, st, reports) = engine_pass(dd.into_iter().chain(tt).collect(), 3);
+    assert_eq!(st.lanes, seq.len());
+    assert!(prewarmed > 0, "the pool never scored a hint — the parity is vacuous: {st:?}");
+    for (r, s) in reports.iter().zip(&seq) {
+        assert_report_eq(r, s, "pool vs sequential (hetero)");
+        assert!(r.best.is_some(), "lane {} found no winner", r.key);
+    }
+}

@@ -1,8 +1,10 @@
-//! Exactness suite for the steady-state fast path (PR 5).
+//! Exactness suite for the steady-state fast path (PR 5) and the
+//! inner-loop folding that extends it within blocks (PR 7).
 //!
-//! Fast mode (block-wise simulation + steady-state extrapolation) must
-//! agree with exact mode (full instruction walk) across all cores × both
-//! kernels × a sweep of structural combos and trip lengths:
+//! Fast mode (block-wise simulation + steady-state extrapolation, plus
+//! per-chunk folding inside long blocks) must agree with exact mode (full
+//! instruction walk) across all cores × both kernels × a sweep of
+//! structural combos and trip lengths:
 //!
 //! * instruction totals are **bit-exact by construction** (blocks are
 //!   shape-identical, extrapolation counts whole blocks);
@@ -153,6 +155,58 @@ fn reference_kernels_agree() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn long_inner_loops_fold_on_all_cores() {
+    // The PR-7 inner-loop bound at the simulator level: a tall lintra
+    // strip (4800-element rows, only 8 of them — too few blocks for the
+    // per-block detector to pay) must fold *inside* its blocks on every
+    // core, stay inside the pinned tolerances, and walk ≥ 5x fewer
+    // instructions than exact mode. (The bench-grid assertion lives in
+    // tests/bench_guard.rs.)
+    let kind = KernelKind::Lintra { row_len: 4800, rows: 8 };
+    for core in ALL_SIM_CORES.iter().map(|c| c.name).chain(["A8", "A9"]) {
+        for params in [p(true, 1, 1, 1), p(true, 2, 2, 1)] {
+            let (fast, exact) = check_variant(core, kind, params);
+            assert!(fast.inner_folds > 0, "{core} {params}: no inner fold on a 4800-elem row");
+            assert_eq!(exact.inner_folds, 0, "{core} {params}: exact mode must never fold");
+            let fold = fast.insts as f64 / fast.simulated_insts.max(1) as f64;
+            assert!(fold >= 5.0, "{core} {params}: folds only {fold:.1}x");
+        }
+    }
+}
+
+#[test]
+fn inner_folding_composes_with_outer_extrapolation() {
+    // Long rows *and* many of them: folds fire within the walked blocks
+    // and the per-block detector still extrapolates the remaining rows
+    // (per-block deltas difference accounted counters, so they stay
+    // uniform across folded blocks).
+    for core in ["DI-I1", "TI-O3", "A9"] {
+        let kind = KernelKind::Lintra { row_len: 2400, rows: 64 };
+        let (fast, _) = check_variant(core, kind, p(true, 1, 1, 1));
+        assert!(fast.inner_folds > 0, "{core}: no inner fold");
+        assert!(fast.extrapolated_insts > 0, "{core}: no outer extrapolation");
+    }
+}
+
+#[test]
+fn short_rows_fall_back_to_the_bitwise_full_walk() {
+    // chunks <= STEADY_K + 1 per row and rows <= STEADY_K + 1: neither
+    // the inner nor the outer detector can fire, so the fast path IS the
+    // exact walk — everything must be bit-equal, not just within
+    // tolerance.
+    let combo = p(true, 1, 1, 1);
+    for core in ["DI-I1", "TI-O3", "A8"] {
+        let kind = KernelKind::Lintra { row_len: 16, rows: 3 };
+        let (fast, exact) = check_variant(core, kind, combo);
+        assert_eq!(fast.inner_folds, 0, "{core}: short rows must not fold");
+        assert_eq!(fast.extrapolated_insts, 0, "{core}");
+        assert_eq!(fast.cycles, exact.cycles, "{core}");
+        assert_eq!(fast.seconds, exact.seconds, "{core}");
+        assert_eq!(fast.energy_j, exact.energy_j, "{core}");
     }
 }
 
