@@ -35,13 +35,20 @@
 //!   the per-shard counters are sharded-locked; the `stale` counter is a
 //!   lock-free atomic (recorded off the locked paths). Snapshotting back
 //!   to a plain [`TuneCache`] keeps the on-disk format bit-compatible.
+//! * [`SteadyReadMap`] — the lock-free steady-state read path: winners
+//!   of *finished* explorations, published by lanes
+//!   ([`SharedTuneCache::publish_steady`]) and served at lane-open with
+//!   zero mutex acquisitions ([`SharedTuneCache::lookup_steady`]); an
+//!   epoch-swapped overlay over the sharded write path.
 
 mod fingerprint;
 mod shared;
+mod steady;
 mod store;
 
 pub use fingerprint::{DeviceFingerprint, TuneKey};
 pub use shared::{SharedTuneCache, DEFAULT_LOCK_SHARDS};
+pub use steady::SteadyReadMap;
 pub use store::{
     CacheCounters, CacheEntry, CacheHit, CacheStats, TuneCache, TUNECACHE_FORMAT_VERSION,
 };

@@ -15,11 +15,16 @@
 //!   owning shard's lock is held, so plain `u64`s suffice).
 //! * **Lock-free** — the `stale` counter ([`SharedTuneCache::note_stale`]
 //!   is called on the warm-validation failure path, which holds no shard
-//!   lock) is a relaxed [`AtomicU64`].
+//!   lock) is a relaxed [`AtomicU64`]; the steady-state read path
+//!   ([`SharedTuneCache::lookup_steady`]) serves published winners from
+//!   an epoch-swapped [`SteadyReadMap`] with zero mutex acquisitions —
+//!   the sharded store stays the write path and the source of truth.
 //! * **Cross-shard** — the shape-class fallback
 //!   ([`SharedTuneCache::lookup_near`]) scans shards one lock at a time
 //!   on the exact-miss slow path; no lock ordering issue because at most
-//!   one shard lock is ever held.
+//!   one shard lock is ever held. Because the scan's locks are dropped
+//!   before the winner is used, the winner is *re-validated* under its
+//!   shard lock before being returned (see `lookup_near`).
 //!
 //! Persistence stays bit-compatible with [`TuneCache`]'s versioned JSON:
 //! [`SharedTuneCache::snapshot`] folds the shards back into one plain
@@ -34,7 +39,12 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use anyhow::Result;
 
 use super::fingerprint::{DeviceFingerprint, TuneKey};
+use super::steady::SteadyReadMap;
 use super::store::{CacheCounters, CacheEntry, CacheHit, TuneCache};
+
+/// Sentinel for "no TTL" in the lock-free TTL mirror (`u64::MAX` can
+/// never be a real TTL the CLI accepts).
+const NO_TTL: u64 = u64::MAX;
 
 /// Default number of lock shards — enough that a handful of worker
 /// threads rarely contend, small enough that snapshotting stays trivial.
@@ -48,6 +58,18 @@ struct Inner {
     /// Stale-artifact warm starts; recorded lock-free (the caller is on
     /// the tuning fallback path and holds no shard lock).
     stale: AtomicU64,
+    /// The lock-free steady-state read path: winners of *finished*
+    /// explorations, published by lanes and served with zero mutex
+    /// acquisitions. An overlay over the sharded store, never the source
+    /// of truth.
+    steady: SteadyReadMap,
+    /// Lock-free mirror of the TTL policy so `lookup_steady` can apply
+    /// staleness filtering without touching a shard lock. `NO_TTL` =
+    /// none configured.
+    steady_ttl: AtomicU64,
+    /// Steady-path hits; lock-free for the same reason as `stale` — the
+    /// whole point of the path is taking no shard lock.
+    steady_hits: AtomicU64,
 }
 
 /// A `Clone + Send + Sync` handle to one sharded tuning cache. Cloning is
@@ -96,6 +118,9 @@ impl SharedTuneCache {
                 shards: shards.into_boxed_slice(),
                 device_cap: cap,
                 stale: AtomicU64::new(0),
+                steady: SteadyReadMap::new(),
+                steady_ttl: AtomicU64::new(NO_TTL),
+                steady_hits: AtomicU64::new(0),
             }),
         }
     }
@@ -198,19 +223,32 @@ impl SharedTuneCache {
                 }
             }
         }
-        if let Some((idx, donor_key, e)) = best {
-            self.inner.shards[idx]
+        if let Some((idx, donor_key, _)) = best {
+            // All scan locks were dropped above, so a concurrent
+            // `evict_expired`, LRU eviction, or overwrite may have
+            // removed or replaced the donor since we saw it. Re-validate
+            // under the donor's shard lock — still present, not expired,
+            // and the *live* entry still in the transferable class — and
+            // return a fresh clone (never the scan-time copy). The
+            // winning donor's LRU recency is refreshed by the same
+            // locked step; on failure we fall through to the miss path.
+            let revalidated = self.inner.shards[idx]
                 .lock()
                 .expect("tunecache shard lock")
-                .touch(fp, &donor_key);
-            let mut home_guard = self.inner.shards[home].lock().expect("tunecache shard lock");
-            home_guard.counters.near_hits += 1;
-            Some((e, CacheHit::Near))
-        } else {
-            let mut home_guard = self.inner.shards[home].lock().expect("tunecache shard lock");
-            home_guard.counters.misses += 1;
-            None
+                .revalidate(fp, &donor_key, |e| {
+                    let s = e.params.s;
+                    s.no_leftover(donor_key.length) && s.no_leftover(key.length) && usable(e)
+                });
+            if let Some(e) = revalidated {
+                let mut home_guard =
+                    self.inner.shards[home].lock().expect("tunecache shard lock");
+                home_guard.counters.near_hits += 1;
+                return Some((e, CacheHit::Near));
+            }
         }
+        let mut home_guard = self.inner.shards[home].lock().expect("tunecache shard lock");
+        home_guard.counters.misses += 1;
+        None
     }
 
     /// Cross-device transfer lookup: a sibling device's entry for the
@@ -244,11 +282,17 @@ impl SharedTuneCache {
                 }
             }
         }
-        let (idx, donor_fp, e) = best?;
-        // Promote only the winning donor's recency, then account the
-        // transfer on the requester's home shard (where its exact miss
-        // was counted).
-        self.inner.shards[idx].lock().expect("tunecache shard lock").touch(&donor_fp, key);
+        let (idx, donor_fp, _) = best?;
+        // Same unlocked window as `lookup_near`: the scan's locks are
+        // gone, so re-validate the donor under its shard lock (present,
+        // unexpired, live entry still valid for this length and usable)
+        // and take a fresh clone; the same locked step promotes only the
+        // winning donor's recency. On failure return `None` without
+        // counting — the exact lookup already counted the miss.
+        let e = self.inner.shards[idx]
+            .lock()
+            .expect("tunecache shard lock")
+            .revalidate(&donor_fp, key, |e| e.params.s.valid_for(key.length) && usable(e))?;
         let home = self.shard_index(fp, key);
         self.inner.shards[home].lock().expect("tunecache shard lock").counters.transfer_hits += 1;
         Some((donor_fp, e))
@@ -265,8 +309,11 @@ impl SharedTuneCache {
         self.shard(fp, key).insert(fp, key, entry)
     }
 
-    /// Drop one outcome (stale-artifact invalidation).
+    /// Drop one outcome (stale-artifact invalidation). Also tombstones
+    /// the steady read path so a published winner cannot outlive its
+    /// invalidation.
     pub fn invalidate(&self, fp: &DeviceFingerprint, key: &TuneKey) -> bool {
+        self.inner.steady.retract(fp, key);
         self.shard(fp, key).invalidate(fp, key)
     }
 
@@ -275,8 +322,50 @@ impl SharedTuneCache {
         self.inner.stale.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Set the staleness TTL on every shard.
+    /// The lock-free steady-state read: an exact winner published by a
+    /// *finished* exploration, served with **zero mutex acquisitions**
+    /// (one `Acquire` table load plus an atomic probe — see
+    /// [`SteadyReadMap`]). TTL-expired winners are filtered here via a
+    /// lock-free mirror of the TTL policy, so an entry the sharded store
+    /// would evict is never served steady. Counter-neutral on the shard
+    /// counters (they need a lock); hits are tracked in the lock-free
+    /// [`SharedTuneCache::steady_hits`] and by the caller's `Recorder`.
+    pub fn lookup_steady(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
+        let e = self.inner.steady.get(fp, key)?;
+        let ttl = self.inner.steady_ttl.load(Ordering::Relaxed);
+        if ttl != NO_TTL
+            && e.age_secs(super::store::now_unix()).map(|age| age > ttl).unwrap_or(false)
+        {
+            return None;
+        }
+        self.inner.steady_hits.fetch_add(1, Ordering::Relaxed);
+        Some(e)
+    }
+
+    /// Publish a finished exploration's winner into the steady read
+    /// path. Callers insert into the sharded store first (the write path
+    /// and source of truth) and then publish; the steady map is an
+    /// overlay serving the common case lock-free.
+    pub fn publish_steady(&self, fp: &DeviceFingerprint, key: &TuneKey, entry: CacheEntry) {
+        self.inner.steady.publish(fp, key, entry);
+    }
+
+    /// Lock-free steady-path hit count (not part of [`CacheCounters`] —
+    /// those are persisted shard state; this is process-lifetime
+    /// observability, also mirrored into the `obs` registry by lanes).
+    pub fn steady_hits(&self) -> u64 {
+        self.inner.steady_hits.load(Ordering::Relaxed)
+    }
+
+    /// Winners currently published on the steady read path.
+    pub fn steady_len(&self) -> usize {
+        self.inner.steady.len()
+    }
+
+    /// Set the staleness TTL on every shard (and its lock-free mirror
+    /// used by the steady read path).
     pub fn set_ttl(&self, ttl_secs: Option<u64>) {
+        self.inner.steady_ttl.store(ttl_secs.unwrap_or(NO_TTL), Ordering::Relaxed);
         for s in self.inner.shards.iter() {
             s.lock().expect("tunecache shard lock").set_ttl(ttl_secs);
         }
@@ -548,6 +637,44 @@ mod tests {
         assert_eq!(c.evict_expired(crate::cache::store::now_unix()), 10);
         assert_eq!(c.len(), 1);
         assert_eq!(c.counters().expired, 10);
+    }
+
+    #[test]
+    fn steady_path_serves_published_winners_lock_free() {
+        let c = SharedTuneCache::with_shards(8, 64);
+        let k = key("k", 64);
+        assert!(c.lookup_steady(&fp("d"), &k).is_none());
+        // A plain insert is the write path only — the steady overlay
+        // holds *finished* winners, published explicitly.
+        c.insert(&fp("d"), &k, entry(1e-4));
+        assert!(c.lookup_steady(&fp("d"), &k).is_none());
+        c.publish_steady(&fp("d"), &k, entry(1e-4));
+        assert_eq!(c.lookup_steady(&fp("d"), &k).unwrap().score, 1e-4);
+        assert_eq!(c.steady_hits(), 1);
+        assert_eq!(c.steady_len(), 1);
+        // The steady path is counter-neutral on the sharded counters
+        // (touching them would need a lock).
+        assert_eq!(c.counters().hits, 0);
+        // Invalidation tombstones the steady overlay too.
+        assert!(c.invalidate(&fp("d"), &k));
+        assert!(c.lookup_steady(&fp("d"), &k).is_none());
+    }
+
+    #[test]
+    fn steady_path_respects_ttl() {
+        let c = SharedTuneCache::with_shards(4, 64);
+        c.set_ttl(Some(3600));
+        let mut e = entry(1e-4);
+        e.updated_unix = 1_000; // ancient
+        c.publish_steady(&fp("d"), &key("old", 64), e);
+        assert!(
+            c.lookup_steady(&fp("d"), &key("old", 64)).is_none(),
+            "an expired winner must not be served steady"
+        );
+        assert_eq!(c.steady_hits(), 0);
+        c.publish_steady(&fp("d"), &key("fresh", 64), entry(1e-4));
+        assert!(c.lookup_steady(&fp("d"), &key("fresh", 64)).is_some());
+        assert_eq!(c.steady_hits(), 1);
     }
 
     #[test]

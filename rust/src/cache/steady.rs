@@ -1,0 +1,427 @@
+//! Lock-free steady-state read path: an epoch-swapped, read-mostly map
+//! of finished winners layered over the sharded write path.
+//!
+//! The paper's economics only work if the *steady-state* dispatch — the
+//! state every lane spends almost all of its life in once exploration
+//! has finished — costs next to nothing. The sharded
+//! [`super::SharedTuneCache`] already spreads contention, but every hit
+//! still takes a shard mutex. [`SteadyReadMap`] removes even that: once
+//! a lane's exploration completes, its winner is published here, and a
+//! steady-state lookup is one `Acquire` pointer load plus an
+//! open-addressed probe over atomic slots — **zero mutex acquisitions,
+//! zero atomic read-modify-writes** on the read path.
+//!
+//! Design (hand-rolled arc-swap, since no external crates are
+//! available):
+//!
+//! * The live table is an open-addressed, power-of-two array of
+//!   `AtomicPtr` slots behind one `AtomicPtr<Table>`. Readers load the
+//!   table pointer with `Acquire` and probe; a published slot pointer
+//!   always refers to a fully-initialised, immutable entry (writers
+//!   `Release`-store it after construction).
+//! * All mutation is serialised by a writer mutex — writes are the
+//!   sharded store's job anyway and are rare (one publish per finished
+//!   exploration). Publishing an existing key swaps the slot pointer to
+//!   a freshly-allocated entry; growth builds a doubled table sharing
+//!   the same entry pointers and swaps the table pointer.
+//! * Reclamation is epoch-by-lifetime: superseded tables and replaced
+//!   entries are *retired*, not freed — they are only dropped when the
+//!   map itself drops, so a reader holding a raw pointer from before a
+//!   swap can never observe a freed allocation. Memory stays bounded:
+//!   tables grow geometrically (all retired tables together are smaller
+//!   than the live one) and an entry is only retired when its key is
+//!   re-published or retracted.
+//!
+//! The map is an *overlay*, not the source of truth: the sharded cache
+//! remains the write path, and entries here may briefly trail it (a
+//! fleet merge can adopt a better entry that is only re-published on the
+//! next write-back). That is safe because steady winners are warm-start
+//! hints — the tuner's warm-validation path re-checks them against the
+//! live backend. Stale-artifact invalidation *does* propagate
+//! immediately: [`SteadyReadMap::retract`] tombstones the key so readers
+//! fall back to the locked path.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::fingerprint::{DeviceFingerprint, TuneKey};
+use super::store::CacheEntry;
+
+/// Initial slot count (power of two). Sized so a demo-scale service
+/// never grows; a 1k-lane scale run grows ~5 times, retiring a bounded
+/// geometric series of slot arrays.
+const INITIAL_SLOTS: usize = 64;
+
+struct SteadyEntry {
+    fp: DeviceFingerprint,
+    key: TuneKey,
+    /// `None` is a tombstone: the winner was invalidated; readers treat
+    /// it as a miss and fall back to the locked path.
+    entry: Option<CacheEntry>,
+}
+
+struct Table {
+    mask: usize,
+    slots: Box<[AtomicPtr<SteadyEntry>]>,
+}
+
+impl Table {
+    fn with_slots(n: usize) -> Table {
+        debug_assert!(n.is_power_of_two());
+        let slots: Vec<AtomicPtr<SteadyEntry>> =
+            (0..n).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
+        Table { mask: n - 1, slots: slots.into_boxed_slice() }
+    }
+}
+
+struct WriterState {
+    /// Occupied slots in the live table (tombstones keep their slot).
+    len: usize,
+    /// Superseded allocations, kept alive until the map drops so
+    /// readers' raw pointers stay valid. Retired tables alias the live
+    /// table's entries — dropping them frees only the slot arrays.
+    retired_tables: Vec<*mut Table>,
+    retired_entries: Vec<*mut SteadyEntry>,
+}
+
+/// The epoch-swapped read-mostly winner map. Not `Clone` — it is
+/// embedded in [`super::SharedTuneCache`]'s shared inner (or wrapped in
+/// an `Arc` by standalone users).
+pub struct SteadyReadMap {
+    /// The live table; readers do one `Acquire` load and probe.
+    table: AtomicPtr<Table>,
+    /// Serialises publishes/retractions; never taken on the read path.
+    writer: Mutex<WriterState>,
+    /// Monotonic publish count (overwrites and retractions included).
+    published: AtomicU64,
+}
+
+// Safety: the raw pointers in `table` / `WriterState` are uniquely-owned
+// heap allocations freed exactly once (in `Drop`); concurrent access to
+// the pointed-to data is read-only and synchronised through the atomics
+// (Release on publish, Acquire on read), and all mutation of the pointer
+// graph is serialised by the writer mutex.
+unsafe impl Send for SteadyReadMap {}
+unsafe impl Sync for SteadyReadMap {}
+
+fn hash_of(fp: &DeviceFingerprint, key: &TuneKey) -> u64 {
+    // Same placement hash family as the lock shards: deterministic
+    // within and across processes (DefaultHasher has fixed keys).
+    let mut h = DefaultHasher::new();
+    fp.hash(&mut h);
+    key.hash(&mut h);
+    h.finish()
+}
+
+impl Default for SteadyReadMap {
+    fn default() -> Self {
+        SteadyReadMap::new()
+    }
+}
+
+impl SteadyReadMap {
+    pub fn new() -> SteadyReadMap {
+        let table = Box::into_raw(Box::new(Table::with_slots(INITIAL_SLOTS)));
+        SteadyReadMap {
+            table: AtomicPtr::new(table),
+            writer: Mutex::new(WriterState {
+                len: 0,
+                retired_tables: Vec::new(),
+                retired_entries: Vec::new(),
+            }),
+            published: AtomicU64::new(0),
+        }
+    }
+
+    /// The lock-free read: one `Acquire` table load plus an atomic slot
+    /// probe. No mutex, no read-modify-write, no LRU side effects —
+    /// recency lives with the sharded write path.
+    pub fn get(&self, fp: &DeviceFingerprint, key: &TuneKey) -> Option<CacheEntry> {
+        // Safety: the table pointer always refers to a live allocation —
+        // superseded tables are retired, never freed, until the map
+        // drops, and the map cannot drop while `&self` exists.
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut i = hash_of(fp, key) as usize & table.mask;
+        loop {
+            let p = table.slots[i].load(Ordering::Acquire);
+            if p.is_null() {
+                // Slots never revert to null, so the probe chain is
+                // stable: first null terminates the search.
+                return None;
+            }
+            // Safety: a non-null slot was `Release`-published after the
+            // entry was fully constructed, and entries are freed only
+            // when the map drops.
+            let e = unsafe { &*p };
+            if e.fp == *fp && e.key == *key {
+                return e.entry.clone();
+            }
+            i = (i + 1) & table.mask;
+        }
+    }
+
+    /// Publish (or re-publish) a finished winner. Write path: takes the
+    /// writer mutex, which is fine — publishes happen once per finished
+    /// exploration, not per call.
+    pub fn publish(&self, fp: &DeviceFingerprint, key: &TuneKey, entry: CacheEntry) {
+        self.put(fp, key, Some(entry));
+    }
+
+    /// Tombstone a winner (stale-artifact invalidation). A no-op if the
+    /// key was never published.
+    pub fn retract(&self, fp: &DeviceFingerprint, key: &TuneKey) {
+        self.put(fp, key, None);
+    }
+
+    fn put(&self, fp: &DeviceFingerprint, key: &TuneKey, entry: Option<CacheEntry>) {
+        let mut w = self.writer.lock().expect("steady writer lock");
+        // Keep load factor <= 1/2 so reader probes always terminate at a
+        // null slot.
+        {
+            let table = unsafe { &*self.table.load(Ordering::Acquire) };
+            if entry.is_some() && (w.len + 1) * 2 > table.slots.len() {
+                self.grow_locked(&mut w);
+            }
+        }
+        // Safety (all derefs below): stable under the writer mutex; only
+        // `grow_locked` (also under this mutex) swaps the table pointer.
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut i = hash_of(fp, key) as usize & table.mask;
+        loop {
+            let p = table.slots[i].load(Ordering::Acquire);
+            if p.is_null() {
+                if entry.is_none() {
+                    return; // nothing to retract
+                }
+                let np = Box::into_raw(Box::new(SteadyEntry {
+                    fp: fp.clone(),
+                    key: key.clone(),
+                    entry,
+                }));
+                table.slots[i].store(np, Ordering::Release);
+                w.len += 1;
+                break;
+            }
+            let e = unsafe { &*p };
+            if e.fp == *fp && e.key == *key {
+                // Swap in a fresh allocation; the replaced entry may
+                // still be referenced by a concurrent reader, so retire
+                // it instead of freeing.
+                let np = Box::into_raw(Box::new(SteadyEntry {
+                    fp: fp.clone(),
+                    key: key.clone(),
+                    entry,
+                }));
+                table.slots[i].store(np, Ordering::Release);
+                w.retired_entries.push(p);
+                break;
+            }
+            i = (i + 1) & table.mask;
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Double the table (caller holds the writer mutex). The new table
+    /// shares the old one's entry pointers; the old table is retired so
+    /// in-flight readers finish their probe on a still-live allocation.
+    fn grow_locked(&self, w: &mut WriterState) {
+        let old_ptr = self.table.load(Ordering::Acquire);
+        let old = unsafe { &*old_ptr };
+        let new = Table::with_slots(old.slots.len() * 2);
+        for slot in old.slots.iter() {
+            let p = slot.load(Ordering::Acquire);
+            if p.is_null() {
+                continue;
+            }
+            let e = unsafe { &*p };
+            let mut i = hash_of(&e.fp, &e.key) as usize & new.mask;
+            while !new.slots[i].load(Ordering::Relaxed).is_null() {
+                i = (i + 1) & new.mask;
+            }
+            new.slots[i].store(p, Ordering::Relaxed);
+        }
+        let new_ptr = Box::into_raw(Box::new(new));
+        // Release: readers that Acquire-load the new table see every
+        // slot initialised.
+        self.table.store(new_ptr, Ordering::Release);
+        w.retired_tables.push(old_ptr);
+    }
+
+    /// Distinct keys currently published (tombstones excluded). Takes
+    /// the writer mutex — diagnostics only, not a hot path.
+    pub fn len(&self) -> usize {
+        let _w = self.writer.lock().expect("steady writer lock");
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        table
+            .slots
+            .iter()
+            .filter(|s| {
+                let p = s.load(Ordering::Acquire);
+                !p.is_null() && unsafe { &*p }.entry.is_some()
+            })
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total publish operations (including re-publishes and
+    /// retractions). Lock-free.
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for SteadyReadMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SteadyReadMap")
+            .field("len", &self.len())
+            .field("published", &self.published())
+            .finish()
+    }
+}
+
+impl Drop for SteadyReadMap {
+    fn drop(&mut self) {
+        let w = match self.writer.get_mut() {
+            Ok(w) => w,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // Each distinct live entry appears in the live table exactly
+        // once; replaced entries live in `retired_entries`; retired
+        // tables alias live entries, so dropping them frees only their
+        // slot arrays (AtomicPtr has no Drop).
+        unsafe {
+            let table = Box::from_raw(*self.table.get_mut());
+            for slot in table.slots.iter() {
+                let p = slot.load(Ordering::Relaxed);
+                if !p.is_null() {
+                    drop(Box::from_raw(p));
+                }
+            }
+            for &p in &w.retired_entries {
+                drop(Box::from_raw(p));
+            }
+            for &t in &w.retired_tables {
+                drop(Box::from_raw(t));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunespace::{Structural, TuningParams};
+    use std::sync::Arc;
+
+    fn fp(n: &str) -> DeviceFingerprint {
+        DeviceFingerprint::new("sim:test", n)
+    }
+
+    fn key(n: &str, len: u32) -> TuneKey {
+        TuneKey::new(n, len)
+    }
+
+    fn entry(score: f64) -> CacheEntry {
+        CacheEntry::new(
+            TuningParams::phase1_default(Structural::new(true, 2, 2, 4)),
+            score,
+            2.0 * score,
+            42,
+        )
+    }
+
+    #[test]
+    fn publish_get_roundtrip_and_overwrite() {
+        let m = SteadyReadMap::new();
+        assert!(m.get(&fp("d"), &key("k", 64)).is_none());
+        m.publish(&fp("d"), &key("k", 64), entry(1e-4));
+        assert_eq!(m.get(&fp("d"), &key("k", 64)).unwrap().score, 1e-4);
+        // Same key, other device: distinct.
+        assert!(m.get(&fp("other"), &key("k", 64)).is_none());
+        // Re-publish replaces in place.
+        m.publish(&fp("d"), &key("k", 64), entry(5e-5));
+        assert_eq!(m.get(&fp("d"), &key("k", 64)).unwrap().score, 5e-5);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.published(), 2);
+    }
+
+    #[test]
+    fn retract_tombstones_without_breaking_probe_chains() {
+        let m = SteadyReadMap::new();
+        for i in 0..32 {
+            m.publish(&fp("d"), &key(&format!("k{i}"), 64), entry(1e-4));
+        }
+        m.retract(&fp("d"), &key("k7", 64));
+        assert!(m.get(&fp("d"), &key("k7", 64)).is_none());
+        // Every other key must still be reachable (the tombstone keeps
+        // its slot so linear-probe chains stay intact).
+        for i in (0..32).filter(|&i| i != 7) {
+            assert!(m.get(&fp("d"), &key(&format!("k{i}"), 64)).is_some(), "k{i} lost");
+        }
+        assert_eq!(m.len(), 31);
+        // Retracting an unknown key is a no-op.
+        m.retract(&fp("d"), &key("never", 64));
+        assert_eq!(m.len(), 31);
+        // A retracted key can be re-published.
+        m.publish(&fp("d"), &key("k7", 64), entry(2e-4));
+        assert_eq!(m.get(&fp("d"), &key("k7", 64)).unwrap().score, 2e-4);
+    }
+
+    #[test]
+    fn growth_keeps_every_entry_reachable() {
+        let m = SteadyReadMap::new();
+        let n = INITIAL_SLOTS * 8; // force several doublings
+        for i in 0..n {
+            m.publish(&fp("d"), &key(&format!("k{i}"), 64), entry(1e-4 + i as f64 * 1e-9));
+        }
+        assert_eq!(m.len(), n);
+        for i in 0..n {
+            let e = m.get(&fp("d"), &key(&format!("k{i}"), 64)).unwrap_or_else(|| {
+                panic!("k{i} lost across growth");
+            });
+            assert_eq!(e.score, 1e-4 + i as f64 * 1e-9);
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_see_only_complete_entries() {
+        let m = Arc::new(SteadyReadMap::new());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut seen = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        for i in 0..256 {
+                            if let Some(e) = m.get(&fp("d"), &key(&format!("k{i}"), 64)) {
+                                // An entry is immutable once published:
+                                // its ref_score marker must always match
+                                // its score (2x, from entry()).
+                                assert_eq!(e.ref_score, 2.0 * e.score, "torn read in t{t}");
+                                seen += 1;
+                            }
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+        // Writer: publish + re-publish across several growth cycles.
+        for round in 0..8 {
+            for i in 0..256 {
+                m.publish(&fp("d"), &key(&format!("k{i}"), 64), entry(1e-4 + round as f64 * 1e-7));
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers must observe published entries");
+        assert_eq!(m.len(), 256);
+    }
+}

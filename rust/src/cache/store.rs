@@ -419,6 +419,37 @@ impl TuneCache {
         }
     }
 
+    /// Re-validate a donor chosen by an earlier scan whose lock has since
+    /// been dropped (the sharded cache's cross-shard `best_near` /
+    /// `best_transfer` paths): the entry must still be present, not
+    /// TTL-expired, and still pass the caller's `valid` predicate — a
+    /// concurrent eviction or overwrite may have removed or replaced it
+    /// in the unlocked window. On success the entry's LRU recency is
+    /// refreshed and a *fresh* clone is returned, never the scan-time
+    /// copy (which may predate an overwrite). Counter-neutral.
+    pub(crate) fn revalidate(
+        &mut self,
+        fp: &DeviceFingerprint,
+        key: &TuneKey,
+        valid: impl FnOnce(&CacheEntry) -> bool,
+    ) -> Option<CacheEntry> {
+        let now = now_unix();
+        let ok = self
+            .shards
+            .get(fp)
+            .and_then(|s| s.get(key))
+            .map(|slot| !self.is_expired(&slot.entry, now) && valid(&slot.entry))
+            .unwrap_or(false);
+        if !ok {
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self.shards.get_mut(fp).and_then(|s| s.get_mut(key))?;
+        slot.last_used = tick;
+        Some(slot.entry.clone())
+    }
+
     /// Exact lookup with shape-class fallback: an exact usable entry is a
     /// [`CacheHit::Exact`] (counted in `hits`); otherwise a usable
     /// same-no-leftover-class entry for a near trip length is returned as

@@ -73,7 +73,18 @@
 //!   processes ("autotune cache with the binary").
 //!   [`cache::SharedTuneCache`] is the concurrent view: lock shards
 //!   hashed by (device, key) behind one `Clone + Send + Sync` handle,
-//!   persistence-compatible with the plain cache.
+//!   persistence-compatible with the plain cache. Cross-shard scan
+//!   lookups (`lookup_near` / `lookup_transfer`) re-validate their
+//!   winner under its shard lock before returning — a donor
+//!   invalidated, evicted, or replaced during the unlocked window
+//!   between the scan and the return is a miss, never a stale hit
+//!   (`rust/tests/cache_race.rs` pins the window deterministically).
+//!   Layered above the shards, [`cache::SteadyReadMap`] is the
+//!   *steady-state read path*: when a lane finishes exploration its
+//!   winner is published into an epoch-swapped, read-mostly snapshot
+//!   table, and every later lane open for that (device, key) is served
+//!   with **zero mutex acquisitions** — the shards stay the write
+//!   path, the steady map is rebuilt behind an atomic pointer swap.
 //! * [`coordinator::AutoTuner`] warm start — a tuner constructed from a
 //!   cached entry pays one `generate` + one short validation instead of
 //!   the full two-phase exploration; a stale artifact (generate failure)
@@ -111,11 +122,25 @@
 //!   static-vs-steal comparison and a hot-add/retire demo), `--skewed`
 //!   for the adversarially placed 8-lane workload, `--cache-ttl SECS` /
 //!   `--no-near` for cache policy, `--idle-tune` for idle-time
-//!   speculation, and `--transfer` for the heterogeneous two-device
-//!   transfer-prior demo (cold-vs-transfer time-to-best). Per-lane
-//!   overhead accounting is identical in every mode, so the paper's
-//!   envelope numbers stay comparable at any thread count —
-//!   `rust/tests/engine_steal.rs` pins this bit-for-bit.
+//!   speculation, `--transfer` for the heterogeneous two-device
+//!   transfer-prior demo (cold-vs-transfer time-to-best), and
+//!   `--scale` for the wide stress phase (O(10³) lanes, O(10⁴)
+//!   clients) that pins the steady-state re-open to zero shard-locked
+//!   lookups by telemetry counter. Per-lane overhead accounting is
+//!   identical in every mode, so the paper's envelope numbers stay
+//!   comparable at any thread count — `rust/tests/engine_steal.rs`
+//!   pins this bit-for-bit.
+//! * [`service::Admission`] — the async admission/batching front end:
+//!   O(10⁴) logical clients admit per-kernel call bursts, the layer
+//!   coalesces each lane's burst into engine quanta
+//!   ([`service::AdmissionConfig::quantum`]) before
+//!   [`service::EngineController::submit_n`], and when the
+//!   [`coordinator::RegenGovernor`] reports an exhausted aggregate
+//!   budget *and* the [`obs::Recorder`] latency histogram confirms
+//!   saturation, quantum flushes defer (bounded by
+//!   [`service::AdmissionConfig::max_defer`]) — deferral only delays,
+//!   never drops, so admission is bitwise invisible to tuning
+//!   outcomes (`rust/tests/scale_admission.rs` pins parity).
 //! * [`obs`] — the telemetry layer: a lock-free per-worker
 //!   [`obs::MetricsRegistry`] (sharded counters + log₂ latency
 //!   histograms with p50/p99/p999 readout) and a bounded per-worker

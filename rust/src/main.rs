@@ -36,7 +36,18 @@
 //!                                   transfer time-to-best comparison;
 //!                                   --trace enables telemetry and writes
 //!                                   a Chrome trace-event timeline to
-//!                                   results/trace.json
+//!                                   results/trace.json;
+//!                                   --scale [--scale-lanes N]
+//!                                   [--scale-clients M] replaces the demo
+//!                                   with the admission/steady-state
+//!                                   stress phase: M logical clients over
+//!                                   N lanes (default 1024), coalesced by
+//!                                   the admission layer, explored to
+//!                                   completion and then re-opened on a
+//!                                   fresh engine whose lane opens must be
+//!                                   served entirely by the lock-free
+//!                                   steady read path (asserted on the
+//!                                   telemetry counters)
 //!   stats [--core C] [--calls N] [--seed S] [--out PATH]
 //!                                   run a short telemetry-enabled service
 //!                                   workload and dump the metrics
@@ -62,11 +73,12 @@ use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneCache, TuneKey};
 use degoal_rt::codegen::Manifest;
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::experiments;
-use degoal_rt::obs::{Recorder, RegistrySnapshot, OBS_FORMAT_VERSION};
+use degoal_rt::obs::{Counter, Recorder, RegistrySnapshot, OBS_FORMAT_VERSION};
 #[cfg(feature = "pjrt")]
 use degoal_rt::runtime::Runtime;
 use degoal_rt::service::{
-    EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService,
+    Admission, AdmissionConfig, EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine,
+    TuningService,
 };
 use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, SharedSimMemo, ALL_SIM_CORES};
 use degoal_rt::util::cli::Args;
@@ -74,7 +86,8 @@ use degoal_rt::util::json::Json;
 use degoal_rt::util::table::{fnum, Table};
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
 use degoal_rt::workloads::{
-    hetero_service_workload, mixed_service_workload, skewed_service_workload,
+    hetero_service_workload, mixed_service_workload, scale_service_workload,
+    skewed_service_workload,
 };
 
 fn main() {
@@ -125,7 +138,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let ve = !args.flag("sisd");
             let cfg = StreamclusterConfig::input_set(input);
             let kind = KernelKind::Distance { dim: cfg.dim, batch: cfg.batch };
-            let mut b = SimBackend::new(core, kind, args.get_u64("seed", 42));
+            let mut b = SimBackend::new(core, kind, args.get_u64("seed", 42)?);
             let mut tuner = AutoTuner::new(TunerConfig::default(), cfg.dim, Some(ve));
             let r = StreamclusterApp::new(cfg).run(&mut b, RunMode::Tuned(&mut tuner))?;
             println!(
@@ -145,20 +158,38 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "service" => {
             let core = core_by_name(args.get_or("core", "DI-I1"))
                 .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
-            let calls = args.get_usize("calls", 120_000);
-            let seed = args.get_u64("seed", 42);
-            let threads = args.get_usize_min("threads", 1, 1);
+            let calls = args.get_usize("calls", 120_000)?;
+            let seed = args.get_u64("seed", 42)?;
+            let threads = args.get_usize_min("threads", 1, 1)?;
             let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
             let steal = args.flag("steal");
             let skewed = args.flag("skewed");
             let knobs = ServiceKnobs {
-                ttl: args.get_opt_u64("cache-ttl"),
+                ttl: args.get_opt_u64("cache-ttl")?,
                 near_hints: !args.flag("no-near"),
                 idle_tune: args.flag("idle-tune"),
                 trace: args.flag("trace"),
-                batch: args.get_usize_min("batch", 1, 1),
+                batch: args.get_usize_min("batch", 1, 1)?,
                 workload: if skewed { skewed_service_workload } else { mixed_service_workload },
             };
+
+            if args.flag("scale") {
+                // The stress phase replaces the demo: --calls becomes the
+                // per-lane exploration budget (its own, smaller default).
+                let lanes_n = args.get_usize_min("scale-lanes", 1024, 1)?;
+                let clients = args.get_usize_min("scale-clients", 10 * lanes_n, 1)?;
+                let per_lane = args.get_usize_min("calls", 40_000, 1)?;
+                return run_scale_demo(
+                    core,
+                    lanes_n,
+                    clients,
+                    per_lane,
+                    seed,
+                    threads,
+                    steal,
+                    &knobs,
+                );
+            }
 
             println!(
                 "== multi-kernel tuning service on {} ({}, {} lanes{}{}) ==",
@@ -286,7 +317,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         #[cfg(feature = "pjrt")]
         "host-tune" => {
-            let dim = args.get_u32("dim", 32);
+            let dim = args.get_u32("dim", 32)?;
             let rt = Runtime::cpu()?;
             let man = Manifest::load(degoal_rt::paths::artifacts_dir())?;
             let spec = man
@@ -299,7 +330,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 dim,
                 Some(true),
             );
-            let calls = args.get_u64("calls", 3000);
+            let calls = args.get_u64("calls", 3000)?;
             for _ in 0..calls {
                 tuner.app_call(&mut backend)?;
             }
@@ -319,8 +350,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "stats" => {
             let core = core_by_name(args.get_or("core", "DI-I1"))
                 .ok_or_else(|| anyhow::anyhow!("unknown core"))?;
-            let calls = args.get_usize("calls", 24_000);
-            let seed = args.get_u64("seed", 42);
+            let calls = args.get_usize("calls", 24_000)?;
+            let seed = args.get_u64("seed", 42)?;
             let out =
                 args.get_path_or("out", || degoal_rt::paths::results_dir().join("stats.json"));
 
@@ -369,7 +400,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "bench" => {
-            let reps = if args.flag("quick") { 1 } else { args.get_u32("reps", 5) };
+            let reps = if args.flag("quick") { 1 } else { args.get_u32("reps", 5)? };
             let with_exact = args.flag("exact");
             let out = args.get_path_or("out", || degoal_rt::paths::results_dir().join("bench.json"));
             let report = degoal_rt::bench::run_grid(reps, with_exact);
@@ -483,6 +514,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20 service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]\n\
                  \x20         [--steal] [--skewed] [--cache-ttl SECS] [--no-near]\n\
                  \x20         [--idle-tune] [--batch K] [--transfer] [--donor-core C] [--trace]\n\
+                 \x20         [--scale] [--scale-lanes N] [--scale-clients M]\n\
                  \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
                  \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
                  \x20     enables work-stealing placement (static-vs-steal comparison +\n\
@@ -497,7 +529,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     two-device demo (donor --donor-core, default DI-I2): cross-device\n\
                  \x20     transfer priors with a cold-vs-transfer time-to-best comparison;\n\
                  \x20     --trace enables telemetry (latency percentiles per phase) and\n\
-                 \x20     writes a Chrome trace-event timeline to results/trace.json\n\
+                 \x20     writes a Chrome trace-event timeline to results/trace.json;\n\
+                 \x20     --scale replaces the demo with the admission/steady-state stress\n\
+                 \x20     phase: --scale-clients M (default 10x lanes) logical clients over\n\
+                 \x20     --scale-lanes N (default 1024) lanes, bursts coalesced into engine\n\
+                 \x20     quanta by the admission layer, explored to completion (--calls is\n\
+                 \x20     the per-lane budget, default 40000), then re-opened on a fresh\n\
+                 \x20     engine over the same cache — every lane open must be served by the\n\
+                 \x20     lock-free steady read path (zero shard-locked lookups, asserted on\n\
+                 \x20     the epoch-scoped telemetry counters)\n\
                  \x20 stats [--core C] [--calls N] [--seed S] [--out PATH]\n\
                  \x20     run a short telemetry-enabled service workload and dump the\n\
                  \x20     metrics registry (counters, log2 latency histograms, p50/p99/p999)\n\
@@ -759,6 +799,141 @@ fn run_hot_add_demo(
     for line in lane_lines(&reports[lanes.len()..]) {
         println!("{line}");
     }
+    Ok(())
+}
+
+/// The `--scale` stress phase: O(10⁴) logical clients over O(10³) lanes,
+/// their interleaved call bursts coalesced by the [`Admission`] layer,
+/// through two engine generations over one shared cache and one shared
+/// telemetry [`Recorder`].
+///
+/// Phase S1 explores every lane to completion (each finished winner is
+/// published to the lock-free steady read path). Phase S2 re-registers
+/// the same kernel set on a fresh engine: every lane open must be served
+/// by the steady path — asserted on the *epoch-scoped* telemetry delta
+/// (zero shard-locked lookups, ≥ one steady hit per lane). Per-phase
+/// latency percentiles come from the same snapshot deltas, so the two
+/// phases never fold into each other despite sharing one recorder.
+#[allow(clippy::too_many_arguments)]
+fn run_scale_demo(
+    core: &'static CoreConfig,
+    lanes_n: usize,
+    clients: usize,
+    per_lane_calls: usize,
+    seed: u64,
+    threads: usize,
+    steal: bool,
+    knobs: &ServiceKnobs,
+) -> Result<()> {
+    // Calls per client admit — the burst size admission coalesces.
+    const CLIENT_CHUNK: u32 = 8;
+    println!(
+        "== scale stress on {}: {} lanes, {} logical clients, --threads {}{} ==",
+        core.name,
+        lanes_n,
+        clients,
+        threads,
+        if steal { ", work-stealing" } else { "" },
+    );
+    // Fast tuner wakes: the phase stresses scheduler and cache paths, so
+    // lanes should finish exploration in as few calls as possible.
+    let cfg = ServiceConfig {
+        tuner: TunerConfig { wake_period: 1e-4, batch: knobs.batch, ..Default::default() },
+        near_hints: knobs.near_hints,
+        ..Default::default()
+    };
+    let cache = SharedTuneCache::new();
+    cache.set_ttl(knobs.ttl);
+    let rec = Recorder::enabled_for(threads);
+    let s0 = rec.snapshot().expect("telemetry is always enabled in the scale phase");
+
+    // Phase S1: explore. Clients interleave round-robin over the lanes;
+    // the admission layer turns their bursts into engine quanta.
+    let opts = EngineOptions { threads, steal, idle_tune: knobs.idle_tune, ..Default::default() };
+    let mut eng: TuningEngine<SimBackend> =
+        TuningEngine::with_recorder(cfg, cache.clone(), opts, rec.clone());
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in scale_service_workload(core, seed, lanes_n) {
+        lanes.push(eng.register(key, Some(true), b)?);
+    }
+    let mut adm = Admission::new(eng.controller(), AdmissionConfig::default());
+    let per_round = (clients / lanes_n.max(1)).max(1).saturating_mul(CLIENT_CHUNK as usize).max(1);
+    let max_rounds = (per_lane_calls / per_round).max(1);
+    let started = std::time::Instant::now();
+    let mut rounds = 0usize;
+    let finished = loop {
+        for c in 0..clients {
+            adm.admit(lanes[c % lanes_n], CLIENT_CHUNK)?;
+        }
+        adm.flush()?;
+        rounds += 1;
+        let reports = eng.drain_reports()?;
+        let finished = reports.iter().filter(|r| r.done).count();
+        if finished == lanes_n || rounds >= max_rounds {
+            break finished;
+        }
+    };
+    let secs = started.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        finished == lanes_n,
+        "scale explore phase: only {finished}/{lanes_n} lanes finished exploration within \
+         {rounds} rounds (--calls {per_lane_calls} per lane; raise it)"
+    );
+    let astats = adm.stats();
+    let (mut stats1, _) = eng.finish()?;
+    let s1 = rec.snapshot().expect("telemetry is enabled");
+    let d1 = s1.delta(&s0);
+    stats1.set_percentiles(&d1);
+    print_service_phase(
+        &format!("S1 explore ({rounds} rounds, admission-batched)"),
+        &stats1,
+        &[],
+        secs,
+    );
+    println!(
+        "    admission: {astats}; steady publishes {}",
+        d1.get(Counter::SteadyPublishes),
+    );
+
+    // Phase S2: a fresh engine generation re-opens the same kernel set
+    // over the same cache — the steady-state restart. Every lane open
+    // must be served by the lock-free steady read path.
+    let mut eng2: TuningEngine<SimBackend> =
+        TuningEngine::with_recorder(cfg, cache.clone(), opts, rec.clone());
+    let mut lanes2: Vec<LaneId> = Vec::new();
+    for (key, b) in scale_service_workload(core, seed, lanes_n) {
+        lanes2.push(eng2.register(key, Some(true), b)?);
+    }
+    let mut adm2 = Admission::new(eng2.controller(), AdmissionConfig::default());
+    let started2 = std::time::Instant::now();
+    for c in 0..clients {
+        adm2.admit(lanes2[c % lanes_n], CLIENT_CHUNK)?;
+    }
+    adm2.flush()?;
+    let (mut stats2, reports2) = eng2.finish()?;
+    let secs2 = started2.elapsed().as_secs_f64();
+    let s2 = rec.snapshot().expect("telemetry is enabled");
+    let d2 = s2.delta(&s1);
+    stats2.set_percentiles(&d2);
+    print_service_phase("S2 steady re-open (same cache, fresh engine)", &stats2, &[], secs2);
+
+    let steady_hits = d2.get(Counter::SteadyHits);
+    let shard_lookups = d2.get(Counter::ShardLookups);
+    anyhow::ensure!(
+        shard_lookups == 0,
+        "steady re-open took {shard_lookups} shard-locked lookups (want 0: every lane \
+         open must be served lock-free)"
+    );
+    anyhow::ensure!(
+        steady_hits >= lanes_n as u64,
+        "steady re-open served only {steady_hits} steady hits for {lanes_n} lanes"
+    );
+    let warm = reports2.iter().filter(|r| r.warm.is_some()).count();
+    println!(
+        "\n  steady read path: {steady_hits} steady hits, 0 shard-locked lookups across \
+         {lanes_n} lane opens ({warm} warm); admission: {}",
+        adm2.stats(),
+    );
     Ok(())
 }
 

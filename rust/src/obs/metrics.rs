@@ -65,10 +65,27 @@ pub enum Counter {
     LanesOpened,
     /// Journal events dropped (ring overflow or contended ring).
     JournalDropped,
+    /// Lane-open lookups served by the lock-free steady-state read path
+    /// (zero mutex acquisitions).
+    SteadyHits,
+    /// Finished winners published into the steady-state read path.
+    SteadyPublishes,
+    /// Lane-open lookups that fell through to the shard-locked cache
+    /// paths. The scale phase asserts this stays at zero during a
+    /// steady-state re-open — the "zero shard-lock acquisitions" pin.
+    ShardLookups,
+    /// Coalesced batches the admission layer flushed into `submit_n`.
+    AdmissionBatches,
+    /// Client calls the admission layer coalesced into an already-open
+    /// batch (rather than starting a new one).
+    AdmissionCoalesced,
+    /// Flush attempts the admission layer deferred under backpressure
+    /// (governor saturated and observed tail latency over the ceiling).
+    AdmissionDeferrals,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 17] = [
+    pub const ALL: [Counter; 23] = [
         Counter::AppCalls,
         Counter::GenerateCalls,
         Counter::Swaps,
@@ -86,6 +103,12 @@ impl Counter {
         Counter::InnerFolds,
         Counter::LanesOpened,
         Counter::JournalDropped,
+        Counter::SteadyHits,
+        Counter::SteadyPublishes,
+        Counter::ShardLookups,
+        Counter::AdmissionBatches,
+        Counter::AdmissionCoalesced,
+        Counter::AdmissionDeferrals,
     ];
 
     /// Stable snake_case name — the JSON key, never rename.
@@ -108,6 +131,12 @@ impl Counter {
             Counter::InnerFolds => "inner_folds",
             Counter::LanesOpened => "lanes_opened",
             Counter::JournalDropped => "journal_dropped",
+            Counter::SteadyHits => "steady_hits",
+            Counter::SteadyPublishes => "steady_publishes",
+            Counter::ShardLookups => "shard_lookups",
+            Counter::AdmissionBatches => "admission_batches",
+            Counter::AdmissionCoalesced => "admission_coalesced",
+            Counter::AdmissionDeferrals => "admission_deferrals",
         }
     }
 
@@ -265,6 +294,33 @@ impl RegistrySnapshot {
         (self.call_quantile(0.50), self.call_quantile(0.99), self.call_quantile(0.999))
     }
 
+    /// Epoch-scoping: the difference between this snapshot and an
+    /// `earlier` one of the same registry, as a snapshot of its own.
+    /// This is how a multi-phase run sharing one long-lived `Recorder`
+    /// reports *per-phase* counters and percentiles — diff snapshots
+    /// taken at the phase boundaries instead of folding every earlier
+    /// phase's latencies into every later phase's p50/p99/p999 line.
+    /// Counters and buckets are monotonic, so subtraction is exact;
+    /// saturating guards against a mismatched baseline.
+    pub fn delta(&self, earlier: &RegistrySnapshot) -> RegistrySnapshot {
+        let mut out = RegistrySnapshot::default();
+        for (o, (a, b)) in out.counters.iter_mut().zip(self.counters.iter().zip(&earlier.counters))
+        {
+            *o = a.saturating_sub(*b);
+        }
+        for (o, (a, b)) in
+            out.call_hist.iter_mut().zip(self.call_hist.iter().zip(&earlier.call_hist))
+        {
+            *o = a.saturating_sub(*b);
+        }
+        for (o, (a, b)) in
+            out.quantum_hist.iter_mut().zip(self.quantum_hist.iter().zip(&earlier.quantum_hist))
+        {
+            *o = a.saturating_sub(*b);
+        }
+        out
+    }
+
     /// Versioned, serde-free JSON — sparse histograms (only non-empty
     /// buckets), counters keyed by stable name, `BTreeMap`-ordered for
     /// deterministic output.
@@ -390,6 +446,33 @@ mod tests {
     fn empty_histogram_quantile_is_zero() {
         let snap = MetricsRegistry::new(1).snapshot();
         assert_eq!(snap.call_quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn delta_scopes_percentiles_to_one_phase() {
+        let reg = MetricsRegistry::new(1);
+        // Phase 1: slow millisecond calls.
+        for _ in 0..100 {
+            reg.observe_call(0, 1e-3);
+        }
+        let boundary = reg.snapshot();
+        // Phase 2: fast microsecond calls.
+        for _ in 0..100 {
+            reg.observe_call(0, 1e-6);
+        }
+        reg.add(0, Counter::Steals, 3);
+        let folded = reg.snapshot();
+        // Folded, phase 1's milliseconds pollute phase 2's p99.
+        assert!(folded.call_quantile(0.99) >= 1e-3);
+        // Epoch-scoped, phase 2 reports only its own latencies.
+        let phase2 = folded.delta(&boundary);
+        assert_eq!(phase2.get(Counter::AppCalls), 100);
+        assert_eq!(phase2.get(Counter::Steals), 3);
+        let (p50, p99, _) = phase2.call_percentiles();
+        assert!(p50 >= 1e-6 && p99 < 1e-4, "phase-2 p50 {p50} p99 {p99}");
+        // Saturation: a mismatched baseline never underflows.
+        let weird = boundary.delta(&folded);
+        assert_eq!(weird.get(Counter::AppCalls), 0);
     }
 
     #[test]

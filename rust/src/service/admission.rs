@@ -1,0 +1,340 @@
+//! Admission/batching front end — O(10⁴) logical clients over O(10³)
+//! lanes, coalesced into engine-sized quanta.
+//!
+//! The engine's [`EngineController::submit_n`] is cheap but not free:
+//! every submission takes the scheduler lock once. A serving tier that
+//! forwards each client call individually pays that lock O(10⁴) times
+//! per quantum of real work and floods the scheduler queue with
+//! single-call wakeups. [`Admission`] sits in front of the controller
+//! and turns the client-visible call stream into the engine-visible
+//! submission stream:
+//!
+//! * **Coalescing** — calls for the same lane accumulate in a per-lane
+//!   pending counter; a lane reaches the engine as *one* `submit_n`
+//!   batch when its pending count crosses [`AdmissionConfig::quantum`]
+//!   (or at the next [`Admission::flush`]). A burst of 10⁴ interleaved
+//!   client calls over 10³ lanes becomes ~10³ submissions.
+//! * **Backpressure** — when the shared [`RegenGovernor`] reports its
+//!   aggregate budget [`DenyReason::Exhausted`] *and* the engine's
+//!   observed p99 call latency (read from the PR-6 [`Recorder`]
+//!   histogram snapshot, never from ad-hoc counters) exceeds
+//!   [`AdmissionConfig::p99_ceiling_s`], quantum-triggered flushes are
+//!   *deferred*: the batch keeps growing instead of reaching the
+//!   saturated engine. Deferral never drops a call — after
+//!   [`AdmissionConfig::max_defer`] consecutive deferrals (or the next
+//!   explicit `flush`) the batch goes through regardless, so every
+//!   admitted call reaches the engine exactly once.
+//!
+//! Because deferral only *delays* submissions and per-lane calls stay
+//! in admission order, the per-lane call totals the engine executes are
+//! identical to driving [`EngineController::submit_n`] directly — the
+//! admission layer is bitwise-invisible to tuning outcomes (winners,
+//! scores, `kernel_calls`). The scale/parity integration tests pin
+//! this.
+//!
+//! Telemetry: [`Counter::AdmissionBatches`] (submissions issued),
+//! [`Counter::AdmissionCoalesced`] (calls that joined an already-open
+//! batch), [`Counter::AdmissionDeferrals`] (quantum flushes deferred
+//! under backpressure).
+
+use std::fmt;
+
+use anyhow::Result;
+
+use super::engine::EngineController;
+use super::LaneId;
+use crate::backend::Backend;
+use crate::coordinator::DenyReason;
+use crate::obs::{Counter, Recorder};
+
+/// Admission policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Per-lane pending-call threshold that triggers a flush to the
+    /// engine. Bursts below this size ride along with the next quantum
+    /// or the next explicit [`Admission::flush`].
+    pub quantum: u32,
+    /// Observed p99 call latency (seconds) above which an exhausted
+    /// governor budget is treated as engine saturation. `0.0` means any
+    /// recorded latency confirms saturation; with telemetry disabled no
+    /// histogram exists and backpressure never engages.
+    pub p99_ceiling_s: f64,
+    /// Consecutive quantum-triggered flushes that may be deferred under
+    /// backpressure before one is forced through — bounds how far a
+    /// batch can grow past `quantum`, so saturation delays work but
+    /// never starves it.
+    pub max_defer: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { quantum: 256, p99_ceiling_s: 0.0, max_defer: 4 }
+    }
+}
+
+/// Client-visible admission counters (monotonic over the admission
+/// handle's life; engine-side truth stays in the obs registry).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionStats {
+    /// Calls accepted from clients.
+    pub admitted: u64,
+    /// Calls that joined a lane's already-open batch instead of opening
+    /// a new one (the lock acquisitions saved, in calls).
+    pub coalesced: u64,
+    /// `submit_n` batches issued to the engine.
+    pub batches: u64,
+    /// Quantum-triggered flushes deferred under backpressure.
+    pub deferrals: u64,
+    /// High-water mark of calls buffered across all lanes.
+    pub max_buffered: u64,
+}
+
+impl fmt::Display for AdmissionStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "admitted {} | coalesced {} | batches {} | deferred {} | max buffered {}",
+            self.admitted, self.coalesced, self.batches, self.deferrals, self.max_buffered
+        )
+    }
+}
+
+/// The admission front end over a running engine. Single-threaded by
+/// design: one admission handle models one ingress thread multiplexing
+/// its clients (shard clients across several handles for more — each
+/// handle clones the [`EngineController`], which is `Send + Sync`).
+pub struct Admission<B: Backend + 'static> {
+    ctrl: EngineController<B>,
+    cfg: AdmissionConfig,
+    rec: Recorder,
+    /// Pending call count per lane, indexed by `LaneId.0`.
+    pending: Vec<u32>,
+    /// Whether the lane is already listed in `dirty`.
+    queued: Vec<bool>,
+    /// Lanes with an open batch, in first-touch order — [`Admission::flush`]
+    /// drains them in this (deterministic) order.
+    dirty: Vec<LaneId>,
+    buffered: u64,
+    defer_streak: u32,
+    stats: AdmissionStats,
+}
+
+impl<B: Backend + 'static> Admission<B> {
+    pub fn new(ctrl: EngineController<B>, cfg: AdmissionConfig) -> Admission<B> {
+        let rec = ctrl.recorder().clone();
+        Admission {
+            ctrl,
+            cfg,
+            rec,
+            pending: Vec::new(),
+            queued: Vec::new(),
+            dirty: Vec::new(),
+            buffered: 0,
+            defer_streak: 0,
+            stats: AdmissionStats::default(),
+        }
+    }
+
+    /// The underlying engine controller (for registration/retirement —
+    /// retire a lane only after flushing it).
+    pub fn controller(&self) -> &EngineController<B> {
+        &self.ctrl
+    }
+
+    /// Accept `calls` calls for `lane`. Buffers them into the lane's
+    /// open batch; flushes the batch to the engine once it reaches the
+    /// quantum, unless backpressure defers it.
+    pub fn admit(&mut self, lane: LaneId, calls: u32) -> Result<()> {
+        if calls == 0 {
+            return Ok(());
+        }
+        let i = lane.0;
+        if i >= self.pending.len() {
+            self.pending.resize(i + 1, 0);
+            self.queued.resize(i + 1, false);
+        }
+        if self.pending[i] > 0 {
+            self.stats.coalesced += u64::from(calls);
+            self.rec.count(Counter::AdmissionCoalesced, u64::from(calls));
+        }
+        if !self.queued[i] {
+            self.queued[i] = true;
+            self.dirty.push(lane);
+        }
+        self.pending[i] += calls;
+        self.buffered += u64::from(calls);
+        self.stats.admitted += u64::from(calls);
+        self.stats.max_buffered = self.stats.max_buffered.max(self.buffered);
+        if self.pending[i] >= self.cfg.quantum {
+            if self.backpressured() && self.defer_streak < self.cfg.max_defer {
+                self.defer_streak += 1;
+                self.stats.deferrals += 1;
+                self.rec.count(Counter::AdmissionDeferrals, 1);
+            } else {
+                self.flush_lane(lane)?;
+                self.defer_streak = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush every open batch to the engine in first-touch order,
+    /// ignoring backpressure (the barrier before a drain or retirement —
+    /// deferral delays work, it never withholds it).
+    pub fn flush(&mut self) -> Result<()> {
+        let dirty = std::mem::take(&mut self.dirty);
+        for lane in dirty {
+            self.queued[lane.0] = false;
+            self.flush_lane(lane)?;
+        }
+        self.defer_streak = 0;
+        Ok(())
+    }
+
+    /// Calls currently buffered (admitted but not yet submitted).
+    pub fn buffered(&self) -> u64 {
+        self.buffered
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats
+    }
+
+    /// Is the engine saturated right now? True only when the shared
+    /// governor's aggregate budget is [`DenyReason::Exhausted`] *and*
+    /// the telemetry histograms confirm the tail: observed p99 call
+    /// latency above [`AdmissionConfig::p99_ceiling_s`]. A cold-start
+    /// [`DenyReason::ZeroBudget`] is not saturation (nothing has run
+    /// yet), and with telemetry disabled there is no histogram evidence,
+    /// so backpressure never engages on suspicion alone.
+    pub fn backpressured(&self) -> bool {
+        if self.ctrl.governor().deny_reason() != Some(DenyReason::Exhausted) {
+            return false;
+        }
+        match self.rec.snapshot() {
+            Some(snap) => snap.call_quantile(0.99) > self.cfg.p99_ceiling_s,
+            None => false,
+        }
+    }
+
+    /// Submit `lane`'s open batch as one `submit_n`. Pending is cleared
+    /// only after the engine accepts, so a rejected submission (e.g. a
+    /// lane retired out from under us) surfaces as an error without
+    /// silently dropping the buffered calls.
+    fn flush_lane(&mut self, lane: LaneId) -> Result<()> {
+        let n = self.pending[lane.0];
+        if n == 0 {
+            return Ok(());
+        }
+        self.ctrl.submit_n(lane, n)?;
+        self.pending[lane.0] = 0;
+        self.buffered -= u64::from(n);
+        self.stats.batches += 1;
+        self.rec.count(Counter::AdmissionBatches, 1);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+    use crate::cache::TuneKey;
+    use crate::coordinator::{RegenDecision, TunerConfig};
+    use crate::service::{EngineOptions, ServiceConfig, TuningEngine};
+
+    fn fast_cfg() -> ServiceConfig {
+        ServiceConfig {
+            tuner: TunerConfig { wake_period: 1e-4, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    fn engine_with_telemetry(cfg: ServiceConfig) -> TuningEngine<MockBackend> {
+        TuningEngine::with_recorder(
+            cfg,
+            crate::cache::SharedTuneCache::new(),
+            EngineOptions { threads: 1, ..Default::default() },
+            Recorder::enabled_for(1),
+        )
+    }
+
+    #[test]
+    fn quantum_coalesces_interleaved_singles_into_batches() {
+        let mut engine: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 1);
+        let a = engine.register(TuneKey::new("mock/a", 64), None, MockBackend::new(64, 1)).unwrap();
+        let b = engine.register(TuneKey::new("mock/b", 96), None, MockBackend::new(96, 2)).unwrap();
+        let mut adm = Admission::new(
+            engine.controller(),
+            AdmissionConfig { quantum: 64, ..Default::default() },
+        );
+        // 256 interleaved single-call admits per lane.
+        for _ in 0..256 {
+            adm.admit(a, 1).unwrap();
+            adm.admit(b, 1).unwrap();
+        }
+        adm.flush().unwrap();
+        let s = adm.stats();
+        assert_eq!(s.admitted, 512);
+        // Each lane: 4 quantum flushes of 64; each flush's first call
+        // opens the batch, the other 63 coalesce.
+        assert_eq!(s.batches, 8);
+        assert_eq!(s.coalesced, 512 - 8);
+        assert_eq!(s.deferrals, 0);
+        assert_eq!(adm.buffered(), 0);
+        let (_, reports) = engine.finish().unwrap();
+        let total: u64 = reports.iter().map(|r| r.kernel_calls).sum();
+        assert_eq!(total, 512, "every admitted call reached the engine");
+    }
+
+    #[test]
+    fn flush_drains_sub_quantum_remainders() {
+        let mut engine: TuningEngine<MockBackend> = TuningEngine::new(fast_cfg(), 1);
+        let a = engine.register(TuneKey::new("mock/a", 64), None, MockBackend::new(64, 3)).unwrap();
+        let mut adm = Admission::new(
+            engine.controller(),
+            AdmissionConfig { quantum: 100, ..Default::default() },
+        );
+        adm.admit(a, 30).unwrap();
+        adm.admit(a, 30).unwrap();
+        assert_eq!(adm.buffered(), 60, "below quantum: nothing submitted yet");
+        adm.flush().unwrap();
+        assert_eq!(adm.buffered(), 0);
+        assert_eq!(adm.stats().batches, 1, "remainder went as one batch");
+        let (_, reports) = engine.finish().unwrap();
+        assert_eq!(reports[0].kernel_calls, 60);
+    }
+
+    #[test]
+    fn backpressure_defers_then_forces_without_dropping() {
+        // Tiny aggregate budget so the governor exhausts deterministically.
+        let mut cfg = fast_cfg();
+        cfg.global = RegenDecision { max_overhead_frac: 0.01, invest_frac: 0.0 };
+        let mut engine = engine_with_telemetry(cfg);
+        let a = engine.register(TuneKey::new("mock/a", 64), None, MockBackend::new(64, 4)).unwrap();
+        let mut adm = Admission::new(
+            engine.controller(),
+            AdmissionConfig { quantum: 10, p99_ceiling_s: 0.0, max_defer: 3 },
+        );
+        // Not saturated at cold start (ZeroBudget, and no latencies yet).
+        assert!(!adm.backpressured());
+        // Force exhaustion and give the histogram one observed call.
+        adm.controller().governor().record(1.0, 10.0, 0.0);
+        adm.controller().recorder().call(1e-3);
+        assert!(adm.backpressured());
+        // Every admit past the quantum re-checks: crossings 1–3 defer,
+        // the 4th forces the (quantum + 3)-call batch through. 40 singles
+        // = 3 such cycles of 13 calls, 1 call left buffered.
+        for _ in 0..40 {
+            adm.admit(a, 1).unwrap();
+        }
+        let s = adm.stats();
+        assert_eq!(s.deferrals, 9);
+        assert_eq!(s.batches, 3, "forced flush after max_defer deferrals");
+        assert_eq!(adm.buffered(), 1, "batches bounded at quantum + max_defer");
+        adm.flush().unwrap();
+        assert_eq!(adm.buffered(), 0);
+        let (_, reports) = engine.finish().unwrap();
+        assert_eq!(reports[0].kernel_calls, 40, "deferral delayed, never dropped");
+    }
+}

@@ -757,6 +757,12 @@ impl<B: Backend + 'static> EngineController<B> {
     pub fn governor(&self) -> &RegenGovernor {
         &self.shared.governor
     }
+
+    /// The engine's telemetry recorder — the admission layer reads its
+    /// histogram snapshots for backpressure decisions.
+    pub fn recorder(&self) -> &Recorder {
+        &self.shared.rec
+    }
 }
 
 /// The concurrent serving engine. Construct (workers spawn immediately

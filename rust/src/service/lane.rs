@@ -89,10 +89,24 @@ impl<B: Backend> Lane<B> {
     ) -> Lane<B> {
         let fp = backend.device_fingerprint();
         let usable = |e: &CacheEntry| ve_filter.map(|ve| e.params.s.ve == ve).unwrap_or(true);
-        let found = if cfg.near_hints {
-            cache.lookup_near(&fp, &key, usable)
+        // Steady-state fast path first: a winner some lane in this
+        // process already finished exploring is served from the
+        // lock-free read map — zero shard-lock acquisitions, the
+        // production steady-state hit. Everything else (cold, near,
+        // transfer) falls through to the shard-locked paths below, and
+        // the obs counters split the two so the scale phase can assert
+        // a steady re-open takes no locks at all.
+        let steady = cache.lookup_steady(&fp, &key).filter(|e| usable(e));
+        let found = if let Some(e) = steady {
+            rec.count(Counter::SteadyHits, 1);
+            Some((e, CacheHit::Exact))
         } else {
-            cache.lookup_filtered(&fp, &key, usable).map(|e| (e, CacheHit::Exact))
+            rec.count(Counter::ShardLookups, 1);
+            if cfg.near_hints {
+                cache.lookup_near(&fp, &key, usable)
+            } else {
+                cache.lookup_filtered(&fp, &key, usable).map(|e| (e, CacheHit::Exact))
+            }
         };
         let mut warm = found.as_ref().map(|(_, hit)| *hit);
         let tuner = match found {
@@ -182,7 +196,7 @@ impl<B: Backend> Lane<B> {
         }
         rec.call(dt);
         self.note_tuner_events(before.3, before.4, rec);
-        self.propagate_outcomes(cache);
+        self.propagate_outcomes(cache, rec);
         Ok(dt)
     }
 
@@ -222,7 +236,7 @@ impl<B: Backend> Lane<B> {
             governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
         }
         self.note_tuner_events(before.3, before.4, rec);
-        self.propagate_outcomes(cache);
+        self.propagate_outcomes(cache, rec);
         Ok(event != crate::coordinator::StepEvent::Idle)
     }
 
@@ -282,8 +296,10 @@ impl<B: Backend> Lane<B> {
     /// (once per lane; a stale *exact* entry is invalidated so the
     /// re-explored winner replaces it — a stale near-length hint leaves
     /// its donor alone), and write the winner back when exploration
-    /// completes.
-    fn propagate_outcomes(&mut self, cache: &SharedTuneCache) {
+    /// completes — which also *publishes* it onto the lock-free
+    /// steady-state read path, so every later open of this key is a
+    /// zero-lock hit.
+    fn propagate_outcomes(&mut self, cache: &SharedTuneCache, rec: &Recorder) {
         if !self.warm_reported {
             if let Some(outcome) = self.tuner.stats.warm_outcome {
                 self.warm_reported = true;
@@ -300,34 +316,40 @@ impl<B: Backend> Lane<B> {
         // that loses to the reference is worthless as a warm start: skip.
         if !self.committed && self.tuner.exploration_done() {
             self.committed = true;
-            self.write_back(cache);
+            if let Some(entry) = self.write_back(cache) {
+                // The sharded insert above is the write path; publishing
+                // is the steady overlay. Only *finished* winners are
+                // published — checkpoints of unfinished lanes stay
+                // shard-only.
+                cache.publish_steady(&self.fp, &self.key, entry);
+                rec.count(Counter::SteadyPublishes, 1);
+            }
         }
     }
 
-    fn write_back(&self, cache: &SharedTuneCache) -> bool {
+    fn write_back(&self, cache: &SharedTuneCache) -> Option<CacheEntry> {
         if let (Some((params, score)), Some(ref_score)) =
             (self.tuner.best(), self.tuner.ref_score())
         {
             if score < ref_score {
                 let explored = self.tuner.stats.explored_count() as u32;
-                cache.insert(
-                    &self.fp,
-                    &self.key,
-                    CacheEntry::new(params, score, ref_score, explored),
-                );
-                return true;
+                let entry = CacheEntry::new(params, score, ref_score, explored);
+                cache.insert(&self.fp, &self.key, entry.clone());
+                return Some(entry);
             }
         }
-        false
+        None
     }
 
     /// Shutdown-path write-back for a lane whose exploration has not
     /// finished but already found something better than the reference.
+    /// Never publishes to the steady read path — that is reserved for
+    /// finished winners.
     pub(crate) fn checkpoint_into(&self, cache: &SharedTuneCache) -> bool {
         if self.committed || self.tuner.exploration_done() {
             return false;
         }
-        self.write_back(cache)
+        self.write_back(cache).is_some()
     }
 
     pub(crate) fn report(&self) -> LaneReport {

@@ -45,13 +45,27 @@
 //! `--threads 1` and `--threads 8`; threading changes wall-clock
 //! throughput (calls/sec), never the accounted fractions.
 //!
+//! In front of the threaded mode sits the [`Admission`] layer: O(10⁴)
+//! logical clients' interleaved calls are coalesced into per-lane
+//! quanta before they reach [`EngineController::submit_n`], with
+//! backpressure (deferral, never loss) when the governor's aggregate
+//! budget is exhausted *and* the [`Recorder`] latency histograms confirm
+//! engine saturation. Once a lane's exploration finishes, its winner is
+//! also published to the cache's lock-free steady read path
+//! ([`SharedTuneCache::lookup_steady`](crate::cache::SharedTuneCache)),
+//! so steady-state lane opens cost zero mutex acquisitions.
+//!
 //! `degoal-rt service` replays a mixed streamcluster + VIPS workload
 //! through both modes on `SimBackend` and prints cold-vs-warm behaviour
-//! plus a sequential-vs-threaded throughput comparison.
+//! plus a sequential-vs-threaded throughput comparison; `degoal-rt
+//! service --scale` runs the 1k-lane admission/steady-state stress
+//! phase instead.
 
+mod admission;
 mod engine;
 mod lane;
 
+pub use admission::{Admission, AdmissionConfig, AdmissionStats};
 pub use engine::{EngineController, EngineOptions, TuningEngine};
 pub use lane::LaneReport;
 

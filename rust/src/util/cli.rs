@@ -2,8 +2,16 @@
 //!
 //! Replaces clap (unavailable offline) for the CLI, examples, and bench
 //! binaries.
+//!
+//! Numeric accessors distinguish *absent* from *invalid*: an absent flag
+//! falls back to its default, but a present-and-unparsable (or
+//! out-of-range) value is a usage error. Silently clamping `--batch 0`
+//! to 1 or running the default after `--cache-ttl nope` means executing
+//! a different configuration than the user asked for.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -49,37 +57,56 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// `--name VALUE` parsed as `T`, else `default` (also on parse error).
-    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// `--name VALUE` parsed as `T`; absent falls back to `default`, but
+    /// a present-and-unparsable value is a usage error rather than a
+    /// silent fallback.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => match raw.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("invalid value for --{name}: {raw:?}"),
+            },
+        }
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         self.get_parsed(name, default)
     }
 
-    /// `--name N` clamped to at least `min` — for knobs where 0 makes no
-    /// sense (e.g. `--threads`).
-    pub fn get_usize_min(&self, name: &str, default: usize, min: usize) -> usize {
-        self.get_parsed(name, default).max(min)
+    /// `--name N` with a floor — for knobs where small values make no
+    /// sense (e.g. `--threads 0`). Below-floor values are a usage error,
+    /// not a silent clamp.
+    pub fn get_usize_min(&self, name: &str, default: usize, min: usize) -> Result<usize> {
+        let v = self.get_parsed(name, default)?;
+        if v < min {
+            bail!("--{name} must be at least {min}, got {v}");
+        }
+        Ok(v)
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         self.get_parsed(name, default)
     }
 
-    /// `--name N` as `Some(N)`, absent (or unparsable) as `None` — for
-    /// knobs that are *off* rather than defaulted when omitted (e.g.
-    /// `--cache-ttl`).
-    pub fn get_opt_u64(&self, name: &str) -> Option<u64> {
-        self.get(name).and_then(|v| v.parse().ok())
+    /// `--name N` as `Some(N)`, absent as `None` — for knobs that are
+    /// *off* rather than defaulted when omitted (e.g. `--cache-ttl`).
+    /// Present-and-unparsable is a usage error, not `None`.
+    pub fn get_opt_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => match raw.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => bail!("invalid value for --{name}: {raw:?}"),
+            },
+        }
     }
 
-    pub fn get_u32(&self, name: &str, default: u32) -> u32 {
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32> {
         self.get_parsed(name, default)
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         self.get_parsed(name, default)
     }
 
@@ -114,7 +141,7 @@ mod tests {
     #[test]
     fn equals_form() {
         let a = Args::parse_from(toks("--dim=64 --bench=streamcluster"));
-        assert_eq!(a.get_usize("dim", 0), 64);
+        assert_eq!(a.get_usize("dim", 0).unwrap(), 64);
         assert_eq!(a.get("bench"), Some("streamcluster"));
     }
 
@@ -128,28 +155,42 @@ mod tests {
     #[test]
     fn numeric_defaults() {
         let a = Args::parse_from(toks(""));
-        assert_eq!(a.get_usize("n", 5), 5);
-        assert_eq!(a.get_f64("x", 1.5), 1.5);
-        assert_eq!(a.get_u32("d", 7), 7);
+        assert_eq!(a.get_usize("n", 5).unwrap(), 5);
+        assert_eq!(a.get_f64("x", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_u32("d", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn invalid_numeric_is_a_usage_error() {
+        let a = Args::parse_from(toks("--calls twelve --x 1.5.2"));
+        let err = a.get_usize("calls", 5).unwrap_err().to_string();
+        assert!(err.contains("--calls") && err.contains("twelve"), "{err}");
+        assert!(a.get_f64("x", 0.0).is_err());
+        // Absent flags still fall back silently — only present-and-bad errors.
+        assert_eq!(a.get_usize("other", 9).unwrap(), 9);
     }
 
     #[test]
     fn opt_u64_is_none_when_absent() {
         let a = Args::parse_from(toks("--cache-ttl 3600"));
-        assert_eq!(a.get_opt_u64("cache-ttl"), Some(3600));
-        assert_eq!(a.get_opt_u64("other"), None);
+        assert_eq!(a.get_opt_u64("cache-ttl").unwrap(), Some(3600));
+        assert_eq!(a.get_opt_u64("other").unwrap(), None);
+        // Present but unparsable used to become `None` (feature silently
+        // off); it is now a usage error.
         let b = Args::parse_from(toks("--cache-ttl nope"));
-        assert_eq!(b.get_opt_u64("cache-ttl"), None);
+        assert!(b.get_opt_u64("cache-ttl").is_err());
     }
 
     #[test]
-    fn usize_min_clamps() {
+    fn usize_min_rejects_below_floor() {
+        // `--threads 0` used to be silently clamped to 1; it now errors.
         let a = Args::parse_from(toks("--threads 0"));
-        assert_eq!(a.get_usize_min("threads", 1, 1), 1);
+        let err = a.get_usize_min("threads", 1, 1).unwrap_err().to_string();
+        assert!(err.contains("--threads") && err.contains("at least 1"), "{err}");
         let b = Args::parse_from(toks("--threads 4"));
-        assert_eq!(b.get_usize_min("threads", 1, 1), 4);
+        assert_eq!(b.get_usize_min("threads", 1, 1).unwrap(), 4);
         let c = Args::parse_from(toks(""));
-        assert_eq!(c.get_usize_min("threads", 2, 1), 2);
+        assert_eq!(c.get_usize_min("threads", 2, 1).unwrap(), 2);
     }
 
     #[test]

@@ -142,6 +142,36 @@ pub fn hetero_service_workload(
     (on(donor, seed), on(target, seed + 100))
 }
 
+/// A wide serving workload for the `--scale` stress phase: `lanes`
+/// distinct light kernel streams on one simulated core. Every lane is a
+/// Distance kernel (the light end of the mix — the phase stresses the
+/// *scheduler and cache paths* at O(10³) lanes, not the simulator) with
+/// a per-lane shape class (`s0`, `s1`, …) so each lane is its own
+/// [`TuneKey`] and its own cache entry. Two `dim` variants alternate so
+/// adjacent lanes still differ structurally.
+///
+/// Deterministic in `seed`: calling this twice with the same arguments
+/// builds backends with identical per-lane seeds, which is what lets the
+/// steady-state re-open phase (`degoal-rt service --scale`) re-register
+/// the *same* keys on fresh backends and hit the published winners.
+/// Private per-workload memo — see `mixed_service_workload`.
+pub fn scale_service_workload(
+    core: &'static CoreConfig,
+    seed: u64,
+    lanes: usize,
+) -> Vec<(TuneKey, SimBackend)> {
+    let memo = SharedSimMemo::new();
+    (0..lanes)
+        .map(|i| {
+            let dim = if i % 2 == 0 { 32 } else { 64 };
+            let kind = KernelKind::Distance { dim, batch: 256 };
+            let b = SimBackend::with_memo(core, kind, seed + i as u64, memo.clone());
+            let key = TuneKey::with_shape(b.kernel_id(), kind.length(), format!("s{i}"));
+            (key, b)
+        })
+        .collect()
+}
+
 /// Result of one application run (with or without auto-tuning).
 #[derive(Debug, Clone)]
 pub struct AppRun {

@@ -1,0 +1,269 @@
+//! Regression tests for the cross-shard scan-then-touch race in
+//! `SharedTuneCache::lookup_near` / `lookup_transfer`.
+//!
+//! Both lookups scan the lock shards one at a time, drop every lock,
+//! and then use the winning donor. Before the fix, the scan-time *copy*
+//! of the winner was returned directly — so a donor invalidated (or
+//! TTL-evicted, or overwritten) between its shard's scan and the return
+//! was served as a live warm-start hint. After the fix the winner is
+//! re-validated under its shard lock and a fresh clone is returned, so
+//! a donor that died during the unlocked window becomes a miss.
+//!
+//! The deterministic reproduction uses the `usable` predicate as a
+//! scheduling lever: the caches hold the winning donor plus one *marker*
+//! candidate (recognizable by `explored == 999`, always reported
+//! unusable so it can never win). When the scan reaches the marker, the
+//! predicate signals a helper thread to `invalidate` the winner and
+//! blocks until the invalidation completes. If the scan visited the
+//! winner's shard *before* the marker's, the winner was already copied
+//! — the removal then strictly precedes the lookup's return, and the
+//! pre-fix code returns the dead donor while the fixed code returns
+//! `None`. Shard placement is hash-dependent, so the test iterates
+//! kernel-name variants until that ordering occurs (sightings are
+//! tracked through the same predicate; `DefaultHasher` is deterministic
+//! per process, so the conclusive set is stable). A same-shard variant
+//! would deadlock the helper against the scan's held lock; the
+//! `recv_timeout` below turns that into "inconclusive" instead.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use degoal_rt::cache::{CacheEntry, DeviceFingerprint, SharedTuneCache, TuneKey};
+use degoal_rt::tunespace::{Structural, TuningParams};
+
+const MARKER: u32 = 999;
+const VARIANTS: usize = 32;
+const HANDSHAKE: Duration = Duration::from_millis(500);
+
+fn fp(n: &str) -> DeviceFingerprint {
+    DeviceFingerprint::new("sim:test", n)
+}
+
+/// An epi-32 entry: structurally valid for any trip length divisible by
+/// 32, which covers every length used below.
+fn entry(score: f64, explored: u32) -> CacheEntry {
+    CacheEntry::new(
+        TuningParams::phase1_default(Structural::new(true, 2, 2, 2)),
+        score,
+        2.0 * score,
+        explored,
+    )
+}
+
+/// One attempt at the `lookup_near` race for one kernel name. Returns
+/// `None` when shard placement made the run inconclusive (marker shard
+/// scanned first, or marker and winner share a shard), otherwise
+/// whether the lookup correctly missed after the winner's invalidation.
+fn near_race_attempt(kernel: &str) -> Option<bool> {
+    let cache = SharedTuneCache::with_shards(8, 64);
+    let device = fp("d");
+    let winner_key = TuneKey::new(kernel, 64);
+    let marker_key = TuneKey::new(kernel, 192);
+    let request = TuneKey::new(kernel, 96);
+    cache.insert(&device, &winner_key, entry(1e-4, 7));
+    cache.insert(&device, &marker_key, entry(1e-4, MARKER));
+
+    let (sig_tx, sig_rx) = mpsc::channel::<()>();
+    let (ack_tx, ack_rx) = mpsc::channel::<()>();
+    let helper = {
+        let cache = cache.clone();
+        let device = device.clone();
+        let winner_key = winner_key.clone();
+        std::thread::spawn(move || {
+            while sig_rx.recv().is_ok() {
+                cache.invalidate(&device, &winner_key);
+                if ack_tx.send(()).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    let winner_seen = AtomicBool::new(false);
+    let winner_seen_first = AtomicBool::new(false);
+    let handshake_ok = AtomicBool::new(false);
+    let got = cache.lookup_near(&device, &request, |e| {
+        if e.explored == MARKER {
+            winner_seen_first.store(winner_seen.load(Ordering::SeqCst), Ordering::SeqCst);
+            // Ask the helper to kill the winner mid-scan and wait for
+            // it. A timeout means the helper is blocked on the very
+            // shard lock this predicate runs under — the same-shard
+            // (inconclusive) layout, never a correctness signal.
+            if sig_tx.send(()).is_ok() && ack_rx.recv_timeout(HANDSHAKE).is_ok() {
+                handshake_ok.store(true, Ordering::SeqCst);
+            }
+            return false; // the marker must never become the donor
+        }
+        winner_seen.store(true, Ordering::SeqCst);
+        true
+    });
+    drop(helper); // detach; it exits when the senders drop
+
+    if !(handshake_ok.load(Ordering::SeqCst) && winner_seen_first.load(Ordering::SeqCst)) {
+        return None;
+    }
+    // Conclusive layout: the winner was copied by the scan, then
+    // invalidated strictly before the lookup returned. Serving it now
+    // would be the scan-then-touch race.
+    Some(got.is_none())
+}
+
+#[test]
+fn near_lookup_revalidates_donor_after_unlocked_window() {
+    let mut conclusive = 0usize;
+    for i in 0..VARIANTS {
+        let kernel = format!("race/near{i}");
+        if let Some(missed) = near_race_attempt(&kernel) {
+            conclusive += 1;
+            assert!(
+                missed,
+                "{kernel}: lookup_near returned a donor that was invalidated \
+                 during the unlocked window (scan-then-touch race)"
+            );
+        }
+    }
+    assert!(
+        conclusive > 0,
+        "no kernel-name variant produced the winner-scanned-first shard layout; \
+         raise VARIANTS"
+    );
+}
+
+/// Same lever for `lookup_transfer`: the winner is a sibling device's
+/// entry for the exact key; the marker is a second sibling, reported
+/// unusable. Conclusive iff the scan saw the winner first and the
+/// handshake completed.
+fn transfer_race_attempt(kernel: &str) -> Option<bool> {
+    let cache = SharedTuneCache::with_shards(8, 64);
+    let key = TuneKey::new(kernel, 64);
+    let target = fp("target");
+    let winner_fp = fp("donor-w");
+    let marker_fp = fp("donor-m");
+    // The winner's higher speedup (3x vs 2x) would make it the
+    // preferred donor even if the marker were usable.
+    let mut winner = entry(1e-4, 7);
+    winner.ref_score = 3e-4;
+    cache.insert(&winner_fp, &key, winner);
+    cache.insert(&marker_fp, &key, entry(2e-4, MARKER));
+
+    let (sig_tx, sig_rx) = mpsc::channel::<()>();
+    let (ack_tx, ack_rx) = mpsc::channel::<()>();
+    let helper = {
+        let cache = cache.clone();
+        let winner_fp = winner_fp.clone();
+        let key = key.clone();
+        std::thread::spawn(move || {
+            while sig_rx.recv().is_ok() {
+                cache.invalidate(&winner_fp, &key);
+                if ack_tx.send(()).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    let winner_seen = AtomicBool::new(false);
+    let winner_seen_first = AtomicBool::new(false);
+    let handshake_ok = AtomicBool::new(false);
+    let got = cache.lookup_transfer(&target, &key, |e| {
+        if e.explored == MARKER {
+            winner_seen_first.store(winner_seen.load(Ordering::SeqCst), Ordering::SeqCst);
+            if sig_tx.send(()).is_ok() && ack_rx.recv_timeout(HANDSHAKE).is_ok() {
+                handshake_ok.store(true, Ordering::SeqCst);
+            }
+            return false;
+        }
+        winner_seen.store(true, Ordering::SeqCst);
+        true
+    });
+    drop(helper);
+
+    if !(handshake_ok.load(Ordering::SeqCst) && winner_seen_first.load(Ordering::SeqCst)) {
+        return None;
+    }
+    Some(got.is_none())
+}
+
+#[test]
+fn transfer_lookup_revalidates_donor_after_unlocked_window() {
+    let mut conclusive = 0usize;
+    for i in 0..VARIANTS {
+        let kernel = format!("race/xfer{i}");
+        if let Some(missed) = transfer_race_attempt(&kernel) {
+            conclusive += 1;
+            assert!(
+                missed,
+                "{kernel}: lookup_transfer returned a donor that was invalidated \
+                 during the unlocked window (scan-then-touch race)"
+            );
+        }
+    }
+    assert!(
+        conclusive > 0,
+        "no kernel-name variant produced the winner-scanned-first shard layout; \
+         raise VARIANTS"
+    );
+}
+
+/// Nondeterministic hammer on the same window: readers run `lookup_near`
+/// in a loop while a writer invalidates and re-inserts the donor. Every
+/// entry served must be structurally valid for the requested length —
+/// a stale copy of a replaced entry would not be. (The deterministic
+/// tests above pin the race; this one just keeps the window hot under
+/// real contention and asserts nothing torn ever escapes.)
+#[test]
+fn hammered_near_lookup_never_serves_a_dead_class() {
+    let cache = SharedTuneCache::with_shards(8, 64);
+    let device = fp("d");
+    let donor_key = TuneKey::new("race/hammer", 64);
+    // epi 32: in the requested class (no_leftover for 64 and 96).
+    let good = entry(1e-4, 7);
+    // epi 128 (4*4*2*4): too wide for either length — a replacement
+    // entry outside the class the readers filter for.
+    let other = CacheEntry::new(
+        TuningParams::phase1_default(Structural::new(true, 4, 2, 4)),
+        1e-4,
+        2e-4,
+        7,
+    );
+    cache.insert(&device, &donor_key, good.clone());
+
+    let stop = std::sync::Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let cache = cache.clone();
+            let device = device.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let request = TuneKey::new("race/hammer", 96);
+                let mut hits = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some((e, _)) = cache.lookup_near(&device, &request, |e| {
+                        e.params.s.no_leftover(64)
+                    }) {
+                        // The filter demanded no_leftover(64); a served
+                        // entry violating it must have bypassed
+                        // revalidation against the live store.
+                        assert!(
+                            e.params.s.no_leftover(64),
+                            "lookup_near served an entry its own filter rejects"
+                        );
+                        hits += 1;
+                    }
+                }
+                hits
+            })
+        })
+        .collect();
+
+    for _ in 0..2_000 {
+        cache.invalidate(&device, &donor_key);
+        cache.insert(&device, &donor_key, other.clone());
+        cache.invalidate(&device, &donor_key);
+        cache.insert(&device, &donor_key, good.clone());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+    assert!(total > 0, "readers must observe at least one hit");
+}
