@@ -380,6 +380,22 @@ impl SharedTuneCache {
             .and_then(|s| s.lock().expect("tunecache shard lock").ttl())
     }
 
+    /// Sweep TTL-expired winners off the steady read path
+    /// ([`SteadyReadMap::sweep_expired`]) under the configured TTL — the
+    /// engine's idle-path housekeeping hook. `lookup_steady` already
+    /// filters expired entries per read; the sweep keeps
+    /// [`SharedTuneCache::steady_len`] tracking the *live* working set
+    /// on long-running services. No-op (0) without a TTL. Uses the same
+    /// expiry comparison as `lookup_steady`, so a sweep never removes an
+    /// entry the read path would still serve.
+    pub fn sweep_steady_expired(&self) -> usize {
+        let ttl = self.inner.steady_ttl.load(Ordering::Relaxed);
+        if ttl == NO_TTL {
+            return 0;
+        }
+        self.inner.steady.sweep_expired(super::store::now_unix(), ttl)
+    }
+
     /// Sweep age-expired entries from every shard; returns entries
     /// dropped.
     pub fn evict_expired(&self, now_unix: u64) -> usize {
@@ -675,6 +691,29 @@ mod tests {
         c.publish_steady(&fp("d"), &key("fresh", 64), entry(1e-4));
         assert!(c.lookup_steady(&fp("d"), &key("fresh", 64)).is_some());
         assert_eq!(c.steady_hits(), 1);
+    }
+
+    #[test]
+    fn steady_sweep_prunes_expired_winners_under_the_ttl() {
+        let c = SharedTuneCache::with_shards(4, 64);
+        // Without a TTL the sweep is a guaranteed no-op.
+        c.publish_steady(&fp("d"), &key("k", 64), entry(1e-4));
+        assert_eq!(c.sweep_steady_expired(), 0);
+        assert_eq!(c.steady_len(), 1);
+
+        c.set_ttl(Some(3600));
+        let mut old = entry(1e-4);
+        old.updated_unix = 1_000; // ancient
+        c.publish_steady(&fp("d"), &key("old", 64), old);
+        assert_eq!(c.steady_len(), 2, "expired winner still occupies the map pre-sweep");
+        assert_eq!(c.sweep_steady_expired(), 1);
+        assert_eq!(c.steady_len(), 1, "sweep trims steady_len to the live working set");
+        assert!(c.lookup_steady(&fp("d"), &key("old", 64)).is_none());
+        assert!(
+            c.lookup_steady(&fp("d"), &key("k", 64)).is_some(),
+            "fresh winners survive the sweep"
+        );
+        assert_eq!(c.sweep_steady_expired(), 0, "idempotent once swept");
     }
 
     #[test]

@@ -249,6 +249,58 @@ impl SteadyReadMap {
         w.retired_tables.push(old_ptr);
     }
 
+    /// Tombstone every published winner older than `ttl_secs` at
+    /// `now_unix` — the idle-path sweep backing the cache TTL on the
+    /// steady read path. `lookup_steady` already *filters* expired
+    /// entries per read; the sweep additionally stops them counting
+    /// toward [`SteadyReadMap::len`], so a long-running service's
+    /// steady map tracks its live working set instead of every winner
+    /// ever published. Returns winners tombstoned.
+    ///
+    /// Same epoch discipline as [`SteadyReadMap::retract`]: slots are
+    /// never nulled (probe chains stay intact), replaced entries are
+    /// retired, not freed, and concurrent readers either see the old
+    /// winner (and re-filter it by age) or the tombstone — both misses
+    /// for an expired entry. The expiry comparison matches
+    /// `lookup_steady` exactly: `age_secs(now) > ttl`, clock skew
+    /// (entry from the future) counts as fresh.
+    pub fn sweep_expired(&self, now_unix: u64, ttl_secs: u64) -> usize {
+        let mut w = self.writer.lock().expect("steady writer lock");
+        // Safety: stable under the writer mutex; only `grow_locked`
+        // (also under this mutex) swaps the table pointer.
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut swept = 0usize;
+        for slot in table.slots.iter() {
+            let p = slot.load(Ordering::Acquire);
+            if p.is_null() {
+                continue;
+            }
+            let e = unsafe { &*p };
+            let expired = e
+                .entry
+                .as_ref()
+                .map(|entry| {
+                    entry.age_secs(now_unix).map(|age| age > ttl_secs).unwrap_or(false)
+                })
+                .unwrap_or(false);
+            if !expired {
+                continue;
+            }
+            let np = Box::into_raw(Box::new(SteadyEntry {
+                fp: e.fp.clone(),
+                key: e.key.clone(),
+                entry: None,
+            }));
+            slot.store(np, Ordering::Release);
+            w.retired_entries.push(p);
+            swept += 1;
+        }
+        // Tombstoning is a retraction: count it like one so `published`
+        // stays the total mutation count.
+        self.published.fetch_add(swept as u64, Ordering::Relaxed);
+        swept
+    }
+
     /// Distinct keys currently published (tombstones excluded). Takes
     /// the writer mutex — diagnostics only, not a hot path.
     pub fn len(&self) -> usize {
@@ -386,6 +438,35 @@ mod tests {
             });
             assert_eq!(e.score, 1e-4 + i as f64 * 1e-9);
         }
+    }
+
+    #[test]
+    fn sweep_expired_tombstones_only_old_winners() {
+        let m = SteadyReadMap::new();
+        let now = 1_000_000u64;
+        for i in 0..16 {
+            let mut e = entry(1e-4);
+            e.updated_unix = if i % 2 == 0 { now - 10_000 } else { now - 10 };
+            m.publish(&fp("d"), &key(&format!("k{i}"), 64), e);
+        }
+        assert_eq!(m.len(), 16);
+        assert_eq!(m.sweep_expired(now, 3600), 8);
+        assert_eq!(m.len(), 8, "expired winners must stop counting");
+        for i in 0..16 {
+            let got = m.get(&fp("d"), &key(&format!("k{i}"), 64));
+            assert_eq!(got.is_some(), i % 2 != 0, "k{i}");
+        }
+        // Idempotent: a second sweep finds nothing new.
+        assert_eq!(m.sweep_expired(now, 3600), 0);
+        // A swept key can be re-published (winner re-explored later).
+        m.publish(&fp("d"), &key("k0", 64), entry(2e-4));
+        assert_eq!(m.get(&fp("d"), &key("k0", 64)).unwrap().score, 2e-4);
+        // Clock skew: a future-dated entry is fresh, never swept.
+        let mut future = entry(1e-4);
+        future.updated_unix = now + 50;
+        m.publish(&fp("d"), &key("future", 64), future);
+        assert_eq!(m.sweep_expired(now, 3600), 0);
+        assert!(m.get(&fp("d"), &key("future", 64)).is_some());
     }
 
     #[test]

@@ -27,7 +27,10 @@ use super::evaluator::{EvalMode, Evaluator};
 use super::stats::{ExploredVersion, TuneStats, WarmOutcome};
 use crate::backend::{Backend, EvalData, KernelVersion};
 use crate::simulator::RefKind;
-use crate::tunespace::{Phase, PriorSeeded, SearchStrategy, TuningParams, TwoPhaseGrid};
+use crate::tunespace::{
+    Anneal, ModelGuided, Phase, PriorSeeded, RandomSearch, SearchStrategy, StrategyKind,
+    TuningParams, TwoPhaseGrid,
+};
 
 /// Tuner policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -51,6 +54,20 @@ pub struct TunerConfig {
     /// selection is unchanged either way: candidates are still evaluated
     /// sequentially in draw order.
     pub batch: usize,
+    /// Which [`SearchStrategy`] family [`AutoTuner::new`] builds
+    /// (`degoal-rt service --strategy ...`). Adaptive strategies are
+    /// seeded deterministically from `(length, ve_filter)`, so two lanes
+    /// over the same kernel stream draw identical sequences regardless of
+    /// engine mode.
+    pub strategy: StrategyKind,
+    /// Cross-refill prefetch lookahead: when > 0, up to this many *likely
+    /// future* candidates from [`SearchStrategy::prefetch_horizon`] are
+    /// exposed via [`AutoTuner::share_horizon`] once per exploration
+    /// advance, for idle engine workers to pre-score into the shared
+    /// simulation memo. Pre-scoring is pure cache population, so the
+    /// horizon is bitwise-invisible to winner selection. 0 (the default)
+    /// disables it.
+    pub horizon: usize,
 }
 
 impl Default for TunerConfig {
@@ -62,8 +79,22 @@ impl Default for TunerConfig {
             wake_period: 0.02,
             initial_ref: RefKind::SisdGeneric,
             batch: 1,
+            strategy: StrategyKind::Grid,
+            horizon: 0,
         }
     }
+}
+
+/// Deterministic per-kernel-stream seed for adaptive strategies: a
+/// function of `(length, ve_filter)` only, so sequential and threaded
+/// services (and re-runs) draw identical exploration sequences.
+fn strategy_seed(length: u32, ve_filter: Option<bool>) -> u64 {
+    (length as u64).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ match ve_filter {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        }
 }
 
 /// What a tuning wake-up did (for logs and tests).
@@ -111,6 +142,11 @@ pub struct AutoTuner {
     /// Whether the current `pending` contents were already handed out via
     /// [`AutoTuner::share_pending`] (hints go out once per refill).
     pending_shared: bool,
+    /// Whether the prefetch horizon was already handed out via
+    /// [`AutoTuner::share_horizon`] since the last exploration advance
+    /// (the horizon re-arms per advance — each draw may reshape an
+    /// adaptive strategy's frontier).
+    horizon_shared: bool,
     pub stats: TuneStats,
 }
 
@@ -118,8 +154,16 @@ impl AutoTuner {
     /// `length`: tuned-loop trip length (kernel specialisation);
     /// `ve_filter`: restrict exploration to SISD (false) / SIMD (true) for
     /// the paper's fair-comparison runs, or None for the real scenario.
+    /// The strategy family comes from [`TunerConfig::strategy`].
     pub fn new(cfg: TunerConfig, length: u32, ve_filter: Option<bool>) -> AutoTuner {
-        AutoTuner::with_strategy(cfg, Box::new(TwoPhaseGrid::new(length, ve_filter)))
+        let seed = strategy_seed(length, ve_filter);
+        let strategy: Box<dyn SearchStrategy> = match cfg.strategy {
+            StrategyKind::Grid => Box::new(TwoPhaseGrid::new(length, ve_filter)),
+            StrategyKind::Random => Box::new(RandomSearch::new(length, ve_filter, seed)),
+            StrategyKind::Anneal => Box::new(Anneal::new(length, ve_filter, seed)),
+            StrategyKind::Model => Box::new(ModelGuided::new(length, ve_filter, seed)),
+        };
+        AutoTuner::with_strategy(cfg, strategy)
     }
 
     /// A tuner over an explicit search strategy — the seam every
@@ -141,6 +185,7 @@ impl AutoTuner {
             regen_enabled: true,
             pending: VecDeque::new(),
             pending_shared: false,
+            horizon_shared: false,
             stats: TuneStats::default(),
         }
     }
@@ -178,6 +223,10 @@ impl AutoTuner {
     /// disagree, coverage and the final winner are unchanged.
     ///
     /// A prior outside `ve_filter`'s class is ignored (plain cold start).
+    /// Priors are an ordering hint for the grid walk ([`PriorSeeded`]
+    /// permutes, never prunes); adaptive strategies decide their own
+    /// order from live observations, so under a non-[`StrategyKind::Grid`]
+    /// config the donor is ignored and the configured strategy runs cold.
     pub fn with_transfer_prior(
         cfg: TunerConfig,
         length: u32,
@@ -185,7 +234,7 @@ impl AutoTuner {
         prior: TuningParams,
     ) -> AutoTuner {
         let in_class = ve_filter.map(|ve| prior.s.ve == ve).unwrap_or(true);
-        if !in_class {
+        if !in_class || cfg.strategy != StrategyKind::Grid {
             return AutoTuner::new(cfg, length, ve_filter);
         }
         let mut tuner =
@@ -403,7 +452,12 @@ impl AutoTuner {
     fn explore_next<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
         if self.pending.is_empty() {
             let best_params = self.best.map(|(p, _)| p);
-            let batch = self.strategy.next_batch(best_params, self.cfg.batch.max(1));
+            // Pruning strategies decide each draw from the previous
+            // observation, so the refill width collapses to 1 for them
+            // regardless of cfg.batch — their pool work flows through
+            // the prefetch horizon instead (`share_horizon`).
+            let width = if self.strategy.complete() { self.cfg.batch.max(1) } else { 1 };
+            let batch = self.strategy.next_batch(best_params, width);
             if batch.is_empty() {
                 return self.finish_exploration(backend);
             }
@@ -411,6 +465,10 @@ impl AutoTuner {
             self.pending_shared = false;
         }
         let cand = self.pending.pop_front().expect("refilled above");
+        self.stats.strategy_steps += 1;
+        // Each advance may reshape an adaptive frontier: re-arm the
+        // horizon so idle workers see the updated lookahead.
+        self.horizon_shared = false;
 
         // Phase transition: re-score the active function under the new
         // evaluation mode so comparisons stay apples-to-apples (§3.4:
@@ -451,6 +509,52 @@ impl AutoTuner {
         self.pending.len()
     }
 
+    /// Hand out the strategy's *cross-refill prefetch horizon* — up to
+    /// `cfg.horizon` likely future candidates beyond the current refill —
+    /// together with the [`EvalData`] they would be scored under, at most
+    /// once per exploration advance. Unlike [`AutoTuner::share_pending`]
+    /// these candidates are NOT guaranteed to be drawn: the hints are
+    /// pure memo pre-warming (bitwise-invisible to winner selection —
+    /// [`SearchStrategy::prefetch_horizon`] takes `&self`), so a stale or
+    /// never-drawn hint costs nothing but the missed speed-up.
+    pub fn share_horizon(&mut self) -> Option<(Vec<TuningParams>, EvalData)> {
+        if self.cfg.horizon == 0 || self.horizon_shared || self.exploration_done() {
+            return None;
+        }
+        let hints = self.strategy.prefetch_horizon(self.cfg.horizon);
+        if hints.is_empty() {
+            return None;
+        }
+        self.horizon_shared = true;
+        let data = match self.eval_mode() {
+            EvalMode::TrainingFiltered => EvalData::Training,
+            EvalMode::RealAveraged(_) => EvalData::Real,
+        };
+        Some((hints, data))
+    }
+
+    /// Whether [`AutoTuner::share_horizon`] could currently hand out
+    /// hints — cheap pre-check for the engine's idle path (the horizon
+    /// itself may still come back empty for an exhausted strategy).
+    pub fn horizon_armed(&self) -> bool {
+        self.cfg.horizon > 0 && !self.horizon_shared && !self.exploration_done()
+    }
+
+    /// Candidates still ahead of this tuner: the strategy's upper bound
+    /// *plus* the drawn-but-unevaluated queue. `SearchStrategy::remaining`
+    /// alone under-reports by `pending_len()` right after a batch refill
+    /// (the strategy has already handed those candidates over, but the
+    /// tuner has not evaluated them yet).
+    pub fn remaining_candidates(&self) -> usize {
+        self.strategy.remaining() + self.pending.len()
+    }
+
+    /// Whether the configured strategy emits the full candidate set
+    /// ([`SearchStrategy::complete`]) — `false` for pruning strategies.
+    pub fn coverage_complete(&self) -> bool {
+        self.strategy.complete()
+    }
+
     /// The evaluate-and-decide half of one exploration step: generate the
     /// machine code, score it under the current evaluation mode, update
     /// best, and swap the active function if it improved ("simply
@@ -465,6 +569,12 @@ impl AutoTuner {
         self.stats.overhead += gen_cost;
         let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(cand), self.eval_mode())?;
         self.stats.overhead += ev.cost;
+
+        // Feed the observation back to the strategy (adaptive strategies
+        // fold it into their next draw; enumerations no-op) and mirror
+        // its internal decision counters into the stats snapshot.
+        self.strategy.observe(cand, ev.score);
+        self.sync_strategy_stats();
 
         if self.best.map(|(_, s)| ev.score < s).unwrap_or(true) {
             self.best = Some((cand, ev.score));
@@ -506,8 +616,18 @@ impl AutoTuner {
                 self.best_is_real = true;
             }
         }
+        self.sync_strategy_stats();
         self.stats.exploration_done_at = Some(self.now());
         Ok(StepEvent::ExplorationDone)
+    }
+
+    /// Mirror the strategy's internal counters into [`TuneStats`] so
+    /// observers (lane telemetry, service aggregation) read one place.
+    fn sync_strategy_stats(&mut self) {
+        let (accepted, rejected) = self.strategy.move_stats();
+        self.stats.strategy_accepted = accepted;
+        self.stats.strategy_rejected = rejected;
+        self.stats.pruned_candidates = self.strategy.pruned();
     }
 
     fn eval_mode(&self) -> EvalMode {
@@ -864,5 +984,176 @@ mod tests {
         assert!(tuner.stats.overhead > 0.0, "speculation still pays virtual overhead");
         // Once done, further idle ticks are no-ops.
         assert_eq!(tuner.tune_idle(&mut b).unwrap(), StepEvent::Idle);
+    }
+
+    /// Run a strategy to exploration completion on the shared mock seed,
+    /// optionally probing the prefetch horizon before every idle step.
+    /// Returns the tuner and the full explored trail (bit-exact).
+    fn run_kind(
+        kind: StrategyKind,
+        horizon: usize,
+        probe_horizon: bool,
+    ) -> (AutoTuner, Vec<(u32, u64, bool)>) {
+        let mut b = MockBackend::new(64, 50);
+        let mut cfg = fast_cfg();
+        cfg.strategy = kind;
+        cfg.horizon = horizon;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        let mut steps = 0usize;
+        while !tuner.exploration_done() {
+            if probe_horizon {
+                let _ = tuner.share_horizon();
+            }
+            tuner.tune_idle(&mut b).unwrap();
+            steps += 1;
+            assert!(steps < 10_000, "{kind} must terminate");
+        }
+        let trail = tuner
+            .stats
+            .explored
+            .iter()
+            .map(|e| (e.params.full_id(), e.score.to_bits(), e.swapped_in))
+            .collect();
+        (tuner, trail)
+    }
+
+    #[test]
+    fn adaptive_strategies_find_the_optimum_with_fewer_generates() {
+        let (expect, _) = MockBackend::new(64, 50).best_possible();
+        let (grid, _) = run_kind(StrategyKind::Grid, 0, false);
+        assert_eq!(grid.best().unwrap().0.s, expect.s);
+        for kind in [StrategyKind::Anneal, StrategyKind::Model] {
+            let (t, _) = run_kind(kind, 0, false);
+            let (got, got_score) = t.best().unwrap();
+            // The mock landscape is separable and per-dimension unimodal,
+            // so the stall-then-polish rule is guaranteed to land on the
+            // global optimum before transitioning.
+            assert_eq!(got.s, expect.s, "{kind} structure");
+            assert!(
+                got_score <= grid.best().unwrap().1,
+                "{kind} winner must not be worse than the grid's"
+            );
+            assert!(
+                t.stats.generate_calls < grid.stats.generate_calls,
+                "{kind} must prune: {} vs grid {}",
+                t.stats.generate_calls,
+                grid.stats.generate_calls
+            );
+            assert!(t.stats.pruned_candidates > 0, "{kind} reports pruning");
+            // Accounting identity: what was generated plus what was pruned
+            // is exactly the grid's full plan (phase-1 pool + 11 phase-2).
+            assert_eq!(
+                t.stats.generate_calls + t.stats.pruned_candidates,
+                grid.stats.generate_calls,
+                "{kind} pruning accounting"
+            );
+            assert!(!t.coverage_complete());
+        }
+        // The seeded-permutation control arm covers the *full* cross
+        // product (more generates than two-phase) but still finds the
+        // optimum — coverage is what the adaptive strategies are racing.
+        let (rand, _) = run_kind(StrategyKind::Random, 0, false);
+        assert_eq!(rand.best().unwrap().0.s, expect.s);
+        assert!(rand.coverage_complete());
+        assert_eq!(rand.stats.pruned_candidates, 0);
+    }
+
+    #[test]
+    fn strategy_step_and_move_counters_account_every_draw() {
+        let (grid, _) = run_kind(StrategyKind::Grid, 0, false);
+        assert_eq!(grid.stats.strategy_steps, grid.stats.explored_count() as u64);
+        assert_eq!(grid.stats.strategy_accepted, 0, "a grid has no move notion");
+        assert_eq!(grid.stats.strategy_rejected, 0);
+        assert_eq!(grid.stats.pruned_candidates, 0);
+
+        let (ann, _) = run_kind(StrategyKind::Anneal, 0, false);
+        assert_eq!(ann.stats.strategy_steps, ann.stats.explored_count() as u64);
+        assert!(ann.stats.strategy_accepted > 0, "annealing accepts moves");
+        // Every phase-1 draw gets exactly one Metropolis decision; the 11
+        // phase-2 draws are grid refinement, not moves.
+        assert_eq!(
+            ann.stats.strategy_accepted + ann.stats.strategy_rejected,
+            ann.stats.strategy_steps - 11,
+            "one accept/reject per phase-1 observation"
+        );
+    }
+
+    #[test]
+    fn remaining_candidates_counts_the_pending_queue() {
+        // Regression: `SearchStrategy::remaining` alone under-reports by
+        // `pending_len()` right after a batch refill.
+        let mut b = MockBackend::new(64, 51);
+        let mut cfg = fast_cfg();
+        cfg.batch = 4;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        let total = tuner.remaining_candidates();
+        assert!(total > 11, "two-phase plan ahead");
+        tuner.tune_idle(&mut b).unwrap(); // reference bootstrap: no draw
+        assert_eq!(tuner.remaining_candidates(), total);
+        // First explore refills 4 and evaluates 1: exactly one candidate
+        // left the plan, even though the strategy handed over four.
+        tuner.tune_idle(&mut b).unwrap();
+        assert_eq!(tuner.pending_len(), 3);
+        assert_eq!(tuner.remaining_candidates(), total - 1, "queue still counts as remaining");
+        // Draining the queue keeps the one-per-advance arithmetic exact.
+        for i in 2..=4u32 {
+            tuner.tune_idle(&mut b).unwrap();
+            assert_eq!(tuner.remaining_candidates(), total - i as usize);
+        }
+    }
+
+    #[test]
+    fn share_horizon_arms_once_per_advance() {
+        let mut b = MockBackend::new(64, 52);
+        let mut cfg = fast_cfg();
+        cfg.strategy = StrategyKind::Anneal;
+        cfg.horizon = 8;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        tuner.tune_idle(&mut b).unwrap(); // reference bootstrap
+        assert!(tuner.horizon_armed());
+        let (hints, data) = tuner.share_horizon().expect("armed after bootstrap");
+        assert!(!hints.is_empty() && hints.len() <= 8);
+        assert_eq!(data, EvalData::Training, "phase-1 hints carry the training mode");
+        assert!(tuner.share_horizon().is_none(), "hints go out once per advance");
+        assert!(!tuner.horizon_armed());
+        tuner.tune_idle(&mut b).unwrap(); // an advance re-arms the horizon
+        assert!(tuner.horizon_armed());
+        assert!(tuner.share_horizon().is_some());
+        while !tuner.exploration_done() {
+            tuner.tune_idle(&mut b).unwrap();
+        }
+        assert!(tuner.share_horizon().is_none(), "done tuners share nothing");
+
+        // horizon = 0 (the default) never arms.
+        let mut t0 = AutoTuner::new(fast_cfg(), 64, None);
+        assert!(!t0.horizon_armed());
+        assert!(t0.share_horizon().is_none());
+    }
+
+    #[test]
+    fn prefetch_horizon_is_invisible_to_the_explored_trail() {
+        // Probing the horizon before every step must not perturb a single
+        // draw, score bit, or swap decision, for any strategy family —
+        // the invariant that makes idle-worker pre-scoring safe.
+        for kind in StrategyKind::ALL {
+            let (base_t, base_trail) = run_kind(kind, 0, false);
+            let (h_t, h_trail) = run_kind(kind, 8, true);
+            assert_eq!(h_trail, base_trail, "{kind} trail must be bit-identical");
+            assert_eq!(h_t.best().unwrap().0.full_id(), base_t.best().unwrap().0.full_id());
+            assert_eq!(h_t.best().unwrap().1.to_bits(), base_t.best().unwrap().1.to_bits());
+        }
+    }
+
+    #[test]
+    fn transfer_prior_is_ignored_under_adaptive_strategies() {
+        // Priors are an ordering hint for the grid walk; adaptive
+        // strategies decide their own order from live observations.
+        let donor = TuningParams::phase1_default(crate::tunespace::Structural::new(true, 2, 2, 4));
+        for kind in [StrategyKind::Random, StrategyKind::Anneal, StrategyKind::Model] {
+            let mut cfg = fast_cfg();
+            cfg.strategy = kind;
+            let tuner = AutoTuner::with_transfer_prior(cfg, 64, None, donor);
+            assert_eq!(tuner.transfer_prior(), None, "{kind} runs cold");
+        }
     }
 }

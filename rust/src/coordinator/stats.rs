@@ -58,6 +58,18 @@ pub struct TuneStats {
     /// Warm-start outcome, once known (`None` for cold tuners and before
     /// the warm candidate was validated).
     pub warm_outcome: Option<WarmOutcome>,
+    /// Candidates drawn from the search strategy — every `next()` draw the
+    /// tuner actually dequeued for evaluation, across both phases.
+    pub strategy_steps: u64,
+    /// Accepted strategy moves (adaptive strategies only; a grid has no
+    /// move notion and reports 0).
+    pub strategy_accepted: u64,
+    /// Rejected strategy moves (adaptive strategies only).
+    pub strategy_rejected: u64,
+    /// Structural candidates the strategy declared it will never visit —
+    /// non-zero only for pruning strategies (`complete() == false`), and
+    /// only once they decide to stop phase 1 early.
+    pub pruned_candidates: u64,
 }
 
 impl TuneStats {

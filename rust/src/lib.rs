@@ -60,6 +60,17 @@
 //!   one-at-a-time draws) so the tuner can expose its upcoming
 //!   candidates ([`coordinator::AutoTuner::share_pending`],
 //!   [`coordinator::TunerConfig::batch`]) for speculative pre-scoring.
+//!   Adaptive families plug into the same seam
+//!   ([`coordinator::TunerConfig::strategy`]): [`tunespace::RandomSearch`]
+//!   (seeded full-product permutation, the control arm),
+//!   [`tunespace::Anneal`] (simulated annealing over single-dimension
+//!   structural mutations), and [`tunespace::ModelGuided`] (online
+//!   least-squares rank model). The pruning pair relaxes the equivalence
+//!   contract ([`tunespace::SearchStrategy::complete`]) and wins on
+//!   time-to-best; their likely-future draws feed idle engine workers
+//!   across refills ([`tunespace::SearchStrategy::prefetch_horizon`],
+//!   [`coordinator::TunerConfig::horizon`]) without perturbing winner
+//!   selection.
 //! * [`cache`] — a persistent, versioned tuning cache. Outcomes are keyed
 //!   by ([`cache::DeviceFingerprint`], [`cache::TuneKey`]) and stored as
 //!   JSON on disk (`results/tunecache.json` by default, `DEGOAL_TUNECACHE`

@@ -37,6 +37,17 @@
 //!                                   --trace enables telemetry and writes
 //!                                   a Chrome trace-event timeline to
 //!                                   results/trace.json;
+//!                                   --strategy {grid,random,anneal,model}
+//!                                   selects the exploration-order family
+//!                                   (adaptive strategies prune the space
+//!                                   and reach the winner earlier),
+//!                                   --horizon N lets idle workers
+//!                                   pre-score N likely-future candidates
+//!                                   per advance (invisible to winner
+//!                                   selection), --strategy-race races all
+//!                                   four families over the skewed +
+//!                                   hetero workloads and merges mean
+//!                                   time-to-best into results/bench.json;
 //!                                   --scale [--scale-lanes N]
 //!                                   [--scale-clients M] replaces the demo
 //!                                   with the admission/steady-state
@@ -81,8 +92,9 @@ use degoal_rt::service::{
     TuningService,
 };
 use degoal_rt::simulator::{core_by_name, CoreConfig, KernelKind, SharedSimMemo, ALL_SIM_CORES};
+use degoal_rt::tunespace::StrategyKind;
 use degoal_rt::util::cli::Args;
-use degoal_rt::util::json::Json;
+use degoal_rt::util::json::{num, obj, Json};
 use degoal_rt::util::table::{fnum, Table};
 use degoal_rt::workloads::streamcluster::{RunMode, StreamclusterApp, StreamclusterConfig};
 use degoal_rt::workloads::{
@@ -164,6 +176,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
             let steal = args.flag("steal");
             let skewed = args.flag("skewed");
+            let strategy_name = args.get_or("strategy", "grid");
+            let strategy = StrategyKind::parse(strategy_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown strategy {strategy_name:?} (expected one of: grid, random, \
+                     anneal, model)"
+                )
+            })?;
             let knobs = ServiceKnobs {
                 ttl: args.get_opt_u64("cache-ttl")?,
                 near_hints: !args.flag("no-near"),
@@ -171,7 +190,18 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 trace: args.flag("trace"),
                 batch: args.get_usize_min("batch", 1, 1)?,
                 workload: if skewed { skewed_service_workload } else { mixed_service_workload },
+                strategy,
+                horizon: args.get_usize_min("horizon", 0, 0)?,
             };
+
+            if args.flag("strategy-race") {
+                // The race replaces the demo: every strategy family over
+                // the same two workloads, time-to-best side by side.
+                let donor_core = core_by_name(args.get_or("donor-core", "DI-I2"))
+                    .ok_or_else(|| anyhow::anyhow!("unknown donor core"))?;
+                let per_lane = args.get_usize_min("calls", 12_000, 1)?;
+                return run_strategy_race(core, donor_core, per_lane, seed, &knobs);
+            }
 
             if args.flag("scale") {
                 // The stress phase replaces the demo: --calls becomes the
@@ -514,6 +544,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20 service [--core C] [--calls N] [--cache PATH] [--seed S] [--threads N]\n\
                  \x20         [--steal] [--skewed] [--cache-ttl SECS] [--no-near]\n\
                  \x20         [--idle-tune] [--batch K] [--transfer] [--donor-core C] [--trace]\n\
+                 \x20         [--strategy S] [--horizon N] [--strategy-race]\n\
                  \x20         [--scale] [--scale-lanes N] [--scale-clients M]\n\
                  \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
                  \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
@@ -530,6 +561,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     transfer priors with a cold-vs-transfer time-to-best comparison;\n\
                  \x20     --trace enables telemetry (latency percentiles per phase) and\n\
                  \x20     writes a Chrome trace-event timeline to results/trace.json;\n\
+                 \x20     --strategy S picks the exploration-order family for every lane:\n\
+                 \x20     grid (default, the paper's two-phase order), random (seeded-PRNG\n\
+                 \x20     permutation control arm), anneal (simulated annealing), model\n\
+                 \x20     (online least-squares guidance) — the adaptive pair prunes the\n\
+                 \x20     space and reaches its winner in fewer generate calls;\n\
+                 \x20     --horizon N pre-scores up to N likely-future candidates per\n\
+                 \x20     exploration advance into the shared sim memo from idle engine\n\
+                 \x20     workers (bitwise-invisible to winner selection; 0 = off);\n\
+                 \x20     --strategy-race replaces the demo and races all four strategies\n\
+                 \x20     over the skewed + heterogeneous workloads (cold cache, identical\n\
+                 \x20     per-lane budget, --calls per lane, default 12000), printing mean\n\
+                 \x20     generate-calls-to-best and final-score parity per strategy and\n\
+                 \x20     merging the numbers into results/bench.json;\n\
                  \x20     --scale replaces the demo with the admission/steady-state stress\n\
                  \x20     phase: --scale-clients M (default 10x lanes) logical clients over\n\
                  \x20     --scale-lanes N (default 1024) lanes, bursts coalesced into engine\n\
@@ -595,11 +639,25 @@ struct ServiceKnobs {
     batch: usize,
     /// `--skewed` selects the adversarially placed 8-lane workload.
     workload: WorkloadFn,
+    /// `--strategy {grid,random,anneal,model}`: which exploration-order
+    /// family every lane's tuner uses (default grid — the paper's
+    /// two-phase order).
+    strategy: StrategyKind,
+    /// `--horizon N`: cross-refill prefetch lookahead — idle engine
+    /// workers pre-score up to N likely-future candidates per
+    /// exploration advance into the shared sim memo (0 disables).
+    horizon: usize,
 }
 
 fn service_cfg(knobs: &ServiceKnobs) -> ServiceConfig {
     ServiceConfig {
-        tuner: TunerConfig { wake_period: 2e-3, batch: knobs.batch, ..Default::default() },
+        tuner: TunerConfig {
+            wake_period: 2e-3,
+            batch: knobs.batch,
+            strategy: knobs.strategy,
+            horizon: knobs.horizon,
+            ..Default::default()
+        },
         near_hints: knobs.near_hints,
         ..Default::default()
     }
@@ -838,7 +896,13 @@ fn run_scale_demo(
     // Fast tuner wakes: the phase stresses scheduler and cache paths, so
     // lanes should finish exploration in as few calls as possible.
     let cfg = ServiceConfig {
-        tuner: TunerConfig { wake_period: 1e-4, batch: knobs.batch, ..Default::default() },
+        tuner: TunerConfig {
+            wake_period: 1e-4,
+            batch: knobs.batch,
+            strategy: knobs.strategy,
+            horizon: knobs.horizon,
+            ..Default::default()
+        },
         near_hints: knobs.near_hints,
         ..Default::default()
     };
@@ -928,10 +992,19 @@ fn run_scale_demo(
         steady_hits >= lanes_n as u64,
         "steady re-open served only {steady_hits} steady hits for {lanes_n} lanes"
     );
+    // The idle-path TTL sweep bounds the steady table: live winners only
+    // (one per lane), never an unbounded accretion of expired tombstoned
+    // generations.
+    let steady_len = cache.steady_len();
+    anyhow::ensure!(
+        steady_len <= lanes_n,
+        "steady read map holds {steady_len} live entries for {lanes_n} lanes (want \
+         <= one winner per lane; the idle sweep should have pruned the rest)"
+    );
     let warm = reports2.iter().filter(|r| r.warm.is_some()).count();
     println!(
         "\n  steady read path: {steady_hits} steady hits, 0 shard-locked lookups across \
-         {lanes_n} lane opens ({warm} warm); admission: {}",
+         {lanes_n} lane opens ({warm} warm, {steady_len} live steady entries); admission: {}",
         adm2.stats(),
     );
     Ok(())
@@ -1064,6 +1137,202 @@ fn run_transfer_demo(
         cold.explored,
         seeded.explored,
     );
+    Ok(())
+}
+
+/// The `--strategy-race` phase: every [`StrategyKind`] family drives
+/// the same two workloads — the skewed 8-lane streamcluster+vips mix
+/// and the heterogeneous two-device kernel streams — from a cold cache
+/// with an identical per-lane call budget. The only variable is the
+/// exploration *order*, so the mean generate calls to find each lane's
+/// eventual best isolates time-to-best, with final-score parity pinned
+/// against the grid baseline. Results merge into `results/bench.json`
+/// under `"strategy_race"` (the bench grid's own keys are preserved).
+fn run_strategy_race(
+    core: &'static CoreConfig,
+    donor_core: &'static CoreConfig,
+    per_lane: usize,
+    seed: u64,
+    knobs: &ServiceKnobs,
+) -> Result<()> {
+    let donor_core = if donor_core.name == core.name {
+        // Same trick as the transfer demo: the hetero workload needs two
+        // distinct devices.
+        core_by_name(if core.name == "DI-I1" { "DI-I2" } else { "DI-I1" }).unwrap()
+    } else {
+        donor_core
+    };
+    println!(
+        "== strategy race on {} (skewed 8-lane + hetero {}+{} workloads, {} calls/lane) ==",
+        core.name, donor_core.name, core.name, per_lane,
+    );
+
+    struct RaceCell {
+        workload: &'static str,
+        kind: StrategyKind,
+        mean_best_at: f64,
+        generate: u64,
+        pruned: u64,
+        score_sum: f64,
+        done: usize,
+        lanes: usize,
+    }
+    let lanes_for = |which: &str| -> Vec<(TuneKey, SimBackend)> {
+        match which {
+            "skewed" => skewed_service_workload(core, seed),
+            _ => {
+                // Both devices' streams race in one service — a
+                // heterogeneous lane mix, not a transfer scenario.
+                let (mut donor, mut target) = hetero_service_workload(donor_core, core, seed);
+                donor.append(&mut target);
+                donor
+            }
+        }
+    };
+
+    // Race-local driving policy: fast tuner wakes and a pre-recorded
+    // app-time credit so the regeneration governor allows every wake —
+    // the race isolates exploration *order*, and every arm (the control
+    // arm's full-product permutation included) must be able to finish
+    // its plan within the per-lane budget. Same setup as
+    // tests/strategy_race.rs.
+    let mut cells: Vec<RaceCell> = Vec::new();
+    for workload in ["skewed", "hetero"] {
+        for &kind in &StrategyKind::ALL {
+            let lanes = lanes_for(workload);
+            let mut cfg = service_cfg(knobs);
+            cfg.tuner.strategy = kind;
+            cfg.tuner.wake_period = 1e-4;
+            let mut svc: TuningService<SimBackend> =
+                TuningService::with_cache(cfg, TuneCache::new());
+            svc.cache().set_ttl(knobs.ttl);
+            svc.governor().record(0.0, 1e6, 0.0);
+            let mut ids: Vec<LaneId> = Vec::new();
+            for (key, b) in lanes {
+                ids.push(svc.register(key, Some(true), b));
+            }
+            let mut remaining: Vec<usize> = vec![per_lane; ids.len()];
+            let mut left = per_lane * ids.len();
+            while left > 0 {
+                for (i, &l) in ids.iter().enumerate() {
+                    let n = SERVICE_CHUNK.min(remaining[i]);
+                    for _ in 0..n {
+                        svc.app_call(l)?;
+                    }
+                    remaining[i] -= n;
+                    left -= n;
+                }
+            }
+            let stats = svc.stats();
+            let reports: Vec<LaneReport> =
+                ids.iter().filter_map(|&l| svc.lane_report(l)).collect();
+            cells.push(RaceCell {
+                workload,
+                kind,
+                mean_best_at: mean_best_at_generate(&reports),
+                generate: stats.generate_calls,
+                pruned: stats.pruned,
+                score_sum: reports.iter().filter_map(|r| r.best.map(|(_, s)| s)).sum(),
+                done: stats.done_lanes,
+                lanes: stats.lanes,
+            });
+        }
+    }
+
+    let grid_in = |workload: &str| {
+        cells
+            .iter()
+            .find(|c| c.workload == workload && c.kind == StrategyKind::Grid)
+            .expect("the grid arm always runs")
+    };
+    let mut t = Table::new(
+        "strategy race (cold cache, identical per-lane budget; best@gen = mean generate \
+         calls to the eventual winner)",
+        &["workload", "strategy", "best@gen", "generate", "pruned", "done", "ttb vs grid", "score vs grid"],
+    );
+    for c in &cells {
+        let grid = grid_in(c.workload);
+        t.row(vec![
+            c.workload.into(),
+            c.kind.name().into(),
+            fnum(c.mean_best_at, 1),
+            c.generate.to_string(),
+            c.pruned.to_string(),
+            format!("{}/{}", c.done, c.lanes),
+            format!("{:.2}x", grid.mean_best_at / c.mean_best_at.max(1e-9)),
+            format!("{:.4}", c.score_sum / grid.score_sum.max(1e-300)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The race's committed claims, enforced so the CI smoke step has
+    // teeth: adaptive strategies reach their winners in strictly fewer
+    // generate calls than the grid on both workloads, at final-score
+    // parity (within 2 % — the sim landscape is not exactly separable).
+    for c in &cells {
+        let grid = grid_in(c.workload);
+        anyhow::ensure!(
+            c.done == c.lanes,
+            "{} / {}: only {}/{} lanes finished exploration (raise --calls)",
+            c.workload,
+            c.kind.name(),
+            c.done,
+            c.lanes,
+        );
+        if matches!(c.kind, StrategyKind::Anneal | StrategyKind::Model) {
+            anyhow::ensure!(
+                c.mean_best_at < grid.mean_best_at,
+                "{}: {} mean best@gen {:.1} is not strictly below grid's {:.1}",
+                c.workload,
+                c.kind.name(),
+                c.mean_best_at,
+                grid.mean_best_at,
+            );
+            anyhow::ensure!(
+                c.score_sum <= grid.score_sum * 1.02,
+                "{}: {} final scores diverged from grid ({:.3e} vs {:.3e})",
+                c.workload,
+                c.kind.name(),
+                c.score_sum,
+                grid.score_sum,
+            );
+        }
+    }
+
+    // Merge (not clobber) the per-strategy numbers into bench.json so
+    // time-to-best rides alongside the simulator throughput grid.
+    let out = degoal_rt::paths::results_dir().join("bench.json");
+    let mut doc = match std::fs::read_to_string(&out).ok().and_then(|t| Json::parse(&t).ok()) {
+        Some(Json::Obj(m)) => Json::Obj(m),
+        _ => Json::Obj(Default::default()),
+    };
+    if let Json::Obj(m) = &mut doc {
+        let mut by_workload: Vec<(&str, Json)> = Vec::new();
+        for workload in ["skewed", "hetero"] {
+            let per_strategy: Vec<(&str, Json)> = cells
+                .iter()
+                .filter(|c| c.workload == workload)
+                .map(|c| {
+                    (
+                        c.kind.name(),
+                        obj(vec![
+                            ("mean_best_at_generate", num(c.mean_best_at)),
+                            ("generate_calls", num(c.generate as f64)),
+                            ("pruned_candidates", num(c.pruned as f64)),
+                            ("best_score_sum", num(c.score_sum)),
+                        ]),
+                    )
+                })
+                .collect();
+            by_workload.push((workload, obj(per_strategy)));
+        }
+        m.insert("strategy_race".into(), obj(by_workload));
+    }
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, doc.to_string())?;
+    println!("  per-strategy time-to-best merged into {}", out.display());
     Ok(())
 }
 

@@ -50,6 +50,9 @@ pub enum EventKind {
     /// One scheduling quantum ran on a worker: `calls` lane steps over
     /// `dur_us` wall microseconds (the trace's span primitive).
     Quantum { calls: u32, dur_us: u64 },
+    /// An adaptive search strategy decided on a proposed move
+    /// (Metropolis accept/reject, model-guided improvement or miss).
+    StrategyMove { accepted: bool },
 }
 
 impl EventKind {
@@ -68,6 +71,7 @@ impl EventKind {
             EventKind::InnerFold => "inner_fold",
             EventKind::MemoHit => "memo_hit",
             EventKind::Quantum { .. } => "quantum",
+            EventKind::StrategyMove { .. } => "strategy_move",
         }
     }
 }

@@ -82,10 +82,14 @@ pub enum Counter {
     /// Flush attempts the admission layer deferred under backpressure
     /// (governor saturated and observed tail latency over the ceiling).
     AdmissionDeferrals,
+    /// Candidates drawn from lanes' search strategies for evaluation.
+    StrategySteps,
+    /// Structural candidates pruning strategies declared never-visited.
+    PrunedCandidates,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 23] = [
+    pub const ALL: [Counter; 25] = [
         Counter::AppCalls,
         Counter::GenerateCalls,
         Counter::Swaps,
@@ -109,6 +113,8 @@ impl Counter {
         Counter::AdmissionBatches,
         Counter::AdmissionCoalesced,
         Counter::AdmissionDeferrals,
+        Counter::StrategySteps,
+        Counter::PrunedCandidates,
     ];
 
     /// Stable snake_case name — the JSON key, never rename.
@@ -137,6 +143,8 @@ impl Counter {
             Counter::AdmissionBatches => "admission_batches",
             Counter::AdmissionCoalesced => "admission_coalesced",
             Counter::AdmissionDeferrals => "admission_deferrals",
+            Counter::StrategySteps => "strategy_steps",
+            Counter::PrunedCandidates => "pruned_candidates",
         }
     }
 

@@ -89,6 +89,9 @@ fn trace_event(tid: usize, ev: &Event) -> Json {
                         warm.map_or(Json::Null, |h| s(&format!("{h:?}").to_lowercase())),
                     ));
                 }
+                EventKind::StrategyMove { accepted } => {
+                    args.push(("accepted", num(accepted as u8 as f64)));
+                }
                 _ => {}
             }
             obj(vec![

@@ -466,6 +466,15 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
                     // worker does not spin.
                 }
             }
+            // Last idle chore before sleeping: sweep TTL-expired winners
+            // off the lock-free steady read path, so a long-running
+            // engine's steady map tracks its live working set. A
+            // guaranteed no-op without a TTL (one atomic load); with one,
+            // the sweep takes only the steady writer mutex — which never
+            // waits on the scheduler lock, so holding `sched` across it
+            // cannot invert — and the condvar wait below is entered
+            // without ever releasing `sched`, so no wakeup can be lost.
+            shared.cache.sweep_steady_expired();
             sched = shared.work.wait(sched).expect("engine scheduler lock");
             continue;
         };

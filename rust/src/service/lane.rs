@@ -50,6 +50,21 @@ impl ScoreTask {
     }
 }
 
+/// Pre-advance snapshot of the tuner counters a lane reports deltas of —
+/// governor inputs (overhead/app/gain) and telemetry (generates, swaps,
+/// strategy steps, move decisions, pruning).
+struct TunerProbe {
+    overhead: f64,
+    app_time: f64,
+    gained: f64,
+    generate_calls: u64,
+    swaps: u32,
+    strategy_steps: u64,
+    strategy_accepted: u64,
+    strategy_rejected: u64,
+    pruned: u64,
+}
+
 pub(crate) struct Lane<B: Backend> {
     pub(crate) id: usize,
     pub(crate) key: TuneKey,
@@ -185,17 +200,18 @@ impl<B: Backend> Lane<B> {
             self.note_gate(allowed, governor, rec);
             self.backend.set_recorder(rec.stamped(self.id as u32, self.tuner.now()));
         }
-        let before = {
-            let s = &self.tuner.stats;
-            (s.overhead, s.app_time, s.gained, s.generate_calls, s.swaps)
-        };
+        let before = self.probe();
         let dt = self.tuner.app_call(&mut self.backend)?;
         {
             let s = &self.tuner.stats;
-            governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
+            governor.record(
+                s.overhead - before.overhead,
+                s.app_time - before.app_time,
+                s.gained - before.gained,
+            );
         }
         rec.call(dt);
-        self.note_tuner_events(before.3, before.4, rec);
+        self.note_tuner_events(&before, rec);
         self.propagate_outcomes(cache, rec);
         Ok(dt)
     }
@@ -226,35 +242,52 @@ impl<B: Backend> Lane<B> {
         if !allowed {
             return Ok(false);
         }
-        let before = {
-            let s = &self.tuner.stats;
-            (s.overhead, s.app_time, s.gained, s.generate_calls, s.swaps)
-        };
+        let before = self.probe();
         let event = self.tuner.tune_idle(&mut self.backend)?;
         {
             let s = &self.tuner.stats;
-            governor.record(s.overhead - before.0, s.app_time - before.1, s.gained - before.2);
+            governor.record(
+                s.overhead - before.overhead,
+                s.app_time - before.app_time,
+                s.gained - before.gained,
+            );
         }
-        self.note_tuner_events(before.3, before.4, rec);
+        self.note_tuner_events(&before, rec);
         self.propagate_outcomes(cache, rec);
         Ok(event != crate::coordinator::StepEvent::Idle)
     }
 
     /// Hand out a speculative-scoring task for the tuner's queued-but-
-    /// unevaluated candidates ([`TunerConfig::batch`] > 1), when the
-    /// backend can score detached. `None` when there is nothing pending,
-    /// the hints were already handed out, or the backend has no shared
-    /// measurement cache to prewarm. Pure acceleration: the tuner still
-    /// evaluates every queued candidate itself, in draw order, so the
-    /// winner is identical whether the task runs, races, or is dropped.
+    /// unevaluated candidates ([`TunerConfig::batch`] > 1) *and* its
+    /// cross-refill prefetch horizon ([`TunerConfig::horizon`] > 0), when
+    /// the backend can score detached. `None` when there is nothing to
+    /// hint, the hints were already handed out, or the backend has no
+    /// shared measurement cache to prewarm. Pure acceleration: the tuner
+    /// still evaluates every candidate it draws itself, in draw order, so
+    /// the winner is identical whether the task runs, races, or is
+    /// dropped — horizon hints that are never drawn merely warmed a cache
+    /// line nobody read.
     ///
     /// [`TunerConfig::batch`]: crate::coordinator::TunerConfig::batch
+    /// [`TunerConfig::horizon`]: crate::coordinator::TunerConfig::horizon
     pub(crate) fn score_hints(&mut self) -> Option<ScoreTask> {
-        if self.tuner.pending_len() == 0 {
+        if self.tuner.pending_len() == 0 && !self.tuner.horizon_armed() {
             return None;
         }
         let scorer = self.backend.speculative_scorer()?;
-        let (cands, data) = self.tuner.share_pending()?;
+        let mut cands: Vec<TuningParams> = Vec::new();
+        let mut data = None;
+        if let Some((c, d)) = self.tuner.share_pending() {
+            cands.extend(c);
+            data = Some(d);
+        }
+        if let Some((c, d)) = self.tuner.share_horizon() {
+            // Queue and horizon share the tuner's evaluation mode, so one
+            // task carries both hint kinds under one data choice.
+            cands.extend(c);
+            data.get_or_insert(d);
+        }
+        let data = data?;
         Some(ScoreTask { scorer, cands, data })
     }
 
@@ -272,22 +305,54 @@ impl<B: Backend> Lane<B> {
         self.gate_open = allowed;
     }
 
-    /// Derive generate/swap telemetry from the tuner's own counters —
-    /// the tuner stays observation-free; the lane diffs its stats around
-    /// each advance.
-    fn note_tuner_events(&self, gen_before: u64, swaps_before: u32, rec: &Recorder) {
+    /// Snapshot of the tuner counters the lane diffs around each advance
+    /// — governor accounting deltas plus telemetry deltas.
+    fn probe(&self) -> TunerProbe {
+        let s = &self.tuner.stats;
+        TunerProbe {
+            overhead: s.overhead,
+            app_time: s.app_time,
+            gained: s.gained,
+            generate_calls: s.generate_calls,
+            swaps: s.swaps,
+            strategy_steps: s.strategy_steps,
+            strategy_accepted: s.strategy_accepted,
+            strategy_rejected: s.strategy_rejected,
+            pruned: s.pruned_candidates,
+        }
+    }
+
+    /// Derive generate/swap/strategy telemetry from the tuner's own
+    /// counters — the tuner stays observation-free; the lane diffs its
+    /// stats around each advance.
+    fn note_tuner_events(&self, before: &TunerProbe, rec: &Recorder) {
         if !rec.enabled() {
             return;
         }
         let s = &self.tuner.stats;
         let vt = self.tuner.now();
-        if s.generate_calls > gen_before {
-            rec.count(Counter::GenerateCalls, s.generate_calls - gen_before);
+        if s.generate_calls > before.generate_calls {
+            rec.count(Counter::GenerateCalls, s.generate_calls - before.generate_calls);
             rec.event(self.id as u32, vt, EventKind::GenerateCall);
         }
-        if s.swaps > swaps_before {
-            rec.count(Counter::Swaps, (s.swaps - swaps_before) as u64);
+        if s.swaps > before.swaps {
+            rec.count(Counter::Swaps, (s.swaps - before.swaps) as u64);
             rec.event(self.id as u32, vt, EventKind::Swap);
+        }
+        if s.strategy_steps > before.strategy_steps {
+            rec.count(Counter::StrategySteps, s.strategy_steps - before.strategy_steps);
+        }
+        if s.pruned_candidates > before.pruned {
+            rec.count(Counter::PrunedCandidates, s.pruned_candidates - before.pruned);
+        }
+        // Adaptive move decisions: at most one accept *or* reject per
+        // advance (adaptive refills are width-1), so a delta on either
+        // side is one journal event.
+        if s.strategy_accepted > before.strategy_accepted {
+            rec.event(self.id as u32, vt, EventKind::StrategyMove { accepted: true });
+        }
+        if s.strategy_rejected > before.strategy_rejected {
+            rec.event(self.id as u32, vt, EventKind::StrategyMove { accepted: false });
         }
     }
 
@@ -369,6 +434,10 @@ impl<B: Backend> Lane<B> {
             generate_calls: s.generate_calls,
             best_at_generate: s.best_at_generate,
             swaps: s.swaps,
+            strategy_steps: s.strategy_steps,
+            strategy_accepted: s.strategy_accepted,
+            strategy_rejected: s.strategy_rejected,
+            pruned: s.pruned_candidates,
             steals: 0,
             idle_steps: 0,
         }
@@ -393,9 +462,19 @@ pub struct LaneReport {
     pub explored: usize,
     pub generate_calls: u64,
     /// `generate_calls` count at which the lane's current best was found
-    /// — the time-to-best metric the cross-device transfer prior improves.
+    /// — the time-to-best metric the cross-device transfer prior and the
+    /// adaptive strategies both exist to minimise.
     pub best_at_generate: Option<u64>,
     pub swaps: u32,
+    /// Candidates the lane's strategy handed to the tuner for evaluation.
+    pub strategy_steps: u64,
+    /// Accepted adaptive-strategy moves (0 for grid strategies).
+    pub strategy_accepted: u64,
+    /// Rejected adaptive-strategy moves (0 for grid strategies).
+    pub strategy_rejected: u64,
+    /// Structural candidates the strategy pruned — declared never-visited
+    /// (0 for full-coverage strategies).
+    pub pruned: u64,
     /// Times the lane's ownership was transferred to an idle worker by
     /// the work-stealing engine (0 in sequential mode and under static
     /// placement). Scheduler-level: the engine fills it in — the lane

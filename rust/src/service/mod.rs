@@ -143,6 +143,17 @@ pub struct ServiceStats {
     pub explored: usize,
     pub generate_calls: u64,
     pub swaps: u32,
+    /// Candidates drawn from lanes' search strategies for evaluation.
+    pub strategy_steps: u64,
+    /// Accepted adaptive-strategy moves across lanes (0 under grid
+    /// strategies, which have no move notion).
+    pub strategy_accepted: u64,
+    /// Rejected adaptive-strategy moves across lanes.
+    pub strategy_rejected: u64,
+    /// Structural candidates lanes' strategies declared never-visited —
+    /// the pruning the adaptive strategies buy time-to-best with (0 under
+    /// full-coverage strategies).
+    pub pruned: u64,
     /// Total lane migrations by the work-stealing engine (0 in
     /// sequential mode and under static placement).
     pub steals: u64,
@@ -191,6 +202,10 @@ impl ServiceStats {
             st.explored += r.explored;
             st.generate_calls += r.generate_calls;
             st.swaps += r.swaps;
+            st.strategy_steps += r.strategy_steps;
+            st.strategy_accepted += r.strategy_accepted;
+            st.strategy_rejected += r.strategy_rejected;
+            st.pruned += r.pruned;
             st.steals += r.steals as u64;
             st.idle_steps += r.idle_steps;
         }
@@ -247,14 +262,19 @@ impl fmt::Display for ServiceStats {
         }
         write!(
             f,
-            " explored={} generate={} swaps={} steals={} idle_steps={} {}",
-            self.explored,
-            self.generate_calls,
-            self.swaps,
-            self.steals,
-            self.idle_steps,
-            self.cache.stats(),
-        )
+            " explored={} generate={} swaps={} steals={} idle_steps={}",
+            self.explored, self.generate_calls, self.swaps, self.steals, self.idle_steps,
+        )?;
+        // Strategy-level movement only exists under adaptive strategies;
+        // keep the grid-mode line unchanged.
+        if self.strategy_accepted + self.strategy_rejected + self.pruned > 0 {
+            write!(
+                f,
+                " moves[acc={} rej={} pruned={}]",
+                self.strategy_accepted, self.strategy_rejected, self.pruned,
+            )?;
+        }
+        write!(f, " {}", self.cache.stats())
     }
 }
 

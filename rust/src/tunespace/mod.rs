@@ -11,8 +11,13 @@
 //! Exploration planning is pluggable ([`strategy::SearchStrategy`]): the
 //! paper's two-phase walk ([`TwoPhaseGrid`]) is the default, a
 //! cross-device transfer prior permutes it around a sibling device's
-//! winner ([`PriorSeeded`]), and the offline baseline enumerates
-//! exhaustively ([`StaticGrid`]).
+//! winner ([`PriorSeeded`]), the offline baseline enumerates
+//! exhaustively ([`StaticGrid`]), and three adaptive strategies race it
+//! — [`RandomSearch`] (seeded permutation control arm), [`Anneal`]
+//! (simulated annealing over structure), and [`ModelGuided`] (online
+//! least-squares guidance); the latter two *prune* and are marked by
+//! `SearchStrategy::complete() == false` (relaxed equivalence contract,
+//! see the `strategy` module docs).
 
 pub mod params;
 pub mod phases;
@@ -22,4 +27,6 @@ pub mod strategy;
 pub use params::{Structural, TuningParams};
 pub use phases::{Phase, TwoPhaseGrid};
 pub use space::Space;
-pub use strategy::{PriorSeeded, SearchStrategy, StaticGrid};
+pub use strategy::{
+    Anneal, ModelGuided, PriorSeeded, RandomSearch, SearchStrategy, StaticGrid, StrategyKind,
+};

@@ -210,6 +210,22 @@ impl TwoPhaseGrid {
         out
     }
 
+    /// The next `k` candidates of the *current* phase without drawing
+    /// them — the speculative pool's prefetch-horizon view. Phase 2
+    /// cannot be previewed before the transition (it is built from the
+    /// evaluated winner), so the horizon never crosses a phase boundary.
+    pub fn upcoming(&self, k: usize) -> Vec<TuningParams> {
+        match self.phase {
+            Phase::One => self.phase1[self.idx1..]
+                .iter()
+                .take(k)
+                .map(|s| TuningParams::phase1_default(*s))
+                .collect(),
+            Phase::Two => self.phase2[self.idx2..].iter().take(k).copied().collect(),
+            Phase::Done => Vec::new(),
+        }
+    }
+
     /// Remaining candidates (upper bound).
     pub fn remaining(&self) -> usize {
         match self.phase {

@@ -25,10 +25,91 @@
 //!   [`baselines::static_search`](crate::baselines::static_search) and
 //!   Figure 1, on the same trait so there is exactly one exploration
 //!   code path in the repo.
+//! * [`RandomSearch`] — a seeded-PRNG permutation of the full
+//!   structural × code-generation product: the control arm for strategy
+//!   races. Full coverage, no feedback.
+//! * [`Anneal`] — simulated-annealing / (1+1)-evolutionary walk over the
+//!   structural space (neighbourhood = single-dimension mutation), with
+//!   the paper's phase-2 sweep bolted on after an early stop.
+//! * [`ModelGuided`] — a cheap online least-squares rank model over
+//!   structural features, explored best-first with an ε-greedy
+//!   exploration bonus and retrained incrementally per observation.
+//!
+//! # The `complete()` contract
+//!
+//! Strategies split into two families, distinguished by
+//! [`SearchStrategy::complete`]:
+//!
+//! * **Full-coverage** (`complete() == true`): the emitted candidate set
+//!   is a fixed enumeration — equivalence tests may assert exact
+//!   set-equality against the space, and the batched-drain sequence MUST
+//!   equal the one-at-a-time drain ([`TwoPhaseGrid`], [`PriorSeeded`],
+//!   [`StaticGrid`], [`RandomSearch`]).
+//! * **Pruning** (`complete() == false`): the strategy may stop early and
+//!   never emit part of the space. The relaxed contract is: every visited
+//!   candidate lies in the full space, no candidate repeats, the tuner
+//!   still terminates and swaps correctly, and the winner is the best of
+//!   the *visited* set. Because each draw depends on the previous
+//!   observation, pruning strategies cap [`SearchStrategy::next_batch`]
+//!   at one candidate; their speculative-pool work comes from
+//!   [`SearchStrategy::prefetch_horizon`] instead — a non-committal
+//!   lookahead that idle workers may pre-score into the simulation memo
+//!   without affecting which candidates are actually drawn
+//!   (bitwise-invisible to winner selection).
 
-use super::params::{Structural, TuningParams};
+use std::collections::HashMap;
+
+use super::params::{Structural, TuningParams, COLD_UF, HOT_UF, VECT_LEN};
 use super::phases::{Phase, TwoPhaseGrid};
 use super::space::Space;
+use crate::util::rng::Rng;
+
+/// Which [`SearchStrategy`] a tuner should be built with — the
+/// CLI/config-level selector (`degoal-rt service --strategy ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StrategyKind {
+    /// The paper's two-phase grid (§3.3) — the default, and the only kind
+    /// that composes with cross-device transfer priors ([`PriorSeeded`]).
+    #[default]
+    Grid,
+    /// Seeded-PRNG permutation of the full space ([`RandomSearch`]).
+    Random,
+    /// Simulated annealing over structure ([`Anneal`]) — prunes.
+    Anneal,
+    /// Online least-squares model guidance ([`ModelGuided`]) — prunes.
+    Model,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] =
+        [StrategyKind::Grid, StrategyKind::Random, StrategyKind::Anneal, StrategyKind::Model];
+
+    /// Parse the CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s {
+            "grid" => Some(StrategyKind::Grid),
+            "random" => Some(StrategyKind::Random),
+            "anneal" => Some(StrategyKind::Anneal),
+            "model" => Some(StrategyKind::Model),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Grid => "grid",
+            StrategyKind::Random => "random",
+            StrategyKind::Anneal => "anneal",
+            StrategyKind::Model => "model",
+        }
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// A source of exploration candidates with best-so-far feedback.
 ///
@@ -43,10 +124,15 @@ pub trait SearchStrategy: Send {
 
     /// Up to `k` next candidates in draw order — the batched form of
     /// [`SearchStrategy::next`] behind the parallel candidate-evaluation
-    /// pool. The returned sequence MUST equal what `k` successive `next`
-    /// calls would emit given the same `best`; winner selection downstream
+    /// pool. For full-coverage strategies (`complete() == true`) the
+    /// returned sequence MUST equal what `k` successive `next` calls
+    /// would emit given the same `best`; winner selection downstream
     /// depends on that (it is a pure function of the candidate sequence,
-    /// not of evaluation arrival order).
+    /// not of evaluation arrival order). Pruning strategies
+    /// (`complete() == false`) decide each draw from the previous
+    /// observation, so they cap the batch at one candidate — the
+    /// speculative pool reaches their future via
+    /// [`SearchStrategy::prefetch_horizon`] instead.
     ///
     /// The default delegates to `next` but stops after any draw that
     /// changes [`SearchStrategy::phase`]: past a phase boundary `best`
@@ -70,6 +156,45 @@ pub trait SearchStrategy: Send {
         out
     }
 
+    /// Feedback: `cand` was generated and evaluated at `score` (seconds
+    /// per call — lower is better). Called by the tuner after every
+    /// candidate evaluation, in draw order. Adaptive strategies fold the
+    /// observation into their state (accept/reject a move, retrain a
+    /// model); enumerations ignore it. The default is a no-op.
+    fn observe(&mut self, _cand: TuningParams, _score: f64) {}
+
+    /// `true` when this strategy emits the full candidate set (exact
+    /// set-equality equivalence contract); `false` when it may prune
+    /// (relaxed contract — see the module docs). Full-coverage is the
+    /// default.
+    fn complete(&self) -> bool {
+        true
+    }
+
+    /// A *non-committal* lookahead: up to `k` candidates the strategy
+    /// considers likely future draws, for idle workers to pre-score into
+    /// the shared simulation memo across refills. Must not mutate the
+    /// strategy (`&self`) and must have no effect on what `next` later
+    /// returns — pre-scoring is pure cache population, so the horizon is
+    /// bitwise-invisible to winner selection. The hints need not be
+    /// drawn later and need not be exhaustive. Default: empty.
+    fn prefetch_horizon(&self, _k: usize) -> Vec<TuningParams> {
+        Vec::new()
+    }
+
+    /// `(accepted, rejected)` internal move decisions made so far by an
+    /// adaptive strategy (Metropolis accepts, model improvements).
+    /// Enumerations report `(0, 0)`.
+    fn move_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Candidates this strategy decided never to emit (known only after
+    /// an early stop); 0 for full-coverage strategies.
+    fn pruned(&self) -> u64 {
+        0
+    }
+
     /// Which exploration phase the strategy is in — drives the §3.4
     /// evaluation-mode switch (training data in phase 1, real data in
     /// phase 2).
@@ -88,6 +213,10 @@ impl SearchStrategy for TwoPhaseGrid {
         TwoPhaseGrid::next_batch(self, best, k)
     }
 
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        TwoPhaseGrid::upcoming(self, k)
+    }
+
     fn phase(&self) -> Phase {
         TwoPhaseGrid::phase(self)
     }
@@ -103,6 +232,13 @@ impl SearchStrategy for TwoPhaseGrid {
 /// unseeded [`TwoPhaseGrid`]'s (priors may only permute, never add or
 /// drop), so coverage and the final winner are unchanged — only
 /// time-to-best improves when the sibling device agrees.
+///
+/// All trait methods delegate to the inner [`TwoPhaseGrid`], so the
+/// solo-phase-transition-draw rule of [`TwoPhaseGrid::next_batch`] holds
+/// verbatim for seeded plans: the batch that crosses the phase-1 →
+/// phase-2 boundary contains exactly the transition draw, because the
+/// seeding only permutes *within* each phase and never moves the
+/// boundary itself.
 #[derive(Debug, Clone)]
 pub struct PriorSeeded {
     inner: TwoPhaseGrid,
@@ -135,6 +271,10 @@ impl SearchStrategy for PriorSeeded {
 
     fn next_batch(&mut self, best: Option<TuningParams>, k: usize) -> Vec<TuningParams> {
         self.inner.next_batch(best, k)
+    }
+
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        self.inner.upcoming(k)
     }
 
     fn phase(&self) -> Phase {
@@ -205,6 +345,10 @@ impl SearchStrategy for StaticGrid {
         p
     }
 
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        self.candidates[self.idx..].iter().take(k).copied().collect()
+    }
+
     fn phase(&self) -> Phase {
         if self.idx < self.candidates.len() {
             Phase::One
@@ -218,9 +362,704 @@ impl SearchStrategy for StaticGrid {
     }
 }
 
+/// Seeded-PRNG permutation of the *full* structural × code-generation
+/// product — the control arm for strategy races. Full coverage
+/// (`complete() == true`), zero feedback: every draw was fixed at
+/// construction, so two instances with the same `(length, ve_filter,
+/// seed)` emit identical sequences. Like [`StaticGrid`] it stays in
+/// [`Phase::One`] throughout (every candidate is evaluated on training
+/// data; the tuner re-scores the winner on real data when exploration
+/// finishes).
+#[derive(Debug, Clone)]
+pub struct RandomSearch {
+    candidates: Vec<TuningParams>,
+    idx: usize,
+}
+
+impl RandomSearch {
+    pub fn new(length: u32, ve_filter: Option<bool>, seed: u64) -> RandomSearch {
+        let mut candidates = Vec::new();
+        for s in Space::new(length)
+            .valid_structural()
+            .into_iter()
+            .filter(|s| ve_filter.map(|ve| s.ve == ve).unwrap_or(true))
+        {
+            candidates.extend(Space::phase2_grid(s));
+        }
+        // Domain-separate from other consumers of the same seed.
+        let mut rng = Rng::new(seed ^ 0x52414E44);
+        rng.shuffle(&mut candidates);
+        RandomSearch { candidates, idx: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.candidates.is_empty()
+    }
+}
+
+impl SearchStrategy for RandomSearch {
+    fn next(&mut self, _best: Option<TuningParams>) -> Option<TuningParams> {
+        let p = self.candidates.get(self.idx).copied();
+        self.idx += p.is_some() as usize;
+        p
+    }
+
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        self.candidates[self.idx..].iter().take(k).copied().collect()
+    }
+
+    fn phase(&self) -> Phase {
+        if self.idx < self.candidates.len() {
+            Phase::One
+        } else {
+            Phase::Done
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.candidates.len() - self.idx
+    }
+}
+
+/// Shared machinery for the pruning strategies ([`Anneal`],
+/// [`ModelGuided`]): the phase-1 structural pool with visited tracking
+/// and an early-stop rule (patience on steps-since-improvement or pool
+/// exhaustion), followed by the paper's phase-2 code-generation sweep
+/// around the winning structure — identical in shape to
+/// [`TwoPhaseGrid`]'s phase 2, so the tuner's §3.4 evaluation-mode
+/// switch (training data in phase 1, real data in phase 2) behaves the
+/// same for every strategy family.
+#[derive(Debug, Clone)]
+struct AdaptiveCore {
+    pool: Vec<Structural>,
+    visited: Vec<bool>,
+    by_vid: HashMap<u32, usize>,
+    emitted: usize,
+    /// The last emitted phase-1 candidate still awaiting its score.
+    awaiting: Option<(usize, TuningParams)>,
+    /// Pool index of the best-scoring structure observed so far.
+    best_idx: Option<usize>,
+    best_seen: f64,
+    /// Consecutive non-improving phase-1 observations.
+    stall: u32,
+    patience: u32,
+    phase: Phase,
+    phase2: Vec<TuningParams>,
+    idx2: usize,
+    pruned: u64,
+    accepted: u64,
+    rejected: u64,
+}
+
+impl AdaptiveCore {
+    fn new(length: u32, ve_filter: Option<bool>, patience: u32) -> AdaptiveCore {
+        let pool: Vec<Structural> = Space::new(length)
+            .valid_structural()
+            .into_iter()
+            .filter(|s| ve_filter.map(|ve| s.ve == ve).unwrap_or(true))
+            .collect();
+        let by_vid = pool.iter().enumerate().map(|(i, s)| (s.vid(), i)).collect();
+        AdaptiveCore {
+            visited: vec![false; pool.len()],
+            by_vid,
+            pool,
+            emitted: 0,
+            awaiting: None,
+            best_idx: None,
+            best_seen: f64::INFINITY,
+            stall: 0,
+            patience,
+            phase: Phase::One,
+            phase2: Vec::new(),
+            idx2: 0,
+            pruned: 0,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    fn pool_exhausted(&self) -> bool {
+        self.emitted >= self.pool.len()
+    }
+
+    fn stalled(&self) -> bool {
+        self.stall >= self.patience
+    }
+
+    /// Mark pool index `idx` visited and emit its phase-1 candidate.
+    fn emit(&mut self, idx: usize) -> TuningParams {
+        debug_assert!(!self.visited[idx]);
+        self.visited[idx] = true;
+        self.emitted += 1;
+        let p = TuningParams::phase1_default(self.pool[idx]);
+        self.awaiting = Some((idx, p));
+        p
+    }
+
+    /// Fix the winning structure and start the phase-2 sweep (the
+    /// never-emitted remainder of the pool is recorded as pruned). With
+    /// no best at all (empty pool), the strategy is simply done.
+    fn transition(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        self.awaiting = None;
+        let Some(best) = best else {
+            self.phase = Phase::Done;
+            return None;
+        };
+        self.pruned = (self.pool.len() - self.emitted) as u64;
+        let default = TuningParams::phase1_default(best.s);
+        self.phase2 = Space::phase2_grid(best.s)
+            .into_iter()
+            .filter(|p| *p != default) // already evaluated in phase 1
+            .collect();
+        self.phase = Phase::Two;
+        self.next_phase2()
+    }
+
+    fn next_phase2(&mut self) -> Option<TuningParams> {
+        if self.idx2 < self.phase2.len() {
+            let p = self.phase2[self.idx2];
+            self.idx2 += 1;
+            Some(p)
+        } else {
+            self.phase = Phase::Done;
+            None
+        }
+    }
+
+    /// Fold a phase-1 observation: returns `Some((pool_idx, improved))`
+    /// when `cand` is the awaited candidate, `None` for anything else
+    /// (phase-2 scores, re-scores of earlier candidates).
+    fn note(&mut self, cand: TuningParams, score: f64) -> Option<(usize, bool)> {
+        if self.phase != Phase::One {
+            return None;
+        }
+        let (idx, awaited) = self.awaiting?;
+        if awaited != cand {
+            return None;
+        }
+        self.awaiting = None;
+        let improved = score < self.best_seen;
+        if improved {
+            self.best_seen = score;
+            self.best_idx = Some(idx);
+            self.stall = 0;
+        } else {
+            self.stall += 1;
+        }
+        Some((idx, improved))
+    }
+
+    /// Local-optimality certificate before an early stop: the first
+    /// unvisited single-dimension neighbour of the incumbent best
+    /// structure, in a fixed dimension order. Pruning strategies drain
+    /// these ("polish") once patience runs out, so the structure they
+    /// fix for phase 2 is a coordinate-local minimum — on landscapes
+    /// unimodal per dimension (the paper's separable unroll/vectorise
+    /// penalties), that IS the pool's global minimum, which is what
+    /// makes pruning safe for final-score parity with the full grid.
+    fn polish_target(&self) -> Option<usize> {
+        let bi = self.best_idx?;
+        let s = self.pool[bi];
+        let mut neighbours: Vec<Structural> = Vec::with_capacity(7);
+        let mut flip = s;
+        flip.ve = !flip.ve;
+        neighbours.push(flip);
+        for up in [false, true] {
+            if let Some(v) = step_in(&VECT_LEN, s.vect_len, up) {
+                let mut m = s;
+                m.vect_len = v;
+                neighbours.push(m);
+            }
+            if let Some(v) = step_in(&HOT_UF, s.hot_uf, up) {
+                let mut m = s;
+                m.hot_uf = v;
+                neighbours.push(m);
+            }
+            if let Some(v) = step_in(&COLD_UF, s.cold_uf, up) {
+                let mut m = s;
+                m.cold_uf = v;
+                neighbours.push(m);
+            }
+        }
+        neighbours
+            .into_iter()
+            .filter_map(|m| self.by_vid.get(&m.vid()).copied())
+            .find(|&i| !self.visited[i])
+    }
+
+    fn remaining(&self) -> usize {
+        match self.phase {
+            Phase::One => self.pool.len() - self.emitted + 11,
+            Phase::Two => self.phase2.len() - self.idx2,
+            Phase::Done => 0,
+        }
+    }
+
+    fn unvisited(&self) -> Vec<usize> {
+        (0..self.pool.len()).filter(|&i| !self.visited[i]).collect()
+    }
+}
+
+/// Step to the neighbouring value of `v` in `arr` (single-dimension
+/// mutation move); `None` at the range edge.
+fn step_in(arr: &[u32], v: u32, up: bool) -> Option<u32> {
+    let i = arr.iter().position(|&x| x == v)?;
+    if up {
+        arr.get(i + 1).copied()
+    } else {
+        i.checked_sub(1).and_then(|j| arr.get(j).copied())
+    }
+}
+
+/// Propose an unvisited single-dimension mutation of `s`: flip VE or
+/// step vectLen/hotUF/coldUF to a neighbouring value, up to 16 attempts
+/// (holes and already-visited neighbours are rejected in place).
+fn mutate(core: &AdaptiveCore, rng: &mut Rng, s: Structural) -> Option<usize> {
+    for _ in 0..16 {
+        let dim = rng.below(4);
+        let up = rng.below(2) == 0;
+        let mut m = s;
+        match dim {
+            0 => m.ve = !m.ve,
+            1 => match step_in(&VECT_LEN, m.vect_len, up) {
+                Some(v) => m.vect_len = v,
+                None => continue,
+            },
+            2 => match step_in(&HOT_UF, m.hot_uf, up) {
+                Some(v) => m.hot_uf = v,
+                None => continue,
+            },
+            _ => match step_in(&COLD_UF, m.cold_uf, up) {
+                Some(v) => m.cold_uf = v,
+                None => continue,
+            },
+        }
+        if let Some(&i) = core.by_vid.get(&m.vid()) {
+            if !core.visited[i] {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+fn random_unvisited(core: &AdaptiveCore, rng: &mut Rng) -> Option<usize> {
+    let unv = core.unvisited();
+    if unv.is_empty() {
+        None
+    } else {
+        Some(unv[rng.below(unv.len() as u64) as usize])
+    }
+}
+
+/// How many consecutive non-improving phase-1 evaluations a pruning
+/// strategy tolerates before fixing the best structure seen and moving
+/// to phase 2. Each phase-1 evaluation is one `generate` call, so
+/// steps-since-improvement is the online proxy for
+/// `TuneStats::best_at_generate` — the patience/temperature schedule is
+/// keyed off exactly the quantity the race measures.
+const ADAPTIVE_PATIENCE: u32 = 24;
+
+/// Simulated annealing / (1+1)-evolutionary search over the structural
+/// space — prunes (`complete() == false`).
+///
+/// Phase 1 walks the structural pool by single-dimension mutation from
+/// the current configuration; a proposal is always evaluated (never
+/// re-drawn), and the *current* point moves by a Metropolis rule: strict
+/// improvements always accepted, worsenings accepted with probability
+/// `exp(-rel / T)` where `rel` is the relative slowdown and the
+/// temperature `T = t0 / (1 + stall)` cools with steps-since-improvement
+/// (the online stand-in for `best_at_generate` — see
+/// [`ADAPTIVE_PATIENCE`]). When the mutation neighbourhood is exhausted
+/// the walk restarts from a random unvisited point, so the search never
+/// wedges on a local optimum. After [`ADAPTIVE_PATIENCE`] stalls (or
+/// pool exhaustion) it stops early and sweeps phase 2 around the best
+/// structure seen.
+#[derive(Debug, Clone)]
+pub struct Anneal {
+    core: AdaptiveCore,
+    rng: Rng,
+    /// Pool index + score of the annealing walk's current point.
+    current: Option<(usize, f64)>,
+    t0: f64,
+}
+
+impl Anneal {
+    pub fn new(length: u32, ve_filter: Option<bool>, seed: u64) -> Anneal {
+        Anneal {
+            core: AdaptiveCore::new(length, ve_filter, ADAPTIVE_PATIENCE),
+            rng: Rng::new(seed ^ 0x414E4E4C),
+            current: None,
+            t0: 0.25,
+        }
+    }
+
+    fn propose(&mut self) -> Option<usize> {
+        if let Some((cur, _)) = self.current {
+            let s = self.core.pool[cur];
+            if let Some(i) = mutate(&self.core, &mut self.rng, s) {
+                return Some(i);
+            }
+        }
+        random_unvisited(&self.core, &mut self.rng)
+    }
+}
+
+impl SearchStrategy for Anneal {
+    fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        match self.core.phase {
+            Phase::One => {
+                if self.core.pool_exhausted() {
+                    return self.core.transition(best);
+                }
+                if self.core.stalled() {
+                    // Patience ran out: polish the incumbent's
+                    // neighbourhood to a local-optimality certificate,
+                    // then stop.
+                    return match self.core.polish_target() {
+                        Some(i) => Some(self.core.emit(i)),
+                        None => self.core.transition(best),
+                    };
+                }
+                match self.propose() {
+                    Some(i) => Some(self.core.emit(i)),
+                    None => self.core.transition(best),
+                }
+            }
+            Phase::Two => self.core.next_phase2(),
+            Phase::Done => None,
+        }
+    }
+
+    // Each draw depends on the previous observation: cap batches at one.
+    fn next_batch(&mut self, best: Option<TuningParams>, _k: usize) -> Vec<TuningParams> {
+        self.next(best).into_iter().collect()
+    }
+
+    fn observe(&mut self, cand: TuningParams, score: f64) {
+        let Some((idx, _improved)) = self.core.note(cand, score) else {
+            return;
+        };
+        let accept = match self.current {
+            None => true,
+            Some((_, cur_score)) => {
+                if score < cur_score {
+                    true
+                } else {
+                    let rel = (score - cur_score) / cur_score.max(1e-30);
+                    let temp = (self.t0 / (1.0 + self.core.stall as f64)).max(1e-12);
+                    self.rng.f64() < (-rel / temp).exp()
+                }
+            }
+        };
+        if accept {
+            self.current = Some((idx, score));
+            self.core.accepted += 1;
+        } else {
+            self.core.rejected += 1;
+        }
+    }
+
+    fn complete(&self) -> bool {
+        false
+    }
+
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        let k = k.max(1);
+        match self.core.phase {
+            Phase::One => {
+                // Sample likely mutation targets on a *cloned* RNG —
+                // self is untouched, so the live draw sequence cannot
+                // shift no matter how often the pool asks for hints.
+                let mut rng = self.rng.clone();
+                let mut taken = vec![false; self.core.pool.len()];
+                let mut out = Vec::new();
+                let base = self.current.map(|(i, _)| self.core.pool[i]);
+                for _ in 0..4 * k {
+                    if out.len() >= k {
+                        break;
+                    }
+                    let guess = match base {
+                        Some(s) => mutate(&self.core, &mut rng, s),
+                        None => random_unvisited(&self.core, &mut rng),
+                    };
+                    if let Some(i) = guess {
+                        if !taken[i] {
+                            taken[i] = true;
+                            out.push(TuningParams::phase1_default(self.core.pool[i]));
+                        }
+                    }
+                }
+                for (i, s) in self.core.pool.iter().enumerate() {
+                    if out.len() >= k {
+                        break;
+                    }
+                    if !self.core.visited[i] && !taken[i] {
+                        out.push(TuningParams::phase1_default(*s));
+                    }
+                }
+                out
+            }
+            Phase::Two => self.core.phase2[self.core.idx2..].iter().take(k).copied().collect(),
+            Phase::Done => Vec::new(),
+        }
+    }
+
+    fn move_stats(&self) -> (u64, u64) {
+        (self.core.accepted, self.core.rejected)
+    }
+
+    fn pruned(&self) -> u64 {
+        self.core.pruned
+    }
+
+    fn phase(&self) -> Phase {
+        self.core.phase
+    }
+
+    fn remaining(&self) -> usize {
+        self.core.remaining()
+    }
+}
+
+/// Number of structural features the online model regresses on.
+const NF: usize = 6;
+
+/// Observations required before the model is trusted at all.
+const MIN_OBS: u32 = 8;
+
+/// Online least-squares model guidance — prunes (`complete() == false`).
+///
+/// Predicts a candidate's score from six structural features (bias, VE,
+/// log₂ vectLen, log₂ hotUF, log₂ coldUF, leftover fraction) fit by
+/// ridge-regularised normal equations over every phase-1 observation so
+/// far — retraining is a 6×6 solve per draw, no dependencies. Draws are
+/// best-first by predicted score over the unvisited pool; exploration
+/// comes from ε-greedy random draws (probability `eps`, plus always
+/// while fewer than [`MIN_OBS`] observations exist) — the exploration
+/// bonus that keeps the model from wedging on its own early bias. Stops
+/// like [`Anneal`]: patience on steps-since-improvement, then the
+/// phase-2 sweep around the best structure seen.
+#[derive(Debug, Clone)]
+pub struct ModelGuided {
+    length: u32,
+    core: AdaptiveCore,
+    rng: Rng,
+    xtx: [[f64; NF]; NF],
+    xty: [f64; NF],
+    n_obs: u32,
+    eps: f64,
+}
+
+impl ModelGuided {
+    pub fn new(length: u32, ve_filter: Option<bool>, seed: u64) -> ModelGuided {
+        ModelGuided {
+            length,
+            core: AdaptiveCore::new(length, ve_filter, ADAPTIVE_PATIENCE),
+            rng: Rng::new(seed ^ 0x4D4F444C),
+            xtx: [[0.0; NF]; NF],
+            xty: [0.0; NF],
+            n_obs: 0,
+            eps: 0.1,
+        }
+    }
+
+    fn features(&self, s: Structural) -> [f64; NF] {
+        let l2 = |x: u32| x.trailing_zeros() as f64;
+        [
+            1.0,
+            s.ve as u32 as f64,
+            l2(s.vect_len),
+            l2(s.hot_uf),
+            l2(s.cold_uf),
+            s.leftover(self.length) as f64 / self.length as f64,
+        ]
+    }
+
+    /// Ridge-regularised normal-equation solve (Gaussian elimination
+    /// with partial pivoting); `None` when the system is degenerate.
+    fn solve(xtx: &[[f64; NF]; NF], xty: &[f64; NF]) -> Option<[f64; NF]> {
+        let mut a = *xtx;
+        let mut b = *xty;
+        let mut maxd = 0.0f64;
+        for (i, row) in a.iter().enumerate() {
+            maxd = maxd.max(row[i].abs());
+        }
+        let ridge = 1e-8 * maxd.max(1.0);
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += ridge;
+        }
+        for col in 0..NF {
+            let mut piv = col;
+            for r in (col + 1)..NF {
+                if a[r][col].abs() > a[piv][col].abs() {
+                    piv = r;
+                }
+            }
+            if a[piv][col].abs() < 1e-12 {
+                return None;
+            }
+            a.swap(col, piv);
+            b.swap(col, piv);
+            for r in (col + 1)..NF {
+                let f = a[r][col] / a[col][col];
+                for c in col..NF {
+                    a[r][c] -= f * a[col][c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+        let mut x = [0.0; NF];
+        for i in (0..NF).rev() {
+            let mut v = b[i];
+            for (j, xj) in x.iter().enumerate().skip(i + 1) {
+                v -= a[i][j] * xj;
+            }
+            x[i] = v / a[i][i];
+        }
+        Some(x)
+    }
+
+    fn predict(&self, w: &[f64; NF], s: Structural) -> f64 {
+        let f = self.features(s);
+        f.iter().zip(w.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    fn argmin_predicted(&self, w: &[f64; NF]) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for i in self.core.unvisited() {
+            let pred = self.predict(w, self.core.pool[i]);
+            if best.map(|(_, b)| pred < b).unwrap_or(true) {
+                best = Some((i, pred));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+impl SearchStrategy for ModelGuided {
+    fn next(&mut self, best: Option<TuningParams>) -> Option<TuningParams> {
+        match self.core.phase {
+            Phase::One => {
+                if self.core.pool_exhausted() {
+                    return self.core.transition(best);
+                }
+                if self.core.stalled() {
+                    // Same local-optimality polish as `Anneal` before
+                    // committing to the phase-2 structure.
+                    return match self.core.polish_target() {
+                        Some(i) => Some(self.core.emit(i)),
+                        None => self.core.transition(best),
+                    };
+                }
+                let pick = if self.n_obs < MIN_OBS || self.rng.f64() < self.eps {
+                    random_unvisited(&self.core, &mut self.rng)
+                } else if let Some(w) = Self::solve(&self.xtx, &self.xty) {
+                    self.argmin_predicted(&w)
+                } else {
+                    random_unvisited(&self.core, &mut self.rng)
+                };
+                match pick {
+                    Some(i) => Some(self.core.emit(i)),
+                    None => self.core.transition(best),
+                }
+            }
+            Phase::Two => self.core.next_phase2(),
+            Phase::Done => None,
+        }
+    }
+
+    // Each draw depends on the previous observation: cap batches at one.
+    fn next_batch(&mut self, best: Option<TuningParams>, _k: usize) -> Vec<TuningParams> {
+        self.next(best).into_iter().collect()
+    }
+
+    fn observe(&mut self, cand: TuningParams, score: f64) {
+        let Some((_idx, improved)) = self.core.note(cand, score) else {
+            return;
+        };
+        let f = self.features(cand.s);
+        // Scale to O(1) units (scores are ~1e-4 s) so the normal
+        // equations stay well-conditioned without a fancy solver.
+        let y = score * 1e6;
+        for i in 0..NF {
+            for j in 0..NF {
+                self.xtx[i][j] += f[i] * f[j];
+            }
+            self.xty[i] += f[i] * y;
+        }
+        self.n_obs += 1;
+        if improved {
+            self.core.accepted += 1;
+        } else {
+            self.core.rejected += 1;
+        }
+    }
+
+    fn complete(&self) -> bool {
+        false
+    }
+
+    fn prefetch_horizon(&self, k: usize) -> Vec<TuningParams> {
+        let k = k.max(1);
+        match self.core.phase {
+            Phase::One => {
+                // Rank the unvisited pool by the current model (all on
+                // copies — &self stays untouched). Before the model is
+                // trustworthy, fall back to pool order.
+                if self.n_obs >= MIN_OBS {
+                    if let Some(w) = Self::solve(&self.xtx, &self.xty) {
+                        let mut ranked: Vec<(usize, f64)> = self
+                            .core
+                            .unvisited()
+                            .into_iter()
+                            .map(|i| (i, self.predict(&w, self.core.pool[i])))
+                            .collect();
+                        ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+                        return ranked
+                            .into_iter()
+                            .take(k)
+                            .map(|(i, _)| TuningParams::phase1_default(self.core.pool[i]))
+                            .collect();
+                    }
+                }
+                self.core
+                    .unvisited()
+                    .into_iter()
+                    .take(k)
+                    .map(|i| TuningParams::phase1_default(self.core.pool[i]))
+                    .collect()
+            }
+            Phase::Two => self.core.phase2[self.core.idx2..].iter().take(k).copied().collect(),
+            Phase::Done => Vec::new(),
+        }
+    }
+
+    fn move_stats(&self) -> (u64, u64) {
+        (self.core.accepted, self.core.rejected)
+    }
+
+    fn pruned(&self) -> u64 {
+        self.core.pruned
+    }
+
+    fn phase(&self) -> Phase {
+        self.core.phase
+    }
+
+    fn remaining(&self) -> usize {
+        self.core.remaining()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::mock::default_landscape;
     use std::collections::HashSet;
 
     fn drain(strat: &mut dyn SearchStrategy) -> Vec<TuningParams> {
@@ -235,12 +1074,43 @@ mod tests {
         out
     }
 
+    /// Drain with honest feedback: score every candidate on the mock
+    /// landscape, report the argmin back as `best`, and feed each score
+    /// to `observe`. Returns (visited sequence, winner).
+    fn drain_scored(strat: &mut dyn SearchStrategy) -> (Vec<TuningParams>, Option<TuningParams>) {
+        let mut out = Vec::new();
+        let mut best: Option<(TuningParams, f64)> = None;
+        for _ in 0..10_000 {
+            let Some(p) = strat.next(best.map(|(b, _)| b)) else {
+                break;
+            };
+            let score = default_landscape(&p);
+            strat.observe(p, score);
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((p, score));
+            }
+            out.push(p);
+        }
+        assert!(strat.next(best.map(|(b, _)| b)).is_none(), "did not terminate");
+        (out, best.map(|(b, _)| b))
+    }
+
     #[test]
     fn strategies_are_object_safe_and_send() {
         fn assert_send<T: Send>() {}
         assert_send::<Box<dyn SearchStrategy>>();
         let mut boxed: Box<dyn SearchStrategy> = Box::new(TwoPhaseGrid::new(64, None));
         assert!(boxed.next(None).is_some());
+    }
+
+    #[test]
+    fn strategy_kind_parse_name_roundtrip() {
+        for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(k.name()), Some(k));
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!(StrategyKind::parse("genetic"), None);
+        assert_eq!(StrategyKind::default(), StrategyKind::Grid);
     }
 
     #[test]
@@ -298,6 +1168,42 @@ mod tests {
     }
 
     #[test]
+    fn seeded_batched_drain_equals_sequential_and_transition_is_solo() {
+        // The solo-phase-transition-draw rule of TwoPhaseGrid::next_batch
+        // must hold verbatim for PriorSeeded: seeding permutes within
+        // each phase, never the boundary.
+        let donor = TuningParams::new(Structural::new(true, 2, 2, 4), 32, true, true);
+        let mut seq_strat = PriorSeeded::new(96, None, donor);
+        let sequential = drain(&mut seq_strat);
+        for k in [2usize, 3, 7, 64] {
+            let mut plan = PriorSeeded::new(96, None, donor);
+            let mut best: Option<TuningParams> = None;
+            let mut batched = Vec::new();
+            let mut saw_transition_batch = false;
+            loop {
+                let before = SearchStrategy::phase(&plan);
+                let batch = SearchStrategy::next_batch(&mut plan, best, k);
+                if batch.is_empty() {
+                    break;
+                }
+                let after = SearchStrategy::phase(&plan);
+                if before == Phase::One && after == Phase::Two {
+                    assert_eq!(batch.len(), 1, "transition draw must be solo (k={k})");
+                    saw_transition_batch = true;
+                }
+                for p in batch {
+                    if best.is_none() {
+                        best = Some(p);
+                    }
+                    batched.push(p);
+                }
+            }
+            assert!(saw_transition_batch, "k={k}");
+            assert_eq!(batched, sequential, "batch width {k}");
+        }
+    }
+
+    #[test]
     fn default_next_batch_respects_width() {
         let mut s = StaticGrid::new(64, None, false, true);
         let total = s.len();
@@ -319,5 +1225,145 @@ mod tests {
                 break;
             }
         }
+    }
+
+    #[test]
+    fn random_search_covers_the_full_space_deterministically() {
+        let mut full = StaticGrid::new(96, None, false, false);
+        let full_ids: HashSet<u32> = drain(&mut full).iter().map(|p| p.full_id()).collect();
+
+        let mut r = RandomSearch::new(96, None, 7);
+        assert!(r.complete());
+        let seq = drain(&mut r);
+        let ids: HashSet<u32> = seq.iter().map(|p| p.full_id()).collect();
+        assert_eq!(ids, full_ids, "full coverage: exact set equality");
+        assert_eq!(ids.len(), seq.len(), "no duplicates");
+        assert_eq!(SearchStrategy::phase(&r), Phase::Done);
+
+        // Same seed, same permutation; it is a real permutation, not the
+        // enumeration order.
+        let replay = drain(&mut RandomSearch::new(96, None, 7));
+        assert_eq!(seq, replay);
+        let grid_order = drain(&mut StaticGrid::new(96, None, false, false));
+        assert_ne!(seq, grid_order);
+        assert_ne!(seq, drain(&mut RandomSearch::new(96, None, 8)));
+    }
+
+    #[test]
+    fn anneal_prunes_within_the_space_and_terminates() {
+        let space: HashSet<u32> =
+            Space::new(4800).valid_structural().iter().map(|s| s.vid()).collect();
+        let mut a = Anneal::new(4800, None, 42);
+        assert!(!SearchStrategy::complete(&a));
+        let (seq, winner) = drain_scored(&mut a);
+        assert_eq!(SearchStrategy::phase(&a), Phase::Done);
+
+        let phase1: Vec<&TuningParams> =
+            seq.iter().filter(|p| **p == TuningParams::phase1_default(p.s)).collect();
+        // Visited ⊆ space, no structural repeats in phase 1.
+        let vids: HashSet<u32> = phase1.iter().map(|p| p.s.vid()).collect();
+        assert!(vids.iter().all(|v| space.contains(v)));
+        // It actually pruned: visited strictly fewer structures than the
+        // pool holds, and said so.
+        assert!(vids.len() < space.len(), "visited {} of {}", vids.len(), space.len());
+        assert!(SearchStrategy::pruned(&a) > 0);
+        assert_eq!(SearchStrategy::pruned(&a) as usize + vids.len(), space.len());
+        let (acc, rej) = a.move_stats();
+        assert!(acc > 0, "at least the first observation is accepted");
+        let _ = rej;
+
+        // Phase 2 swept the winner's structure.
+        let winner = winner.unwrap();
+        assert!(seq.iter().rev().take(11).all(|p| p.s == winner.s));
+        assert_eq!(SearchStrategy::remaining(&a), 0);
+    }
+
+    #[test]
+    fn anneal_finds_the_landscape_optimum_structure() {
+        // The mock landscape's minimum is (SIMD, v2, h2, c4) with
+        // pld=32, IS, SM. The annealer must land on that structure
+        // despite pruning (fixed seed — determinism is part of the pin).
+        let (_, winner) = drain_scored(&mut Anneal::new(4800, None, 42));
+        let w = winner.unwrap();
+        assert_eq!(w.s, Structural::new(true, 2, 2, 4), "winner {w}");
+        assert_eq!((w.pld_stride, w.isched, w.smin), (32, true, true));
+    }
+
+    #[test]
+    fn model_guided_prunes_within_the_space_and_terminates() {
+        let space: HashSet<u32> =
+            Space::new(4800).valid_structural().iter().map(|s| s.vid()).collect();
+        let mut m = ModelGuided::new(4800, None, 42);
+        assert!(!SearchStrategy::complete(&m));
+        let (seq, winner) = drain_scored(&mut m);
+        assert_eq!(SearchStrategy::phase(&m), Phase::Done);
+
+        let phase1: Vec<&TuningParams> =
+            seq.iter().filter(|p| **p == TuningParams::phase1_default(p.s)).collect();
+        let vids: HashSet<u32> = phase1.iter().map(|p| p.s.vid()).collect();
+        assert!(vids.iter().all(|v| space.contains(v)));
+        assert!(vids.len() < space.len(), "visited {} of {}", vids.len(), space.len());
+        assert_eq!(SearchStrategy::pruned(&m) as usize + vids.len(), space.len());
+
+        let w = winner.unwrap();
+        assert_eq!(w.s, Structural::new(true, 2, 2, 4), "winner {w}");
+        assert!(seq.iter().rev().take(11).all(|p| p.s == w.s));
+    }
+
+    #[test]
+    fn adaptive_batches_cap_at_one() {
+        let mut a = Anneal::new(64, None, 1);
+        let b = SearchStrategy::next_batch(&mut a, None, 16);
+        assert_eq!(b.len(), 1);
+        let mut m = ModelGuided::new(64, None, 1);
+        let b = SearchStrategy::next_batch(&mut m, None, 16);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn prefetch_horizon_is_non_mutating_and_stays_in_pool() {
+        // Drains of a strategy and its clone must be identical even when
+        // the clone's horizon is sampled at every step — the pool may
+        // ask for hints arbitrarily often without shifting a draw.
+        let mut plain = Anneal::new(4800, None, 9);
+        let mut probed = plain.clone();
+        let mut best: Option<(TuningParams, f64)> = None;
+        let space: HashSet<u32> =
+            Space::new(4800).valid_structural().iter().map(|s| s.vid()).collect();
+        for _ in 0..10_000 {
+            let h = probed.prefetch_horizon(8);
+            assert!(h.len() <= 8);
+            for hint in &h {
+                assert!(space.contains(&hint.s.vid()) || probed.phase() == Phase::Two);
+            }
+            let b = best.map(|(p, _)| p);
+            let x = plain.next(b);
+            let y = probed.next(b);
+            assert_eq!(x, y, "horizon sampling shifted a draw");
+            let Some(p) = x else { break };
+            let score = default_landscape(&p);
+            plain.observe(p, score);
+            probed.observe(p, score);
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((p, score));
+            }
+        }
+        // Hints in phase 1 are unvisited phase-1 candidates.
+        let mut m = ModelGuided::new(4800, None, 9);
+        let first = m.next(None).unwrap();
+        m.observe(first, default_landscape(&first));
+        for hint in m.prefetch_horizon(16) {
+            assert_eq!(hint, TuningParams::phase1_default(hint.s));
+            assert_ne!(hint.s, first.s, "horizon must not repeat visited structures");
+        }
+    }
+
+    #[test]
+    fn grid_prefetch_horizon_matches_upcoming_draws() {
+        let mut g = TwoPhaseGrid::new(96, None);
+        let h = SearchStrategy::prefetch_horizon(&g, 5);
+        let drawn: Vec<TuningParams> =
+            (0..5).filter_map(|_| SearchStrategy::next(&mut g, None)).collect();
+        assert_eq!(h, drawn);
     }
 }

@@ -19,7 +19,8 @@ use std::collections::HashSet;
 use degoal_rt::backend::mock::{default_landscape, MockBackend};
 use degoal_rt::coordinator::{AutoTuner, TunerConfig};
 use degoal_rt::tunespace::{
-    params, PriorSeeded, SearchStrategy, Space, TuningParams, TwoPhaseGrid,
+    params, Anneal, ModelGuided, PriorSeeded, RandomSearch, SearchStrategy, Space, StaticGrid,
+    TuningParams, TwoPhaseGrid,
 };
 use degoal_rt::util::rng::Rng;
 
@@ -47,6 +48,39 @@ fn drain(strat: &mut dyn SearchStrategy) -> Vec<TuningParams> {
 
 fn id_set(seq: &[TuningParams]) -> HashSet<u32> {
     seq.iter().map(|p| p.full_id()).collect()
+}
+
+fn id_seq(seq: &[TuningParams]) -> Vec<u32> {
+    seq.iter().map(|p| p.full_id()).collect()
+}
+
+/// Like [`drain`], but with the honest-feedback `observe` call the tuner
+/// makes after every evaluation — adaptive strategies decide each next
+/// draw from the previous observation. Bounded, so a strategy that fails
+/// to terminate trips an assertion instead of hanging the suite.
+fn drain_observing(strat: &mut dyn SearchStrategy) -> Vec<TuningParams> {
+    let mut out: Vec<TuningParams> = Vec::new();
+    let mut best: Option<(TuningParams, f64)> = None;
+    for _ in 0..100_000 {
+        let bp = best.map(|(p, _)| p);
+        let Some(c) = strat.next(bp) else {
+            return out;
+        };
+        let t = default_landscape(&c);
+        strat.observe(c, t);
+        if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+            best = Some((c, t));
+        }
+        out.push(c);
+    }
+    panic!("strategy failed to terminate within 100000 draws");
+}
+
+/// The honest-feedback argmin over a drained sequence.
+fn landscape_best(seq: &[TuningParams]) -> TuningParams {
+    *seq.iter()
+        .min_by(|a, b| default_landscape(a).total_cmp(&default_landscape(b)))
+        .expect("non-empty sequence")
 }
 
 #[test]
@@ -138,6 +172,115 @@ fn static_search_still_enumerates_the_exact_restricted_space() {
         .count();
     assert_eq!(nol.explored.len(), expect_n);
     assert!(nol.explored.iter().all(|(p, _)| p.s.ve && p.s.no_leftover(96)));
+}
+
+#[test]
+fn random_search_is_a_seeded_permutation_of_the_full_product() {
+    for length in [32u32, 64, 4800] {
+        for ve in [None, Some(true)] {
+            let full = drain(&mut StaticGrid::new(length, ve, false, false));
+            let mut rs = RandomSearch::new(length, ve, 7);
+            assert!(rs.complete(), "the control arm is full-coverage");
+            assert_eq!(rs.pruned(), 0);
+            let seq = drain(&mut rs);
+            assert_eq!(seq.len(), full.len(), "length {length} ve {ve:?}");
+            assert_eq!(id_set(&seq), id_set(&full), "length {length} ve {ve:?}");
+
+            // Same seed replays the identical order; a different seed is
+            // a different permutation of the same set.
+            let again = drain(&mut RandomSearch::new(length, ve, 7));
+            assert_eq!(id_seq(&seq), id_seq(&again), "seeded order is deterministic");
+            let other = drain(&mut RandomSearch::new(length, ve, 8));
+            assert_eq!(id_set(&other), id_set(&full));
+            assert_ne!(id_seq(&seq), id_seq(&other), "different seeds permute differently");
+        }
+    }
+}
+
+/// The relaxed equivalence contract for pruning strategies
+/// (`complete() == false`): they may skip candidates, but (a) every
+/// visit is a member of the restricted space, visited at most once;
+/// (b) they terminate; (c) under honest feedback the structure they
+/// polish to is the landscape optimum (the mock landscape is separable
+/// and per-dimension unimodal, so the local-optimality certificate is
+/// global); and (d) the never-visited remainder is accounted in
+/// `pruned()` — visited + pruned covers exactly the two-phase plan.
+#[test]
+fn pruning_strategies_honor_the_relaxed_contract() {
+    for length in [64u32, 4800] {
+        for ve in [None, Some(true)] {
+            let full = drain(&mut StaticGrid::new(length, ve, false, false));
+            let full_ids = id_set(&full);
+            let optimum = landscape_best(&full);
+            let two_phase = drain(&mut TwoPhaseGrid::new(length, ve)).len();
+
+            let arms: [(&str, Box<dyn SearchStrategy>); 2] = [
+                ("anneal", Box::new(Anneal::new(length, ve, 9))),
+                ("model", Box::new(ModelGuided::new(length, ve, 9))),
+            ];
+            for (name, mut strat) in arms {
+                let tag = format!("{name} length {length} ve {ve:?}");
+                assert!(!strat.complete(), "{tag}: pruning strategies say so");
+                let seq = drain_observing(strat.as_mut());
+                let ids = id_set(&seq);
+                assert_eq!(ids.len(), seq.len(), "{tag}: no candidate repeats");
+                assert!(ids.is_subset(&full_ids), "{tag}: visited ⊆ restricted space");
+                assert!(strat.next(Some(optimum)).is_none(), "{tag}: stays exhausted");
+                assert_eq!(strat.remaining(), 0, "{tag}");
+
+                // Early stop with a correct winner: strictly fewer
+                // visits than the two-phase plan, same landscape argmin.
+                assert!(seq.len() < two_phase, "{tag}: must actually prune");
+                assert!(strat.pruned() > 0, "{tag}");
+                assert_eq!(
+                    seq.len() + strat.pruned() as usize,
+                    two_phase,
+                    "{tag}: visited + pruned accounts for the whole plan"
+                );
+                assert_eq!(
+                    landscape_best(&seq).full_id(),
+                    optimum.full_id(),
+                    "{tag}: polish certificate reaches the separable optimum"
+                );
+
+                if name == "anneal" {
+                    // One Metropolis decision per phase-1 observation
+                    // (the 11 phase-2 draws are grid refinement).
+                    let (acc, rej) = strat.move_stats();
+                    assert!(acc > 0, "{tag}: the walk accepts at least its first point");
+                    assert_eq!(acc + rej, (seq.len() - 11) as u64, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// `prefetch_horizon` is a promise of non-interference: asking for hints
+/// (any number of times, any k) must not shift a single future draw.
+#[test]
+fn prefetch_horizon_never_perturbs_the_draw_sequence() {
+    let mut probed = Anneal::new(64, None, 5);
+    let mut control = probed.clone();
+    let mut best: Option<(TuningParams, f64)> = None;
+    for step in 0..10_000 {
+        // Hammer the horizon on one instance only, mid-walk.
+        let hints = probed.prefetch_horizon(1 + step % 7);
+        assert!(hints.len() <= 1 + step % 7);
+        let bp = best.map(|(p, _)| p);
+        let (a, b) = (probed.next(bp), control.next(bp));
+        assert_eq!(
+            a.map(|p| p.full_id()),
+            b.map(|p| p.full_id()),
+            "step {step}: horizon probing shifted the walk"
+        );
+        let Some(c) = a else { break };
+        let t = default_landscape(&c);
+        probed.observe(c, t);
+        control.observe(c, t);
+        if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+            best = Some((c, t));
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,232 @@
+//! The strategy race's committed claims, pinned on fixed seeds.
+//!
+//! PR 9 adds adaptive exploration orders (simulated annealing and
+//! online-model guidance) whose whole point is *time-to-best*: they must
+//! reach each lane's eventual winner in strictly fewer generate calls
+//! than the paper's two-phase grid — here on both the skewed 8-lane
+//! workload and the heterogeneous two-device kernel streams — while
+//! landing on final winner scores at parity (the sim landscape is not
+//! exactly separable, so parity carries a 2 % tolerance; the pruning
+//! accounting is exact). `RandomSearch` rides along as the full-coverage
+//! control arm.
+//!
+//! The cross-refill prefetch horizon is held to the same standard as the
+//! PR 7 pool it extends: with the threaded engine live, every lane
+//! report must be bit-identical with the horizon on or off — the only
+//! observable difference is the engine's prewarmed counter, which must
+//! be strictly higher with a horizon (on adaptive strategies the pending
+//! queue never fills, so the horizon is the pool's *only* feed).
+
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::cache::{SharedTuneCache, TuneKey};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, TuningEngine, TuningService,
+};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::tunespace::StrategyKind;
+use degoal_rt::workloads::{hetero_service_workload, skewed_service_workload};
+
+/// Pre-recorded app time that makes the global governor allow every
+/// wake (same trick as `engine_steal.rs` / `parallel_eval.rs`).
+const GOVERNOR_PRIME: f64 = 1e6;
+
+/// Enough calls for every strategy — including the control arm's full
+/// structural x code-generation product on the tall lintra lanes — to
+/// finish exploration at the fast wake period below.
+const RACE_CALLS_PER_LANE: u32 = 4_000;
+
+fn cfg(kind: StrategyKind, horizon: usize) -> ServiceConfig {
+    ServiceConfig {
+        tuner: TunerConfig {
+            // Fast wakes: the race measures generate calls, not wall
+            // time, so lanes should finish exploration in as few app
+            // calls as possible (the --scale phase's setting).
+            wake_period: 1e-4,
+            strategy: kind,
+            horizon,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Drive one workload through the sequential service under `kind`,
+/// cold cache, identical per-lane call budget.
+fn race(lanes_spec: Vec<(TuneKey, SimBackend)>, kind: StrategyKind) -> Vec<LaneReport> {
+    let mut svc: TuningService<SimBackend> = TuningService::new(cfg(kind, 0));
+    svc.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> =
+        lanes_spec.into_iter().map(|(k, b)| svc.register(k, Some(true), b)).collect();
+    for &l in &lanes {
+        for _ in 0..RACE_CALLS_PER_LANE {
+            svc.app_call(l).unwrap();
+        }
+    }
+    lanes.iter().map(|&l| svc.lane_report(l).unwrap()).collect()
+}
+
+fn mean_best_at(label: &str, reports: &[LaneReport]) -> f64 {
+    let mut sum = 0.0;
+    for r in reports {
+        assert!(r.done, "{label}: lane {} did not finish exploration", r.key);
+        sum += r.best_at_generate.unwrap_or_else(|| panic!("{label}: lane {} has no best", r.key))
+            as f64;
+    }
+    sum / reports.len() as f64
+}
+
+fn best_score(r: &LaneReport) -> f64 {
+    r.best.expect("finished lanes have a winner").1
+}
+
+/// The race proper, per workload: adaptive mean time-to-best strictly
+/// below grid's, per-lane final-score parity, exact pruning accounting.
+fn assert_race(label: &str, mut lanes: impl FnMut() -> Vec<(TuneKey, SimBackend)>) {
+    let grid = race(lanes(), StrategyKind::Grid);
+    let random = race(lanes(), StrategyKind::Random);
+    let anneal = race(lanes(), StrategyKind::Anneal);
+    let model = race(lanes(), StrategyKind::Model);
+
+    let g = mean_best_at(label, &grid);
+    mean_best_at(label, &random);
+    let a = mean_best_at(label, &anneal);
+    let m = mean_best_at(label, &model);
+    assert!(a < g, "{label}: anneal mean best@gen {a:.1} is not strictly below grid's {g:.1}");
+    assert!(m < g, "{label}: model mean best@gen {m:.1} is not strictly below grid's {g:.1}");
+
+    for (adaptive, name) in [(&anneal, "anneal"), (&model, "model")] {
+        for (r, gr) in adaptive.iter().zip(&grid) {
+            assert_eq!(r.key, gr.key, "{label}: workload replay must line up");
+            // Final-score parity: the polish rule fixes a coordinate-
+            // local minimum, which on the near-separable sim landscape
+            // is the grid winner's structure (2 % guards the exceptions).
+            assert!(
+                best_score(r) <= best_score(gr) * 1.02,
+                "{label}: {name} lane {} final score {:.3e} diverged from grid's {:.3e}",
+                r.key,
+                best_score(r),
+                best_score(gr),
+            );
+            // Pruning is real and exactly accounted: every candidate the
+            // grid would have generated was either visited or pruned.
+            assert!(r.pruned > 0, "{label}: {name} lane {} pruned nothing", r.key);
+            assert!(
+                r.generate_calls < gr.generate_calls,
+                "{label}: {name} lane {} generated {} >= grid's {}",
+                r.key,
+                r.generate_calls,
+                gr.generate_calls,
+            );
+            assert_eq!(
+                r.generate_calls + r.pruned,
+                gr.generate_calls,
+                "{label}: {name} lane {} generate+pruned must equal the grid plan",
+                r.key,
+            );
+        }
+    }
+
+    // The control arm covers the full product (a superset of the
+    // two-phase visits) and prunes nothing; its winner — chosen on
+    // training data like the grid's phase 1 — stays at score parity.
+    for (r, gr) in random.iter().zip(&grid) {
+        assert_eq!(r.pruned, 0, "{label}: random is full-coverage");
+        assert!(
+            best_score(r) <= best_score(gr) * 1.02,
+            "{label}: random lane {} final score {:.3e} diverged from grid's {:.3e}",
+            r.key,
+            best_score(r),
+            best_score(gr),
+        );
+    }
+}
+
+#[test]
+fn adaptive_strategies_beat_grid_time_to_best_on_the_skewed_workload() {
+    let core = core_by_name("DI-I1").unwrap();
+    assert_race("skewed", || skewed_service_workload(core, 11));
+}
+
+#[test]
+fn adaptive_strategies_beat_grid_time_to_best_on_the_hetero_workload() {
+    let donor = core_by_name("DI-I2").unwrap();
+    let target = core_by_name("DI-I1").unwrap();
+    assert_race("hetero", || {
+        let (d, t) = hetero_service_workload(donor, target, 23);
+        d.into_iter().chain(t).collect()
+    });
+}
+
+// ---------- the prefetch horizon: invisible, but not idle ----------
+
+/// Full-strength report comparison, including the strategy telemetry.
+fn assert_report_eq(a: &LaneReport, b: &LaneReport, what: &str) {
+    assert_eq!(a.key, b.key, "{what}");
+    assert_eq!(a.kernel_calls, b.kernel_calls, "{what}: lane {}", a.key);
+    assert_eq!(a.explored, b.explored, "{what}: lane {}", a.key);
+    assert_eq!(a.generate_calls, b.generate_calls, "{what}: lane {}", a.key);
+    assert_eq!(a.swaps, b.swaps, "{what}: lane {}", a.key);
+    assert_eq!(a.done, b.done, "{what}: lane {}", a.key);
+    assert_eq!(a.best, b.best, "{what}: winner changed on lane {}", a.key);
+    assert_eq!(a.best_at_generate, b.best_at_generate, "{what}: lane {}", a.key);
+    assert_eq!(a.overhead, b.overhead, "{what}: lane {}", a.key);
+    assert_eq!(a.app_time, b.app_time, "{what}: lane {}", a.key);
+    assert_eq!(a.gained, b.gained, "{what}: lane {}", a.key);
+    assert_eq!(a.strategy_steps, b.strategy_steps, "{what}: lane {}", a.key);
+    assert_eq!(a.strategy_accepted, b.strategy_accepted, "{what}: lane {}", a.key);
+    assert_eq!(a.strategy_rejected, b.strategy_rejected, "{what}: lane {}", a.key);
+    assert_eq!(a.pruned, b.pruned, "{what}: lane {}", a.key);
+}
+
+/// One threaded-engine pass; returns the prewarmed counter and reports.
+/// `wait_prewarm` gives the advisory score-task queue a bounded moment
+/// to drain after the barrier (the horizon-on arm only — with the
+/// horizon off an adaptive tuner never feeds the pool at all).
+fn engine_pass(
+    lanes_spec: Vec<(TuneKey, SimBackend)>,
+    kind: StrategyKind,
+    horizon: usize,
+    wait_prewarm: bool,
+) -> (u64, Vec<LaneReport>) {
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_options(
+        cfg(kind, horizon),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 64, ..Default::default() },
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> =
+        lanes_spec.into_iter().map(|(k, b)| eng.register(k, Some(true), b).unwrap()).collect();
+    for &l in &lanes {
+        eng.submit_n(l, RACE_CALLS_PER_LANE).unwrap();
+    }
+    eng.drain().unwrap();
+    if wait_prewarm {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while eng.prewarmed() == 0 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+    }
+    let prewarmed = eng.prewarmed();
+    let (_, reports) = eng.finish().unwrap();
+    (prewarmed, reports)
+}
+
+#[test]
+fn prefetch_horizon_is_invisible_to_engine_reports_and_feeds_the_pool() {
+    let core = core_by_name("DI-I1").unwrap();
+    for kind in [StrategyKind::Anneal, StrategyKind::Model] {
+        let (off, base) = engine_pass(skewed_service_workload(core, 11), kind, 0, false);
+        let (on, probed) = engine_pass(skewed_service_workload(core, 11), kind, 8, true);
+        assert_eq!(
+            off, 0,
+            "{kind:?}: an adaptive tuner's pending queue never fills, so without a \
+             horizon the pool must starve"
+        );
+        assert!(on > 0, "{kind:?}: the horizon never fed the pool — the parity is vacuous");
+        assert_eq!(base.len(), probed.len());
+        for (b, p) in base.iter().zip(&probed) {
+            assert_report_eq(p, b, "horizon 8 vs 0");
+        }
+    }
+}
