@@ -93,6 +93,13 @@ pub struct CacheCounters {
     /// (and never as a `miss`: the transfer scan only runs after the
     /// exact miss was already counted).
     pub transfer_hits: u64,
+    /// Entries recovered from a corrupt/truncated persistence file by the
+    /// salvage loader ([`TuneCache::from_salvage`]).
+    pub salvaged: u64,
+    /// Malformed-input incidents survived while loading: per-entry skips
+    /// plus unparsable-file degradations. Never an error into service
+    /// startup — the worst case is a cold start.
+    pub load_errors: u64,
 }
 
 impl CacheCounters {
@@ -107,6 +114,8 @@ impl CacheCounters {
         self.expired += other.expired;
         self.near_hits += other.near_hits;
         self.transfer_hits += other.transfer_hits;
+        self.salvaged += other.salvaged;
+        self.load_errors += other.load_errors;
     }
 
     /// Snapshot the lookup-behaviour counters for display.
@@ -655,6 +664,7 @@ impl TuneCache {
             return cache;
         }
         let entries = v.get("entries").and_then(Json::as_arr).unwrap_or(&[]);
+        let mut skipped = 0u64;
         for e in entries {
             let parsed = (|| {
                 let fp = DeviceFingerprint::new(
@@ -669,7 +679,17 @@ impl TuneCache {
                 let params = TuningParams::from_json(e.get("params")?)?;
                 let score = e.get("score")?.as_f64()?;
                 let ref_score = e.get("ref_score")?.as_f64()?;
+                // Reject non-finite and absurd scores: a cached "winner"
+                // of 0 s or a megasecond reference would poison warm-start
+                // validation far more cheaply than it can be detected at
+                // serve time.
                 if !(score.is_finite() && ref_score.is_finite() && score > 0.0) {
+                    return None;
+                }
+                if !(score < Self::MAX_SANE_SCORE_S
+                    && ref_score > 0.0
+                    && ref_score < Self::MAX_SANE_SCORE_S)
+                {
                     return None;
                 }
                 let entry = CacheEntry {
@@ -683,24 +703,67 @@ impl TuneCache {
             })();
             match parsed {
                 Some((fp, key, entry)) => cache.insert(&fp, &key, entry),
-                None => log::warn!("tunecache: skipping malformed entry {e}"),
+                None => {
+                    log::warn!("tunecache: skipping malformed entry {e}");
+                    skipped += 1;
+                }
             }
         }
-        cache.counters = CacheCounters::default();
+        // Loading is not serving: wipe the insert/evict noise the load
+        // loop produced, keeping only the malformed-entry tally.
+        cache.counters = CacheCounters { load_errors: skipped, ..CacheCounters::default() };
         cache
     }
 
+    /// Per-entry sanity ceiling for cached scores, in seconds. The
+    /// kernels this cache serves run in microseconds-to-seconds; an
+    /// entry claiming more than this is corrupt data, not a slow kernel.
+    const MAX_SANE_SCORE_S: f64 = 1e6;
+
     /// Persist to `path` (parent directories are created).
+    ///
+    /// Crash-safe: the serialised cache is written to a temp file in the
+    /// *same directory* and renamed over the target, so a crash (or
+    /// fault injection) mid-checkpoint leaves either the previous
+    /// complete file or the new complete file — never a torn prefix.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let path = path.as_ref();
+        anyhow::ensure!(
+            !path.as_os_str().is_empty(),
+            "tunecache path is empty (check --cache / $DEGOAL_TUNECACHE)"
+        );
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
                     .with_context(|| format!("creating {parent:?}"))?;
             }
         }
-        std::fs::write(path, self.to_json().to_string())
-            .with_context(|| format!("writing tunecache {path:?}"))
+        let tmp = Self::temp_sibling(path);
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing tunecache temp {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            // Leave no droppings behind a failed rename (e.g. target is
+            // a directory): the temp file is ours to clean up.
+            let _ = std::fs::remove_file(&tmp);
+            format!("renaming tunecache {tmp:?} -> {path:?}")
+        })
+    }
+
+    /// Unique same-directory temp name for the atomic save: rename(2) is
+    /// only atomic within a filesystem, so the temp file must be a
+    /// sibling, and the pid + process-wide counter keep concurrent
+    /// savers (tests, parallel services) from clobbering each other's
+    /// half-written temps.
+    fn temp_sibling(path: &Path) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut name = path
+            .file_name()
+            .map(|f| f.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("tunecache"));
+        name.push(format!(".tmp.{}.{n}", std::process::id()));
+        path.with_file_name(name)
     }
 
     /// Alias of [`TuneCache::save`] for the warm-start-shipping workflow.
@@ -708,8 +771,12 @@ impl TuneCache {
         self.save(path)
     }
 
-    /// Load from `path`. A missing file is an empty cache; malformed JSON
-    /// is an error (the caller decides whether to start cold).
+    /// Load from `path`. A missing file is an empty cache. Malformed
+    /// content is *never* an error into service startup: a corrupt or
+    /// truncated file goes through the salvage scanner
+    /// ([`TuneCache::from_salvage`]) and degrades, at worst, to a cold
+    /// start with `counters.load_errors` bumped. Only real I/O failures
+    /// (unreadable file) surface as `Err`.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<TuneCache> {
         let path = path.as_ref();
         if !path.exists() {
@@ -717,9 +784,123 @@ impl TuneCache {
         }
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading tunecache {path:?}"))?;
-        let v = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing tunecache {path:?}: {e}"))?;
-        Ok(TuneCache::from_json(&v))
+        match Json::parse(&text) {
+            Ok(v) => Ok(TuneCache::from_json(&v)),
+            Err(e) => {
+                log::warn!("tunecache {path:?} is corrupt ({e}); attempting salvage");
+                Ok(TuneCache::from_salvage(&text))
+            }
+        }
+    }
+
+    /// Best-effort recovery from a corrupt or truncated tunecache file
+    /// whose top-level JSON no longer parses. Complete entry objects are
+    /// extracted by a string-aware balanced-brace scan over the
+    /// `"entries"` array, revalidated through the normal
+    /// [`TuneCache::from_json`] per-entry gauntlet, and counted in
+    /// `counters.salvaged`; the incident itself is counted in
+    /// `counters.load_errors`. An unsalvageable file yields a cold
+    /// start — never an error.
+    pub fn from_salvage(text: &str) -> TuneCache {
+        let mut cache = match Self::salvage_json(text) {
+            Some(v) => TuneCache::from_json(&v),
+            None => TuneCache::new(),
+        };
+        let recovered = cache.len() as u64;
+        cache.counters.salvaged = recovered;
+        cache.counters.load_errors += 1;
+        if recovered > 0 {
+            log::warn!("tunecache salvage recovered {recovered} entries");
+        } else {
+            log::warn!("tunecache salvage recovered nothing; starting cold");
+        }
+        cache
+    }
+
+    /// Rebuild a parseable document from the recoverable fragments of a
+    /// corrupt file: every balanced `{...}` inside the `"entries"` array
+    /// that parses on its own is kept. Returns `None` when the text
+    /// declares a *different* format version (misreading a future layout
+    /// is worse than a cold start — truncation usually eats the trailing
+    /// version field, so a missing declaration is tolerated) or when no
+    /// entry survives.
+    fn salvage_json(text: &str) -> Option<Json> {
+        if let Some(v) = Self::declared_version(text) {
+            if v != TUNECACHE_FORMAT_VERSION {
+                return None;
+            }
+        }
+        let arr = &text[text.find("\"entries\"")?..];
+        let open = arr.find('[')?;
+        let bytes = arr.as_bytes();
+        let mut entries = Vec::new();
+        let mut i = open + 1;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => match Self::balanced_object_end(arr, i) {
+                    Some(end) => {
+                        if let Ok(v) = Json::parse(&arr[i..=end]) {
+                            entries.push(v);
+                        }
+                        i = end + 1;
+                    }
+                    // Truncated mid-object: nothing further is complete.
+                    None => break,
+                },
+                b']' => break,
+                _ => i += 1,
+            }
+        }
+        if entries.is_empty() {
+            return None;
+        }
+        Some(obj(vec![
+            ("version", num(TUNECACHE_FORMAT_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ]))
+    }
+
+    /// Byte offset of the `}` closing the object that opens at `start`,
+    /// tracking JSON string/escape state so braces inside labels cannot
+    /// fool the depth count. `None` if the text ends first (truncation).
+    fn balanced_object_end(text: &str, start: usize) -> Option<usize> {
+        let bytes = text.as_bytes();
+        let mut depth = 0usize;
+        let mut in_string = false;
+        let mut escaped = false;
+        for (off, &b) in bytes.iter().enumerate().skip(start) {
+            if in_string {
+                if escaped {
+                    escaped = false;
+                } else if b == b'\\' {
+                    escaped = true;
+                } else if b == b'"' {
+                    in_string = false;
+                }
+                continue;
+            }
+            match b {
+                b'"' => in_string = true,
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(off);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// The format version the text declares, if any (`"version":N`).
+    fn declared_version(text: &str) -> Option<u64> {
+        let at = text.find("\"version\"")?;
+        let rest = text[at + "\"version\"".len()..].trim_start();
+        let rest = rest.strip_prefix(':')?.trim_start();
+        let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+        digits.parse().ok()
     }
 
     /// Load, treating any failure as a cold start (service boot path).
@@ -884,6 +1065,106 @@ mod tests {
     fn missing_file_is_cold_start() {
         let c = TuneCache::load(tmp("never_written")).unwrap();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn save_is_atomic_over_a_torn_file() {
+        // Simulate the crash-mid-checkpoint the atomic save exists for:
+        // the target path already holds a torn prefix of an earlier
+        // write. A successful save must replace it wholesale, and no
+        // temp sibling may be left behind.
+        let path = tmp("atomic");
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k"), entry(1e-4));
+        let full = c.to_json().to_string();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        c.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), full);
+        let dir = path.parent().unwrap();
+        let stem = path.file_name().unwrap().to_str().unwrap().to_string();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(&stem) && n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp residue: {leftovers:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_rejects_empty_path() {
+        assert!(TuneCache::new().save("").is_err());
+    }
+
+    #[test]
+    fn truncated_file_salvages_complete_entries() {
+        let path = tmp("salvage_truncated");
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("k1"), entry(1e-4));
+        c.insert(&fp("a"), &key("k2"), entry(2e-4));
+        c.insert(&fp("b"), &key("k3"), entry(3e-4));
+        let full = c.to_json().to_string();
+        // Cut mid-way through the *last* entry: the first two are
+        // complete objects and must come back; the torn one must not.
+        let third_start = full.rfind("\"detail\"").unwrap();
+        std::fs::write(&path, &full[..third_start + 10]).unwrap();
+        let c2 = TuneCache::load(&path).unwrap();
+        assert_eq!(c2.len(), 2, "complete entries recovered");
+        assert!(c2.peek(&fp("a"), &key("k1")).is_some());
+        assert!(c2.peek(&fp("a"), &key("k2")).is_some());
+        assert_eq!(c2.counters.salvaged, 2);
+        assert_eq!(c2.counters.load_errors, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_file_degrades_to_cold_start() {
+        let path = tmp("salvage_garbage");
+        std::fs::write(&path, "!!not json at all##").unwrap();
+        let c = TuneCache::load(&path).unwrap();
+        assert!(c.is_empty());
+        assert_eq!(c.counters.salvaged, 0);
+        assert_eq!(c.counters.load_errors, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn salvage_refuses_foreign_version() {
+        // A corrupt file that still declares a different format version
+        // must cold-start, not be reinterpreted under today's layout.
+        let text = r#"{"entries":[{"device":"sim:test","detail":"a","kernel":"k",
+            "length":64,"shape":"-"}],"version":999,"#; // note: unparsable tail
+        let c = TuneCache::from_salvage(text);
+        assert!(c.is_empty());
+        assert_eq!(c.counters.load_errors, 1);
+    }
+
+    #[test]
+    fn absurd_scores_are_skipped_and_counted() {
+        let mut c = TuneCache::new();
+        c.insert(&fp("a"), &key("good"), entry(1e-4));
+        let mut j = c.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(entries)) = m.get_mut("entries") {
+                let mut absurd = entries[0].clone();
+                if let Json::Obj(e) = &mut absurd {
+                    e.insert("kernel".into(), jstr("absurd"));
+                    e.insert("score".into(), num(1e12)); // a 31,000-year kernel
+                }
+                entries.push(absurd);
+                let mut zero_ref = entries[0].clone();
+                if let Json::Obj(e) = &mut zero_ref {
+                    e.insert("kernel".into(), jstr("zero_ref"));
+                    e.insert("ref_score".into(), num(0.0));
+                }
+                entries.push(zero_ref);
+            }
+        }
+        let c2 = TuneCache::from_json(&j);
+        assert_eq!(c2.len(), 1, "only the sane entry survives");
+        assert!(c2.peek(&fp("a"), &key("good")).is_some());
+        assert_eq!(c2.counters.load_errors, 2);
     }
 
     #[test]

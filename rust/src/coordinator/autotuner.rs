@@ -68,6 +68,31 @@ pub struct TunerConfig {
     /// horizon is bitwise-invisible to winner selection. 0 (the default)
     /// disables it.
     pub horizon: usize,
+    /// Bounded retries for a failed `Backend::generate` (transient
+    /// faults). 0 (the default) preserves the original fail-fast
+    /// contract: the error propagates to the caller unchanged.
+    pub generate_retries: u32,
+    /// Virtual seconds charged to overhead for the first retry's
+    /// backoff, doubling per attempt. The charge flows through the
+    /// lane's overhead deltas into the `RegenGovernor` budget, so retry
+    /// storms pay for themselves and can never starve real tuning.
+    pub retry_backoff: f64,
+    /// Variant health guard band: a serving variant whose per-call EWMA
+    /// exceeds `quarantine_factor ×` the tracked reference score is
+    /// quarantined — fall back to the reference, never serve or
+    /// re-adopt it. 0.0 (the default) disables health checks entirely.
+    pub quarantine_factor: f64,
+    /// EWMA smoothing factor for the health and drift trackers.
+    pub health_alpha: f64,
+    /// Post-exploration drift tracking cadence: re-measure the
+    /// reference every this many wake-ups. 0 (the default) disables
+    /// drift detection.
+    pub drift_check_every: u64,
+    /// Relative reference-score shift (vs the first post-exploration
+    /// measurement) that triggers a drift re-tune: warm state is
+    /// demoted, not trusted, and exploration re-enters under the same
+    /// gates every advance pays. 0.0 disables.
+    pub drift_threshold: f64,
 }
 
 impl Default for TunerConfig {
@@ -81,9 +106,21 @@ impl Default for TunerConfig {
             batch: 1,
             strategy: StrategyKind::Grid,
             horizon: 0,
+            generate_retries: 0,
+            retry_backoff: 100e-6,
+            quarantine_factor: 0.0,
+            health_alpha: 0.2,
+            drift_check_every: 0,
+            drift_threshold: 0.0,
         }
     }
 }
+
+/// Finite pathological score (seconds per call) fed to the strategy for
+/// a candidate that was skipped — quarantined, or its generate outlived
+/// the retry budget. Bad enough that no adaptive move accepts it; finite
+/// so model fits stay well-conditioned (∞ would poison their averages).
+const QUARANTINE_PENALTY_S: f64 = 1e3;
 
 /// Deterministic per-kernel-stream seed for adaptive strategies: a
 /// function of `(length, ve_filter)` only, so sequential and threaded
@@ -97,6 +134,23 @@ fn strategy_seed(length: u32, ve_filter: Option<bool>) -> u64 {
         }
 }
 
+/// Build the configured strategy family for one kernel stream — the
+/// recipe [`AutoTuner::new`] uses and a drift re-tune replays from
+/// scratch.
+fn build_strategy(
+    cfg: &TunerConfig,
+    length: u32,
+    ve_filter: Option<bool>,
+) -> Box<dyn SearchStrategy> {
+    let seed = strategy_seed(length, ve_filter);
+    match cfg.strategy {
+        StrategyKind::Grid => Box::new(TwoPhaseGrid::new(length, ve_filter)),
+        StrategyKind::Random => Box::new(RandomSearch::new(length, ve_filter, seed)),
+        StrategyKind::Anneal => Box::new(Anneal::new(length, ve_filter, seed)),
+        StrategyKind::Model => Box::new(ModelGuided::new(length, ve_filter, seed)),
+    }
+}
+
 /// What a tuning wake-up did (for logs and tests).
 #[derive(Debug, Clone, PartialEq)]
 pub enum StepEvent {
@@ -108,6 +162,9 @@ pub enum StepEvent {
     Explored { params: TuningParams, score: f64, swapped: bool },
     /// Both phases exhausted at this wake-up.
     ExplorationDone,
+    /// The reference score drifted past the threshold: warm state was
+    /// demoted and exploration re-entered.
+    DriftRetune,
 }
 
 pub struct AutoTuner {
@@ -147,6 +204,23 @@ pub struct AutoTuner {
     /// (the horizon re-arms per advance — each draw may reshape an
     /// adaptive strategy's frontier).
     horizon_shared: bool,
+    /// `(length, ve_filter)` recipe to rebuild the strategy on a drift
+    /// re-tune; `None` for tuners built over an explicit strategy
+    /// ([`AutoTuner::with_strategy`] callers), which cannot re-tune.
+    rebuild: Option<(u32, Option<bool>)>,
+    /// Variant ids quarantined by the health check — never served,
+    /// regenerated, or re-adopted again in this tuner's lifetime.
+    quarantined: std::collections::HashSet<u32>,
+    /// EWMA of the active variant's serving-call scores (reset on every
+    /// swap) — the quarantine guard's observation.
+    active_ewma: Option<f64>,
+    /// EWMA of the periodic post-exploration reference re-measurements.
+    ref_ewma: Option<f64>,
+    /// First post-exploration reference measurement — what the drift
+    /// tracker compares the EWMA against.
+    drift_baseline: Option<f64>,
+    /// Wake-ups since exploration finished (drift-check cadence).
+    done_ticks: u64,
     pub stats: TuneStats,
 }
 
@@ -156,14 +230,9 @@ impl AutoTuner {
     /// the paper's fair-comparison runs, or None for the real scenario.
     /// The strategy family comes from [`TunerConfig::strategy`].
     pub fn new(cfg: TunerConfig, length: u32, ve_filter: Option<bool>) -> AutoTuner {
-        let seed = strategy_seed(length, ve_filter);
-        let strategy: Box<dyn SearchStrategy> = match cfg.strategy {
-            StrategyKind::Grid => Box::new(TwoPhaseGrid::new(length, ve_filter)),
-            StrategyKind::Random => Box::new(RandomSearch::new(length, ve_filter, seed)),
-            StrategyKind::Anneal => Box::new(Anneal::new(length, ve_filter, seed)),
-            StrategyKind::Model => Box::new(ModelGuided::new(length, ve_filter, seed)),
-        };
-        AutoTuner::with_strategy(cfg, strategy)
+        let mut tuner = AutoTuner::with_strategy(cfg, build_strategy(&cfg, length, ve_filter));
+        tuner.rebuild = Some((length, ve_filter));
+        tuner
     }
 
     /// A tuner over an explicit search strategy — the seam every
@@ -186,6 +255,12 @@ impl AutoTuner {
             pending: VecDeque::new(),
             pending_shared: false,
             horizon_shared: false,
+            rebuild: None,
+            quarantined: std::collections::HashSet::new(),
+            active_ewma: None,
+            ref_ewma: None,
+            drift_baseline: None,
+            done_ticks: 0,
             stats: TuneStats::default(),
         }
     }
@@ -298,6 +373,7 @@ impl AutoTuner {
                 self.stats.gained += r - a;
             }
         }
+        self.health_check(dt);
         self.tune_step(backend)?;
         Ok(dt)
     }
@@ -319,7 +395,7 @@ impl AutoTuner {
         }
 
         if self.exploration_done() {
-            return Ok(StepEvent::Idle);
+            return self.drift_check(backend);
         }
 
         // External (service-level) gate, then the local regeneration
@@ -349,6 +425,167 @@ impl AutoTuner {
             return Ok(StepEvent::Idle);
         }
         self.advance(backend)
+    }
+
+    /// Per-serving-call variant health guard: fold the observed call time
+    /// into an EWMA and quarantine the active variant when it regresses
+    /// past `quarantine_factor ×` the tracked reference score — fall back
+    /// to the reference and never serve, regenerate, or re-adopt that
+    /// variant again. `quarantine_factor == 0.0` (the default) makes this
+    /// a no-op beyond the belt-and-braces quarantined-serve counter.
+    fn health_check(&mut self, dt: f64) {
+        let KernelVersion::Variant(p) = self.active else { return };
+        if self.quarantined.contains(&p.full_id()) {
+            // Must be unreachable: quarantine demotes the active function
+            // and adoption filters the blacklist. Counted (never masked)
+            // so the chaos harness can assert it stayed zero — and healed
+            // anyway so a violation cannot repeat.
+            self.stats.quarantined_serves += 1;
+            self.active = KernelVersion::Reference(self.cfg.initial_ref);
+            self.active_score = self.ref_score;
+            self.active_ewma = None;
+            return;
+        }
+        if self.cfg.quarantine_factor <= 0.0 {
+            return;
+        }
+        let a = self.cfg.health_alpha;
+        let ewma = match self.active_ewma {
+            Some(e) => a * dt + (1.0 - a) * e,
+            None => dt,
+        };
+        self.active_ewma = Some(ewma);
+        let Some(r) = self.ref_score else { return };
+        if ewma > self.cfg.quarantine_factor * r {
+            self.quarantine_active(p, ewma);
+        }
+    }
+
+    /// Quarantine the active variant: fall back to the reference,
+    /// blacklist the id for this tuner's lifetime, and drop it from
+    /// `best` so the stale score is never written back or re-adopted.
+    fn quarantine_active(&mut self, p: TuningParams, ewma: f64) {
+        log::warn!(
+            "quarantining {p}: serving ewma {ewma:.3e}s regressed past {} x reference {:?}",
+            self.cfg.quarantine_factor,
+            self.ref_score
+        );
+        self.quarantined.insert(p.full_id());
+        self.stats.quarantined += 1;
+        self.active = KernelVersion::Reference(self.cfg.initial_ref);
+        self.active_score = self.ref_score;
+        self.active_ewma = None;
+        if self.best.map(|(bp, _)| bp.full_id() == p.full_id()).unwrap_or(false) {
+            self.best = None;
+            self.best_is_real = false;
+        }
+    }
+
+    /// Generate with bounded retries: each retry charges an exponentially
+    /// growing backoff to overhead, which flows through the lane's
+    /// overhead deltas into the [`RegenGovernor`](super::RegenGovernor)
+    /// budget — retry storms pay for themselves. Returns `Ok(None)` when
+    /// the attempts are exhausted, so callers degrade gracefully instead
+    /// of tearing the lane down. `generate_retries == 0` (the default)
+    /// preserves the original fail-fast contract bit for bit: the first
+    /// error propagates unchanged.
+    fn generate_with_retry<B: Backend>(
+        &mut self,
+        backend: &mut B,
+        p: TuningParams,
+    ) -> Result<Option<f64>> {
+        if self.cfg.generate_retries == 0 {
+            return backend.generate(p).map(Some);
+        }
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.generate_retries {
+            if attempt > 0 {
+                let backoff = self.cfg.retry_backoff * (1u64 << (attempt - 1).min(16)) as f64;
+                self.stats.overhead += backoff;
+                self.stats.retries += 1;
+            }
+            match backend.generate(p) {
+                Ok(c) => return Ok(Some(c)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        log::warn!(
+            "generate for {p} still failing after {} retries ({:#}); degrading",
+            self.cfg.generate_retries,
+            last_err.expect("at least one attempt ran")
+        );
+        self.stats.generate_failures += 1;
+        Ok(None)
+    }
+
+    /// Post-exploration drift watch: every `drift_check_every` wake-ups,
+    /// re-measure the reference with one real call (charged to overhead,
+    /// so the governor sees it) and fold it into an EWMA. A relative
+    /// shift past `drift_threshold` vs the first post-exploration
+    /// measurement demotes the warm state and re-enters exploration —
+    /// the one scenario where online tuning beats any shipped cache.
+    fn drift_check<B: Backend>(&mut self, backend: &mut B) -> Result<StepEvent> {
+        if self.cfg.drift_check_every == 0
+            || self.cfg.drift_threshold <= 0.0
+            || self.rebuild.is_none()
+            || !self.regen_enabled
+        {
+            return Ok(StepEvent::Idle);
+        }
+        if !self.cfg.decision.allow(self.stats.overhead, self.stats.app_time, self.stats.gained) {
+            return Ok(StepEvent::Idle);
+        }
+        self.done_ticks += 1;
+        if self.done_ticks % self.cfg.drift_check_every != 0 {
+            return Ok(StepEvent::Idle);
+        }
+        let probe = backend.call(&KernelVersion::Reference(self.cfg.initial_ref), EvalData::Real)?;
+        self.stats.overhead += probe.cost;
+        let a = self.cfg.health_alpha;
+        let ewma = match self.ref_ewma {
+            Some(e) => a * probe.score + (1.0 - a) * e,
+            None => probe.score,
+        };
+        self.ref_ewma = Some(ewma);
+        // Baseline = the first post-exploration measurement, taken in the
+        // same mode as every later probe — immune to the training-vs-real
+        // mismatch a bootstrap-time ref_score would carry.
+        let baseline = *self.drift_baseline.get_or_insert(ewma);
+        if (ewma - baseline).abs() > self.cfg.drift_threshold * baseline {
+            self.retune_for_drift();
+            return Ok(StepEvent::DriftRetune);
+        }
+        Ok(StepEvent::Idle)
+    }
+
+    /// The workload shifted under the tuned variant: restart exploration
+    /// from a cold plan. Warm state, the cached best, and both trackers
+    /// are demoted — their scores describe a landscape that no longer
+    /// exists. The quarantine blacklist survives (those artifacts are
+    /// suspect regardless of the workload).
+    fn retune_for_drift(&mut self) {
+        let Some((length, ve_filter)) = self.rebuild else { return };
+        log::warn!(
+            "reference drift past {:.1}% — demoting warm state and re-entering exploration",
+            self.cfg.drift_threshold * 100.0
+        );
+        self.stats.drift_retunes += 1;
+        self.strategy = build_strategy(&self.cfg, length, ve_filter);
+        self.last_phase = self.strategy.phase();
+        self.pending.clear();
+        self.pending_shared = false;
+        self.horizon_shared = false;
+        self.active = KernelVersion::Reference(self.cfg.initial_ref);
+        self.active_score = None;
+        self.ref_score = None; // forces a fresh reference bootstrap
+        self.best = None;
+        self.best_is_real = false;
+        self.warm = None;
+        self.active_ewma = None;
+        self.ref_ewma = None;
+        self.drift_baseline = None;
+        self.done_ticks = 0;
+        self.stats.exploration_done_at = None;
     }
 
     /// Measure the initial reference if not yet done (returns the event),
@@ -382,12 +619,19 @@ impl AutoTuner {
     /// stale or no-longer-winning candidate falls back to the untouched
     /// exploration plan.
     fn warm_validate<B: Backend>(&mut self, backend: &mut B, p: TuningParams) -> Result<StepEvent> {
-        let gen_cost = match backend.generate(p) {
-            Ok(c) => c,
-            Err(e) => {
-                // Stale artifact: the cached winner can no longer be
-                // regenerated (artifact tree changed under the cache).
-                log::warn!("warm-start candidate {p} is stale ({e:#}); falling back to exploration");
+        let gen_cost = match self.generate_with_retry(backend, p) {
+            Ok(Some(c)) => c,
+            outcome => {
+                // Stale artifact (the tree changed under the cache) or a
+                // transient fault that outlived the retry budget: either
+                // way the cached winner cannot be regenerated now.
+                let why = match outcome {
+                    Err(e) => format!("{e:#}"),
+                    _ => "retry budget exhausted".to_string(),
+                };
+                log::warn!(
+                    "warm-start candidate {p} is stale ({why}); falling back to exploration"
+                );
                 self.stats.warm_outcome = Some(WarmOutcome::Stale);
                 return self.explore_next(backend);
             }
@@ -415,6 +659,7 @@ impl AutoTuner {
             self.stats.best_at_generate = Some(self.stats.generate_calls);
             self.active = KernelVersion::Variant(p);
             self.active_score = Some(ev.score);
+            self.active_ewma = None;
             self.ref_score = Some(ref_ev.score);
             self.stats.swaps += 1;
             self.stats.last_swap_at = Some(self.now());
@@ -564,7 +809,24 @@ impl AutoTuner {
         backend: &mut B,
         cand: TuningParams,
     ) -> Result<StepEvent> {
-        let gen_cost = backend.generate(cand)?;
+        if self.quarantined.contains(&cand.full_id()) {
+            // A quarantined artifact is suspect forever: never regenerate
+            // or re-adopt it; teach the strategy it was pathological so
+            // adaptive draws stay unique and terminating.
+            self.strategy.observe(cand, QUARANTINE_PENALTY_S);
+            self.sync_strategy_stats();
+            return Ok(StepEvent::Idle);
+        }
+        let gen_cost = match self.generate_with_retry(backend, cand)? {
+            Some(c) => c,
+            None => {
+                // Retries exhausted: skip the candidate and keep serving —
+                // a transient generate fault must not tear the lane down.
+                self.strategy.observe(cand, QUARANTINE_PENALTY_S);
+                self.sync_strategy_stats();
+                return Ok(StepEvent::Idle);
+            }
+        };
         self.stats.generate_calls += 1;
         self.stats.overhead += gen_cost;
         let ev = Evaluator::evaluate(backend, &KernelVersion::Variant(cand), self.eval_mode())?;
@@ -586,6 +848,7 @@ impl AutoTuner {
         if swapped {
             self.active = KernelVersion::Variant(cand);
             self.active_score = Some(ev.score);
+            self.active_ewma = None;
             self.stats.swaps += 1;
             self.stats.last_swap_at = Some(self.now());
         }
@@ -1142,6 +1405,121 @@ mod tests {
             assert_eq!(h_t.best().unwrap().0.full_id(), base_t.best().unwrap().0.full_id());
             assert_eq!(h_t.best().unwrap().1.to_bits(), base_t.best().unwrap().1.to_bits());
         }
+    }
+
+    /// Every variant suddenly 30x slower than the reference — the
+    /// degraded-serving landscape the quarantine guard must catch.
+    fn degraded_landscape(_p: &TuningParams) -> f64 {
+        5e-3
+    }
+
+    /// The whole machine slowed 3x (same optimum structure) — the
+    /// reference-drift scenario.
+    fn drifted_landscape(p: &TuningParams) -> f64 {
+        3.0 * crate::backend::mock::default_landscape(p)
+    }
+
+    #[test]
+    fn quarantine_demotes_a_regressed_variant_and_never_readopts() {
+        let mut b = MockBackend::new(64, 60);
+        let mut cfg = fast_cfg();
+        cfg.quarantine_factor = 5.0;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        assert!(tuner.exploration_done());
+        assert!(tuner.active().is_variant(), "healthy run adopts the optimum");
+        assert_eq!(tuner.stats.quarantined, 0, "guard is silent while serving is healthy");
+        let served = tuner.best().unwrap().0;
+
+        // The deployed artifact degrades in place: every variant now runs
+        // 30x slower than the reference, which is untouched.
+        b.landscape = degraded_landscape;
+        drive(&mut tuner, &mut b, 200);
+        assert_eq!(tuner.stats.quarantined, 1, "regression past the guard band quarantines");
+        assert!(!tuner.active().is_variant(), "fell back to the reference");
+        assert_eq!(tuner.stats.quarantined_serves, 0, "quarantined variant never serves");
+        assert!(
+            tuner.best().map(|(p, _)| p.full_id() != served.full_id()).unwrap_or(true),
+            "the quarantined winner's stale score must not survive as best"
+        );
+        // Stays on the reference: nothing re-adopts the blacklisted id.
+        drive(&mut tuner, &mut b, 2_000);
+        assert_eq!(tuner.stats.quarantined, 1);
+        assert!(!tuner.active().is_variant());
+        assert_eq!(tuner.stats.quarantined_serves, 0);
+    }
+
+    #[test]
+    fn retry_config_without_faults_is_bitwise_invisible() {
+        let run = |retries: u32| {
+            let mut b = MockBackend::new(64, 61);
+            let mut cfg = fast_cfg();
+            cfg.generate_retries = retries;
+            let mut tuner = AutoTuner::new(cfg, 64, None);
+            drive(&mut tuner, &mut b, 60_000);
+            let (bp, bs) = tuner.best().unwrap();
+            let trail: Vec<(u32, u64, bool)> = tuner
+                .stats
+                .explored
+                .iter()
+                .map(|e| (e.params.full_id(), e.score.to_bits(), e.swapped_in))
+                .collect();
+            (bp.full_id(), bs.to_bits(), trail, tuner.stats.retries)
+        };
+        let (id0, s0, trail0, r0) = run(0);
+        let (id3, s3, trail3, r3) = run(3);
+        assert_eq!(r0, 0);
+        assert_eq!(r3, 0, "no faults: retry path never engages");
+        assert_eq!((id3, s3, trail3), (id0, s0, trail0));
+    }
+
+    #[test]
+    fn retries_ride_out_injected_generate_faults() {
+        use crate::fault::{FaultPlan, FaultyBackend};
+        use std::sync::Arc;
+        let mut plan = FaultPlan::none(7);
+        plan.generate_fail = 0.3;
+        let mut b = FaultyBackend::new(MockBackend::new(64, 62), Arc::new(plan));
+        let mut cfg = fast_cfg();
+        cfg.generate_retries = 5;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        for _ in 0..80_000 {
+            tuner.app_call(&mut b).unwrap();
+        }
+        assert!(tuner.exploration_done(), "faulty generates must not stall exploration");
+        assert!(tuner.stats.retries > 0, "30% fault rate must exercise the retry path");
+        assert!(tuner.best().is_some(), "exploration still lands on a winner");
+        assert!(b.injected() > 0);
+    }
+
+    #[test]
+    fn drift_retune_reenters_exploration_after_a_workload_shift() {
+        let mut b = MockBackend::new(64, 63);
+        let mut cfg = fast_cfg();
+        cfg.drift_check_every = 3;
+        cfg.drift_threshold = 0.5;
+        let mut tuner = AutoTuner::new(cfg, 64, None);
+        drive(&mut tuner, &mut b, 60_000);
+        assert!(tuner.exploration_done());
+        let first_best = tuner.best().unwrap().0;
+        // Settle the drift baseline on the stationary workload.
+        drive(&mut tuner, &mut b, 2_000);
+        assert_eq!(tuner.stats.drift_retunes, 0, "stationary reference never trips the watch");
+
+        // The machine slows 3x under the service: reference and every
+        // variant shift together, optimum structure unchanged.
+        b.ref_time *= 3.0;
+        b.landscape = drifted_landscape;
+        drive(&mut tuner, &mut b, 60_000);
+        assert_eq!(tuner.stats.drift_retunes, 1, "shift past the threshold re-tunes once");
+        assert!(tuner.exploration_done(), "re-entered exploration runs to completion");
+        let (new_best, new_score) = tuner.best().unwrap();
+        assert_eq!(new_best.s, first_best.s, "same landscape shape, same winner structure");
+        let (_, expect_t) = b.best_possible();
+        assert!(
+            new_score <= expect_t * 1.05,
+            "re-tuned score {new_score} must recover ≥95% of the fresh optimum {expect_t}"
+        );
     }
 
     #[test]

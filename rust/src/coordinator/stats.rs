@@ -70,6 +70,21 @@ pub struct TuneStats {
     /// non-zero only for pruning strategies (`complete() == false`), and
     /// only once they decide to stop phase 1 early.
     pub pruned_candidates: u64,
+    /// Retried `Backend::generate` attempts (backoff charged to
+    /// overhead). 0 unless `TunerConfig::generate_retries` is enabled.
+    pub retries: u64,
+    /// Candidates whose generate still failed after the full retry
+    /// budget — skipped, never torn down.
+    pub generate_failures: u64,
+    /// Serving variants demoted by the health guard (blacklisted for
+    /// this tuner's lifetime).
+    pub quarantined: u64,
+    /// Application calls served *by* an already-quarantined variant —
+    /// must stay 0; counted (never masked) so chaos runs can assert it.
+    pub quarantined_serves: u64,
+    /// Drift-triggered re-tunes: the reference shifted past the
+    /// threshold and exploration was re-entered from a cold plan.
+    pub drift_retunes: u64,
 }
 
 impl TuneStats {

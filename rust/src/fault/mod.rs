@@ -1,0 +1,546 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The paper's value proposition is that online tuning pays off *inside*
+//! the application's own run — which makes a bad generated variant, a
+//! torn cache file, or a dead worker a production outage in the serving
+//! path, not a tooling inconvenience. This module supplies the failures
+//! on demand so the recovery machinery (quarantine, retry-with-backoff,
+//! self-healing workers, salvage loading) can be exercised end to end
+//! and *deterministically*:
+//!
+//! * [`FaultPlan`] — one seeded, shareable schedule of what fails and
+//!   how often. Built from `--chaos-seed` / `$DEGOAL_CHAOS_SEED`
+//!   ([`chaos_seed_from_env`]); the same seed always produces the same
+//!   injections, so a chaos run is a reproducible test, not a fuzzer.
+//! * [`FaultyBackend`] — wraps any [`Backend`] and injects the three
+//!   §3.3 failure modes at the trait seam: `generate` fails
+//!   transiently (exercising bounded retry), a freshly generated
+//!   variant is *poisoned* — scores pathologically worse than the
+//!   reference from birth (exercising measure-and-reject), and a
+//!   serving variant *wears out* mid-run — its calls degrade sticky
+//!   from some point on (exercising quarantine).
+//! * [`DriftingBackend`] — a non-stationary device: delegates to phase
+//!   A for the first `switch_at` calls, then to phase B forever after,
+//!   shifting the reference score mid-run (exercising drift-triggered
+//!   re-tune).
+//! * Worker panics — [`FaultPlan::take_worker_panic`] schedules
+//!   [`InjectedPanic`]s that the engine throws between lane steps and
+//!   contains (lane parked back intact, worker respawned).
+//! * Crash simulation — [`FaultPlan::truncate_file`] tears a file at a
+//!   seeded offset, the on-disk aftermath of a crash mid-write that the
+//!   cache's salvage loader must survive.
+//!
+//! Every injection is recorded through the wrapped backend's
+//! [`Recorder`] as a [`Counter::FaultInjected`] bump plus a
+//! [`EventKind::FaultInjected`] journal event carrying the site label,
+//! so a chaos run's telemetry attributes every anomaly to its cause.
+//! With no plan installed (the default everywhere), nothing in this
+//! module is on any code path — the fault layer is a true no-op, like
+//! the disabled recorder.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{Backend, CandidateScorer, EvalData, KernelVersion, Sample};
+use crate::cache::DeviceFingerprint;
+use crate::obs::{Counter, EventKind, Recorder};
+use crate::tunespace::TuningParams;
+use crate::util::rng::Rng;
+
+/// Environment variable naming the chaos seed (CLI `--chaos-seed` wins).
+pub const CHAOS_SEED_ENV: &str = "DEGOAL_CHAOS_SEED";
+
+/// Marker payload for scheduled worker panics: the engine's containment
+/// downcasts the panic payload to tell an *injected* panic (heal and
+/// keep serving) from a genuine one (heal the lane, then fail fast).
+#[derive(Debug)]
+pub struct InjectedPanic;
+
+/// One seeded schedule of injected failures, shared (`Arc`) between
+/// every wrapped backend and the engine's workers.
+///
+/// Probabilities are per *opportunity* (one generate attempt, one
+/// variant call); the panic schedule is a global quantum countdown.
+/// All draws come from per-backend [`Rng`] streams keyed off `seed`, so
+/// outcomes are independent of worker count and registration order.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Base seed; every backend derives its own stream from this.
+    pub seed: u64,
+    /// P(one `generate` attempt fails transiently).
+    pub generate_fail: f64,
+    /// P(a freshly generated variant is poisoned — pathologically slow
+    /// from birth).
+    pub bad_variant: f64,
+    /// P(per real variant call) that the variant *wears out*: from that
+    /// call on, every call of it runs `degrade_factor` slower.
+    pub call_degrade: f64,
+    /// Score multiplier for poisoned variants (slower than reference).
+    pub bad_factor: f64,
+    /// Score multiplier after wear-out (what quarantine must catch).
+    pub degrade_factor: f64,
+    /// Throw an [`InjectedPanic`] on an engine worker every this many
+    /// scheduling quanta (0 = never).
+    pub worker_panic_every: u64,
+    panic_countdown: AtomicU64,
+}
+
+impl FaultPlan {
+    /// The standard chaos schedule used by `degoal-rt service --chaos`:
+    /// aggressive enough that every recovery path fires in a short run,
+    /// mild enough that tuning still converges.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            generate_fail: 0.20,
+            bad_variant: 0.10,
+            call_degrade: 0.004,
+            bad_factor: 25.0,
+            degrade_factor: 25.0,
+            worker_panic_every: 48,
+            panic_countdown: AtomicU64::new(48),
+        }
+    }
+
+    /// A plan that injects nothing — useful as a test control.
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            generate_fail: 0.0,
+            bad_variant: 0.0,
+            call_degrade: 0.0,
+            bad_factor: 1.0,
+            degrade_factor: 1.0,
+            worker_panic_every: 0,
+            panic_countdown: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the panic period (0 disables panics).
+    pub fn with_panic_every(mut self, n: u64) -> FaultPlan {
+        self.worker_panic_every = n;
+        self.panic_countdown = AtomicU64::new(n);
+        self
+    }
+
+    /// Should the worker finishing the current quantum panic? Global
+    /// countdown across workers: every `worker_panic_every`-th quantum
+    /// answers `true`. Which *worker* draws the short straw is
+    /// scheduling-dependent, but lane outcomes are unaffected either
+    /// way: the panic fires after the quantum's steps completed and the
+    /// containment parks the lane back intact.
+    pub fn take_worker_panic(&self) -> bool {
+        if self.worker_panic_every == 0 {
+            return false;
+        }
+        let prev = self.panic_countdown.fetch_sub(1, Ordering::Relaxed);
+        if prev == 1 {
+            self.panic_countdown.store(self.worker_panic_every, Ordering::Relaxed);
+            return true;
+        }
+        // fetch_sub wrapped past zero on a racing reset: repair benignly.
+        if prev == 0 {
+            self.panic_countdown.store(self.worker_panic_every, Ordering::Relaxed);
+        }
+        false
+    }
+
+    /// Per-backend RNG stream: seeded off the plan seed and a stable
+    /// label (the backend's kernel id), so each lane's injection
+    /// sequence is deterministic regardless of thread count or
+    /// registration order.
+    pub fn stream(&self, label: &str) -> Rng {
+        Rng::new(self.seed ^ fnv1a(label.as_bytes()))
+    }
+
+    /// Simulate a crash mid-write: truncate `path` to a seeded fraction
+    /// (35–85 %) of its length, in place and *non-atomically* — exactly
+    /// the torn file `TuneCache::save`'s atomic rename exists to
+    /// prevent, and the input `TuneCache::load`'s salvage scanner must
+    /// survive. Returns the number of bytes kept.
+    pub fn truncate_file(&self, path: &std::path::Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} for fault injection"))?;
+        let frac = self.stream("truncate").range_f64(0.35, 0.85);
+        let keep = ((text.len() as f64) * frac) as usize;
+        std::fs::write(path, &text[..keep])
+            .with_context(|| format!("tearing {path:?} at {keep} bytes"))?;
+        Ok(keep)
+    }
+}
+
+/// Read `$DEGOAL_CHAOS_SEED`. Absent → `Ok(None)`; present but empty or
+/// unparsable → a usage error (never a silent default).
+pub fn chaos_seed_from_env() -> Result<Option<u64>> {
+    match std::env::var(CHAOS_SEED_ENV) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(v)) => {
+            bail!("${CHAOS_SEED_ENV} is not valid unicode: {v:?}")
+        }
+        Ok(s) => {
+            let t = s.trim();
+            if t.is_empty() {
+                bail!("${CHAOS_SEED_ENV} is set but empty; expected a u64 seed");
+            }
+            t.parse::<u64>().map(Some).map_err(|_| {
+                anyhow::anyhow!("${CHAOS_SEED_ENV}={s:?} is not a u64 seed")
+            })
+        }
+    }
+}
+
+/// FNV-1a over bytes — stable label hashing for RNG stream derivation
+/// (must not depend on `std::hash`'s per-process randomization).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A [`Backend`] wrapper that injects the [`FaultPlan`]'s failure modes
+/// at the trait seam, leaving the wrapped backend untouched.
+///
+/// Identity methods (`name`, `device_fingerprint`, `kernel_id`) pass
+/// straight through: a faulty device is still the same device, and the
+/// tuning cache must key it identically.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+    rng: Rng,
+    /// Variants judged pathologically bad at generate time.
+    poisoned: HashSet<u32>,
+    /// Variants that wore out mid-run (sticky degradation).
+    degraded: HashSet<u32>,
+    rec: Recorder,
+    injected: u64,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> FaultyBackend<B> {
+        let rng = plan.stream(&inner.kernel_id());
+        FaultyBackend {
+            inner,
+            plan,
+            rng,
+            poisoned: HashSet::new(),
+            degraded: HashSet::new(),
+            rec: Recorder::disabled(),
+            injected: 0,
+        }
+    }
+
+    /// Injections performed so far (tests assert the plan actually bit).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    fn record(&mut self, site: &'static str) {
+        self.injected += 1;
+        self.rec.count(Counter::FaultInjected, 1);
+        self.rec.event_here(EventKind::FaultInjected { site });
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn generate(&mut self, p: TuningParams) -> Result<f64> {
+        // Transient failure, drawn per *attempt*: a retry re-rolls, so
+        // bounded retry-with-backoff can actually succeed.
+        if self.plan.generate_fail > 0.0 && self.rng.f64() < self.plan.generate_fail {
+            self.record("generate");
+            bail!("injected fault: generate failed for {p}");
+        }
+        let id = p.full_id();
+        let fresh = !self.poisoned.contains(&id);
+        let cost = self.inner.generate(p)?;
+        // Judge each variant once, on its first successful generate:
+        // poisoned variants score pathologically from birth, and the
+        // tuner must measure-and-reject them without special casing.
+        if fresh
+            && cost > 0.0
+            && self.plan.bad_variant > 0.0
+            && self.rng.f64() < self.plan.bad_variant
+        {
+            self.poisoned.insert(id);
+            self.record("bad_variant");
+        }
+        Ok(cost)
+    }
+
+    fn call(&mut self, v: &KernelVersion, data: EvalData) -> Result<Sample> {
+        let mut s = self.inner.call(v, data)?;
+        if let KernelVersion::Variant(p) = v {
+            let id = p.full_id();
+            // Wear-out: one sticky draw per real call of a healthy
+            // variant; once it fires, every later call runs degraded —
+            // the sustained regression quarantine exists to catch.
+            if data == EvalData::Real
+                && self.plan.call_degrade > 0.0
+                && !self.degraded.contains(&id)
+                && self.rng.f64() < self.plan.call_degrade
+            {
+                self.degraded.insert(id);
+                self.record("call_degrade");
+            }
+            let mut factor = 1.0;
+            if self.poisoned.contains(&id) {
+                factor *= self.plan.bad_factor;
+            }
+            if self.degraded.contains(&id) {
+                factor *= self.plan.degrade_factor;
+            }
+            if factor != 1.0 {
+                s.score *= factor;
+                s.cost *= factor;
+            }
+        }
+        Ok(s)
+    }
+
+    fn energy_per_call(&mut self, v: &KernelVersion) -> Option<f64> {
+        self.inner.energy_per_call(v)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        self.inner.device_fingerprint()
+    }
+
+    fn kernel_id(&self) -> String {
+        self.inner.kernel_id()
+    }
+
+    fn set_recorder(&mut self, rec: Recorder) {
+        self.rec = rec.clone();
+        self.inner.set_recorder(rec);
+    }
+
+    // Deliberately no speculative_scorer: a detached scorer would see
+    // the un-poisoned landscape and desynchronise from the faulty
+    // measurements. The engine simply skips prewarming for these lanes.
+}
+
+/// A non-stationary device: phase A for the first `switch_at` calls,
+/// phase B forever after.
+///
+/// Identity comes from phase A throughout (it is the *same* logical
+/// device whose performance characteristics shifted — the scenario
+/// where a shipped cache entry goes stale mid-run and only drift
+/// detection can recover). `generate` is forwarded to *both* phases so
+/// a variant generated before the switch is still callable after it.
+pub struct DriftingBackend<B: Backend> {
+    a: B,
+    b: B,
+    switch_at: u64,
+    calls: u64,
+}
+
+impl<B: Backend> DriftingBackend<B> {
+    pub fn new(a: B, b: B, switch_at: u64) -> DriftingBackend<B> {
+        DriftingBackend { a, b, switch_at, calls: 0 }
+    }
+
+    /// Has the workload shifted to phase B yet?
+    pub fn drifted(&self) -> bool {
+        self.calls >= self.switch_at
+    }
+
+    fn current(&mut self) -> &mut B {
+        if self.calls >= self.switch_at {
+            &mut self.b
+        } else {
+            &mut self.a
+        }
+    }
+}
+
+impl<B: Backend> Backend for DriftingBackend<B> {
+    fn generate(&mut self, p: TuningParams) -> Result<f64> {
+        // Both phases must know every variant (a pre-switch winner is
+        // still *called* post-switch); report the live phase's cost.
+        let cost_a = self.a.generate(p)?;
+        let cost_b = self.b.generate(p)?;
+        Ok(if self.calls >= self.switch_at { cost_b } else { cost_a })
+    }
+
+    fn call(&mut self, v: &KernelVersion, data: EvalData) -> Result<Sample> {
+        self.calls += 1;
+        let switched = self.calls > self.switch_at;
+        if switched {
+            self.b.call(v, data)
+        } else {
+            self.a.call(v, data)
+        }
+    }
+
+    fn energy_per_call(&mut self, v: &KernelVersion) -> Option<f64> {
+        self.current().energy_per_call(v)
+    }
+
+    fn name(&self) -> String {
+        self.a.name()
+    }
+
+    fn device_fingerprint(&self) -> DeviceFingerprint {
+        self.a.device_fingerprint()
+    }
+
+    fn kernel_id(&self) -> String {
+        self.a.kernel_id()
+    }
+
+    fn set_recorder(&mut self, rec: Recorder) {
+        self.a.set_recorder(rec.clone());
+        self.b.set_recorder(rec);
+    }
+
+    fn speculative_scorer(&self) -> Option<Box<dyn CandidateScorer>> {
+        // A prewarm memo populated under phase A would be read under
+        // phase B; keep drifting lanes off the speculative pool.
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mock::MockBackend;
+    use crate::tunespace::Structural;
+
+    fn params() -> TuningParams {
+        TuningParams::phase1_default(Structural::new(true, 2, 2, 4))
+    }
+
+    #[test]
+    fn none_plan_is_a_true_noop() {
+        let plan = Arc::new(FaultPlan::none(7));
+        let mut plain = MockBackend::new(64, 1);
+        let mut wrapped = FaultyBackend::new(MockBackend::new(64, 1), plan);
+        let p = params();
+        assert_eq!(plain.generate(p).unwrap(), wrapped.generate(p).unwrap());
+        for data in [EvalData::Training, EvalData::Real] {
+            let a = plain.call(&KernelVersion::Variant(p), data).unwrap();
+            let b = wrapped.call(&KernelVersion::Variant(p), data).unwrap();
+            assert_eq!(a.score, b.score);
+            assert_eq!(a.cost, b.cost);
+        }
+        assert_eq!(wrapped.injected(), 0);
+        assert!(!FaultPlan::none(7).take_worker_panic());
+    }
+
+    #[test]
+    fn generate_faults_are_transient_and_deterministic() {
+        let plan = Arc::new(FaultPlan::chaos(42));
+        let mut b = FaultyBackend::new(MockBackend::new(64, 1), plan.clone());
+        let p = params();
+        let mut outcomes = Vec::new();
+        for _ in 0..50 {
+            outcomes.push(b.generate(p).is_ok());
+        }
+        assert!(outcomes.iter().any(|ok| *ok), "some attempts succeed");
+        assert!(outcomes.iter().any(|ok| !*ok), "some attempts fail at 20%");
+        // Same seed, same kernel id -> identical injection sequence.
+        let mut b2 = FaultyBackend::new(MockBackend::new(64, 1), plan);
+        let replay: Vec<bool> = (0..50).map(|_| b2.generate(p).is_ok()).collect();
+        assert_eq!(outcomes, replay);
+    }
+
+    #[test]
+    fn degraded_variant_scores_worse_sticky() {
+        let mut plan = FaultPlan::none(11);
+        plan.call_degrade = 0.2;
+        plan.degrade_factor = 25.0;
+        let mut b = FaultyBackend::new(MockBackend::new(64, 1), Arc::new(plan));
+        let p = params();
+        while b.generate(p).is_err() {}
+        let healthy = b.inner().landscape;
+        let base = healthy(&p);
+        let v = KernelVersion::Variant(p);
+        let mut saw_degrade = false;
+        for _ in 0..100 {
+            let s = b.call(&v, EvalData::Real).unwrap();
+            if s.score > 10.0 * base {
+                saw_degrade = true;
+            } else {
+                assert!(!saw_degrade, "degradation must be sticky once it fires");
+            }
+        }
+        assert!(saw_degrade, "wear-out fires within 100 calls at 20%");
+        // Reference calls are never touched.
+        let r = b
+            .call(&KernelVersion::Reference(crate::simulator::RefKind::SisdGeneric), EvalData::Real)
+            .unwrap();
+        assert_eq!(r.score, 180e-6);
+    }
+
+    #[test]
+    fn panic_schedule_fires_every_nth_quantum() {
+        let plan = FaultPlan::none(0).with_panic_every(5);
+        let fires: Vec<bool> = (0..15).map(|_| plan.take_worker_panic()).collect();
+        let expect: Vec<bool> = (1..=15).map(|i| i % 5 == 0).collect();
+        assert_eq!(fires, expect);
+    }
+
+    #[test]
+    fn drifting_backend_switches_phases() {
+        let a = MockBackend::new(64, 1);
+        let mut slow = MockBackend::new(64, 1);
+        slow.ref_time = 400e-6;
+        let mut d = DriftingBackend::new(a, slow, 3);
+        let r = KernelVersion::Reference(crate::simulator::RefKind::SisdGeneric);
+        for _ in 0..3 {
+            assert_eq!(d.call(&r, EvalData::Real).unwrap().score, 180e-6);
+        }
+        assert!(d.drifted());
+        assert_eq!(d.call(&r, EvalData::Real).unwrap().score, 400e-6);
+        // Variants generated pre-switch stay callable post-switch.
+        let p = params();
+        let mut d2 =
+            DriftingBackend::new(MockBackend::new(64, 1), MockBackend::new(64, 1), 1);
+        d2.generate(p).unwrap();
+        d2.call(&KernelVersion::Variant(p), EvalData::Real).unwrap();
+        d2.call(&KernelVersion::Variant(p), EvalData::Real).unwrap();
+    }
+
+    #[test]
+    fn chaos_seed_env_parsing() {
+        // Serialise env mutation within this test only.
+        std::env::remove_var(CHAOS_SEED_ENV);
+        assert!(chaos_seed_from_env().unwrap().is_none());
+        std::env::set_var(CHAOS_SEED_ENV, "123");
+        assert_eq!(chaos_seed_from_env().unwrap(), Some(123));
+        std::env::set_var(CHAOS_SEED_ENV, "not-a-seed");
+        assert!(chaos_seed_from_env().is_err());
+        std::env::set_var(CHAOS_SEED_ENV, "");
+        assert!(chaos_seed_from_env().is_err());
+        std::env::remove_var(CHAOS_SEED_ENV);
+    }
+
+    #[test]
+    fn truncate_file_tears_deterministically() {
+        let path = std::env::temp_dir()
+            .join(format!("degoal_fault_trunc_{}.json", std::process::id()));
+        let text = "x".repeat(1000);
+        std::fs::write(&path, &text).unwrap();
+        let plan = FaultPlan::chaos(9);
+        let kept = plan.truncate_file(&path).unwrap();
+        assert!((350..850).contains(&kept), "kept {kept}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap().len(), kept);
+        // Same seed tears at the same fraction of the (new) length.
+        std::fs::write(&path, &text).unwrap();
+        assert_eq!(plan.truncate_file(&path).unwrap(), kept);
+        std::fs::remove_file(&path).ok();
+    }
+}

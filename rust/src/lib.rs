@@ -165,6 +165,33 @@
 //!   percentiles on [`service::ServiceStats`], a Chrome trace timeline
 //!   (`degoal-rt service --trace` → `results/trace.json`), and a
 //!   versioned registry dump (`degoal-rt stats`).
+//! * [`fault`] — deterministic fault injection and the self-healing
+//!   paths it exercises. A seeded [`fault::FaultPlan`]
+//!   (`DEGOAL_CHAOS_SEED` / `--chaos-seed`) drives the
+//!   [`fault::FaultyBackend`] wrapper (transient generate failures,
+//!   poisoned fresh variants, sticky mid-serving wear-out), a scheduled
+//!   worker-panic countdown in the engine, mid-run reference drift
+//!   ([`fault::DriftingBackend`]), and torn cache checkpoints
+//!   ([`fault::FaultPlan::truncate_file`]); every injection is recorded
+//!   ([`obs::Counter::FaultInjected`]). The recovery side lives in the
+//!   production layers: bounded retry-with-backoff for failed generates
+//!   ([`coordinator::TunerConfig::generate_retries`]), a serving health
+//!   guard that quarantines regressed variants — fall back to the
+//!   reference, never serve the variant again
+//!   ([`coordinator::TunerConfig::quarantine_factor`]), drift detection
+//!   over an EWMA of periodic reference re-measurements that demotes
+//!   warm state and re-enters exploration
+//!   ([`coordinator::TunerConfig::drift_check_every`] /
+//!   [`coordinator::TunerConfig::drift_threshold`]), atomic
+//!   (temp + rename) cache saves with a salvage loader for torn files
+//!   ([`cache::TuneCache::load`]), and supervised engine workers that
+//!   respawn after an injected panic with their lanes parked intact.
+//!   All knobs default off: with faults disabled the seams are a true
+//!   no-op and every parity test above is unchanged. `degoal-rt service
+//!   --chaos` runs the skewed workload under the full plan and enforces
+//!   the invariants (zero lost lanes, zero quarantined serves, salvaged
+//!   cache); `rust/tests/fault_recovery.rs` and the injected-panic
+//!   parity test in `rust/tests/engine_steal.rs` pin them.
 //!
 //! The host-PJRT execution path (`runtime`, `backend::host`,
 //! `codegen::CodeCache`) is gated behind the `pjrt` cargo feature; the
@@ -177,6 +204,7 @@ pub mod cache;
 pub mod codegen;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -48,6 +48,20 @@
 //!                                   four families over the skewed +
 //!                                   hetero workloads and merges mean
 //!                                   time-to-best into results/bench.json;
+//!                                   --chaos [--chaos-seed S] [--drift-core C]
+//!                                   replaces the demo with the
+//!                                   fault-injection/self-healing stress
+//!                                   phase: the skewed workload made
+//!                                   non-stationary (drifting to
+//!                                   --drift-core mid-run) under a seeded
+//!                                   FaultPlan (transient generate
+//!                                   failures, poisoned variants, wear-out
+//!                                   degradation, scheduled worker
+//!                                   panics), asserting zero lost lanes,
+//!                                   zero quarantined-variant serves, and
+//!                                   a salvageable torn cache (seed:
+//!                                   --chaos-seed, else $DEGOAL_CHAOS_SEED,
+//!                                   else --seed);
 //!                                   --scale [--scale-lanes N]
 //!                                   [--scale-clients M] replaces the demo
 //!                                   with the admission/steady-state
@@ -173,7 +187,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let calls = args.get_usize("calls", 120_000)?;
             let seed = args.get_u64("seed", 42)?;
             let threads = args.get_usize_min("threads", 1, 1)?;
-            let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path);
+            let cache_path = args.get_path_or("cache", degoal_rt::paths::tunecache_path)?;
             let steal = args.flag("steal");
             let skewed = args.flag("skewed");
             let strategy_name = args.get_or("strategy", "grid");
@@ -201,6 +215,31 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("unknown donor core"))?;
                 let per_lane = args.get_usize_min("calls", 12_000, 1)?;
                 return run_strategy_race(core, donor_core, per_lane, seed, &knobs);
+            }
+
+            if args.flag("chaos") {
+                // The self-healing stress phase replaces the demo:
+                // --calls becomes the per-lane budget. The drift core is
+                // phase B of the non-stationary workload (a much weaker
+                // core, so the reference shift is unmistakable).
+                let drift_core = core_by_name(args.get_or("drift-core", "SI-I1"))
+                    .ok_or_else(|| anyhow::anyhow!("unknown drift core"))?;
+                let chaos_seed = match args.get_opt_u64("chaos-seed")? {
+                    Some(s) => s,
+                    None => degoal_rt::fault::chaos_seed_from_env()?.unwrap_or(seed),
+                };
+                let per_lane = args.get_usize_min("calls", 60_000, 1)?;
+                return run_chaos_demo(
+                    core,
+                    drift_core,
+                    per_lane,
+                    seed,
+                    chaos_seed,
+                    threads,
+                    steal,
+                    &cache_path,
+                    &knobs,
+                );
             }
 
             if args.flag("scale") {
@@ -383,7 +422,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let calls = args.get_usize("calls", 24_000)?;
             let seed = args.get_u64("seed", 42)?;
             let out =
-                args.get_path_or("out", || degoal_rt::paths::results_dir().join("stats.json"));
+                args.get_path_or("out", || degoal_rt::paths::results_dir().join("stats.json"))?;
 
             let mut svc: TuningService<SimBackend> = TuningService::new(ServiceConfig {
                 tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
@@ -432,7 +471,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "bench" => {
             let reps = if args.flag("quick") { 1 } else { args.get_u32("reps", 5)? };
             let with_exact = args.flag("exact");
-            let out = args.get_path_or("out", || degoal_rt::paths::results_dir().join("bench.json"));
+            let out =
+                args.get_path_or("out", || degoal_rt::paths::results_dir().join("bench.json"))?;
             let report = degoal_rt::bench::run_grid(reps, with_exact);
             let mut t = Table::new(
                 "simulate_call grid (steady-state fast path)",
@@ -546,6 +586,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20         [--idle-tune] [--batch K] [--transfer] [--donor-core C] [--trace]\n\
                  \x20         [--strategy S] [--horizon N] [--strategy-race]\n\
                  \x20         [--scale] [--scale-lanes N] [--scale-clients M]\n\
+                 \x20         [--chaos] [--chaos-seed S] [--drift-core C]\n\
                  \x20     multi-kernel tuning service demo (cold vs warm via the persistent\n\
                  \x20     tuning cache). --threads N>1 adds the threaded engine; --steal\n\
                  \x20     enables work-stealing placement (static-vs-steal comparison +\n\
@@ -574,6 +615,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20     per-lane budget, --calls per lane, default 12000), printing mean\n\
                  \x20     generate-calls-to-best and final-score parity per strategy and\n\
                  \x20     merging the numbers into results/bench.json;\n\
+                 \x20     --chaos replaces the demo with the fault-injection/self-healing\n\
+                 \x20     stress phase: the skewed workload drifts to --drift-core (default\n\
+                 \x20     SI-I1) mid-run under a seeded FaultPlan (transient generate\n\
+                 \x20     failures retried with backoff, poisoned variants, wear-out\n\
+                 \x20     degradation caught by the quarantine guard, scheduled worker\n\
+                 \x20     panics contained and respawned), then tears the checkpointed\n\
+                 \x20     cache mid-write and salvage-reloads it; every recovery invariant\n\
+                 \x20     is asserted (seed: --chaos-seed, else $DEGOAL_CHAOS_SEED, else\n\
+                 \x20     --seed);\n\
                  \x20     --scale replaces the demo with the admission/steady-state stress\n\
                  \x20     phase: --scale-clients M (default 10x lanes) logical clients over\n\
                  \x20     --scale-lanes N (default 1024) lanes, bursts coalesced into engine\n\
@@ -1006,6 +1056,145 @@ fn run_scale_demo(
         "\n  steady read path: {steady_hits} steady hits, 0 shard-locked lookups across \
          {lanes_n} lane opens ({warm} warm, {steady_len} live steady entries); admission: {}",
         adm2.stats(),
+    );
+    Ok(())
+}
+
+/// The `--chaos` phase: the full fault-injection harness against the
+/// self-healing serving stack. The skewed 8-lane workload runs
+/// non-stationary (phase B on a much weaker `drift_core` after half the
+/// budget) and wrapped in [`FaultyBackend`](degoal_rt::fault::FaultyBackend)
+/// — transient generate failures, poisoned variants, mid-run wear-out —
+/// while the engine's [`FaultPlan`](degoal_rt::fault::FaultPlan)
+/// schedules worker panics. Every recovery path must hold, `ensure!`d:
+/// zero lost lanes, zero calls served by a quarantined variant, retries
+/// and quarantines and drift re-tunes and worker respawns all observed,
+/// and the checkpointed cache survives a simulated crash-mid-write
+/// (torn file → salvage loader → reloadable cache).
+#[allow(clippy::too_many_arguments)]
+fn run_chaos_demo(
+    core: &'static CoreConfig,
+    drift_core: &'static CoreConfig,
+    per_lane_calls: usize,
+    seed: u64,
+    chaos_seed: u64,
+    threads: usize,
+    steal: bool,
+    cache_path: &std::path::Path,
+    knobs: &ServiceKnobs,
+) -> Result<()> {
+    use degoal_rt::fault::FaultPlan;
+    use degoal_rt::workloads::{chaos_service_workload, ChaosBackend, CHAOS_SERVICE_LANES};
+
+    let drift_core = if drift_core.name == core.name {
+        core_by_name(if core.name == "SI-I1" { "DI-I1" } else { "SI-I1" }).unwrap()
+    } else {
+        drift_core
+    };
+    let plan = std::sync::Arc::new(FaultPlan::chaos(chaos_seed));
+    println!(
+        "== chaos serving on {} (drift to {} mid-run), chaos seed {}, --threads {}{} ==",
+        core.name,
+        drift_core.name,
+        chaos_seed,
+        threads,
+        if steal { ", work-stealing" } else { "" },
+    );
+
+    // Recovery knobs on: bounded retry/backoff for failed generates,
+    // the serving health guard, and drift-triggered re-tuning. Fast
+    // tuner wakes so exploration (and the re-tune) finish in budget.
+    let mut cfg = service_cfg(knobs);
+    cfg.tuner.wake_period = 1e-4;
+    cfg.tuner.generate_retries = 4;
+    cfg.tuner.quarantine_factor = 5.0;
+    cfg.tuner.drift_check_every = 64;
+    cfg.tuner.drift_threshold = 0.4;
+
+    let rec = Recorder::enabled_for(threads);
+    let cache = SharedTuneCache::new();
+    cache.set_ttl(knobs.ttl);
+    let switch_at = (per_lane_calls / 2) as u64;
+    let opts = EngineOptions { threads, steal, idle_tune: knobs.idle_tune, ..Default::default() };
+    let mut eng: TuningEngine<ChaosBackend> =
+        TuningEngine::with_faults(cfg, cache.clone(), opts, rec.clone(), Some(plan.clone()));
+    let mut lanes: Vec<LaneId> = Vec::new();
+    for (key, b) in chaos_service_workload(core, drift_core, seed, switch_at, &plan) {
+        lanes.push(eng.register(key, Some(true), b)?);
+    }
+    let started = std::time::Instant::now();
+    let mut remaining: Vec<usize> = vec![per_lane_calls; lanes.len()];
+    let mut left = per_lane_calls * lanes.len();
+    while left > 0 {
+        for (i, &l) in lanes.iter().enumerate() {
+            let n = SERVICE_CHUNK.min(remaining[i]);
+            eng.submit_n(l, n as u32)?;
+            remaining[i] -= n;
+            left -= n;
+        }
+    }
+    let (stats, reports) = eng.finish()?;
+    let secs = started.elapsed().as_secs_f64();
+    print_service_phase("chaos engine (faults + drift injected)", &stats, &lane_lines(&reports), secs);
+
+    // Self-healing invariants, enforced (the CI smoke step runs this).
+    anyhow::ensure!(
+        reports.len() == CHAOS_SERVICE_LANES,
+        "lost lanes: {}/{} reported after the chaos run",
+        reports.len(),
+        CHAOS_SERVICE_LANES,
+    );
+    anyhow::ensure!(
+        stats.quarantined_serves == 0,
+        "{} calls were served by a quarantined variant (must be 0)",
+        stats.quarantined_serves,
+    );
+
+    // Crash-safe persistence: checkpoint, tear the file mid-write the
+    // way a crash would, and prove the salvage loader recovers it. The
+    // torn file is a *sibling* of the real cache path — the chaos demo
+    // must never eat a production tunecache.
+    let chaos_path = cache_path.with_extension("chaos.json");
+    let full = cache.snapshot();
+    anyhow::ensure!(!full.is_empty(), "chaos run checkpointed an empty cache");
+    full.save(&chaos_path)?;
+    let kept = plan.truncate_file(&chaos_path)?;
+    let salvaged = TuneCache::load(&chaos_path)?;
+    let recovered = salvaged.counters.salvaged;
+    anyhow::ensure!(
+        recovered > 0 && !salvaged.is_empty(),
+        "salvage recovered no entries from the torn cache ({kept} bytes kept)"
+    );
+    rec.count(Counter::CacheSalvaged, recovered);
+    rec.event_here(degoal_rt::obs::EventKind::CacheSalvaged { entries: recovered as u32 });
+    // Leave a whole file behind: re-save the salvaged cache atomically.
+    salvaged.save(&chaos_path)?;
+
+    let snap = rec.snapshot().expect("telemetry is always enabled in the chaos phase");
+    for (c, what) in [
+        (Counter::FaultInjected, "no faults were injected"),
+        (Counter::RetryBackoff, "no generate retry was exercised"),
+        (Counter::Quarantined, "no variant was quarantined"),
+        (Counter::DriftRetune, "no drift re-tune fired"),
+        (Counter::WorkerPanics, "no worker panic was injected"),
+        (Counter::CacheSalvaged, "no cache entry was salvaged"),
+    ] {
+        anyhow::ensure!(snap.get(c) > 0, "{what} (counter {c:?} is 0)");
+    }
+    println!(
+        "\n  self-healing held: {} faults injected, {} retries, {} generate failures \
+         degraded to reference, {} quarantined (0 quarantined serves), {} drift re-tunes, \
+         {} worker panics contained+respawned; torn cache ({} bytes) salvaged to {} \
+         entries at {}",
+        snap.get(Counter::FaultInjected),
+        stats.retries,
+        stats.generate_failures,
+        stats.quarantined,
+        stats.drift_retunes,
+        snap.get(Counter::WorkerPanics),
+        kept,
+        salvaged.len(),
+        chaos_path.display(),
     );
     Ok(())
 }

@@ -53,6 +53,24 @@ pub enum EventKind {
     /// An adaptive search strategy decided on a proposed move
     /// (Metropolis accept/reject, model-guided improvement or miss).
     StrategyMove { accepted: bool },
+    /// The deterministic fault plan injected a failure (`site` is a
+    /// stable label like "generate" / "bad_variant" / "call_degrade" /
+    /// "worker_panic").
+    FaultInjected { site: &'static str },
+    /// A serving variant regressed past the guard band vs the tracked
+    /// reference score and was quarantined (fell back to reference).
+    Quarantined,
+    /// A failed generate was retried after backoff charged to the
+    /// regeneration budget.
+    RetryBackoff { attempt: u32 },
+    /// Reference-score drift crossed the detection threshold: warm state
+    /// demoted, exploration re-entered under the governor's budget.
+    DriftRetune,
+    /// The salvage loader recovered entries from a corrupt cache file.
+    CacheSalvaged { entries: u32 },
+    /// The engine contained a worker panic and healed (lane parked back,
+    /// worker respawned).
+    WorkerPanic,
 }
 
 impl EventKind {
@@ -72,6 +90,12 @@ impl EventKind {
             EventKind::MemoHit => "memo_hit",
             EventKind::Quantum { .. } => "quantum",
             EventKind::StrategyMove { .. } => "strategy_move",
+            EventKind::FaultInjected { .. } => "fault_injected",
+            EventKind::Quarantined => "quarantined",
+            EventKind::RetryBackoff { .. } => "retry_backoff",
+            EventKind::DriftRetune => "drift_retune",
+            EventKind::CacheSalvaged { .. } => "cache_salvaged",
+            EventKind::WorkerPanic => "worker_panic",
         }
     }
 }

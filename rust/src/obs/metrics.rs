@@ -86,10 +86,27 @@ pub enum Counter {
     StrategySteps,
     /// Structural candidates pruning strategies declared never-visited.
     PrunedCandidates,
+    /// Failures the deterministic fault plan injected (chaos runs only).
+    FaultInjected,
+    /// Serving variants quarantined after regressing past the guard band
+    /// vs the tracked reference score.
+    Quarantined,
+    /// Generate retries after an injected (or genuine) failure, each
+    /// charged to the regeneration budget as backoff overhead.
+    RetryBackoff,
+    /// Lanes that demoted their warm state and re-entered exploration
+    /// after reference-score drift crossed the detection threshold.
+    DriftRetune,
+    /// Cache entries recovered from a corrupt/truncated persistence file
+    /// by the salvage loader.
+    CacheSalvaged,
+    /// Worker panics the engine contained and healed (lane parked back,
+    /// worker respawned).
+    WorkerPanics,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 25] = [
+    pub const ALL: [Counter; 31] = [
         Counter::AppCalls,
         Counter::GenerateCalls,
         Counter::Swaps,
@@ -115,6 +132,12 @@ impl Counter {
         Counter::AdmissionDeferrals,
         Counter::StrategySteps,
         Counter::PrunedCandidates,
+        Counter::FaultInjected,
+        Counter::Quarantined,
+        Counter::RetryBackoff,
+        Counter::DriftRetune,
+        Counter::CacheSalvaged,
+        Counter::WorkerPanics,
     ];
 
     /// Stable snake_case name — the JSON key, never rename.
@@ -145,6 +168,12 @@ impl Counter {
             Counter::AdmissionDeferrals => "admission_deferrals",
             Counter::StrategySteps => "strategy_steps",
             Counter::PrunedCandidates => "pruned_candidates",
+            Counter::FaultInjected => "fault_injected",
+            Counter::Quarantined => "quarantined",
+            Counter::RetryBackoff => "retry_backoff",
+            Counter::DriftRetune => "drift_retune",
+            Counter::CacheSalvaged => "cache_salvaged",
+            Counter::WorkerPanics => "worker_panics",
         }
     }
 

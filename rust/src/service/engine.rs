@@ -72,6 +72,7 @@
 //! [`speculative_scorer`]: crate::backend::Backend::speculative_scorer
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
@@ -82,6 +83,7 @@ use super::{LaneId, ServiceConfig, ServiceStats};
 use crate::backend::Backend;
 use crate::cache::{DeviceFingerprint, SharedTuneCache, TuneKey};
 use crate::coordinator::RegenGovernor;
+use crate::fault::{FaultPlan, InjectedPanic};
 use crate::obs::{Counter, EventKind, Recorder};
 
 /// Placement and stealing knobs of the threaded engine.
@@ -198,6 +200,31 @@ struct Shared<B: Backend> {
     /// recording call is a no-op and the engine is byte-identical to the
     /// un-instrumented build.
     rec: Recorder,
+    /// Deterministic fault schedule ([`TuningEngine::with_faults`]) —
+    /// drives the scheduled worker panics the containment/respawn path
+    /// exists for. `None` (every other constructor) keeps the fault
+    /// machinery entirely off the hot path.
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// Acquire the scheduler lock, tolerating poisoning. The containment
+/// paths park lanes and restore the barrier bookkeeping *before* any
+/// unwind continues, so a poisoned mutex still guards consistent state —
+/// and a self-healing engine must keep scheduling through it rather than
+/// turn one contained panic into a cascade of lock panics.
+fn lock_sched<B: Backend>(m: &Mutex<Sched<B>>) -> MutexGuard<'_, Sched<B>> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Human-readable panic payload (for engine error reports).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Pop the next runnable lane for worker `w`: own deque first (FIFO so a
@@ -304,39 +331,6 @@ fn finalize_retire<B: Backend>(
     sched.slots[id].retiring = false;
 }
 
-/// Restores scheduler bookkeeping if a lane's step panics mid-quantum:
-/// the lane is lost, its remaining backlog is discarded, and the barrier
-/// condition stays reachable — a panicking worker degrades into an
-/// engine error instead of a drain that never returns.
-struct RunGuard<'a, B: Backend> {
-    shared: &'a Shared<B>,
-    id: usize,
-    armed: bool,
-}
-
-impl<B: Backend> Drop for RunGuard<'_, B> {
-    fn drop(&mut self) {
-        if !self.armed {
-            return;
-        }
-        if let Ok(mut sched) = self.shared.sched.lock() {
-            sched.active -= 1;
-            let dropped = {
-                let slot = &mut sched.slots[self.id];
-                let d = slot.pending;
-                slot.pending = 0;
-                d
-            };
-            sched.backlog -= dropped;
-            if sched.error.is_none() {
-                sched.error = Some(format!("worker panicked while running lane {}", self.id));
-            }
-        }
-        self.shared.idle.notify_all();
-        self.shared.work.notify_all();
-    }
-}
-
 /// One speculation burst: take the parked lane out, run up to a quantum
 /// of governor-gated [`Lane::idle_step`]s off-lock, park it back, and
 /// re-run the standard parking epilogue (requeue backlog that arrived
@@ -355,25 +349,36 @@ fn idle_burst<'a, B: Backend>(
     sched.active += 1;
     drop(sched);
 
-    let mut guard = RunGuard { shared, id, armed: true };
     let mut advanced = 0u64;
     let mut failed: Option<String> = None;
-    for _ in 0..shared.opts.quantum {
-        match lane.idle_step(&shared.cache, &shared.governor, rec) {
-            Ok(true) => {
-                advanced += 1;
-                if rec.enabled() {
-                    rec.event(id as u32, lane.tuner.now(), EventKind::IdleStep);
+    // Containment: whatever happens inside the burst — an error *or* a
+    // panic — the lane is parked back intact and the barrier bookkeeping
+    // restored below, so a speculative crash can never lose a lane or
+    // strand `drain`.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        for _ in 0..shared.opts.quantum {
+            match lane.idle_step(&shared.cache, &shared.governor, rec) {
+                Ok(true) => {
+                    advanced += 1;
+                    if rec.enabled() {
+                        rec.event(id as u32, lane.tuner.now(), EventKind::IdleStep);
+                    }
+                }
+                Ok(false) => break,
+                Err(e) => {
+                    failed = Some(format!("lane {}: {e:#}", lane.key));
+                    break;
                 }
             }
-            Ok(false) => break,
-            Err(e) => {
-                failed = Some(format!("lane {}: {e:#}", lane.key));
-                break;
-            }
         }
+    }));
+    if let Err(payload) = outcome {
+        failed = Some(format!(
+            "worker panicked while speculating on lane {}: {}",
+            lane.key,
+            panic_message(&payload)
+        ));
     }
-    guard.armed = false;
     if advanced > 0 {
         rec.count(Counter::IdleSteps, advanced);
     }
@@ -381,7 +386,7 @@ fn idle_burst<'a, B: Backend>(
     // pool so another idle worker can prewarm while this one continues.
     let hints = if failed.is_none() { lane.score_hints() } else { None };
 
-    let mut sched = shared.sched.lock().expect("engine scheduler lock");
+    let mut sched = lock_sched(&shared.sched);
     sched.active -= 1;
     sched.slots[id].lane = Some(lane);
     sched.slots[id].idle_steps += advanced;
@@ -420,7 +425,7 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
     // shard and journal ring — single-writer, so the hot-path histogram
     // updates stay plain load+store.
     let rec = shared.rec.for_worker(w);
-    let mut sched = shared.sched.lock().expect("engine scheduler lock");
+    let mut sched = lock_sched(&shared.sched);
     loop {
         let Some(id) = next_lane(&mut sched, w, shared.opts.steal, &rec) else {
             if sched.shutdown {
@@ -436,7 +441,7 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
                     let n = task.len() as u64;
                     drop(sched);
                     task.run();
-                    sched = shared.sched.lock().expect("engine scheduler lock");
+                    sched = lock_sched(&shared.sched);
                     sched.prewarmed += n;
                     continue;
                 }
@@ -475,7 +480,7 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
             // cannot invert — and the condvar wait below is entered
             // without ever releasing `sched`, so no wakeup can be lost.
             shared.cache.sweep_steady_expired();
-            sched = shared.work.wait(sched).expect("engine scheduler lock");
+            sched = shared.work.wait(sched).unwrap_or_else(|p| p.into_inner());
             continue;
         };
 
@@ -493,18 +498,51 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
         sched.active += 1;
         drop(sched);
 
-        let mut guard = RunGuard { shared, id, armed: true };
         let mut failed: Option<String> = None;
+        let mut injected = false;
         let timer = (!poisoned && rec.enabled()).then(std::time::Instant::now);
-        if !poisoned {
-            for _ in 0..n {
-                if let Err(e) = lane.step(&shared.cache, &shared.governor, &rec) {
-                    failed = Some(format!("lane {}: {e:#}", lane.key));
-                    break;
+        // Containment: the lane's steps run inside `catch_unwind`, so a
+        // panic — scheduled by the fault plan or genuine — can neither
+        // lose the lane nor strand the barrier. The lane is parked back
+        // below with the bookkeeping intact *before* any unwind
+        // continues; an injected panic then takes the worker thread down
+        // after the epilogue, exercising the supervisor's respawn path
+        // with zero scheduler damage.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if !poisoned {
+                for _ in 0..n {
+                    if let Err(e) = lane.step(&shared.cache, &shared.governor, &rec) {
+                        return Some(format!("lane {}: {e:#}", lane.key));
+                    }
+                }
+                if let Some(plan) = &shared.faults {
+                    if plan.take_worker_panic() {
+                        std::panic::panic_any(InjectedPanic);
+                    }
+                }
+            }
+            None
+        }));
+        match outcome {
+            Ok(f) => failed = f,
+            Err(payload) => {
+                if payload.is::<InjectedPanic>() {
+                    injected = true;
+                    rec.count(Counter::WorkerPanics, 1);
+                    rec.event(id as u32, lane.tuner.now(), EventKind::WorkerPanic);
+                } else {
+                    // A genuine panic is a bug, not chaos: contain it
+                    // (the lane survives, parked below) but poison the
+                    // run so it fails fast instead of healing over a
+                    // defect.
+                    failed = Some(format!(
+                        "worker panicked while running lane {}: {}",
+                        lane.key,
+                        panic_message(&payload)
+                    ));
                 }
             }
         }
-        guard.armed = false;
         if let Some(t0) = timer {
             let dur = t0.elapsed();
             rec.quantum(dur.as_secs_f64());
@@ -516,10 +554,11 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
         }
         // While the lane is still ours (off-lock), collect any freshly
         // queued candidate hints so an idle worker can prewarm their
-        // measurements while this lane keeps serving.
+        // measurements while this lane keeps serving. An injected panic
+        // leaves the lane perfectly healthy — its hints still flow.
         let hints = if failed.is_none() && !poisoned { lane.score_hints() } else { None };
 
-        sched = shared.sched.lock().expect("engine scheduler lock");
+        sched = lock_sched(&shared.sched);
         sched.active -= 1;
         sched.slots[id].lane = Some(lane);
         if let Some(task) = hints {
@@ -545,12 +584,53 @@ fn worker_loop<B: Backend>(shared: &Shared<B>, w: usize) {
         if sched.backlog == 0 && sched.active == 0 {
             shared.idle.notify_all();
         }
+        if injected {
+            // Lane parked, backlog requeued, barrier bookkeeping
+            // restored: *now* the injected panic may take the thread
+            // down. The supervisor respawns a replacement worker; the
+            // lane finishes there (or on a stealing peer) untouched.
+            drop(sched);
+            resume_unwind(Box::new(InjectedPanic));
+        }
+    }
+}
+
+/// Self-healing worker shell: run [`worker_loop`], and when it dies to a
+/// *scheduled* [`InjectedPanic`] — the containment path has already
+/// parked the lane and restored the barrier bookkeeping — respawn it in
+/// place, preserving the worker index so lane homes stay valid. Genuine
+/// panics (a bug escaping `worker_loop`'s containment region) poison the
+/// run instead: error set, waiters woken, thread retired — fail fast,
+/// never heal over a defect. The respawn cap is a runaway backstop, far
+/// above any real fault schedule.
+fn supervise_worker<B: Backend>(shared: &Shared<B>, w: usize) {
+    const MAX_RESPAWNS: u32 = 1024;
+    let mut respawns = 0u32;
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| worker_loop(shared, w))) {
+            Ok(()) => return,
+            Err(payload) if payload.is::<InjectedPanic>() && respawns < MAX_RESPAWNS => {
+                respawns += 1;
+                log::warn!("worker {w} respawned after injected panic #{respawns}");
+            }
+            Err(payload) => {
+                let mut sched = lock_sched(&shared.sched);
+                if sched.error.is_none() {
+                    sched.error =
+                        Some(format!("worker {w} died: {}", panic_message(&payload)));
+                }
+                drop(sched);
+                shared.idle.notify_all();
+                shared.work.notify_all();
+                return;
+            }
+        }
     }
 }
 
 impl<B: Backend + 'static> Shared<B> {
     fn lock(&self) -> MutexGuard<'_, Sched<B>> {
-        self.sched.lock().expect("engine scheduler lock")
+        lock_sched(&self.sched)
     }
 
     fn register(&self, key: TuneKey, ve_filter: Option<bool>, backend: B) -> Result<LaneId> {
@@ -665,7 +745,7 @@ impl<B: Backend + 'static> Shared<B> {
         let mut sched = self.lock();
         sched.drain_waiters += 1;
         while sched.error.is_none() && (sched.backlog > 0 || sched.active > 0) {
-            sched = self.idle.wait(sched).expect("engine scheduler lock");
+            sched = self.idle.wait(sched).unwrap_or_else(|p| p.into_inner());
         }
         sched.drain_waiters -= 1;
         if self.opts.idle_tune && sched.drain_waiters == 0 {
@@ -702,7 +782,8 @@ impl<B: Backend + 'static> Shared<B> {
     /// (claim-and-skip — the drop-without-finish path); without it the
     /// workers execute everything still queued (the `finish` path).
     fn begin_shutdown(&self, discard: bool) {
-        if let Ok(mut sched) = self.sched.lock() {
+        {
+            let mut sched = lock_sched(&self.sched);
             sched.shutdown = true;
             sched.discard |= discard;
         }
@@ -825,6 +906,25 @@ impl<B: Backend + 'static> TuningEngine<B> {
         opts: EngineOptions,
         rec: Recorder,
     ) -> TuningEngine<B> {
+        TuningEngine::with_faults(cfg, cache, opts, rec, None)
+    }
+
+    /// [`with_recorder`](TuningEngine::with_recorder) plus a
+    /// deterministic [`FaultPlan`] driving scheduled worker panics (the
+    /// chaos harness entry point). `None` is byte-identical to
+    /// `with_recorder`: the fault check is a single `Option` test per
+    /// quantum and the respawning supervisor only ever acts on injected
+    /// panics. Backend- and cache-level faults are injected by wrapping
+    /// the backend in [`FaultyBackend`](crate::fault::FaultyBackend) /
+    /// calling [`FaultPlan::truncate_file`] — this plan only schedules
+    /// the engine-level ones.
+    pub fn with_faults(
+        cfg: ServiceConfig,
+        cache: SharedTuneCache,
+        opts: EngineOptions,
+        rec: Recorder,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> TuningEngine<B> {
         let opts = EngineOptions {
             threads: opts.threads.max(1),
             steal: opts.steal,
@@ -855,11 +955,12 @@ impl<B: Backend + 'static> TuningEngine<B> {
             cache,
             governor: RegenGovernor::new(cfg.global),
             rec,
+            faults,
         });
         let handles = (0..opts.threads)
             .map(|w| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared, w))
+                std::thread::spawn(move || supervise_worker(&shared, w))
             })
             .collect();
         TuningEngine { shared, handles }

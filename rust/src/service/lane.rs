@@ -63,6 +63,9 @@ struct TunerProbe {
     strategy_accepted: u64,
     strategy_rejected: u64,
     pruned: u64,
+    retries: u64,
+    quarantined: u64,
+    drift_retunes: u64,
 }
 
 pub(crate) struct Lane<B: Backend> {
@@ -319,6 +322,9 @@ impl<B: Backend> Lane<B> {
             strategy_accepted: s.strategy_accepted,
             strategy_rejected: s.strategy_rejected,
             pruned: s.pruned_candidates,
+            retries: s.retries,
+            quarantined: s.quarantined,
+            drift_retunes: s.drift_retunes,
         }
     }
 
@@ -353,6 +359,21 @@ impl<B: Backend> Lane<B> {
         }
         if s.strategy_rejected > before.strategy_rejected {
             rec.event(self.id as u32, vt, EventKind::StrategyMove { accepted: false });
+        }
+        // Recovery-path telemetry (all deltas are 0 with faults and the
+        // health/drift knobs at their no-op defaults).
+        if s.retries > before.retries {
+            let n = s.retries - before.retries;
+            rec.count(Counter::RetryBackoff, n);
+            rec.event(self.id as u32, vt, EventKind::RetryBackoff { attempt: n as u32 });
+        }
+        if s.quarantined > before.quarantined {
+            rec.count(Counter::Quarantined, s.quarantined - before.quarantined);
+            rec.event(self.id as u32, vt, EventKind::Quarantined);
+        }
+        if s.drift_retunes > before.drift_retunes {
+            rec.count(Counter::DriftRetune, s.drift_retunes - before.drift_retunes);
+            rec.event(self.id as u32, vt, EventKind::DriftRetune);
         }
     }
 
@@ -438,6 +459,11 @@ impl<B: Backend> Lane<B> {
             strategy_accepted: s.strategy_accepted,
             strategy_rejected: s.strategy_rejected,
             pruned: s.pruned_candidates,
+            retries: s.retries,
+            generate_failures: s.generate_failures,
+            quarantined: s.quarantined,
+            quarantined_serves: s.quarantined_serves,
+            drift_retunes: s.drift_retunes,
             steals: 0,
             idle_steps: 0,
         }
@@ -475,6 +501,16 @@ pub struct LaneReport {
     /// Structural candidates the strategy pruned — declared never-visited
     /// (0 for full-coverage strategies).
     pub pruned: u64,
+    /// Retried generate attempts (0 unless retries are configured).
+    pub retries: u64,
+    /// Candidates whose generate failed even after the retry budget.
+    pub generate_failures: u64,
+    /// Serving variants demoted by the health guard.
+    pub quarantined: u64,
+    /// Calls served by an already-quarantined variant — must stay 0.
+    pub quarantined_serves: u64,
+    /// Drift-triggered exploration restarts.
+    pub drift_retunes: u64,
     /// Times the lane's ownership was transferred to an idle worker by
     /// the work-stealing engine (0 in sequential mode and under static
     /// placement). Scheduler-level: the engine fills it in — the lane

@@ -161,6 +161,19 @@ pub struct ServiceStats {
     /// ([`EngineOptions::idle_tune`]; 0 in sequential mode and with idle
     /// tuning off).
     pub idle_steps: u64,
+    /// Retried generate attempts across lanes (0 unless
+    /// [`TunerConfig::generate_retries`] is enabled).
+    pub retries: u64,
+    /// Candidates whose generate failed even after the retry budget —
+    /// skipped and degraded, never torn down.
+    pub generate_failures: u64,
+    /// Serving variants demoted by the per-lane health guard.
+    pub quarantined: u64,
+    /// Calls served by an already-quarantined variant — invariantly 0;
+    /// the chaos harness asserts it.
+    pub quarantined_serves: u64,
+    /// Drift-triggered exploration restarts across lanes.
+    pub drift_retunes: u64,
     pub cache: CacheCounters,
     /// Per-call virtual-latency percentiles in seconds, merged across
     /// workers from the telemetry registry's log₂ histogram (upper-bound
@@ -208,6 +221,11 @@ impl ServiceStats {
             st.pruned += r.pruned;
             st.steals += r.steals as u64;
             st.idle_steps += r.idle_steps;
+            st.retries += r.retries;
+            st.generate_failures += r.generate_failures;
+            st.quarantined += r.quarantined;
+            st.quarantined_serves += r.quarantined_serves;
+            st.drift_retunes += r.drift_retunes;
         }
         st
     }
@@ -272,6 +290,15 @@ impl fmt::Display for ServiceStats {
                 f,
                 " moves[acc={} rej={} pruned={}]",
                 self.strategy_accepted, self.strategy_rejected, self.pruned,
+            )?;
+        }
+        // Recovery-path activity only exists under faults or the health/
+        // drift knobs; keep the healthy-run line unchanged.
+        if self.retries + self.generate_failures + self.quarantined + self.drift_retunes > 0 {
+            write!(
+                f,
+                " recovery[retries={} gen_fail={} quarantined={} retunes={}]",
+                self.retries, self.generate_failures, self.quarantined, self.drift_retunes,
             )?;
         }
         write!(f, " {}", self.cache.stats())

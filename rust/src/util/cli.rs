@@ -29,8 +29,8 @@ impl Args {
             if let Some(name) = tok.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), v);
                 } else {
                     args.flags.push(name.to_string());
                 }
@@ -111,13 +111,20 @@ impl Args {
     }
 
     /// `--name PATH` as a `PathBuf`, else `default()` (lazily built so
-    /// env-dependent defaults are only resolved when needed).
+    /// env-dependent defaults are only resolved when needed). A
+    /// present-but-empty path (`--name=`) is a usage error: falling back
+    /// to the default would silently write somewhere the user explicitly
+    /// redirected away from.
     pub fn get_path_or(
         &self,
         name: &str,
         default: impl FnOnce() -> std::path::PathBuf,
-    ) -> std::path::PathBuf {
-        self.get(name).map(std::path::PathBuf::from).unwrap_or_else(default)
+    ) -> Result<std::path::PathBuf> {
+        match self.get(name) {
+            None => Ok(default()),
+            Some("") => bail!("--{name} is present but empty; expected a path"),
+            Some(p) => Ok(std::path::PathBuf::from(p)),
+        }
     }
 }
 
@@ -196,9 +203,28 @@ mod tests {
     #[test]
     fn path_option() {
         let a = Args::parse_from(toks("--cache /tmp/x.json"));
-        let p = a.get_path_or("cache", || std::path::PathBuf::from("default.json"));
+        let p = a.get_path_or("cache", || std::path::PathBuf::from("default.json")).unwrap();
         assert_eq!(p, std::path::PathBuf::from("/tmp/x.json"));
-        let d = a.get_path_or("other", || std::path::PathBuf::from("default.json"));
+        let d = a.get_path_or("other", || std::path::PathBuf::from("default.json")).unwrap();
         assert_eq!(d, std::path::PathBuf::from("default.json"));
+        // `--cache=` (present but empty) used to fall back to the
+        // default path — the one place the user explicitly redirected
+        // away from. It is now a usage error.
+        let e = Args::parse_from(toks("--cache="));
+        let err = e
+            .get_path_or("cache", || std::path::PathBuf::from("default.json"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--cache") && err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn value_capture_does_not_eat_flags() {
+        // `--steal --skewed`: the parser must not consume `--skewed` as
+        // the value of `--steal` (next_if guards the take).
+        let a = Args::parse_from(toks("--steal --skewed --cache x.json"));
+        assert!(a.flag("steal"));
+        assert!(a.flag("skewed"));
+        assert_eq!(a.get("cache"), Some("x.json"));
     }
 }

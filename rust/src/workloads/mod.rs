@@ -10,9 +10,12 @@ pub mod vips;
 pub use streamcluster::{StreamclusterApp, StreamclusterConfig};
 pub use vips::{VipsApp, VipsConfig};
 
+use std::sync::Arc;
+
 use crate::backend::sim::SimBackend;
 use crate::backend::Backend as _;
 use crate::cache::TuneKey;
+use crate::fault::{DriftingBackend, FaultPlan, FaultyBackend};
 use crate::simulator::{CoreConfig, KernelKind, SharedSimMemo};
 
 /// Lane count of [`mixed_service_workload`] (report headers can name it
@@ -142,6 +145,60 @@ pub fn hetero_service_workload(
     (on(donor, seed), on(target, seed + 100))
 }
 
+/// Lane count of [`chaos_service_workload`].
+pub const CHAOS_SERVICE_LANES: usize = SKEWED_SERVICE_LANES;
+
+/// The backend type [`chaos_service_workload`] serves: the skewed
+/// workload's simulator lanes made non-stationary and then wrapped in
+/// the fault-injection seam.
+pub type ChaosBackend = FaultyBackend<DriftingBackend<SimBackend>>;
+
+/// The self-healing stress workload (`degoal-rt service --chaos`, and
+/// `rust/tests/fault_recovery.rs`): the eight adversarially placed
+/// [`skewed_service_workload`] lanes, each made *non-stationary* — phase
+/// A runs on `a_core`, and after `switch_at` calls the lane's timing
+/// shifts to `b_core` (same logical device, drifted characteristics, so
+/// the drift guard must re-tune) — and then wrapped in
+/// [`FaultyBackend`] so the shared [`FaultPlan`] injects transient
+/// generate failures, poisoned variants, and mid-run wear-out on top.
+///
+/// Deterministic in `(seed, plan.seed)` regardless of worker count:
+/// per-lane simulator seeds follow the skewed convention, phase B lanes
+/// offset by 100 (the hetero convention), and each wrapper derives its
+/// injection stream from the plan seed + its kernel id. Private
+/// per-workload memo — see [`mixed_service_workload`]; one memo spans
+/// both phases because memo keys include the core name.
+pub fn chaos_service_workload(
+    a_core: &'static CoreConfig,
+    b_core: &'static CoreConfig,
+    seed: u64,
+    switch_at: u64,
+    plan: &Arc<FaultPlan>,
+) -> Vec<(TuneKey, ChaosBackend)> {
+    let kinds: [(KernelKind, &str); CHAOS_SERVICE_LANES] = [
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "a"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "a"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "b"),
+        (KernelKind::Lintra { row_len: 4800, rows: 8 }, "b"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "b"),
+        (KernelKind::Distance { dim: 32, batch: 256 }, "c"),
+        (KernelKind::Distance { dim: 64, batch: 256 }, "c"),
+    ];
+    let memo = SharedSimMemo::new();
+    kinds
+        .iter()
+        .enumerate()
+        .map(|(i, (kind, shape))| {
+            let a = SimBackend::with_memo(a_core, *kind, seed + i as u64, memo.clone());
+            let b = SimBackend::with_memo(b_core, *kind, seed + 100 + i as u64, memo.clone());
+            let key = TuneKey::with_shape(a.kernel_id(), kind.length(), *shape);
+            let drifting = DriftingBackend::new(a, b, switch_at);
+            (key, FaultyBackend::new(drifting, plan.clone()))
+        })
+        .collect()
+}
+
 /// A wide serving workload for the `--scale` stress phase: `lanes`
 /// distinct light kernel streams on one simulated core. Every lane is a
 /// Distance kernel (the light end of the mix — the phase stresses the
@@ -226,6 +283,32 @@ mod tests {
                 "distinct devices — outcomes must not transfer as warm starts"
             );
         }
+    }
+
+    #[test]
+    fn chaos_service_workload_shape() {
+        use crate::backend::Backend as _;
+        use crate::fault::FaultPlan;
+        let plan = Arc::new(FaultPlan::chaos(9));
+        let a_core = core_by_name("DI-I1").unwrap();
+        let b_core = core_by_name("DI-I2").unwrap();
+        let w = chaos_service_workload(a_core, b_core, 1, 1_000, &plan);
+        assert_eq!(w.len(), CHAOS_SERVICE_LANES);
+        let keys: std::collections::HashSet<String> = w.iter().map(|(k, _)| k.key()).collect();
+        assert_eq!(keys.len(), w.len(), "distinct lanes");
+        // Same adversarial placement as the skewed workload: heavy
+        // lintra lanes at ids ≡ 0 (mod 4).
+        assert!(w[0].0.kernel.starts_with("lintra"));
+        assert!(w[4].0.kernel.starts_with("lintra"));
+        // Identity comes from phase A and the drift has not fired yet.
+        for (_, b) in &w {
+            assert!(!b.inner().drifted());
+            assert_eq!(b.injected(), 0);
+        }
+        // The drifted identity is stable: fingerprint stays phase A's
+        // even though phase B runs on a different core.
+        let fresh = SimBackend::new(a_core, KernelKind::Distance { dim: 32, batch: 256 }, 1);
+        assert_eq!(w[1].1.device_fingerprint(), fresh.device_fingerprint());
     }
 
     #[test]

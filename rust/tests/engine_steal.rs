@@ -19,11 +19,15 @@
 //!   a thief is invisible to every deque; the barrier must wait for it
 //!   anyway (regression test for the steal-in-progress race).
 
+use std::sync::Arc;
+
 use degoal_rt::backend::mock::MockBackend;
 use degoal_rt::backend::sim::SimBackend;
 use degoal_rt::backend::Backend;
 use degoal_rt::cache::{CacheHit, SharedTuneCache, TuneKey};
 use degoal_rt::coordinator::{RegenDecision, TunerConfig};
+use degoal_rt::fault::FaultPlan;
+use degoal_rt::obs::{Counter, Recorder};
 use degoal_rt::service::{
     EngineOptions, LaneId, LaneReport, ServiceConfig, ServiceStats, TuningEngine, TuningService,
 };
@@ -489,6 +493,54 @@ fn idle_tune_off_reports_zero_idle_steps() {
     for r in &reports {
         assert_eq!(r.idle_steps, 0, "lane {}", r.key);
     }
+}
+
+// ---------- injected worker panics: containment, respawn, parity ----------
+
+/// Self-healing under scheduled worker deaths. A [`FaultPlan`] with only
+/// the panic schedule armed kills a worker thread every 17 quanta — with
+/// four workers and ~300 quanta of work, every worker dies several times
+/// over. The supervisor must respawn each one, the drain barrier at
+/// `finish` must stay sound, and — because the injected panic fires only
+/// *after* a quantum's epilogue has parked the lane and restored the
+/// scheduler — per-lane results must stay *bitwise* identical to the
+/// sequential reference, including the panicked workers' lanes, which
+/// finish on whichever worker picks them up next.
+#[test]
+fn injected_worker_panics_respawn_and_preserve_parity() {
+    let seq = sequential_reference();
+    let core = core_by_name("DI-I1").unwrap();
+    let rec = Recorder::enabled_for(4);
+    let plan = Arc::new(FaultPlan::none(5).with_panic_every(17));
+    let mut eng: TuningEngine<SimBackend> = TuningEngine::with_faults(
+        sim_cfg(),
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 64, ..Default::default() },
+        rec.clone(),
+        Some(plan),
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| eng.register(k, Some(true), b).unwrap())
+        .collect();
+    for &l in &lanes {
+        eng.submit_n(l, PARITY_CALLS_PER_LANE).unwrap();
+    }
+    let (st, reports) = eng.finish().unwrap();
+    assert_eq!(st.lanes, SKEWED_SERVICE_LANES);
+    assert_eq!(
+        st.kernel_calls,
+        SKEWED_SERVICE_LANES as u64 * PARITY_CALLS_PER_LANE as u64,
+        "every submitted call must run despite the panic schedule: {st:?}"
+    );
+    assert_lane_parity(&reports, &seq);
+    let panics = rec.snapshot().expect("recorder enabled").get(Counter::WorkerPanics);
+    assert!(
+        panics > 4,
+        "a panic every 17 quanta must kill all four workers repeatedly \
+         (the respawn path would be vacuous otherwise): {panics}"
+    );
 }
 
 #[test]

@@ -1,0 +1,329 @@
+//! Fault-injection and self-healing integration tests.
+//!
+//! The contract pinned here, on top of the per-layer unit tests in
+//! `fault/`, `coordinator/autotuner.rs`, and `cache/store.rs`:
+//!
+//! * **Transparency** — an all-zero [`FaultPlan`] behind the
+//!   [`FaultyBackend`] seam is a true no-op: lane results are *bitwise*
+//!   identical to serving the bare backend.
+//! * **Crash-safe persistence** — a checkpoint torn mid-write (the
+//!   committed truncated fixture, and a live save→tear→load round trip)
+//!   salvages every complete entry and re-saves to a clean file.
+//! * **Drift recovery** — a lane whose reference timing shifts mid-run
+//!   re-enters exploration under the *default* (finite) governor budget
+//!   and recovers a winner within 5% of a fresh tune on the shifted
+//!   landscape, deterministically.
+//! * **Self-healing under compound chaos** — the threaded engine run
+//!   under the full chaos plan (transient generate failures, poisoned
+//!   and wearing-out variants, scheduled worker panics, mid-run drift)
+//!   loses no lanes and no calls, never serves a quarantined variant,
+//!   exercises every recovery counter, and produces bitwise-identical
+//!   per-lane results across two identically seeded runs.
+
+use std::sync::Arc;
+
+use degoal_rt::backend::mock::{default_landscape, MockBackend};
+use degoal_rt::backend::sim::SimBackend;
+use degoal_rt::cache::{SharedTuneCache, TuneCache, TuneKey};
+use degoal_rt::coordinator::TunerConfig;
+use degoal_rt::fault::{DriftingBackend, FaultPlan, FaultyBackend};
+use degoal_rt::obs::{Counter, Recorder, RegistrySnapshot};
+use degoal_rt::service::{
+    EngineOptions, LaneId, LaneReport, ServiceConfig, ServiceStats, TuningEngine, TuningService,
+};
+use degoal_rt::simulator::core_by_name;
+use degoal_rt::tunespace::TuningParams;
+use degoal_rt::workloads::{
+    chaos_service_workload, skewed_service_workload, ChaosBackend, CHAOS_SERVICE_LANES,
+};
+
+/// Pre-recorded app time that makes the global governor allow every
+/// wake (same constant as `engine_steal.rs`): per-lane behaviour then
+/// depends only on the lane's own call sequence, which is what makes
+/// the bitwise transparency and determinism assertions meaningful.
+const GOVERNOR_PRIME: f64 = 1e6;
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data").join(name)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("degoal_fault_{}_{name}.json", std::process::id()))
+}
+
+// ---------- crash-safe persistence ----------
+
+#[test]
+fn committed_truncated_fixture_salvages_complete_entries() {
+    // The fixture is `tunecache_v1.json` cut mid-third-entry, the way a
+    // crash between `write` and `rename` would leave a non-atomic
+    // checkpoint. The two complete entries survive; the torn one and the
+    // missing version tail do not take the file down.
+    let c = TuneCache::load(fixture("tunecache_v1_truncated.json")).unwrap();
+    assert_eq!(c.len(), 2, "both complete mock entries survive the tear");
+    assert_eq!(c.counters.salvaged, 2);
+    assert_eq!(c.counters.load_errors, 1, "the torn load is counted as an incident");
+}
+
+#[test]
+fn torn_checkpoint_salvage_round_trips() {
+    let full = TuneCache::load(fixture("tunecache_v1.json")).unwrap();
+    assert_eq!(full.len(), 3);
+    assert_eq!(full.counters.load_errors, 0, "the intact fixture loads clean");
+    let path = tmp("torn");
+    full.save(&path).unwrap();
+
+    // Tear the file the way the chaos plan does (keep a seeded 35–85%
+    // prefix): the version tail is always gone, so the next load must go
+    // through the salvage path, recovering exactly the complete entries.
+    let kept = FaultPlan::none(41).truncate_file(&path).unwrap();
+    assert!(kept > 0);
+    let salvaged = TuneCache::load(&path).unwrap();
+    assert!(salvaged.len() < full.len(), "a torn file can never load in full");
+    assert_eq!(salvaged.counters.load_errors, 1);
+    assert_eq!(salvaged.counters.salvaged, salvaged.len() as u64);
+
+    // Re-saving the salvage is atomic and leaves a whole file: the next
+    // load is clean, not another salvage.
+    salvaged.save(&path).unwrap();
+    let clean = TuneCache::load(&path).unwrap();
+    assert_eq!(clean.len(), salvaged.len());
+    assert_eq!(clean.counters.load_errors, 0);
+    assert_eq!(clean.counters.salvaged, 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------- the fault seam is transparent when disabled ----------
+
+#[test]
+fn zero_fault_plan_is_bitwise_transparent() {
+    let core = core_by_name("DI-I1").unwrap();
+    let cfg = || ServiceConfig {
+        tuner: TunerConfig { wake_period: 2e-3, ..Default::default() },
+        ..Default::default()
+    };
+    let calls = 1_500u32;
+
+    let mut bare: TuningService<SimBackend> = TuningService::new(cfg());
+    bare.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| bare.register(k, Some(true), b))
+        .collect();
+    for &l in &lanes {
+        for _ in 0..calls {
+            bare.app_call(l).unwrap();
+        }
+    }
+    let base: Vec<LaneReport> = lanes.iter().map(|&l| bare.lane_report(l).unwrap()).collect();
+
+    let plan = Arc::new(FaultPlan::none(11));
+    let mut wrapped: TuningService<FaultyBackend<SimBackend>> = TuningService::new(cfg());
+    wrapped.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let lanes2: Vec<LaneId> = skewed_service_workload(core, 11)
+        .into_iter()
+        .map(|(k, b)| wrapped.register(k, Some(true), FaultyBackend::new(b, plan.clone())))
+        .collect();
+    for &l in &lanes2 {
+        for _ in 0..calls {
+            wrapped.app_call(l).unwrap();
+        }
+    }
+
+    let mut explored_total = 0;
+    for (&l, b) in lanes2.iter().zip(&base) {
+        let r = wrapped.lane_report(l).unwrap();
+        assert_eq!(r.key, b.key);
+        assert_eq!(r.kernel_calls, b.kernel_calls, "lane {}", r.key);
+        assert_eq!(r.explored, b.explored, "lane {}", r.key);
+        assert_eq!(r.best, b.best, "lane {}", r.key);
+        assert_eq!(r.overhead, b.overhead, "one ULP of drift breaks parity: lane {}", r.key);
+        assert_eq!(r.app_time, b.app_time, "lane {}", r.key);
+        assert_eq!(r.gained, b.gained, "lane {}", r.key);
+        assert_eq!(r.retries + r.generate_failures + r.quarantined + r.drift_retunes, 0);
+        explored_total += r.explored;
+    }
+    assert!(explored_total > 0, "transparency must not be vacuous: nothing explored");
+}
+
+// ---------- drift detection and recovery ----------
+
+/// The whole machine slowed 3x — same optimum structure, every score
+/// (reference included) shifted together.
+fn drifted_landscape(p: &TuningParams) -> f64 {
+    3.0 * default_landscape(p)
+}
+
+fn drifted_mock(seed: u64) -> MockBackend {
+    let mut b = MockBackend::new(64, seed);
+    b.ref_time *= 3.0;
+    b.landscape = drifted_landscape;
+    b
+}
+
+#[test]
+fn drift_retune_recovers_fresh_tune_quality_under_finite_budget() {
+    // Deliberately NOT priming the governor: the re-tune has to fit the
+    // default regeneration budget, like any production lane would.
+    let cfg = ServiceConfig {
+        tuner: TunerConfig {
+            wake_period: 1e-4,
+            drift_check_every: 16,
+            drift_threshold: 0.5,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut svc: TuningService<DriftingBackend<MockBackend>> = TuningService::new(cfg);
+    // The switch point is in *backend* calls (app calls + drift probes),
+    // placed well past phase A's total so the baseline settles on a
+    // stationary workload first.
+    let switch_at = 95_000u64;
+    let lane = svc.register(
+        TuneKey::with_shape("mock/len64", 64, "drift"),
+        None,
+        DriftingBackend::new(MockBackend::new(64, 63), drifted_mock(63), switch_at),
+    );
+
+    for _ in 0..80_000 {
+        svc.app_call(lane).unwrap();
+    }
+    let before = svc.lane_report(lane).unwrap();
+    assert!(before.done, "exploration finishes on the stationary phase");
+    assert_eq!(before.drift_retunes, 0, "a stationary reference never trips the watch");
+    let first_best = before.best.expect("phase-A winner").0;
+
+    for _ in 0..100_000 {
+        svc.app_call(lane).unwrap();
+    }
+    let after = svc.lane_report(lane).unwrap();
+    assert_eq!(after.drift_retunes, 1, "the 3x shift re-tunes exactly once");
+    assert!(after.done, "the re-entered exploration completes under the default budget");
+    let (new_best, new_score) = after.best.expect("post-drift winner");
+    assert_eq!(new_best.s, first_best.s, "same landscape shape, same winner structure");
+    let (_, fresh) = drifted_mock(63).best_possible();
+    assert!(
+        new_score <= fresh * 1.05,
+        "post-drift winner within 5% of a fresh tune: {new_score} vs {fresh}"
+    );
+    assert!(after.overhead > 0.0, "recovery is paid for, not free");
+}
+
+// ---------- compound chaos on the threaded engine ----------
+
+/// One seeded pass of the full chaos configuration — the test-sized
+/// mirror of `degoal-rt service --chaos` (which runs the same invariants
+/// at a bigger budget in CI), with the governor primed so per-lane
+/// results are independent of thread interleaving and the determinism
+/// assertion below is exact.
+fn chaos_pass(
+    per_lane: u32,
+    seed: u64,
+    chaos_seed: u64,
+) -> (ServiceStats, Vec<LaneReport>, RegistrySnapshot) {
+    let core = core_by_name("DI-I1").unwrap();
+    let drift_core = core_by_name("SI-I1").unwrap();
+    let plan = Arc::new(FaultPlan::chaos(chaos_seed));
+    let cfg = ServiceConfig {
+        tuner: TunerConfig {
+            wake_period: 1e-4,
+            generate_retries: 4,
+            quarantine_factor: 5.0,
+            drift_check_every: 64,
+            drift_threshold: 0.4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let rec = Recorder::enabled_for(4);
+    let mut eng: TuningEngine<ChaosBackend> = TuningEngine::with_faults(
+        cfg,
+        SharedTuneCache::new(),
+        EngineOptions { threads: 4, steal: true, quantum: 64, ..Default::default() },
+        rec.clone(),
+        Some(plan.clone()),
+    );
+    eng.governor().record(0.0, GOVERNOR_PRIME, 0.0);
+    let switch_at = (per_lane / 2) as u64;
+    let lanes: Vec<LaneId> = chaos_service_workload(core, drift_core, seed, switch_at, &plan)
+        .into_iter()
+        .map(|(k, b)| eng.register(k, Some(true), b).unwrap())
+        .collect();
+    let chunk = 500u32;
+    for _ in 0..(per_lane / chunk) {
+        for &l in &lanes {
+            eng.submit_n(l, chunk).unwrap();
+        }
+    }
+    let cache = eng.cache();
+    let (st, reports) = eng.finish().unwrap();
+
+    // Crash-safe persistence on the live chaos cache: checkpoint, tear
+    // mid-write, salvage — the recovered file must be non-empty and
+    // loadable.
+    let path = tmp("chaos");
+    let full = cache.snapshot();
+    assert!(!full.is_empty(), "the chaos run checkpointed an empty cache");
+    full.save(&path).unwrap();
+    let kept = plan.truncate_file(&path).unwrap();
+    let salvaged = TuneCache::load(&path).unwrap();
+    assert!(
+        salvaged.counters.salvaged > 0 && !salvaged.is_empty(),
+        "salvage recovered nothing from the torn chaos cache ({kept} bytes kept)"
+    );
+    rec.count(Counter::CacheSalvaged, salvaged.counters.salvaged);
+    let _ = std::fs::remove_file(&path);
+
+    (st, reports, rec.snapshot().expect("recorder enabled"))
+}
+
+#[test]
+fn chaos_engine_self_heals_with_zero_losses() {
+    let per_lane = 40_000u32;
+    let (st, reports, snap) = chaos_pass(per_lane, 11, 0xc4a05);
+
+    // Zero lost lanes, zero lost calls — despite the scheduled worker
+    // panics, every backlog drains and every lane reports.
+    assert_eq!(reports.len(), CHAOS_SERVICE_LANES, "lost lanes: {st:?}");
+    assert_eq!(st.lanes, CHAOS_SERVICE_LANES);
+    assert_eq!(
+        st.kernel_calls,
+        CHAOS_SERVICE_LANES as u64 * per_lane as u64,
+        "lost calls under injected panics: {st:?}"
+    );
+    // The serving invariant the quarantine exists for.
+    assert_eq!(st.quarantined_serves, 0, "a quarantined variant was served: {st:?}");
+
+    // Every recovery path actually fired under the chaos plan.
+    for (c, what) in [
+        (Counter::FaultInjected, "no faults injected"),
+        (Counter::RetryBackoff, "no generate retry exercised"),
+        (Counter::Quarantined, "no variant quarantined"),
+        (Counter::DriftRetune, "no drift re-tune fired"),
+        (Counter::WorkerPanics, "no worker panic injected"),
+        (Counter::CacheSalvaged, "no cache entry salvaged"),
+    ] {
+        assert!(snap.get(c) > 0, "{what} (counter {c:?} is 0)");
+    }
+    assert!(st.retries > 0 && st.quarantined > 0 && st.drift_retunes > 0, "{st:?}");
+
+    // Determinism: a second identically seeded pass reproduces every
+    // lane bitwise. (Aggregate panic counts may differ — the panic
+    // schedule counts quanta, whose boundaries depend on backlog merge
+    // timing — but panics are injected only after a quantum's epilogue,
+    // so lanes never observe them.)
+    let (st2, reports2, _) = chaos_pass(per_lane, 11, 0xc4a05);
+    assert_eq!(st2.kernel_calls, st.kernel_calls);
+    assert_eq!(reports2.len(), reports.len());
+    for (a, b) in reports.iter().zip(&reports2) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.kernel_calls, b.kernel_calls, "lane {}", a.key);
+        assert_eq!(a.explored, b.explored, "lane {}", a.key);
+        assert_eq!(a.generate_calls, b.generate_calls, "lane {}", a.key);
+        assert_eq!(a.best, b.best, "seeded chaos must reproduce winners: lane {}", a.key);
+        assert_eq!(a.retries, b.retries, "lane {}", a.key);
+        assert_eq!(a.generate_failures, b.generate_failures, "lane {}", a.key);
+        assert_eq!(a.quarantined, b.quarantined, "lane {}", a.key);
+        assert_eq!(a.drift_retunes, b.drift_retunes, "lane {}", a.key);
+    }
+}
